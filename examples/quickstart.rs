@@ -1,0 +1,43 @@
+//! Quickstart: embed a swiss roll with the elastic embedding + spectral
+//! direction in ~30 lines.
+//!
+//!     cargo run --release --example quickstart
+
+use nle::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // 1. data: 500 points on a swiss roll in R^3
+    let data = nle::data::synth::swiss_roll(500, 3, 0.05, 42);
+
+    // 2. perplexity-20 SNE affinities (the paper's W+ / P)
+    let p = nle::affinity::sne_affinities(&data.y, 20.0);
+
+    // 3. elastic-embedding objective, lambda = 100 (paper's setting)
+    let obj = NativeObjective::with_affinities(Method::Ee, Attractive::Dense(p), 100.0, 2);
+
+    // 4. spectral direction + Wolfe backtracking
+    let x0 = nle::init::random_init(500, 2, 1e-4, 0);
+    let mut sd = SpectralDirection::new(None);
+    let t0 = std::time::Instant::now();
+    let res = minimize(&obj, &mut sd, &x0, &OptOptions { max_iters: 300, ..Default::default() });
+
+    println!(
+        "embedded 500 points in {:.2}s: E {:.4e} -> {:.4e} ({} iterations, stop {:?})",
+        t0.elapsed().as_secs_f64(),
+        res.trace[0].e,
+        res.e,
+        res.iters(),
+        res.stop
+    );
+    let recall = nle::metrics::quality::knn_recall(&data.y, &res.x, 10);
+    println!("10-NN recall (data vs embedding): {recall:.3}");
+
+    std::fs::create_dir_all("results")?;
+    nle::data::loader::save_embedding_csv(
+        std::path::Path::new("results/quickstart_swiss.csv"),
+        &res.x,
+        &data.labels,
+    )?;
+    println!("embedding written to results/quickstart_swiss.csv");
+    Ok(())
+}

@@ -1,0 +1,102 @@
+"""AOT compile path: lower the L2 objectives to HLO *text* artifacts.
+
+Run once by `make artifacts`; the rust runtime
+(rust/src/runtime/mod.rs) then loads `artifacts/<name>.hlo.txt` with
+`HloModuleProto::from_text_file`, compiles on the PJRT CPU client and
+executes — python never appears on the request path.
+
+HLO TEXT, not `.serialize()`: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published
+`xla = 0.1.6` crate binds) rejects with `proto.id() <= INT_MAX`. The text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Usage (from python/):
+    python -m compile.aot --out ../artifacts \
+        [--methods ee,ssne,tsne,spectral] [--sizes 128,256,720] [--dim 2]
+
+Emits one artifact per (method, N, d) plus manifest.json describing the
+call ABI for the rust side.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import MODELS
+
+DEFAULT_SIZES = (128, 256, 720)
+DEFAULT_METHODS = ("spectral", "ee", "ssne", "tsne")
+
+
+def to_hlo_text(lowered):
+    """jax lowering -> XlaComputation -> HLO text (return_tuple ABI)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(method, n, d):
+    """Lower one (method, N, d) instance; returns (hlo_text, input shapes)."""
+    fn, shapes_of = MODELS[method]
+    shapes = shapes_of(n, d)
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered), shapes
+
+
+def build(out_dir, methods, sizes, dim):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"dim": dim, "artifacts": []}
+    for method in methods:
+        for n in sizes:
+            name = f"{method}_{n}x{dim}"
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            text, shapes = lower_one(method, n, dim)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "name": name,
+                    "method": method,
+                    "n": n,
+                    "d": dim,
+                    "file": os.path.basename(path),
+                    "inputs": [list(s) for s in shapes],
+                    "outputs": [[], [n, dim]],
+                }
+            )
+            print(f"  wrote {path} ({len(text) / 1e6:.2f} MB)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # line-based manifest for the rust loader (no JSON dependency there):
+    #   name method n d file
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("# name method n d file\n")
+        for a in manifest["artifacts"]:
+            f.write(f"{a['name']} {a['method']} {a['n']} {a['d']} {a['file']}\n")
+    print(f"manifest: {len(manifest['artifacts'])} artifacts -> {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--methods", default=",".join(DEFAULT_METHODS))
+    ap.add_argument("--sizes", default=",".join(map(str, DEFAULT_SIZES)))
+    ap.add_argument("--dim", type=int, default=2)
+    args = ap.parse_args()
+    methods = [m for m in args.methods.split(",") if m]
+    for m in methods:
+        if m not in MODELS:
+            raise SystemExit(f"unknown method {m!r}; have {sorted(MODELS)}")
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    build(args.out, methods, sizes, args.dim)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""L1: Pallas pairwise-affinity kernel — the O(N^2 d) compute hot-spot.
+
+Every objective in the family (spectral, EE, s-SNE, t-SNE) spends its time
+computing pairwise squared distances and a decreasing kernel K of them
+(paper section 1). This kernel fuses both in one tiled pass:
+
+    (sqd, K)[i, j] = (||x_i - x_j||^2, K(||x_i - x_j||^2)),   K_ii = 0
+
+TPU mapping (DESIGN.md section "Hardware-Adaptation"): the grid tiles the
+(N, N) output into (BN, BM) blocks; each step streams two row-blocks of X
+from HBM into VMEM, computes the cross term as a (BN, d) x (d, BM) matmul
+on the MXU, the rank-1 norm corrections and the transcendental K on the
+VPU, and writes the two output tiles back. Three tiles of d<=64 f32 rows
+fit VMEM with two orders of magnitude to spare, so the schedule is purely
+bandwidth-bound in HBM.
+
+interpret=True always: the CPU PJRT client cannot execute Mosaic
+custom-calls, so we lower the interpret path to plain HLO (see
+/opt/xla-example/README.md). Correctness vs kernels/ref.py is enforced by
+python/tests/test_kernel.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pairwise", "block_size"]
+
+_KINDS = ("gauss", "student")
+
+
+def block_size(n, cap=128):
+    """Largest power of two <= cap that divides n (grid must tile N exactly)."""
+    b = 1
+    while b * 2 <= cap and n % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def _pairwise_kernel(x_ref, y_ref, d2_ref, k_ref, *, kind, bn, bm):
+    """One (BN, BM) tile: squared distances + kernel, diagonal zeroed."""
+    x = x_ref[...]  # (BN, d) rows n-block
+    y = y_ref[...]  # (BM, d) rows m-block
+    xn = jnp.sum(x * x, axis=1)  # (BN,)
+    yn = jnp.sum(y * y, axis=1)  # (BM,)
+    # MXU: the (BN, d) x (d, BM) cross term dominates the FLOPs.
+    cross = jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    d2 = xn[:, None] + yn[None, :] - 2.0 * cross
+    d2 = jnp.maximum(d2, 0.0)
+    # Global diagonal mask: tile (i, j) holds rows i*BN.. and cols j*BM..
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    rows = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, bm), 0)
+    cols = j * bm + jax.lax.broadcasted_iota(jnp.int32, (bn, bm), 1)
+    offdiag = (rows != cols).astype(d2.dtype)
+    d2 = d2 * offdiag
+    if kind == "gauss":
+        k = jnp.exp(-d2)
+    elif kind == "student":
+        k = 1.0 / (1.0 + d2)
+    else:  # pragma: no cover - guarded by pairwise()
+        raise ValueError(kind)
+    d2_ref[...] = d2
+    k_ref[...] = k * offdiag
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def pairwise(x, kind="gauss"):
+    """Fused pairwise (squared-distance, kernel) matrices for (N, d) input.
+
+    Returns (d2, K), both (N, N) f32, K with zero diagonal. `kind` selects
+    the paper's two kernels: "gauss" K(t)=exp(-t) (SNE, EE) or "student"
+    K(t)=1/(1+t) (t-SNE).
+    """
+    if kind not in _KINDS:
+        raise ValueError(f"kind must be one of {_KINDS}, got {kind!r}")
+    n, d = x.shape
+    bn = bm = block_size(n)
+    grid = (n // bn, n // bm)
+    kernel = functools.partial(_pairwise_kernel, kind=kind, bn=bn, bm=bm)
+    out_shape = [
+        jax.ShapeDtypeStruct((n, n), jnp.float32),
+        jax.ShapeDtypeStruct((n, n), jnp.float32),
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+        ],
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, x)

@@ -1,0 +1,133 @@
+"""Pure-jnp correctness oracle for the embedding objectives.
+
+This module is the *reference semantics* of the whole stack: the Pallas
+kernel (pairwise.py), the L2 jax model (model.py) and the rust native
+objective (rust/src/objective/native.rs) are all tested against these
+functions.
+
+Conventions (match the paper, Vladymyrov & Carreira-Perpinan, ICML 2012):
+  X    : (N, d) low-dimensional coordinates (the paper writes X as d x N;
+         we store row-major points, the math is identical).
+  Wp   : (N, N) symmetric nonnegative attractive weights, zero diagonal.
+         For normalized methods (s-SNE, t-SNE) this is P = (p_nm),
+         normalized to sum to 1 over all off-diagonal pairs.
+  Wm   : (N, N) symmetric nonnegative repulsive weights (EE only).
+  lam  : scalar lambda >= 0.
+
+Objectives (eq. 1 of the paper, E = E+ + lam * E-):
+  spectral : E = sum_nm Wp_nm ||x_n - x_m||^2
+  EE       : E = sum_nm Wp_nm ||x_n - x_m||^2
+                 + lam * sum_nm Wm_nm exp(-||x_n - x_m||^2)
+  s-SNE    : E = sum_nm P_nm ||x_n - x_m||^2
+                 + lam * log sum_nm exp(-||x_n - x_m||^2)
+  t-SNE    : E = sum_nm P_nm log(1 + ||x_n - x_m||^2)
+                 + lam * log sum_nm 1/(1 + ||x_n - x_m||^2)
+
+Gradients in Laplacian form (eqs. 2-3): grad E = 4 X L with L = D - W and
+the method-specific weights W given in the paper (and DESIGN.md section 1).
+With X stored (N, d) this reads G = 4 (D - W) X.
+"""
+
+import jax.numpy as jnp
+
+__all__ = [
+    "sqdist",
+    "gauss_kernel",
+    "student_kernel",
+    "laplacian_apply",
+    "spectral_obj",
+    "ee_obj",
+    "ssne_obj",
+    "tsne_obj",
+    "objective",
+]
+
+
+def sqdist(X):
+    """Pairwise squared Euclidean distances, (N, N), exact zero diagonal."""
+    n2 = jnp.sum(X * X, axis=1)
+    d2 = n2[:, None] + n2[None, :] - 2.0 * (X @ X.T)
+    d2 = jnp.maximum(d2, 0.0)
+    return d2 * (1.0 - jnp.eye(X.shape[0], dtype=X.dtype))
+
+
+def gauss_kernel(d2):
+    """K(t) = exp(-t), zeroed on the diagonal (q_nn = 0 in the paper)."""
+    n = d2.shape[0]
+    return jnp.exp(-d2) * (1.0 - jnp.eye(n, dtype=d2.dtype))
+
+
+def student_kernel(d2):
+    """K(t) = 1/(1+t), zeroed on the diagonal."""
+    n = d2.shape[0]
+    return (1.0 / (1.0 + d2)) * (1.0 - jnp.eye(n, dtype=d2.dtype))
+
+
+def laplacian_apply(W, X):
+    """(D - W) X with D = diag(W 1). The 4 X L gradient core."""
+    deg = jnp.sum(W, axis=1)
+    return deg[:, None] * X - W @ X
+
+
+def spectral_obj(X, Wp):
+    """Spectral/Laplacian-eigenmaps E+ term: E, grad (lam = 0 case)."""
+    d2 = sqdist(X)
+    e = jnp.sum(Wp * d2)
+    g = 4.0 * laplacian_apply(Wp, X)
+    return e, g
+
+
+def ee_obj(X, Wp, Wm, lam):
+    """Elastic embedding (Carreira-Perpinan 2010). Returns (E, grad)."""
+    d2 = sqdist(X)
+    kneg = gauss_kernel(d2)
+    e = jnp.sum(Wp * d2) + lam * jnp.sum(Wm * kneg)
+    w = Wp - lam * Wm * kneg
+    g = 4.0 * laplacian_apply(w, X)
+    return e, g
+
+
+def ssne_obj(X, P, lam):
+    """Symmetric SNE (Cook et al. 2007), Gaussian kernel. Returns (E, grad).
+
+    E+ = -sum P log K = sum P d2 (when sum P = 1)
+    E- = log sum_nm exp(-d2_nm), n != m.
+    Gradient weights: w_nm = p_nm - lam q_nm.
+    """
+    d2 = sqdist(X)
+    k = gauss_kernel(d2)
+    s = jnp.sum(k)
+    q = k / s
+    e = jnp.sum(P * d2) + lam * jnp.log(s)
+    w = P - lam * q
+    g = 4.0 * laplacian_apply(w, X)
+    return e, g
+
+
+def tsne_obj(X, P, lam):
+    """t-SNE (van der Maaten & Hinton 2008), Student kernel. (E, grad).
+
+    E+ = -sum P log K = sum P log(1 + d2); E- = log sum K.
+    Gradient weights: w_nm = (p_nm - lam q_nm) K_nm.
+    """
+    d2 = sqdist(X)
+    k = student_kernel(d2)
+    s = jnp.sum(k)
+    q = k / s
+    e = jnp.sum(P * jnp.log1p(d2)) + lam * jnp.log(s)
+    w = (P - lam * q) * k
+    g = 4.0 * laplacian_apply(w, X)
+    return e, g
+
+
+def objective(method, X, Wp, Wm=None, lam=1.0):
+    """Dispatch on method name. Returns (E, grad)."""
+    if method == "spectral":
+        return spectral_obj(X, Wp)
+    if method == "ee":
+        return ee_obj(X, Wp, Wm, lam)
+    if method == "ssne":
+        return ssne_obj(X, Wp, lam)
+    if method == "tsne":
+        return tsne_obj(X, Wp, lam)
+    raise ValueError(f"unknown method {method!r}")

@@ -1,0 +1,86 @@
+"""L2: the embedding objectives as jax functions, calling the L1 kernel.
+
+These are the computations that get AOT-lowered to HLO text by aot.py and
+executed from the rust hot path (rust/src/objective/xla.rs). Each function
+returns the tuple (E, G): the scalar objective and its (N, d) gradient, in
+the Laplacian form of the paper (grad E = 4 X L, eqs. 2-3), built on top of
+the fused pairwise-affinity Pallas kernel.
+
+lambda is a runtime input (f32 scalar), NOT baked into the artifact, so a
+single artifact serves the whole homotopy path lambda in [1e-4, 1e2].
+
+Gradients are analytic (the paper gives the Laplacian weights in closed
+form); we deliberately do not autodiff through pallas_call. Parity with
+jax.grad of the ref.py oracle is asserted in python/tests/test_model.py.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.pairwise import pairwise
+
+__all__ = [
+    "spectral_value_grad",
+    "ee_value_grad",
+    "ssne_value_grad",
+    "tsne_value_grad",
+    "MODELS",
+]
+
+
+def _lap_apply(w, x):
+    """(D - W) X, the 4 X L gradient core (D = diag of row sums)."""
+    deg = jnp.sum(w, axis=1)
+    return deg[:, None] * x - w @ x
+
+
+def spectral_value_grad(x, wp):
+    """Spectral E+ only (lam = 0): E = sum Wp d2, G = 4 L+ X."""
+    d2, _ = pairwise(x, "gauss")
+    e = jnp.sum(wp * d2)
+    g = 4.0 * _lap_apply(wp, x)
+    return e, g
+
+
+def ee_value_grad(x, wp, wm, lam):
+    """Elastic embedding: attractive quadratic + Gaussian repulsion."""
+    d2, k = pairwise(x, "gauss")
+    e = jnp.sum(wp * d2) + lam * jnp.sum(wm * k)
+    w = wp - lam * wm * k
+    g = 4.0 * _lap_apply(w, x)
+    return e, g
+
+
+def ssne_value_grad(x, p, lam):
+    """Symmetric SNE: Gaussian kernel, normalized over all pairs."""
+    d2, k = pairwise(x, "gauss")
+    s = jnp.sum(k)
+    q = k / s
+    e = jnp.sum(p * d2) + lam * jnp.log(s)
+    w = p - lam * q
+    g = 4.0 * _lap_apply(w, x)
+    return e, g
+
+
+def tsne_value_grad(x, p, lam):
+    """t-SNE: Student kernel, normalized; weights (p - lam q) K."""
+    d2, k = pairwise(x, "student")
+    s = jnp.sum(k)
+    q = k / s
+    e = jnp.sum(p * jnp.log1p(d2)) + lam * jnp.log(s)
+    w = (p - lam * q) * k
+    g = 4.0 * _lap_apply(w, x)
+    return e, g
+
+
+# name -> (fn, input shape builder). The builder maps (N, d) to the example
+# shapes used for lowering; order defines the rust call ABI:
+#   spectral: (X[N,d], Wp[N,N])                 -> (E[], G[N,d])
+#   ee      : (X[N,d], Wp[N,N], Wm[N,N], lam[]) -> (E[], G[N,d])
+#   ssne    : (X[N,d], P[N,N], lam[])           -> (E[], G[N,d])
+#   tsne    : (X[N,d], P[N,N], lam[])           -> (E[], G[N,d])
+MODELS = {
+    "spectral": (spectral_value_grad, lambda n, d: [(n, d), (n, n)]),
+    "ee": (ee_value_grad, lambda n, d: [(n, d), (n, n), (n, n), ()]),
+    "ssne": (ssne_value_grad, lambda n, d: [(n, d), (n, n), ()]),
+    "tsne": (tsne_value_grad, lambda n, d: [(n, d), (n, n), ()]),
+}

@@ -1,0 +1,124 @@
+"""L1 correctness: the Pallas pairwise kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compute hot-spot: everything
+the rust binary executes flows through this kernel.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pairwise as pw
+from compile.kernels import ref
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def _rand_x(n, d, seed=0, scale=1.0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(n, d).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------- block_size
+
+
+def test_block_size_divides():
+    for n in (1, 2, 48, 127, 128, 720, 2000):
+        b = pw.block_size(n)
+        assert n % b == 0
+        assert b <= 128
+
+
+def test_block_size_prefers_large():
+    assert pw.block_size(720) == 16
+    assert pw.block_size(1024) == 128
+    assert pw.block_size(128) == 128
+
+
+# ------------------------------------------------------------------- kernels
+
+
+@pytest.mark.parametrize("kind", ["gauss", "student"])
+@pytest.mark.parametrize("n,d", [(8, 2), (48, 2), (64, 3), (33, 2), (128, 4)])
+def test_pairwise_matches_ref(kind, n, d):
+    x = _rand_x(n, d, seed=n + d)
+    d2, k = pw.pairwise(x, kind)
+    d2_ref = ref.sqdist(x)
+    k_ref = ref.gauss_kernel(d2_ref) if kind == "gauss" else ref.student_kernel(d2_ref)
+    np.testing.assert_allclose(d2, d2_ref, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(k, k_ref, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("kind", ["gauss", "student"])
+def test_zero_diagonal(kind):
+    x = _rand_x(32, 2)
+    d2, k = pw.pairwise(x, kind)
+    np.testing.assert_array_equal(np.diag(np.asarray(d2)), np.zeros(32))
+    np.testing.assert_array_equal(np.diag(np.asarray(k)), np.zeros(32))
+
+
+@pytest.mark.parametrize("kind", ["gauss", "student"])
+def test_symmetry(kind):
+    x = _rand_x(40, 2, seed=7)
+    d2, k = pw.pairwise(x, kind)
+    np.testing.assert_allclose(d2, jnp.asarray(d2).T, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(k, jnp.asarray(k).T, rtol=RTOL, atol=ATOL)
+
+
+def test_nonnegative_distances():
+    # coincident points: d2 exactly 0, gauss k exactly 1 off-diagonal
+    x = jnp.zeros((16, 2), jnp.float32)
+    d2, k = pw.pairwise(x, "gauss")
+    np.testing.assert_array_equal(np.asarray(d2), np.zeros((16, 16)))
+    expected = 1.0 - np.eye(16, dtype=np.float32)
+    np.testing.assert_array_equal(np.asarray(k), expected)
+
+
+def test_student_bounds():
+    x = _rand_x(24, 2, seed=3, scale=10.0)
+    _, k = pw.pairwise(x, "student")
+    k = np.asarray(k)
+    assert (k >= 0).all() and (k <= 1).all()
+
+
+def test_known_values_two_points():
+    x = jnp.asarray([[0.0, 0.0], [3.0, 4.0]], jnp.float32)
+    d2, kg = pw.pairwise(x, "gauss")
+    assert float(d2[0, 1]) == pytest.approx(25.0, rel=1e-6)
+    assert float(kg[0, 1]) == pytest.approx(np.exp(-25.0), rel=1e-5, abs=1e-12)
+    _, ks = pw.pairwise(x, "student")
+    assert float(ks[0, 1]) == pytest.approx(1.0 / 26.0, rel=1e-6)
+
+
+def test_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        pw.pairwise(_rand_x(8, 2), "epanechnikov-typo")
+
+
+# --------------------------------------------------------- hypothesis sweeps
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=96),
+    d=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([0.01, 1.0, 100.0]),
+    kind=st.sampled_from(["gauss", "student"]),
+)
+def test_pairwise_hypothesis(n, d, seed, scale, kind):
+    x = _rand_x(n, d, seed=seed, scale=scale)
+    d2, k = pw.pairwise(x, kind)
+    d2_ref = ref.sqdist(x)
+    k_ref = ref.gauss_kernel(d2_ref) if kind == "gauss" else ref.student_kernel(d2_ref)
+    # scale-aware tolerance: f32 cancellation in ||x||^2+||y||^2-2x.y grows
+    # like scale^2, and the blocked (pallas) and full (jnp) contractions
+    # accumulate in different orders.
+    # Cancellation error is ~ ||x||^2_max * eps_f32, absolute, and since
+    # |dK/dt| <= 1 for both kernels it propagates to K at most 1:1.
+    n2max = float(jnp.max(jnp.sum(x * x, axis=1)))
+    tol = max(1e-5, 4.0 * n2max * np.finfo(np.float32).eps)
+    np.testing.assert_allclose(d2, d2_ref, rtol=1e-3, atol=tol)
+    np.testing.assert_allclose(k, k_ref, rtol=1e-3, atol=max(1e-5, tol))

@@ -1,0 +1,151 @@
+"""L2 correctness: model.py objectives vs the ref.py oracle and autodiff.
+
+Three layers of checking:
+  1. model.py (Pallas-backed) == ref.py (pure jnp) for E and G;
+  2. ref.py's analytic Laplacian-form gradient == jax.grad of the ref energy
+     (validates the paper's eqs. 2-3 as implemented);
+  3. finite differences on the energy.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)  # for finite-difference checks
+
+from compile import model
+from compile.kernels import ref
+
+N, D = 48, 2
+
+
+def _data(n=N, d=D, seed=0):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(n, d).astype(np.float32))
+    wp = rng.rand(n, n).astype(np.float32)
+    wp = (wp + wp.T) / 2.0
+    np.fill_diagonal(wp, 0.0)
+    p = jnp.asarray(wp / wp.sum())
+    wm = rng.rand(n, n).astype(np.float32)
+    wm = (wm + wm.T) / 2.0
+    np.fill_diagonal(wm, 0.0)
+    return x, jnp.asarray(wp), p, jnp.asarray(wm)
+
+
+def _energy_only(method, x, wp, wm, lam):
+    e, _ = ref.objective(method, x, wp, wm, lam)
+    return e
+
+
+CASES = [
+    ("spectral", 0.0),
+    ("ee", 0.5),
+    ("ee", 100.0),
+    ("ssne", 1.0),
+    ("ssne", 0.3),
+    ("tsne", 1.0),
+    ("tsne", 2.5),
+]
+
+
+@pytest.mark.parametrize("method,lam", CASES)
+def test_model_matches_ref(method, lam):
+    x, wp, p, wm = _data()
+    if method == "spectral":
+        e_m, g_m = model.spectral_value_grad(x, wp)
+        e_r, g_r = ref.spectral_obj(x, wp)
+    elif method == "ee":
+        e_m, g_m = model.ee_value_grad(x, wp, wm, lam)
+        e_r, g_r = ref.ee_obj(x, wp, wm, lam)
+    elif method == "ssne":
+        e_m, g_m = model.ssne_value_grad(x, p, lam)
+        e_r, g_r = ref.ssne_obj(x, p, lam)
+    else:
+        e_m, g_m = model.tsne_value_grad(x, p, lam)
+        e_r, g_r = ref.tsne_obj(x, p, lam)
+    np.testing.assert_allclose(e_m, e_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(g_m, g_r, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("method,lam", CASES)
+def test_laplacian_gradient_equals_autodiff(method, lam):
+    """The paper's closed-form 4 X L gradient == jax.grad of the energy."""
+    x, wp, p, wm = _data(n=32, seed=1)
+    w_attr = p if method in ("ssne", "tsne") else wp
+    _, g_analytic = ref.objective(method, x, w_attr, wm, lam)
+    g_auto = jax.grad(
+        lambda xx: _energy_only(method, xx, w_attr, wm, lam)
+    )(x)
+    np.testing.assert_allclose(g_analytic, g_auto, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("method,lam", [("ee", 10.0), ("ssne", 1.0), ("tsne", 1.0)])
+def test_gradient_finite_differences(method, lam):
+    x, wp, p, wm = _data(n=16, seed=2)
+    x64 = x.astype(jnp.float64)
+    w_attr = (p if method in ("ssne", "tsne") else wp).astype(jnp.float64)
+    wm64 = wm.astype(jnp.float64)
+    _, g = ref.objective(method, x64, w_attr, wm64, lam)
+    g = np.asarray(g)
+    eps = 1e-5
+    rng = np.random.RandomState(3)
+    for _ in range(6):
+        i, j = rng.randint(0, 16), rng.randint(0, 2)
+        pert = np.zeros((16, 2))
+        pert[i, j] = eps
+        ep = _energy_only(method, x64 + pert, w_attr, wm64, lam)
+        em = _energy_only(method, x64 - pert, w_attr, wm64, lam)
+        fd = float((ep - em) / (2 * eps))
+        assert fd == pytest.approx(g[i, j], rel=2e-3, abs=1e-5)
+
+
+def test_spectral_is_ee_lambda_zero():
+    x, wp, _, wm = _data(seed=4)
+    e_s, g_s = ref.spectral_obj(x, wp)
+    e_e, g_e = ref.ee_obj(x, wp, wm, 0.0)
+    np.testing.assert_allclose(e_s, e_e, rtol=1e-6)
+    np.testing.assert_allclose(g_s, g_e, rtol=1e-6)
+
+
+def test_gradient_zero_at_coincident_spectral():
+    # All points coincident: spectral E = 0, gradient = 0 (global min).
+    x = jnp.zeros((12, 2), jnp.float32)
+    _, wp, _, _ = _data(n=12, seed=5)
+    e, g = ref.spectral_obj(x, wp)
+    assert float(e) == 0.0
+    np.testing.assert_array_equal(np.asarray(g), np.zeros((12, 2)))
+
+
+def test_shift_invariance():
+    """E(X + c) = E(X): both terms depend only on differences (paper sec 1)."""
+    x, wp, p, wm = _data(seed=6)
+    shift = jnp.asarray([[10.0, -3.0]], jnp.float32)
+    for method, lam in CASES:
+        w_attr = p if method in ("ssne", "tsne") else wp
+        e0, _ = ref.objective(method, x, w_attr, wm, lam)
+        e1, _ = ref.objective(method, x + shift, w_attr, wm, lam)
+        np.testing.assert_allclose(e0, e1, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=4, max_value=64),
+    lam=st.sampled_from([0.0, 0.1, 1.0, 50.0]),
+    method=st.sampled_from(["ee", "ssne", "tsne"]),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_model_ref_parity_hypothesis(n, lam, method, seed):
+    x, wp, p, wm = _data(n=n, seed=seed)
+    if method == "ee":
+        e_m, g_m = model.ee_value_grad(x, wp, wm, lam)
+        e_r, g_r = ref.ee_obj(x, wp, wm, lam)
+    elif method == "ssne":
+        e_m, g_m = model.ssne_value_grad(x, p, lam)
+        e_r, g_r = ref.ssne_obj(x, p, lam)
+    else:
+        e_m, g_m = model.tsne_value_grad(x, p, lam)
+        e_r, g_r = ref.tsne_obj(x, p, lam)
+    np.testing.assert_allclose(e_m, e_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(g_m, g_r, rtol=1e-3, atol=1e-4)

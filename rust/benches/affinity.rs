@@ -1,0 +1,25 @@
+//! Entropic (perplexity) affinity construction: dense vs kNN-sparse.
+//! One-time preprocessing for every experiment.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use nle::data::Rng;
+use nle::linalg::dense::Mat;
+
+fn main() {
+    header("entropic affinities (perplexity 20)");
+    for n in [256usize, 720, 2000] {
+        let mut rng = Rng::new(5);
+        let y = Mat::from_fn(n, 32, |_, _| rng.normal());
+        let (m, lo, hi) = time_median(1, 3, || {
+            let _ = nle::affinity::sne_affinities(&y, 20.0);
+        });
+        report(&format!("dense/N={n}"), m, lo, hi, "");
+        let (m, lo, hi) = time_median(1, 3, || {
+            let _ = nle::affinity::sne_affinities_sparse(&y, 20.0, 60);
+        });
+        report(&format!("sparse(k=60)/N={n}"), m, lo, hi, "");
+    }
+}

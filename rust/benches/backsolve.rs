@@ -1,0 +1,41 @@
+//! The per-iteration SD direction (two sparse triangular backsolves per
+//! dimension) vs the gradient cost — the paper's claim that the spectral
+//! direction is "essentially for free compared to computing the
+//! gradient".
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use nle::data::Rng;
+use nle::opt::DirectionStrategy;
+use nle::prelude::*;
+
+fn main() {
+    header("SD direction (backsolves) vs gradient, kappa = 7");
+    for n in [500usize, 1000, 2000, 4000] {
+        let mut rng = Rng::new(4);
+        let y = Mat::from_fn(n, 8, |_, _| rng.normal());
+        let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let p = nle::affinity::sne_affinities_sparse(&y, 20.0, 60);
+        let obj =
+            NativeObjective::with_affinities(Method::Ee, Attractive::Sparse(p), 100.0, 2);
+        let mut sd = SpectralDirection::new(Some(7));
+        sd.prepare(&obj, &x).unwrap();
+        let (_, g) = obj.eval(&x);
+        let (md, lod, hid) = time_median(3, 15, || {
+            let _ = sd.direction(&obj, &x, &g, 0);
+        });
+        report(&format!("direction/N={n}"), md, lod, hid, "");
+        let (mg, log_, hig) = time_median(1, 5, || {
+            let _ = obj.eval(&x);
+        });
+        report(
+            &format!("gradient /N={n}"),
+            mg,
+            log_,
+            hig,
+            &format!("direction/gradient = {:.4}", md / mg),
+        );
+    }
+}

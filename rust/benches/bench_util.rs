@@ -1,0 +1,46 @@
+//! Minimal benchmarking harness (the offline build has no criterion):
+//! warmup + median-of-k timing with spread, printed as aligned rows.
+
+use std::time::Instant;
+
+/// Time `f` `reps` times after `warmup` runs; returns (median, min, max)
+/// seconds per call.
+pub fn time_median(warmup: usize, reps: usize, mut f: impl FnMut()) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (times[times.len() / 2], times[0], times[times.len() - 1])
+}
+
+/// Print one result row: `name  median  (min..max)  [throughput]`.
+pub fn report(name: &str, median: f64, min: f64, max: f64, note: &str) {
+    println!(
+        "{name:<40} {:>12} {:>26} {note}",
+        fmt_t(median),
+        format!("({} .. {})", fmt_t(min), fmt_t(max)),
+    );
+}
+
+pub fn fmt_t(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+    println!("{:<40} {:>12} {:>26}", "case", "median", "spread");
+}

@@ -1,0 +1,44 @@
+//! Sparse Cholesky factorization cost and fill vs kappa — the spectral
+//! direction's one-time setup (paper fig. 4 reports ~5 min at N = 20000;
+//! "this time can be controlled with the sparsification kappa").
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use nle::data::Rng;
+use nle::graph::laplacian_sparse;
+use nle::linalg::dense::Mat;
+use nle::linalg::ordering::rcm;
+use nle::linalg::spchol::cholesky_sparse;
+use nle::linalg::sparse::SpMat;
+
+fn main() {
+    header("sparse Cholesky of 4 L+ + mu I (SD setup)");
+    for n in [500usize, 1000, 2000] {
+        let mut rng = Rng::new(3);
+        let y = Mat::from_fn(n, 8, |_, _| rng.normal());
+        for kappa in [5usize, 7, 20] {
+            let p = nle::affinity::sne_affinities_sparse(&y, (kappa as f64).max(5.0), 3 * kappa);
+            let w = nle::affinity::sparsify_weights(&p.to_dense(), kappa);
+            let mut b = laplacian_sparse(&w);
+            for v in b.values.iter_mut() {
+                *v *= 4.0;
+            }
+            let b = b.add(&SpMat::scaled_eye(n, 1e-9));
+            let perm = rcm(&b);
+            let bp = b.sym_perm(&perm);
+            let mut nnz = 0;
+            let (m, lo, hi) = time_median(1, 5, || {
+                nnz = cholesky_sparse(&bp).expect("pd").nnz();
+            });
+            report(
+                &format!("N={n}/kappa={kappa}"),
+                m,
+                lo,
+                hi,
+                &format!("factor nnz {nnz} ({:.2}%)", 100.0 * nnz as f64 / (n * n) as f64),
+            );
+        }
+    }
+}

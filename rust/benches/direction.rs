@@ -1,0 +1,37 @@
+//! Per-iteration direction cost of every strategy (the "cost per
+//! iteration" column implicit in figs. 1 and 4): GD and FP are trivial,
+//! DiagH costs an extra O(N^2 d) pass, SD two backsolves, SD- an inexact
+//! CG solve per dimension, L-BFGS a two-loop recursion.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use nle::data::Rng;
+use nle::opt::DirectionStrategy;
+use nle::prelude::*;
+
+fn main() {
+    let n = 720; // the paper's COIL size
+    let mut rng = Rng::new(6);
+    let y = Mat::from_fn(n, 16, |_, _| rng.normal());
+    let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+    let p = nle::affinity::sne_affinities(&y, 20.0);
+    let obj =
+        NativeObjective::with_affinities(Method::Ee, Attractive::Dense(p), 100.0, 2);
+    let (_, g) = obj.eval(&x);
+
+    header(&format!("direction cost per iteration, N = {n} (COIL size)"));
+    for name in nle::opt::ALL_STRATEGIES {
+        let mut s = nle::opt::strategy_by_name(name, None).unwrap();
+        s.prepare(&obj, &x).unwrap();
+        let (m, lo, hi) = time_median(2, 9, || {
+            let _ = s.direction(&obj, &x, &g, 1);
+        });
+        report(name, m, lo, hi, "");
+    }
+    let (mg, _, _) = time_median(1, 5, || {
+        let _ = obj.eval(&x);
+    });
+    println!("{:<40} {:>12}", "(gradient reference)", fmt_t(mg));
+}

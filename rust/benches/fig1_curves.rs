@@ -1,0 +1,41 @@
+//! Miniature fig. 1: energy reached per strategy under a fixed small
+//! wall budget from a shared basin (the full experiment is
+//! `nle fig1`; this bench tracks regressions in the end-to-end loop).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use std::time::Duration;
+
+use nle::bench_harness::coil_setup;
+use nle::prelude::*;
+
+fn main() {
+    let env = coil_setup(6, 24, 128, 10.0);
+    let n = env.data.y.rows;
+    println!("\n=== fig1 mini: EE lambda=100, N={n}, 2 s budget per strategy ===");
+    println!("{:<10} {:>8} {:>14} {:>9}", "strategy", "iters", "final E", "nfev");
+    let obj = NativeObjective::with_affinities(
+        Method::Ee,
+        Attractive::Dense(env.p.clone()),
+        100.0,
+        2,
+    );
+    let x0 = nle::init::random_init(n, 2, 1e-4, 7);
+    for name in ["gd", "fp", "diagh", "cg", "lbfgs", "sd", "sdm"] {
+        let mut s = nle::opt::strategy_by_name(name, None).unwrap();
+        let res = minimize(
+            &obj,
+            s.as_mut(),
+            &x0,
+            &OptOptions {
+                max_iters: 100_000,
+                time_budget: Some(Duration::from_secs(2)),
+                rel_tol: 1e-12,
+                ..Default::default()
+            },
+        );
+        let last = res.trace.last().unwrap();
+        println!("{:<10} {:>8} {:>14.6e} {:>9}", name, res.iters(), res.e, last.nfev);
+    }
+}

@@ -1,0 +1,32 @@
+//! Miniature fig. 4: per-iteration wall time at larger N with sparse
+//! affinities (kappa = 7 SD vs FP vs SD-), the scalability story.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use nle::data::Rng;
+use nle::opt::DirectionStrategy;
+use nle::prelude::*;
+
+fn main() {
+    header("fig4 mini: one full iteration (gradient + direction), sparse");
+    for n in [1000usize, 2000] {
+        let mut rng = Rng::new(8);
+        let y = Mat::from_fn(n, 32, |_, _| rng.normal());
+        let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let p = nle::affinity::sne_affinities_sparse(&y, 20.0, 60);
+        let obj =
+            NativeObjective::with_affinities(Method::Ee, Attractive::Sparse(p), 100.0, 2);
+        for name in ["fp", "sd", "sdm"] {
+            let kappa = if name == "fp" { None } else { Some(7) };
+            let mut s = nle::opt::strategy_by_name(name, kappa).unwrap();
+            s.prepare(&obj, &x).unwrap();
+            let (m, lo, hi) = time_median(1, 5, || {
+                let (_, g) = obj.eval(&x);
+                let _ = s.direction(&obj, &x, &g, 1);
+            });
+            report(&format!("{name}/N={n}"), m, lo, hi, "");
+        }
+    }
+}

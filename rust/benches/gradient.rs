@@ -1,0 +1,68 @@
+//! Objective (E, grad) evaluation cost — the O(N^2 d) hot spot that
+//! dominates every iteration (feeds the cost model of figs. 1 and 4).
+//! Native backend across methods and N; sparse vs dense attractive
+//! weights; XLA backend at the artifact sizes when available.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use nle::prelude::*;
+use nle::data::Rng;
+
+fn main() {
+    header("objective eval (E + grad), native backend");
+    for n in [256usize, 720, 2000] {
+        let mut rng = Rng::new(1);
+        let y = Mat::from_fn(n, 8, |_, _| rng.normal());
+        let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let pd = nle::affinity::sne_affinities(&y, 20.0);
+        for (method, lam) in [(Method::Ee, 100.0), (Method::Ssne, 1.0), (Method::Tsne, 1.0)] {
+            let obj = NativeObjective::with_affinities(
+                method,
+                Attractive::Dense(pd.clone()),
+                lam,
+                2,
+            );
+            let (m, lo, hi) = time_median(2, 7, || {
+                let _ = obj.eval(&x);
+            });
+            report(&format!("native/{}/N={n}/dense", method.name()), m, lo, hi, "");
+        }
+        // sparse attractive weights (fig. 4 configuration)
+        let ps = nle::affinity::sne_affinities_sparse(&y, 20.0, 60);
+        let obj =
+            NativeObjective::with_affinities(Method::Ee, Attractive::Sparse(ps), 100.0, 2);
+        let (m, lo, hi) = time_median(2, 7, || {
+            let _ = obj.eval(&x);
+        });
+        report(&format!("native/ee/N={n}/sparse(k=60)"), m, lo, hi, "");
+    }
+
+    if let Ok(reg) = ArtifactRegistry::open("artifacts") {
+        header("objective eval, XLA (AOT Pallas/jax artifact via PJRT)");
+        let reg = std::sync::Arc::new(reg);
+        for n in [256usize, 720] {
+            let mut rng = Rng::new(2);
+            let y = Mat::from_fn(n, 8, |_, _| rng.normal());
+            let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+            let p = nle::affinity::sne_affinities(&y, 20.0);
+            for (method, lam) in [(Method::Ee, 100.0), (Method::Tsne, 1.0)] {
+                let obj = XlaObjective::new(
+                    reg.clone(),
+                    method,
+                    Attractive::Dense(p.clone()),
+                    lam,
+                    2,
+                )
+                .expect("xla objective");
+                let (m, lo, hi) = time_median(2, 7, || {
+                    let _ = obj.eval(&x);
+                });
+                report(&format!("xla/{}/N={n}", method.name()), m, lo, hi, "");
+            }
+        }
+    } else {
+        println!("(artifacts/ missing: skipping XLA rows; run `make artifacts`)");
+    }
+}

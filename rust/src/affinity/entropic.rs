@@ -1,0 +1,226 @@
+//! Entropic (perplexity-calibrated) Gaussian affinities — "SNE
+//! affinities" in the paper's experiments (perplexity 20 for COIL,
+//! 50 for MNIST).
+//!
+//! For each point n we find the Gaussian precision `beta_n` such that the
+//! conditional distribution `p_{m|n} ∝ exp(-beta_n d2_nm)` has perplexity
+//! `exp(H(p_{·|n})) = k`, by safeguarded bisection on `beta` (the entropy
+//! is strictly decreasing in beta). The symmetric affinities are
+//! `p_nm = (p_{m|n} + p_{n|m}) / 2N`, summing to 1 over all pairs —
+//! exactly the P matrix of the normalized models, also used as W+ for EE.
+
+use crate::linalg::dense::Mat;
+use crate::linalg::sparse::SpMat;
+use crate::linalg::vecops::sqdist;
+
+/// Result of calibrating one point: probabilities over the candidate set
+/// and the precision found.
+struct Calibrated {
+    p: Vec<f64>,
+    #[allow(dead_code)] // diagnostic: reported by tests
+    beta: f64,
+}
+
+/// Entropy (nats) of `p ∝ exp(-beta d2)` over the candidate distances,
+/// returning (H, normalized p).
+fn entropy_at(beta: f64, d2: &[f64], p: &mut [f64]) -> f64 {
+    // subtract min for numerical stability
+    let dmin = d2.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mut sum = 0.0;
+    for (i, &d) in d2.iter().enumerate() {
+        let v = (-beta * (d - dmin)).exp();
+        p[i] = v;
+        sum += v;
+    }
+    let mut h = 0.0;
+    for pi in p.iter_mut() {
+        *pi /= sum;
+        if *pi > 0.0 {
+            h -= *pi * pi.ln();
+        }
+    }
+    h
+}
+
+/// Bisection for the beta matching `target_h = ln(perplexity)`.
+fn calibrate(d2: &[f64], perplexity: f64, tol: f64, max_iter: usize) -> Calibrated {
+    let target_h = perplexity.ln();
+    let mut p = vec![0.0; d2.len()];
+    let mut beta = 1.0;
+    let (mut lo, mut hi) = (0.0f64, f64::INFINITY);
+    for _ in 0..max_iter {
+        let h = entropy_at(beta, d2, &mut p);
+        let diff = h - target_h;
+        if diff.abs() < tol {
+            break;
+        }
+        if diff > 0.0 {
+            // entropy too high -> sharpen -> increase beta
+            lo = beta;
+            beta = if hi.is_finite() { 0.5 * (lo + hi) } else { beta * 2.0 };
+        } else {
+            hi = beta;
+            beta = 0.5 * (lo + hi);
+        }
+    }
+    Calibrated { p, beta }
+}
+
+/// Dense symmetric SNE affinities: `N x N` matrix P with zero diagonal,
+/// `sum_nm P_nm = 1`. O(N^2 D) + O(N^2 log(1/tol)).
+pub fn sne_affinities(y: &Mat, perplexity: f64) -> Mat {
+    let n = y.rows;
+    assert!(perplexity < n as f64, "perplexity must be < N");
+    // conditional distributions, one row per point
+    let rows: Vec<Vec<f64>> = crate::par::par_map(n, |i| {
+            let yi = y.row(i);
+            let d2: Vec<f64> = (0..n)
+                .filter(|&j| j != i)
+                .map(|j| sqdist(yi, y.row(j)))
+                .collect();
+            let cal = calibrate(&d2, perplexity, 1e-6, 100);
+            // re-insert the diagonal zero
+            let mut full = vec![0.0; n];
+            let mut k = 0;
+            for j in 0..n {
+                if j != i {
+                    full[j] = cal.p[k];
+                    k += 1;
+                }
+            }
+            full
+        });
+    // symmetrize: p_nm = (p_{m|n} + p_{n|m}) / 2N
+    let scale = 1.0 / (2.0 * n as f64);
+    Mat::from_fn(n, n, |i, j| {
+        if i == j {
+            0.0
+        } else {
+            (rows[i][j] + rows[j][i]) * scale
+        }
+    })
+}
+
+/// Sparse SNE affinities over a kNN candidate set (k ≈ 3 * perplexity is
+/// the usual choice): memory O(N k), the large-N path of fig. 4.
+pub fn sne_affinities_sparse(y: &Mat, perplexity: f64, k: usize) -> SpMat {
+    let n = y.rows;
+    assert!(perplexity < k as f64 + 1.0, "perplexity must be < k");
+    let g = super::knn::knn(y, k);
+    let cond: Vec<Vec<(usize, f64)>> = crate::par::par_map(n, |i| {
+            let d2: Vec<f64> = g.neighbors[i].iter().map(|&(_, d)| d).collect();
+            let cal = calibrate(&d2, perplexity, 1e-6, 100);
+            g.neighbors[i]
+                .iter()
+                .zip(cal.p)
+                .map(|(&(j, _), p)| (j, p))
+                .collect::<Vec<(usize, f64)>>()
+        });
+    let scale = 1.0 / (2.0 * n as f64);
+    let mut trip = Vec::with_capacity(2 * n * k);
+    for (i, nb) in cond.iter().enumerate() {
+        for &(j, p) in nb {
+            // symmetrization: both (i,j) and (j,i) get both contributions
+            trip.push((i, j, p * scale));
+            trip.push((j, i, p * scale));
+        }
+    }
+    SpMat::from_triplets(n, n, trip)
+}
+
+/// Per-point perplexity of a dense affinity matrix row (diagnostics/tests):
+/// perplexity of the conditional `P_{n·}` renormalized to sum 1.
+pub fn row_perplexity(p: &Mat, row: usize) -> f64 {
+    let r = p.row(row);
+    let s: f64 = r.iter().sum();
+    let mut h = 0.0;
+    for &v in r {
+        if v > 0.0 {
+            let q = v / s;
+            h -= q * q.ln();
+        }
+    }
+    h.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    fn random_data(n: usize, d: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(n, d, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn conditional_perplexity_hits_target() {
+        let y = random_data(60, 5, 1);
+        // check by recomputing the conditional for one point
+        let i = 7;
+        let d2: Vec<f64> = (0..60)
+            .filter(|&j| j != i)
+            .map(|j| sqdist(y.row(i), y.row(j)))
+            .collect();
+        for target in [5.0, 15.0, 30.0] {
+            let cal = calibrate(&d2, target, 1e-8, 200);
+            let h: f64 = cal.p.iter().filter(|&&p| p > 0.0).map(|&p| -p * p.ln()).sum();
+            assert!(
+                (h.exp() - target).abs() < 1e-4,
+                "target {target} got {}",
+                h.exp()
+            );
+            assert!(cal.beta > 0.0);
+        }
+    }
+
+    #[test]
+    fn affinities_sum_to_one_and_symmetric() {
+        let y = random_data(40, 4, 2);
+        let p = sne_affinities(&y, 10.0);
+        let total: f64 = p.data.iter().sum();
+        assert!((total - 1.0).abs() < 1e-10, "sum {total}");
+        assert!(p.asymmetry() < 1e-12);
+        for i in 0..40 {
+            assert_eq!(p.at(i, i), 0.0);
+        }
+        assert!(p.data.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn nearer_points_get_higher_affinity() {
+        // three collinear points: 0 at x=0, 1 at x=1, 2 at x=10
+        let y = Mat::from_vec(3, 1, vec![0.0, 1.0, 10.0]);
+        let p = sne_affinities(&y, 1.5);
+        assert!(p.at(0, 1) > p.at(0, 2));
+    }
+
+    #[test]
+    fn sparse_matches_dense_at_full_k() {
+        let y = random_data(25, 3, 3);
+        let dense = sne_affinities(&y, 8.0);
+        let sparse = sne_affinities_sparse(&y, 8.0, 24).to_dense();
+        assert!(dense.max_abs_diff(&sparse) < 1e-8);
+    }
+
+    #[test]
+    fn sparse_sums_to_one() {
+        let y = random_data(50, 4, 4);
+        let p = sne_affinities_sparse(&y, 5.0, 15);
+        let total: f64 = p.values.iter().sum();
+        assert!((total - 1.0).abs() < 1e-10);
+        assert!(p.asymmetry() < 1e-12);
+    }
+
+    #[test]
+    fn row_perplexity_diagnostic() {
+        let y = random_data(30, 3, 5);
+        let p = sne_affinities(&y, 12.0);
+        // symmetrization shifts per-row perplexity slightly; should be
+        // within a factor ~2 of the target
+        for i in 0..30 {
+            let perp = row_perplexity(&p, i);
+            assert!(perp > 6.0 && perp < 30.0, "row {i} perp {perp}");
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Exact k-nearest-neighbor search (blocked brute force, parallel rows).
+//!
+//! Used to sparsify affinities for the spectral direction's kappa-NN
+//! Laplacian (paper section 2, refinement (3)) and to restrict entropic
+//! affinity calibration to a neighborhood at large N.
+
+use crate::linalg::dense::Mat;
+use crate::linalg::vecops::sqdist;
+
+/// Neighbor lists: for each point, `k` (index, squared distance) pairs in
+/// increasing distance, excluding the point itself.
+pub struct KnnGraph {
+    pub k: usize,
+    pub neighbors: Vec<Vec<(usize, f64)>>,
+}
+
+/// Exact kNN by brute force: O(N^2 D) but embarrassingly parallel and
+/// cache-friendly (row-major points).
+pub fn knn(y: &Mat, k: usize) -> KnnGraph {
+    let n = y.rows;
+    assert!(k < n, "k must be < N");
+    let neighbors: Vec<Vec<(usize, f64)>> = crate::par::par_map(n, |i| {
+            let yi = y.row(i);
+            // max-heap of size k on distance (keep the k smallest)
+            let mut heap: Vec<(f64, usize)> = Vec::with_capacity(k + 1);
+            for j in 0..n {
+                if j == i {
+                    continue;
+                }
+                let d2 = sqdist(yi, y.row(j));
+                if heap.len() < k {
+                    heap.push((d2, j));
+                    if heap.len() == k {
+                        heap.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                    }
+                } else if d2 < heap[0].0 {
+                    // replace current max, restore descending order
+                    heap[0] = (d2, j);
+                    let mut idx = 0;
+                    while idx + 1 < k && heap[idx].0 < heap[idx + 1].0 {
+                        heap.swap(idx, idx + 1);
+                        idx += 1;
+                    }
+                }
+            }
+            heap.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            heap.into_iter().map(|(d2, j)| (j, d2)).collect::<Vec<(usize, f64)>>()
+        });
+    KnnGraph { k, neighbors }
+}
+
+impl KnnGraph {
+    /// Symmetrized edge set: (i, j, d2) with i < j, present if either
+    /// endpoint lists the other.
+    pub fn sym_edges(&self) -> Vec<(usize, usize, f64)> {
+        let mut edges = std::collections::HashMap::new();
+        for (i, nb) in self.neighbors.iter().enumerate() {
+            for &(j, d2) in nb {
+                let key = (i.min(j), i.max(j));
+                edges.entry(key).or_insert(d2);
+            }
+        }
+        edges.into_iter().map(|((i, j), d2)| (i, j, d2)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_points() -> Mat {
+        // 1-D line of points 0, 1, 2, ..., 9 embedded in 2-D
+        Mat::from_fn(10, 2, |i, j| if j == 0 { i as f64 } else { 0.0 })
+    }
+
+    #[test]
+    fn nearest_on_a_line() {
+        let y = grid_points();
+        let g = knn(&y, 2);
+        // interior point 5: neighbors 4 and 6 at d2 = 1
+        let nb: Vec<usize> = g.neighbors[5].iter().map(|&(j, _)| j).collect();
+        assert!(nb.contains(&4) && nb.contains(&6), "{nb:?}");
+        // endpoint 0: neighbors 1 and 2
+        let nb0: Vec<usize> = g.neighbors[0].iter().map(|&(j, _)| j).collect();
+        assert_eq!(nb0, vec![1, 2]);
+    }
+
+    #[test]
+    fn distances_sorted_and_exact() {
+        let y = grid_points();
+        let g = knn(&y, 3);
+        for nb in &g.neighbors {
+            for w in nb.windows(2) {
+                assert!(w[0].1 <= w[1].1);
+            }
+        }
+        assert_eq!(g.neighbors[0][0].1, 1.0);
+        assert_eq!(g.neighbors[0][1].1, 4.0);
+        assert_eq!(g.neighbors[0][2].1, 9.0);
+    }
+
+    #[test]
+    fn excludes_self() {
+        let y = grid_points();
+        let g = knn(&y, 4);
+        for (i, nb) in g.neighbors.iter().enumerate() {
+            assert!(nb.iter().all(|&(j, _)| j != i));
+            assert_eq!(nb.len(), 4);
+        }
+    }
+
+    #[test]
+    fn sym_edges_undirected() {
+        let y = grid_points();
+        let g = knn(&y, 1);
+        let edges = g.sym_edges();
+        // 1-NN of a line: consecutive pairs; endpoints give (0,1) and (8,9)
+        assert!(edges.iter().all(|&(i, j, _)| i < j));
+        assert!(edges.contains(&(0, 1, 1.0)));
+    }
+
+    #[test]
+    fn matches_naive_on_random_data() {
+        let mut rng = crate::data::Rng::new(5);
+        let y = Mat::from_fn(30, 3, |_, _| rng.normal());
+        let g = knn(&y, 5);
+        for i in 0..30 {
+            let mut all: Vec<(f64, usize)> = (0..30)
+                .filter(|&j| j != i)
+                .map(|j| (sqdist(y.row(i), y.row(j)), j))
+                .collect();
+            all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let expect: Vec<usize> = all[..5].iter().map(|&(_, j)| j).collect();
+            let got: Vec<usize> = g.neighbors[i].iter().map(|&(j, _)| j).collect();
+            assert_eq!(got, expect, "point {i}");
+        }
+    }
+}

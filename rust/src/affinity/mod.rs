@@ -1,0 +1,11 @@
+//! Affinity construction: entropic (perplexity) SNE affinities, exact
+//! kNN graphs, and the kappa-sparsification used by the spectral
+//! direction.
+
+pub mod entropic;
+pub mod knn;
+pub mod sparsify;
+
+pub use entropic::{sne_affinities, sne_affinities_sparse};
+pub use knn::knn;
+pub use sparsify::sparsify_weights;

@@ -1,0 +1,113 @@
+//! kappa-sparsification of attractive weights for the spectral direction.
+//!
+//! Paper, section 2, refinement (3): "We allow the user to sparsify L+
+//! through (say) a kappa-nearest-neighbor graph ... This establishes a
+//! family from kappa = N (no sparsity), which yields B_k = L+, to
+//! kappa = 0 (most sparsity), which yields B_k = diag(L+) = D+".
+//!
+//! Crucially the *gradient* always uses the full W+; only the curvature
+//! model B_k is sparsified, so convergence (th. 2.1) is unaffected.
+
+use crate::linalg::dense::Mat;
+use crate::linalg::sparse::SpMat;
+
+/// Keep, for every row, the `kappa` largest off-diagonal weights (plus
+/// anything the symmetric partner keeps — the result is symmetrized by
+/// max so it stays a valid nonnegative affinity matrix).
+///
+/// kappa >= N-1 returns the full matrix; kappa = 0 the diagonal-only
+/// pattern (degree matrix after Laplacian assembly).
+pub fn sparsify_weights(w: &Mat, kappa: usize) -> SpMat {
+    assert_eq!(w.rows, w.cols);
+    let n = w.rows;
+    if kappa == 0 {
+        return SpMat::from_triplets(n, n, std::iter::empty());
+    }
+    if kappa >= n - 1 {
+        return SpMat::from_dense(w, 0.0);
+    }
+    let mut keep = vec![false; n * n];
+    let mut idx: Vec<usize> = Vec::with_capacity(n - 1);
+    for i in 0..n {
+        idx.clear();
+        idx.extend((0..n).filter(|&j| j != i));
+        idx.sort_unstable_by(|&a, &b| w.at(i, b).partial_cmp(&w.at(i, a)).unwrap());
+        for &j in idx.iter().take(kappa) {
+            if w.at(i, j) > 0.0 {
+                keep[i * n + j] = true;
+                keep[j * n + i] = true; // symmetrize the pattern
+            }
+        }
+    }
+    let mut trip = Vec::new();
+    for i in 0..n {
+        for j in 0..n {
+            if keep[i * n + j] {
+                trip.push((i, j, w.at(i, j)));
+            }
+        }
+    }
+    SpMat::from_triplets(n, n, trip)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    fn sym_weights(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut w = Mat::from_fn(n, n, |_, _| rng.uniform());
+        for i in 0..n {
+            for j in 0..i {
+                let v = w.at(i, j);
+                *w.at_mut(j, i) = v;
+            }
+            *w.at_mut(i, i) = 0.0;
+        }
+        w
+    }
+
+    #[test]
+    fn full_kappa_is_identity_operation() {
+        let w = sym_weights(12, 1);
+        let s = sparsify_weights(&w, 11);
+        assert!(s.to_dense().max_abs_diff(&w) < 1e-15);
+    }
+
+    #[test]
+    fn zero_kappa_is_empty() {
+        let w = sym_weights(8, 2);
+        assert_eq!(sparsify_weights(&w, 0).nnz(), 0);
+    }
+
+    #[test]
+    fn result_is_symmetric_and_bounded_nnz() {
+        let w = sym_weights(20, 3);
+        let s = sparsify_weights(&w, 4);
+        assert!(s.asymmetry() < 1e-15);
+        // each row keeps >= kappa (its own picks) and <= 2 kappa
+        // (symmetrization) off-diagonal entries
+        let t = s.transpose();
+        for i in 0..20 {
+            let cnt = t.colptr[i + 1] - t.colptr[i];
+            assert!((4..=8).contains(&cnt), "row {i} has {cnt}");
+        }
+    }
+
+    #[test]
+    fn keeps_the_largest() {
+        let mut w = Mat::zeros(4, 4);
+        *w.at_mut(0, 1) = 0.9;
+        *w.at_mut(1, 0) = 0.9;
+        *w.at_mut(0, 2) = 0.5;
+        *w.at_mut(2, 0) = 0.5;
+        *w.at_mut(0, 3) = 0.1;
+        *w.at_mut(3, 0) = 0.1;
+        let s = sparsify_weights(&w, 1);
+        assert_eq!(s.get(0, 1), 0.9);
+        // (0,3) kept only if row 3 picked it (it is row 3's largest)
+        assert_eq!(s.get(0, 3), 0.1);
+        assert_eq!(s.get(1, 2), 0.0);
+    }
+}

@@ -1,0 +1,68 @@
+//! Shared experiment environment builders.
+
+use crate::affinity::{sne_affinities, sne_affinities_sparse};
+use crate::data::coil::{self, CoilParams, Dataset};
+use crate::data::mnist_like::{self, MnistLikeParams};
+use crate::linalg::dense::Mat;
+use crate::linalg::sparse::SpMat;
+
+/// COIL-like environment: dataset + dense perplexity-20 affinities
+/// (paper section 3.1: N = 720, perplexity 20, nonsparse W+).
+pub struct CoilEnv {
+    pub data: Dataset,
+    pub p: Mat,
+}
+
+pub fn coil_setup(objects: usize, views: usize, ambient: usize, perplexity: f64) -> CoilEnv {
+    let data = coil::generate(&CoilParams {
+        objects,
+        views,
+        ambient_dim: ambient,
+        ..Default::default()
+    });
+    let p = sne_affinities(&data.y, perplexity);
+    CoilEnv { data, p }
+}
+
+/// MNIST-like environment: dataset + sparse perplexity-50 affinities
+/// (paper section 3.2: N = 20000, perplexity 50; kNN candidate set
+/// 3x perplexity, the standard large-N practice).
+pub struct MnistEnv {
+    pub data: Dataset,
+    pub p: SpMat,
+}
+
+pub fn mnist_setup(n: usize, ambient: usize, perplexity: f64) -> MnistEnv {
+    let data = mnist_like::generate(&MnistLikeParams { n, ambient_dim: ambient, ..Default::default() });
+    let k = ((3.0 * perplexity) as usize).min(n - 1);
+    let p = sne_affinities_sparse(&data.y, perplexity, k);
+    MnistEnv { data, p }
+}
+
+/// Results directory helper.
+pub fn results_dir() -> std::path::PathBuf {
+    let dir = std::path::PathBuf::from("results");
+    std::fs::create_dir_all(&dir).expect("create results/");
+    dir
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coil_setup_small() {
+        let env = coil_setup(2, 8, 32, 4.0);
+        assert_eq!(env.data.y.rows, 16);
+        assert_eq!(env.p.rows, 16);
+        let total: f64 = env.p.data.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mnist_setup_small() {
+        let env = mnist_setup(50, 20, 5.0);
+        assert_eq!(env.data.y.rows, 50);
+        assert_eq!(env.p.rows, 50);
+    }
+}

@@ -1,0 +1,101 @@
+//! Figure 2: COIL-20, many random initializations, fixed wall budget per
+//! run; scatter of final energy E and iteration count per strategy, for
+//! EE and s-SNE (paper: 50 inits x 20 s).
+//!
+//! Uses the coordinator's batch runner with parallelism 1 (budgeted runs
+//! must not share cores).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::common::{coil_setup, results_dir};
+use crate::coordinator::{run_batch_sync, EmbeddingJob};
+use crate::objective::{Attractive, Method};
+
+pub struct Fig2Config {
+    pub objects: usize,
+    pub views: usize,
+    pub ambient: usize,
+    pub perplexity: f64,
+    pub lambda_ee: f64,
+    pub inits: usize,
+    pub budget: Duration,
+    pub strategies: Vec<String>,
+}
+
+impl Default for Fig2Config {
+    fn default() -> Self {
+        Fig2Config {
+            objects: 10,
+            views: 72,
+            ambient: 256,
+            perplexity: 20.0,
+            lambda_ee: 100.0,
+            inits: 50,
+            budget: Duration::from_secs(20),
+            strategies: vec!["gd", "fp", "cg", "lbfgs", "sd", "sdm"]
+                .into_iter()
+                .map(String::from)
+                .collect(),
+        }
+    }
+}
+
+pub fn run(cfg: &Fig2Config) -> anyhow::Result<()> {
+    let env = coil_setup(cfg.objects, cfg.views, cfg.ambient, cfg.perplexity);
+    let p = Arc::new(Attractive::Dense(env.p));
+    let dir = results_dir();
+
+    for (method, lam, tag) in [
+        (Method::Ee, cfg.lambda_ee, "ee"),
+        (Method::Ssne, 1.0, "ssne"),
+    ] {
+        let mut jobs = Vec::new();
+        for sname in &cfg.strategies {
+            for seed in 0..cfg.inits {
+                let mut job = EmbeddingJob::native(
+                    format!("{tag}:{sname}:{seed}"),
+                    method,
+                    lam,
+                    p.clone(),
+                    sname,
+                    Some(cfg.budget),
+                );
+                job.init.seed = seed as u64;
+                job.opts.max_iters = 100_000;
+                job.opts.rel_tol = 1e-12; // budget-limited, not tol-limited
+                jobs.push(job);
+            }
+        }
+        let results = run_batch_sync(jobs, 1);
+        let path = dir.join(format!("fig2_{tag}.csv"));
+        let mut f = std::fs::File::create(&path)?;
+        use std::io::Write;
+        writeln!(f, "strategy,seed,e,iters,time_s")?;
+        // summary: per-strategy median/min/max final E
+        let mut per_strategy: std::collections::BTreeMap<String, Vec<f64>> = Default::default();
+        for r in results {
+            let r = r.map_err(|e| anyhow::anyhow!("job failed: {e}"))?;
+            let parts: Vec<&str> = r.name.split(':').collect();
+            writeln!(f, "{},{},{:.10e},{},{:.3}", parts[1], parts[2], r.e, r.iters, r.time_s)?;
+            per_strategy.entry(parts[1].to_string()).or_default().push(r.e);
+        }
+        println!("fig2 [{tag}]: final E over {} inits, {:?} budget", cfg.inits, cfg.budget);
+        println!(
+            "  {:<8} {:>12} {:>12} {:>12}",
+            "strategy", "min E", "median E", "max E"
+        );
+        for (s, mut es) in per_strategy {
+            es.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            println!(
+                "  {:<8} {:>12.6e} {:>12.6e} {:>12.6e}",
+                s,
+                es[0],
+                es[es.len() / 2],
+                es[es.len() - 1]
+            );
+        }
+    }
+    println!("fig2: wrote results/fig2_{{ee,ssne}}.csv");
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! Figure 3: homotopy optimization of EE on COIL-20 — per-lambda
+//! iteration/runtime curves plus total function evaluations and runtime
+//! per strategy (paper: 50 log-spaced lambda in [1e-4, 1e2], per-stage
+//! rel tol 1e-6 or 1e4 iterations).
+
+use std::time::Duration;
+
+use super::common::{coil_setup, results_dir};
+use crate::metrics::quality::label_knn_accuracy;
+use crate::objective::native::NativeObjective;
+use crate::objective::{Attractive, Method};
+use crate::opt::homotopy::{homotopy, log_lambda_schedule};
+use crate::opt::{strategy_by_name, OptOptions};
+
+pub struct Fig3Config {
+    pub objects: usize,
+    pub views: usize,
+    pub ambient: usize,
+    pub perplexity: f64,
+    pub lambda_lo: f64,
+    pub lambda_hi: f64,
+    pub lambda_steps: usize,
+    pub stage_rel_tol: f64,
+    pub stage_max_iters: usize,
+    /// total wall budget per strategy (None = run the full path)
+    pub budget: Option<Duration>,
+    pub strategies: Vec<String>,
+}
+
+impl Default for Fig3Config {
+    fn default() -> Self {
+        Fig3Config {
+            objects: 10,
+            views: 72,
+            ambient: 256,
+            perplexity: 20.0,
+            lambda_lo: 1e-4,
+            lambda_hi: 1e2,
+            lambda_steps: 50,
+            stage_rel_tol: 1e-6,
+            stage_max_iters: 10_000,
+            budget: Some(Duration::from_secs(120)),
+            strategies: vec!["gd", "fp", "cg", "lbfgs", "sd", "sdm"]
+                .into_iter()
+                .map(String::from)
+                .collect(),
+        }
+    }
+}
+
+pub fn run(cfg: &Fig3Config) -> anyhow::Result<()> {
+    let env = coil_setup(cfg.objects, cfg.views, cfg.ambient, cfg.perplexity);
+    let n = env.data.y.rows;
+    let lambdas = log_lambda_schedule(cfg.lambda_lo, cfg.lambda_hi, cfg.lambda_steps);
+    let dir = results_dir();
+    let path = dir.join("fig3.csv");
+    let mut f = std::fs::File::create(&path)?;
+    use std::io::Write;
+    writeln!(f, "strategy,stage,lambda,iters,time_s,nfev,e")?;
+
+    println!(
+        "fig3: homotopy EE, {} lambdas in [{:.0e}, {:.0e}], N = {n}",
+        cfg.lambda_steps, cfg.lambda_lo, cfg.lambda_hi
+    );
+    println!(
+        "  {:<8} {:>8} {:>10} {:>10} {:>12} {:>8}",
+        "strategy", "iters", "nfev", "time (s)", "final E", "knn-acc"
+    );
+    for sname in &cfg.strategies {
+        let mut obj = NativeObjective::with_affinities(
+            Method::Ee,
+            Attractive::Dense(env.p.clone()),
+            lambdas[0],
+            2,
+        );
+        let x0 = crate::init::random_init(n, 2, 1e-4, 21);
+        let mut strategy = strategy_by_name(sname, None)
+            .ok_or_else(|| anyhow::anyhow!("unknown strategy {sname}"))?;
+        let opts = OptOptions {
+            max_iters: cfg.stage_max_iters,
+            rel_tol: cfg.stage_rel_tol,
+            ..Default::default()
+        };
+        let res = homotopy(&mut obj, strategy.as_mut(), &x0, &lambdas, &opts, cfg.budget);
+        for (i, st) in res.stages.iter().enumerate() {
+            writeln!(
+                f,
+                "{sname},{i},{:.6e},{},{:.4},{},{:.10e}",
+                st.lambda, st.iters, st.time_s, st.nfev, st.e
+            )?;
+        }
+        let acc = label_knn_accuracy(&res.x, &env.data.labels, 5);
+        println!(
+            "  {:<8} {:>8} {:>10} {:>10.2} {:>12.6e} {:>8.3}",
+            sname,
+            res.total_iters(),
+            res.total_nfev(),
+            res.total_time(),
+            res.stages.last().map(|s| s.e).unwrap_or(f64::NAN),
+            acc,
+        );
+        // save the final embedding of the best-known strategy for fig. 3's left panel
+        if sname == "sd" {
+            crate::data::loader::save_embedding_csv(
+                &dir.join("fig3_embedding_sd.csv"),
+                &res.x,
+                &env.data.labels,
+            )?;
+        }
+    }
+    println!("fig3: wrote results/fig3.csv (+ fig3_embedding_sd.csv)");
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Figure-reproduction harness: one module per paper figure/table.
+//!
+//! Each `run_*` function regenerates the corresponding figure's data as
+//! CSV under `results/` and prints a summary table. Scales are
+//! configurable: defaults are container-friendly; the paper's full
+//! settings are one flag away (see EXPERIMENTS.md for the mapping).
+
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod rates;
+
+pub use common::{coil_setup, mnist_setup, CoilEnv};

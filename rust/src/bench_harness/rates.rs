@@ -1,0 +1,164 @@
+//! Theorem 2.1 rate constants: `r = ||B^{-1} H - I||_2` at a minimizer,
+//! per strategy — the paper's claim "the better the Hessian
+//! approximation B the smaller r and the faster the convergence",
+//! quantified (section 2, "This is quantified in the experiments").
+
+use super::common::results_dir;
+use crate::data::Rng;
+use crate::linalg::dense::Mat;
+use crate::objective::hessian::{full_hessian, rate_constant, sd_partial_hessian};
+use crate::objective::native::NativeObjective;
+use crate::objective::{Attractive, Method, Objective};
+use crate::opt::{minimize, OptOptions};
+
+pub struct RatesConfig {
+    pub n: usize,
+    pub lambda_ee: f64,
+}
+
+impl Default for RatesConfig {
+    fn default() -> Self {
+        RatesConfig { n: 40, lambda_ee: 10.0 }
+    }
+}
+
+/// `B` for each strategy at the minimizer (dense, small N):
+/// GD -> I scaled to match H's trace (best-case fixed step);
+/// FP -> 4 D+ (x) I; DiagH -> diag(H); SD -> 4 L+ (x) I + mu;
+/// SD- -> SD + 8 lam Lxx_(i=j); Newton -> H (r = 0 reference).
+fn partial_hessians(obj: &dyn Objective, x: &Mat, h: &Mat) -> Vec<(&'static str, Mat)> {
+    let n = x.rows;
+    let d = x.cols;
+    let nd = n * d;
+    let mut out = Vec::new();
+
+    // GD: best-case scalar B = (trace H / nd) I
+    let tr: f64 = (0..nd).map(|i| h.at(i, i)).sum();
+    out.push(("gd", Mat::from_fn(nd, nd, |i, j| if i == j { tr / nd as f64 } else { 0.0 })));
+
+    // FP: 4 D+ (x) I
+    let deg = obj.attractive().degrees();
+    out.push((
+        "fp",
+        Mat::from_fn(nd, nd, |i, j| if i == j { 4.0 * deg[i / d] } else { 0.0 }),
+    ));
+
+    // DiagH: diagonal of H clipped pd
+    let dmax = (0..nd).map(|i| h.at(i, i)).fold(0.0f64, f64::max);
+    out.push((
+        "diagh",
+        Mat::from_fn(nd, nd, |i, j| {
+            if i == j {
+                h.at(i, i).max(1e-10 * dmax)
+            } else {
+                0.0
+            }
+        }),
+    ));
+
+    // SD: 4 L+ (x) I + mu I
+    let mut sd = sd_partial_hessian(obj, d);
+    let mu = 1e-10 * deg.iter().cloned().fold(f64::INFINITY, f64::min).max(1e-10);
+    for i in 0..nd {
+        *sd.at_mut(i, i) += mu;
+    }
+    out.push(("sd", sd.clone()));
+
+    // SD-: SD + 8 Lxx_(i=j) psd part (c_nm weights as in opt::sdm)
+    let mut sdm = sd;
+    let lam = obj.lambda();
+    let method = obj.method();
+    let mut s = 0.0;
+    if matches!(method, Method::Ssne | Method::Tsne) {
+        for a in 0..n {
+            for b in 0..n {
+                if a != b {
+                    let d2 = crate::linalg::vecops::sqdist(x.row(a), x.row(b));
+                    s += match method {
+                        Method::Ssne => (-d2).exp(),
+                        _ => 1.0 / (1.0 + d2),
+                    };
+                }
+            }
+        }
+    }
+    for a in 0..n {
+        for b in 0..n {
+            if a == b {
+                continue;
+            }
+            let d2 = crate::linalg::vecops::sqdist(x.row(a), x.row(b));
+            let c = match method {
+                Method::Spectral => 0.0,
+                Method::Ee => lam * (-d2).exp(),
+                Method::Ssne => lam * (-d2).exp() / s,
+                Method::Tsne => {
+                    let k = 1.0 / (1.0 + d2);
+                    2.0 * lam * k * k * k / s
+                }
+            };
+            for i in 0..d {
+                let diff = x.at(a, i) - x.at(b, i);
+                let w = 8.0 * c * diff * diff;
+                *sdm.at_mut(a * d + i, a * d + i) += w;
+                *sdm.at_mut(a * d + i, b * d + i) -= w;
+            }
+        }
+    }
+    out.push(("sdm", sdm));
+    out
+}
+
+pub fn run(cfg: &RatesConfig) -> anyhow::Result<()> {
+    let mut rng = Rng::new(77);
+    let y = Mat::from_fn(cfg.n, 5, |_, _| rng.normal());
+    let p = crate::affinity::sne_affinities(&y, (cfg.n as f64 / 5.0).max(3.0));
+    let dir = results_dir();
+    let path = dir.join("rates.csv");
+    let mut f = std::fs::File::create(&path)?;
+    use std::io::Write;
+    writeln!(f, "method,strategy,r")?;
+
+    println!("rates: N = {}, r = ||B^-1 H - I||_2 at the minimizer", cfg.n);
+    println!("  {:<8} {:<8} {:>12}", "method", "strategy", "r");
+    for (method, lam, tag) in [
+        (Method::Ee, cfg.lambda_ee, "ee"),
+        (Method::Ssne, 1.0, "ssne"),
+        (Method::Tsne, 1.0, "tsne"),
+    ] {
+        let obj = NativeObjective::with_affinities(
+            method,
+            Attractive::Dense(p.clone()),
+            lam,
+            2,
+        );
+        // converge hard to a minimizer
+        let x0 = crate::init::random_init(cfg.n, 2, 1e-3, 5);
+        let mut sd = crate::opt::sd::SpectralDirection::new(None);
+        let res = minimize(
+            &obj,
+            &mut sd,
+            &x0,
+            &OptOptions { max_iters: 3000, grad_tol: 1e-9, rel_tol: 1e-15, ..Default::default() },
+        );
+        let x_star = res.x;
+        let h = full_hessian(&obj, &x_star);
+        // H at a minimizer is psd but has the shift-invariance null
+        // space; regularize both H and B consistently for the solve
+        let nd = cfg.n * 2;
+        let mut h_reg = h.clone();
+        for i in 0..nd {
+            *h_reg.at_mut(i, i) += 1e-8;
+        }
+        for (sname, mut b) in partial_hessians(&obj, &x_star, &h) {
+            for i in 0..nd {
+                *b.at_mut(i, i) += 1e-8;
+            }
+            let r = rate_constant(&b, &h_reg);
+            writeln!(f, "{tag},{sname},{r:.6e}")?;
+            println!("  {:<8} {:<8} {:>12.4e}", tag, sname, r);
+        }
+    }
+    println!("rates: wrote results/rates.csv");
+    Ok(())
+}

@@ -1,0 +1,170 @@
+//! Embedding-job specification and results.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::linalg::dense::Mat;
+use crate::objective::native::NativeObjective;
+use crate::objective::xla::XlaObjective;
+use crate::objective::{Attractive, Method, Objective};
+use crate::opt::{minimize, IterStats, OptOptions, StopReason};
+use crate::runtime::ArtifactRegistry;
+
+/// Which objective backend evaluates E and its gradient.
+#[derive(Clone)]
+pub enum Backend {
+    /// Pure rust (any N).
+    Native,
+    /// AOT jax/Pallas artifacts through PJRT (shapes from the manifest).
+    Xla(Arc<ArtifactRegistry>),
+}
+
+/// Initialization specification.
+#[derive(Clone, Debug)]
+pub struct InitSpec {
+    pub seed: u64,
+    pub scale: f64,
+}
+
+impl Default for InitSpec {
+    fn default() -> Self {
+        InitSpec { seed: 0, scale: 1e-4 }
+    }
+}
+
+/// A complete embedding job: weights + method + optimizer + budget.
+#[derive(Clone)]
+pub struct EmbeddingJob {
+    pub name: String,
+    pub method: Method,
+    pub lambda: f64,
+    /// attractive weights (P / W+), shared across jobs of a batch
+    pub weights: Arc<Attractive>,
+    pub dim: usize,
+    /// strategy name understood by `opt::strategy_by_name`
+    pub strategy: String,
+    /// kappa sparsification for SD/SD-
+    pub kappa: Option<usize>,
+    pub init: InitSpec,
+    pub opts: OptOptions,
+    pub backend: Backend,
+}
+
+impl EmbeddingJob {
+    /// Convenience: native-backend job with a time budget.
+    pub fn native(
+        name: impl Into<String>,
+        method: Method,
+        lambda: f64,
+        weights: Arc<Attractive>,
+        strategy: &str,
+        budget: Option<Duration>,
+    ) -> Self {
+        EmbeddingJob {
+            name: name.into(),
+            method,
+            lambda,
+            weights,
+            dim: 2,
+            strategy: strategy.to_string(),
+            kappa: None,
+            init: InitSpec::default(),
+            opts: OptOptions { time_budget: budget, ..Default::default() },
+            backend: Backend::Native,
+        }
+    }
+
+    /// Build the objective for this job.
+    pub fn build_objective(&self) -> anyhow::Result<Box<dyn Objective>> {
+        let wp = (*self.weights).clone();
+        Ok(match &self.backend {
+            Backend::Native => Box::new(NativeObjective::with_affinities(
+                self.method,
+                wp,
+                self.lambda,
+                self.dim,
+            )),
+            Backend::Xla(reg) => Box::new(XlaObjective::new(
+                reg.clone(),
+                self.method,
+                wp,
+                self.lambda,
+                self.dim,
+            )?),
+        })
+    }
+
+    /// Execute synchronously on the current thread.
+    pub fn run(&self) -> anyhow::Result<JobResult> {
+        let obj = self.build_objective()?;
+        let x0 = crate::init::random_init(obj.n(), self.dim, self.init.scale, self.init.seed);
+        let mut strategy = crate::opt::strategy_by_name(&self.strategy, self.kappa)
+            .ok_or_else(|| anyhow::anyhow!("unknown strategy {:?}", self.strategy))?;
+        let res = minimize(obj.as_ref(), strategy.as_mut(), &x0, &self.opts);
+        Ok(JobResult {
+            name: self.name.clone(),
+            strategy: self.strategy.clone(),
+            e: res.e,
+            iters: res.iters(),
+            time_s: res.trace.last().map(|t| t.time_s).unwrap_or(0.0),
+            stop: res.stop,
+            trace: res.trace,
+            x: res.x,
+        })
+    }
+}
+
+/// Outcome of a job.
+pub struct JobResult {
+    pub name: String,
+    pub strategy: String,
+    pub e: f64,
+    pub iters: usize,
+    pub time_s: f64,
+    pub stop: StopReason,
+    pub trace: Vec<IterStats>,
+    pub x: Mat,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    #[test]
+    fn job_runs_to_completion() {
+        let n = 16;
+        let mut rng = Rng::new(2);
+        let y = Mat::from_fn(n, 3, |_, _| rng.normal());
+        let p = crate::affinity::sne_affinities(&y, 4.0);
+        let job = EmbeddingJob::native(
+            "test",
+            Method::Ee,
+            10.0,
+            Arc::new(Attractive::Dense(p)),
+            "sd",
+            None,
+        );
+        let mut job = job;
+        job.opts.max_iters = 50;
+        let res = job.run().unwrap();
+        assert!(res.e.is_finite());
+        assert!(res.iters <= 50);
+        assert_eq!(res.x.rows, n);
+    }
+
+    #[test]
+    fn unknown_strategy_errors() {
+        let p = Mat::zeros(4, 4);
+        let mut job = EmbeddingJob::native(
+            "bad",
+            Method::Ee,
+            1.0,
+            Arc::new(Attractive::Dense(p)),
+            "nope",
+            None,
+        );
+        job.opts.max_iters = 1;
+        assert!(job.run().is_err());
+    }
+}

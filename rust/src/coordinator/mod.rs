@@ -1,0 +1,14 @@
+//! Embedding-job coordinator: specification, async runner, progress.
+//!
+//! The L3 coordination layer: experiments (fig. 2's 50-restart batch, the
+//! figure harnesses, the CLI) submit [`job::EmbeddingJob`]s; the
+//! [`runner`] executes them on a scoped worker pool with wall-clock
+//! budgets and streams [`runner::JobEvent`]s back. Timing-sensitive
+//! batches (anything whose result is "energy reached within T seconds")
+//! run with `parallelism = 1` so jobs don't steal each other's cores.
+
+pub mod job;
+pub mod runner;
+
+pub use job::{Backend, EmbeddingJob, InitSpec, JobResult};
+pub use runner::{run_batch, run_batch_sync, JobEvent};

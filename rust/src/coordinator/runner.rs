@@ -1,0 +1,162 @@
+//! Thread-based job runner: bounded parallelism, progress events.
+//!
+//! (The offline build carries no async runtime; plain threads + channels
+//! cover everything the experiment batches need.)
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use super::job::{EmbeddingJob, JobResult};
+
+/// Progress events streamed while a batch runs.
+#[derive(Debug)]
+pub enum JobEvent {
+    Started { name: String },
+    Finished { name: String, e: f64, iters: usize, time_s: f64 },
+    Failed { name: String, error: String },
+}
+
+/// Run a batch of jobs with at most `parallelism` concurrent workers.
+/// Results come back in submission order.
+///
+/// Timing-sensitive batches should pass `parallelism = 1` (see module
+/// docs); embarrassingly parallel sweeps can use more.
+pub fn run_batch(
+    jobs: Vec<EmbeddingJob>,
+    parallelism: usize,
+    events: Option<mpsc::Sender<JobEvent>>,
+) -> Vec<anyhow::Result<JobResult>> {
+    let n = jobs.len();
+    let queue: Arc<Mutex<std::collections::VecDeque<(usize, EmbeddingJob)>>> =
+        Arc::new(Mutex::new(jobs.into_iter().enumerate().collect()));
+    let mut out: Vec<Option<anyhow::Result<JobResult>>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let out = Arc::new(Mutex::new(out));
+
+    let workers = parallelism.max(1).min(n.max(1));
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let queue = queue.clone();
+            let out = out.clone();
+            let events = events.clone();
+            s.spawn(move || loop {
+                let item = queue.lock().unwrap().pop_front();
+                let Some((idx, job)) = item else { break };
+                if let Some(tx) = &events {
+                    let _ = tx.send(JobEvent::Started { name: job.name.clone() });
+                }
+                let name = job.name.clone();
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job.run()))
+                    .unwrap_or_else(|_| Err(anyhow::anyhow!("job {name} panicked")));
+                if let Some(tx) = &events {
+                    let _ = tx.send(match &res {
+                        Ok(r) => JobEvent::Finished {
+                            name: name.clone(),
+                            e: r.e,
+                            iters: r.iters,
+                            time_s: r.time_s,
+                        },
+                        Err(e) => {
+                            JobEvent::Failed { name: name.clone(), error: e.to_string() }
+                        }
+                    });
+                }
+                out.lock().unwrap()[idx] = Some(res);
+            });
+        }
+    });
+
+    Arc::try_unwrap(out)
+        .ok()
+        .expect("all workers joined")
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("every job produced a result"))
+        .collect()
+}
+
+/// Alias kept for API symmetry with the async-runtime version.
+pub fn run_batch_sync(
+    jobs: Vec<EmbeddingJob>,
+    parallelism: usize,
+) -> Vec<anyhow::Result<JobResult>> {
+    run_batch(jobs, parallelism, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::linalg::dense::Mat;
+    use crate::objective::{Attractive, Method};
+
+    fn jobs(n_jobs: usize) -> Vec<EmbeddingJob> {
+        let n = 14;
+        let mut rng = Rng::new(3);
+        let y = Mat::from_fn(n, 3, |_, _| rng.normal());
+        let p = Arc::new(Attractive::Dense(crate::affinity::sne_affinities(&y, 4.0)));
+        (0..n_jobs)
+            .map(|i| {
+                let mut j = EmbeddingJob::native(
+                    format!("job{i}"),
+                    Method::Ee,
+                    5.0,
+                    p.clone(),
+                    "sd",
+                    None,
+                );
+                j.init.seed = i as u64;
+                j.opts.max_iters = 30;
+                j
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batch_completes_all_jobs_in_order() {
+        let results = run_batch_sync(jobs(4), 2);
+        assert_eq!(results.len(), 4);
+        for (i, r) in results.into_iter().enumerate() {
+            let r = r.unwrap();
+            assert!(r.e.is_finite());
+            assert_eq!(r.name, format!("job{i}"));
+        }
+    }
+
+    #[test]
+    fn events_are_emitted() {
+        let (tx, rx) = mpsc::channel();
+        let results = run_batch(jobs(2), 1, Some(tx));
+        assert_eq!(results.len(), 2);
+        let mut started = 0;
+        let mut finished = 0;
+        while let Ok(ev) = rx.try_recv() {
+            match ev {
+                JobEvent::Started { .. } => started += 1,
+                JobEvent::Finished { .. } => finished += 1,
+                JobEvent::Failed { name, error } => panic!("{name} failed: {error}"),
+            }
+        }
+        assert_eq!(started, 2);
+        assert_eq!(finished, 2);
+    }
+
+    #[test]
+    fn different_seeds_reach_different_minima() {
+        // the fig. 2 phenomenon: random restarts land on distinct local
+        // optima (energies differ)
+        let results = run_batch_sync(jobs(3), 1);
+        let es: Vec<f64> = results.into_iter().map(|r| r.unwrap().e).collect();
+        assert!(es.iter().any(|&e| (e - es[0]).abs() > 1e-12));
+    }
+
+    #[test]
+    fn failed_jobs_are_reported_not_fatal() {
+        let mut js = jobs(2);
+        js[1].strategy = "does-not-exist".into();
+        let results = run_batch_sync(js, 1);
+        assert!(results[0].is_ok());
+        assert!(results[1].is_err());
+    }
+}

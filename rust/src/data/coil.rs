@@ -1,0 +1,167 @@
+//! COIL-20-like synthetic dataset.
+//!
+//! The paper's small benchmark is COIL-20: 10 objects x 72 rotation views
+//! (every 5 degrees) = 720 grayscale 128x128 images — i.e. **ten closed
+//! 1-D loops smoothly embedded in R^16384**. We do not ship the images;
+//! what the optimization experiments exercise is the *geometry*: closed
+//! loops, high ambient dimension, nonuniform inter-loop distances. This
+//! generator reproduces exactly that (see DESIGN.md "Substitutions"):
+//! each object is a random smooth closed curve (random Fourier series in
+//! a random low-dim subspace, lifted to R^D by a random near-orthogonal
+//! frame), sampled at `views` angles with small observation noise.
+
+use super::rng::Rng;
+use crate::linalg::Mat;
+
+/// Parameters for the synthetic COIL generator.
+#[derive(Clone, Debug)]
+pub struct CoilParams {
+    pub objects: usize,
+    pub views: usize,
+    /// ambient dimension (paper: 16384; default lower, same geometry)
+    pub ambient_dim: usize,
+    /// number of Fourier harmonics shaping each loop
+    pub harmonics: usize,
+    /// loop radius scale
+    pub radius: f64,
+    /// separation scale between object centers. Default 1.5 (~1.5 loop
+    /// radii): real COIL-20 objects are *not* far apart in pixel space
+    /// relative to within-object variation, and entropic affinities must
+    /// retain small but non-negligible inter-object links (inter-cluster
+    /// mass ~ 2e-3 at perplexity 20 with these defaults) or the affinity
+    /// graph disconnects and the minimizer degenerates to
+    /// astronomically separated clusters.
+    pub separation: f64,
+    /// iid observation noise
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl Default for CoilParams {
+    fn default() -> Self {
+        CoilParams {
+            objects: 10,
+            views: 72,
+            ambient_dim: 1024,
+            harmonics: 3,
+            radius: 1.0,
+            separation: 1.5,
+            noise: 0.05,
+            seed: 20,
+        }
+    }
+}
+
+/// Generated dataset: `n x ambient_dim` points plus the object label of
+/// each row (used by quality metrics, never by the optimizer).
+pub struct Dataset {
+    pub y: Mat,
+    pub labels: Vec<usize>,
+}
+
+/// Generate the COIL-like dataset: N = objects * views points.
+pub fn generate(p: &CoilParams) -> Dataset {
+    let n = p.objects * p.views;
+    let d = p.ambient_dim;
+    let mut rng = Rng::new(p.seed);
+    let mut y = Mat::zeros(n, d);
+    let mut labels = Vec::with_capacity(n);
+
+    for obj in 0..p.objects {
+        // random center, pushed apart on a sphere of radius `separation`
+        let mut center: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let cn = crate::linalg::vecops::nrm2(&center).max(1e-12);
+        for c in center.iter_mut() {
+            *c *= p.separation / cn;
+        }
+        // random Fourier coefficients in a 2*harmonics-dim latent space,
+        // one random direction in R^D per latent coordinate
+        let latent = 2 * p.harmonics;
+        let frame: Vec<Vec<f64>> = (0..latent)
+            .map(|_| {
+                let v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+                let nv = crate::linalg::vecops::nrm2(&v).max(1e-12);
+                v.into_iter().map(|x| x / nv).collect()
+            })
+            .collect();
+        // per-harmonic amplitude decay keeps loops smooth
+        let amps: Vec<f64> = (0..p.harmonics)
+            .map(|h| p.radius / (1.0 + h as f64))
+            .collect();
+        let phases: Vec<f64> = (0..p.harmonics)
+            .map(|_| rng.uniform_in(0.0, 2.0 * std::f64::consts::PI))
+            .collect();
+
+        for v in 0..p.views {
+            let theta = 2.0 * std::f64::consts::PI * v as f64 / p.views as f64;
+            let row_idx = obj * p.views + v;
+            let row = y.row_mut(row_idx);
+            row.copy_from_slice(&center);
+            for h in 0..p.harmonics {
+                let a = amps[h] * ((h + 1) as f64 * theta + phases[h]).cos();
+                let b = amps[h] * ((h + 1) as f64 * theta + phases[h]).sin();
+                crate::linalg::vecops::axpy(a, &frame[2 * h], row);
+                crate::linalg::vecops::axpy(b, &frame[2 * h + 1], row);
+            }
+            for x in row.iter_mut() {
+                *x += p.noise * rng.normal();
+            }
+            labels.push(obj);
+        }
+    }
+    Dataset { y, labels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::sqdist;
+
+    #[test]
+    fn shapes_and_labels() {
+        let p = CoilParams { objects: 3, views: 12, ambient_dim: 50, ..Default::default() };
+        let ds = generate(&p);
+        assert_eq!(ds.y.rows, 36);
+        assert_eq!(ds.y.cols, 50);
+        assert_eq!(ds.labels.len(), 36);
+        assert_eq!(ds.labels[0], 0);
+        assert_eq!(ds.labels[35], 2);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = CoilParams { objects: 2, views: 8, ambient_dim: 20, ..Default::default() };
+        let a = generate(&p);
+        let b = generate(&p);
+        assert!(a.y.max_abs_diff(&b.y) == 0.0);
+    }
+
+    #[test]
+    fn loops_are_closed_and_locally_smooth() {
+        // consecutive views are much closer than views half a turn apart,
+        // and the last view is close to the first (closed loop).
+        let p = CoilParams {
+            objects: 1,
+            views: 36,
+            ambient_dim: 64,
+            noise: 0.0,
+            ..Default::default()
+        };
+        let ds = generate(&p);
+        let near = sqdist(ds.y.row(0), ds.y.row(1));
+        let far = sqdist(ds.y.row(0), ds.y.row(18));
+        let wrap = sqdist(ds.y.row(0), ds.y.row(35));
+        assert!(near < far * 0.5, "near {near} far {far}");
+        assert!(wrap < far * 0.5, "loop not closed: wrap {wrap} far {far}");
+    }
+
+    #[test]
+    fn objects_are_separated() {
+        let p = CoilParams { objects: 4, views: 10, ambient_dim: 128, ..Default::default() };
+        let ds = generate(&p);
+        // min inter-object distance exceeds typical intra-object distance
+        let intra = sqdist(ds.y.row(0), ds.y.row(5));
+        let inter = sqdist(ds.y.row(0), ds.y.row(15));
+        assert!(inter > intra, "inter {inter} intra {intra}");
+    }
+}

@@ -1,0 +1,129 @@
+//! On-disk dataset loading (CSV and raw f32), so real COIL-20 / MNIST can
+//! be dropped in when available — the figure harnesses accept
+//! `--data path.csv` and fall back to the synthetic generators otherwise.
+
+use crate::linalg::Mat;
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+
+use super::coil::Dataset;
+
+/// Load `label,feature0,feature1,...` CSV rows (no header, or a header
+/// starting with a non-numeric first field which is skipped).
+pub fn load_csv(path: &Path) -> std::io::Result<Dataset> {
+    let f = std::fs::File::open(path)?;
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut labels = Vec::new();
+    for line in BufReader::new(f).lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut fields = line.split(',');
+        let first = fields.next().unwrap_or("");
+        let label: f64 = match first.trim().parse() {
+            Ok(v) => v,
+            Err(_) => continue, // header row
+        };
+        let feats: Result<Vec<f64>, _> = fields.map(|s| s.trim().parse::<f64>()).collect();
+        let feats = feats.map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, format!("bad field: {e}"))
+        })?;
+        labels.push(label as usize);
+        rows.push(feats);
+    }
+    if rows.is_empty() {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "empty csv"));
+    }
+    let d = rows[0].len();
+    if rows.iter().any(|r| r.len() != d) {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "ragged csv rows",
+        ));
+    }
+    let n = rows.len();
+    let mut y = Mat::zeros(n, d);
+    for (i, r) in rows.into_iter().enumerate() {
+        y.row_mut(i).copy_from_slice(&r);
+    }
+    Ok(Dataset { y, labels })
+}
+
+/// Load a raw little-endian f32 matrix of known shape (MNIST-style dumps).
+pub fn load_raw_f32(path: &Path, n: usize, d: usize) -> std::io::Result<Mat> {
+    let mut f = std::fs::File::open(path)?;
+    let mut buf = vec![0u8; n * d * 4];
+    f.read_exact(&mut buf)?;
+    let mut m = Mat::zeros(n, d);
+    for i in 0..n * d {
+        let b = [buf[4 * i], buf[4 * i + 1], buf[4 * i + 2], buf[4 * i + 3]];
+        m.data[i] = f32::from_le_bytes(b) as f64;
+    }
+    Ok(m)
+}
+
+/// Write an embedding + labels to CSV (for plotting the figures).
+pub fn save_embedding_csv(
+    path: &Path,
+    x: &Mat,
+    labels: &[usize],
+) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::File::create(path)?;
+    for i in 0..x.rows {
+        let coords: Vec<String> = x.row(i).iter().map(|v| format!("{v:.6}")).collect();
+        writeln!(f, "{},{}", labels.get(i).copied().unwrap_or(0), coords.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("nle_test_roundtrip.csv");
+        let x = Mat::from_fn(5, 2, |i, j| i as f64 + 0.5 * j as f64);
+        let labels = vec![0, 1, 2, 1, 0];
+        save_embedding_csv(&path, &x, &labels).unwrap();
+        let ds = load_csv(&path).unwrap();
+        assert_eq!(ds.labels, labels);
+        assert!(ds.y.max_abs_diff(&x) < 1e-5);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn csv_rejects_ragged() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("nle_test_ragged.csv");
+        std::fs::write(&path, "0,1.0,2.0\n1,3.0\n").unwrap();
+        assert!(load_csv(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn csv_skips_header() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("nle_test_header.csv");
+        std::fs::write(&path, "label,x,y\n0,1.0,2.0\n1,3.0,4.0\n").unwrap();
+        let ds = load_csv(&path).unwrap();
+        assert_eq!(ds.y.rows, 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn raw_f32_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("nle_test_raw.bin");
+        let vals: Vec<f32> = (0..12).map(|i| i as f32 * 0.25).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        let m = load_raw_f32(&path, 3, 4).unwrap();
+        assert_eq!(m.at(2, 3), 11.0 * 0.25);
+        std::fs::remove_file(&path).ok();
+    }
+}

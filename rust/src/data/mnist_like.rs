@@ -1,0 +1,152 @@
+//! MNIST-like synthetic dataset for the paper's large-scale experiment.
+//!
+//! Fig. 4 uses 20 000 MNIST digits (784-dim). What that experiment tests
+//! is *scalability and per-iteration progress* on clustered,
+//! manifold-structured data — N, the cluster count, and the local
+//! intrinsic dimension drive the optimization behaviour, not the pixel
+//! values (DESIGN.md "Substitutions"). This generator produces 10 classes,
+//! each a low-dimensional nonlinear manifold (random quadratic map of a
+//! few latent style factors — think stroke thickness / slant / rotation)
+//! embedded in R^784 with noise, mimicking the within-class variability
+//! structure of handwritten digits.
+
+use super::coil::Dataset;
+use super::rng::Rng;
+use crate::linalg::Mat;
+
+/// Parameters for the MNIST-like generator.
+#[derive(Clone, Debug)]
+pub struct MnistLikeParams {
+    pub n: usize,
+    pub classes: usize,
+    pub ambient_dim: usize,
+    /// latent style factors per class (intrinsic manifold dimension)
+    pub latent_dim: usize,
+    pub separation: f64,
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl Default for MnistLikeParams {
+    fn default() -> Self {
+        MnistLikeParams {
+            n: 2000,
+            classes: 10,
+            ambient_dim: 784,
+            latent_dim: 4,
+            separation: 8.0,
+            noise: 0.05,
+            seed: 50,
+        }
+    }
+}
+
+/// Generate the dataset. Class sizes are balanced up to remainder.
+pub fn generate(p: &MnistLikeParams) -> Dataset {
+    let mut rng = Rng::new(p.seed);
+    let d = p.ambient_dim;
+    let mut y = Mat::zeros(p.n, d);
+    let mut labels = Vec::with_capacity(p.n);
+
+    // per-class: center + linear frame + quadratic interactions
+    struct Class {
+        center: Vec<f64>,
+        lin: Vec<Vec<f64>>,   // latent_dim directions
+        quad: Vec<Vec<f64>>,  // latent_dim*(latent_dim+1)/2 directions
+    }
+    let classes: Vec<Class> = (0..p.classes)
+        .map(|_| {
+            let mut center: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let cn = crate::linalg::vecops::nrm2(&center).max(1e-12);
+            for c in center.iter_mut() {
+                *c *= p.separation / cn;
+            }
+            let unit = |rng: &mut Rng| {
+                let v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+                let nv = crate::linalg::vecops::nrm2(&v).max(1e-12);
+                v.into_iter().map(|x| x / nv).collect::<Vec<f64>>()
+            };
+            let lin = (0..p.latent_dim).map(|_| unit(&mut rng)).collect();
+            let nq = p.latent_dim * (p.latent_dim + 1) / 2;
+            let quad = (0..nq).map(|_| unit(&mut rng)).collect();
+            Class { center, lin, quad }
+        })
+        .collect();
+
+    for i in 0..p.n {
+        let c = i % p.classes; // balanced, interleaved
+        let cl = &classes[c];
+        let z: Vec<f64> = (0..p.latent_dim).map(|_| rng.normal()).collect();
+        let row = y.row_mut(i);
+        row.copy_from_slice(&cl.center);
+        for (k, dir) in cl.lin.iter().enumerate() {
+            crate::linalg::vecops::axpy(z[k], dir, row);
+        }
+        let mut q = 0;
+        for a in 0..p.latent_dim {
+            for b in a..p.latent_dim {
+                // quadratic style interactions bend the manifold
+                crate::linalg::vecops::axpy(0.3 * z[a] * z[b], &cl.quad[q], row);
+                q += 1;
+            }
+        }
+        for x in row.iter_mut() {
+            *x += p.noise * rng.normal();
+        }
+        labels.push(c);
+    }
+    Dataset { y, labels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::sqdist;
+
+    #[test]
+    fn shapes() {
+        let p = MnistLikeParams { n: 101, ambient_dim: 30, ..Default::default() };
+        let ds = generate(&p);
+        assert_eq!(ds.y.rows, 101);
+        assert_eq!(ds.y.cols, 30);
+        assert_eq!(ds.labels.len(), 101);
+    }
+
+    #[test]
+    fn balanced_interleaved_classes() {
+        let p = MnistLikeParams { n: 40, classes: 4, ambient_dim: 16, ..Default::default() };
+        let ds = generate(&p);
+        for c in 0..4 {
+            assert_eq!(ds.labels.iter().filter(|&&l| l == c).count(), 10);
+        }
+    }
+
+    #[test]
+    fn within_class_tighter_than_between() {
+        let p = MnistLikeParams { n: 200, ambient_dim: 100, ..Default::default() };
+        let ds = generate(&p);
+        let mut within = 0.0;
+        let mut between = 0.0;
+        let mut nw = 0;
+        let mut nb = 0;
+        for i in 0..50 {
+            for j in (i + 1)..50 {
+                let d2 = sqdist(ds.y.row(i), ds.y.row(j));
+                if ds.labels[i] == ds.labels[j] {
+                    within += d2;
+                    nw += 1;
+                } else {
+                    between += d2;
+                    nb += 1;
+                }
+            }
+        }
+        assert!(within / nw as f64 * 1.5 < between / nb as f64);
+    }
+
+    #[test]
+    fn deterministic() {
+        let p = MnistLikeParams { n: 30, ambient_dim: 12, ..Default::default() };
+        assert!(generate(&p).y.max_abs_diff(&generate(&p).y) == 0.0);
+    }
+}

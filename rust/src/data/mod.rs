@@ -1,0 +1,12 @@
+//! Datasets: synthetic equivalents of the paper's workloads plus on-disk
+//! loaders (see DESIGN.md "Substitutions" for the COIL-20 / MNIST
+//! mapping).
+
+pub mod coil;
+pub mod loader;
+pub mod mnist_like;
+pub mod rng;
+pub mod synth;
+
+pub use coil::Dataset;
+pub use rng::Rng;

@@ -1,0 +1,100 @@
+//! Additional synthetic workloads: swiss roll and Gaussian clusters.
+//!
+//! These back the quickstart example and several unit/property tests;
+//! the swiss roll is the canonical "can it unfold a manifold" check and
+//! the cluster mixture is the easiest dataset to eyeball for separation.
+
+use super::coil::Dataset;
+use super::rng::Rng;
+use crate::linalg::Mat;
+
+/// Swiss roll: 2-D manifold rolled in R^3 (+ optional extra noisy dims).
+pub fn swiss_roll(n: usize, ambient_dim: usize, noise: f64, seed: u64) -> Dataset {
+    assert!(ambient_dim >= 3);
+    let mut rng = Rng::new(seed);
+    let mut y = Mat::zeros(n, ambient_dim);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let t = 1.5 * std::f64::consts::PI * (1.0 + 2.0 * rng.uniform());
+        let h = 21.0 * rng.uniform();
+        let row = y.row_mut(i);
+        row[0] = t * t.cos();
+        row[1] = h;
+        row[2] = t * t.sin();
+        for v in row.iter_mut().take(ambient_dim) {
+            *v += noise * rng.normal();
+        }
+        // label = quartile along the roll, for continuity checks
+        labels.push(((t - 1.5 * std::f64::consts::PI)
+            / (3.0 * std::f64::consts::PI)
+            * 4.0)
+            .floor()
+            .clamp(0.0, 3.0) as usize);
+    }
+    Dataset { y, labels }
+}
+
+/// Mixture of `k` spherical Gaussian clusters in R^D.
+pub fn clusters(n: usize, k: usize, ambient_dim: usize, separation: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f64>> = (0..k)
+        .map(|_| {
+            let mut c: Vec<f64> = (0..ambient_dim).map(|_| rng.normal()).collect();
+            let cn = crate::linalg::vecops::nrm2(&c).max(1e-12);
+            for v in c.iter_mut() {
+                *v *= separation / cn;
+            }
+            c
+        })
+        .collect();
+    let mut y = Mat::zeros(n, ambient_dim);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % k;
+        let row = y.row_mut(i);
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = centers[c][j] + rng.normal();
+        }
+        labels.push(c);
+    }
+    Dataset { y, labels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn swiss_roll_shapes() {
+        let ds = swiss_roll(100, 3, 0.0, 1);
+        assert_eq!(ds.y.rows, 100);
+        assert_eq!(ds.y.cols, 3);
+        // points lie on the roll: x^2 + z^2 = t^2 with t in [1.5pi, 4.5pi]
+        for i in 0..100 {
+            let r = (ds.y.at(i, 0).powi(2) + ds.y.at(i, 2).powi(2)).sqrt();
+            assert!(r >= 1.5 * std::f64::consts::PI - 1e-9);
+            assert!(r <= 4.5 * std::f64::consts::PI + 1e-9);
+        }
+    }
+
+    #[test]
+    fn clusters_are_separated() {
+        let ds = clusters(60, 3, 10, 20.0, 2);
+        let mut within = 0.0;
+        let mut between = 0.0;
+        let (mut nw, mut nb) = (0, 0);
+        for i in 0..60 {
+            for j in (i + 1)..60 {
+                let d2 = crate::linalg::vecops::sqdist(ds.y.row(i), ds.y.row(j));
+                if ds.labels[i] == ds.labels[j] {
+                    within += d2;
+                    nw += 1;
+                } else {
+                    between += d2;
+                    nb += 1;
+                }
+            }
+        }
+        assert!(within / nw as f64 * 3.0 < between / nb as f64);
+    }
+}

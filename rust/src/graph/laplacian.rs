@@ -1,0 +1,155 @@
+//! Graph Laplacian assembly, dense and sparse: `L = D - W` with
+//! `D = diag(W 1)`. `L` is psd whenever `W` is symmetric nonnegative
+//! (paper section 1) — the property every partial-Hessian strategy rests
+//! on, so it is property-tested in rust/tests/prop_invariants.rs.
+
+use crate::linalg::dense::Mat;
+use crate::linalg::sparse::SpMat;
+
+/// Row degrees `d_i = sum_j w_ij` of a dense weight matrix.
+pub fn degrees_dense(w: &Mat) -> Vec<f64> {
+    assert_eq!(w.rows, w.cols);
+    (0..w.rows).map(|i| w.row(i).iter().sum()).collect()
+}
+
+/// Dense Laplacian `L = D - W`.
+pub fn laplacian_dense(w: &Mat) -> Mat {
+    let deg = degrees_dense(w);
+    Mat::from_fn(w.rows, w.cols, |i, j| {
+        let v = -w.at(i, j);
+        if i == j {
+            v + deg[i]
+        } else {
+            v
+        }
+    })
+}
+
+/// Sparse Laplacian from a sparse symmetric weight matrix. Diagonal
+/// entries of `W` are ignored (self-loops cancel in `D - W` anyway for
+/// the quadratic form, and the paper's weights have `w_nn = 0`).
+pub fn laplacian_sparse(w: &SpMat) -> SpMat {
+    assert_eq!(w.rows, w.cols);
+    let n = w.rows;
+    let mut deg = vec![0.0; n];
+    let mut trip = Vec::with_capacity(w.nnz() + n);
+    for c in 0..n {
+        for p in w.colptr[c]..w.colptr[c + 1] {
+            let r = w.rowind[p];
+            if r == c {
+                continue;
+            }
+            let v = w.values[p];
+            deg[r] += v;
+            trip.push((r, c, -v));
+        }
+    }
+    for (i, d) in deg.into_iter().enumerate() {
+        trip.push((i, i, d));
+    }
+    SpMat::from_triplets(n, n, trip)
+}
+
+/// Connected components of a symmetric sparse pattern: returns the
+/// component id of every vertex (ids are 0..n_components). The null
+/// space of a graph Laplacian is spanned by the component indicator
+/// vectors, which is exactly what the spectral direction must project
+/// out of near-singular solves.
+pub fn components(a: &crate::linalg::sparse::SpMat) -> Vec<usize> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut comp = vec![usize::MAX; n];
+    let mut next = 0;
+    let mut stack = Vec::new();
+    for start in 0..n {
+        if comp[start] != usize::MAX {
+            continue;
+        }
+        comp[start] = next;
+        stack.push(start);
+        while let Some(u) = stack.pop() {
+            for p in a.colptr[u]..a.colptr[u + 1] {
+                let v = a.rowind[p];
+                if v != u && comp[v] == usize::MAX {
+                    comp[v] = next;
+                    stack.push(v);
+                }
+            }
+        }
+        next += 1;
+    }
+    comp
+}
+
+/// Quadratic form `u^T L u = 1/2 sum_nm w_nm (u_n - u_m)^2` evaluated the
+/// direct way — used by tests as the psd witness.
+pub fn quadratic_form_direct(w: &Mat, u: &[f64]) -> f64 {
+    let n = w.rows;
+    let mut s = 0.0;
+    for i in 0..n {
+        for j in 0..n {
+            let d = u[i] - u[j];
+            s += w.at(i, j) * d * d;
+        }
+    }
+    0.5 * s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::linalg::vecops::dot;
+
+    fn sym_nonneg(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut w = Mat::from_fn(n, n, |_, _| rng.uniform());
+        for i in 0..n {
+            *w.at_mut(i, i) = 0.0;
+            for j in 0..i {
+                let v = w.at(i, j);
+                *w.at_mut(j, i) = v;
+            }
+        }
+        w
+    }
+
+    #[test]
+    fn rows_sum_to_zero() {
+        let w = sym_nonneg(15, 1);
+        let l = laplacian_dense(&w);
+        for i in 0..15 {
+            let s: f64 = l.row(i).iter().sum();
+            assert!(s.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn quadratic_form_matches_direct() {
+        let w = sym_nonneg(12, 2);
+        let l = laplacian_dense(&w);
+        let mut rng = Rng::new(3);
+        let u: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let via_l = dot(&u, &l.matvec(&u));
+        let direct = quadratic_form_direct(&w, &u);
+        assert!((via_l - direct).abs() < 1e-10 * direct.abs().max(1.0));
+        assert!(via_l >= -1e-12); // psd
+    }
+
+    #[test]
+    fn sparse_matches_dense() {
+        let w = sym_nonneg(10, 4);
+        let ls = laplacian_sparse(&SpMat::from_dense(&w, 0.0));
+        let ld = laplacian_dense(&w);
+        assert!(ls.to_dense().max_abs_diff(&ld) < 1e-12);
+    }
+
+    #[test]
+    fn constant_vector_in_kernel() {
+        let w = sym_nonneg(9, 5);
+        let l = laplacian_dense(&w);
+        let ones = vec![1.0; 9];
+        let lu = l.matvec(&ones);
+        assert!(lu.iter().all(|v| v.abs() < 1e-12));
+    }
+}

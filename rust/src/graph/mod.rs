@@ -1,0 +1,7 @@
+//! Graph Laplacians — the central object of the paper's analysis
+//! (section 1: "we express the gradient and Hessian in terms of
+//! Laplacians ... this brings out the relation with spectral methods").
+
+pub mod laplacian;
+
+pub use laplacian::{components, degrees_dense, laplacian_dense, laplacian_sparse};

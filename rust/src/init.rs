@@ -1,0 +1,53 @@
+//! Embedding initializations: small random (the paper's fig. 2 setup)
+//! and spectral (Laplacian-eigenmaps, the recommended warm start for
+//! nonconvex embeddings).
+
+use crate::data::Rng;
+use crate::linalg::dense::Mat;
+use crate::linalg::sparse::SpMat;
+
+/// Small gaussian random initialization ("50 random points X0 (with
+/// small values)", paper section 3.1).
+pub fn random_init(n: usize, d: usize, scale: f64, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(n, d, |_, _| scale * rng.normal())
+}
+
+/// Spectral (Laplacian eigenmaps) initialization: the `d` nontrivial
+/// smallest eigenvectors of the attractive Laplacian, scaled by `scale`.
+/// Uses sparse Lanczos, so it works at fig. 4 sizes.
+pub fn spectral_init(wp: &SpMat, d: usize, scale: f64, seed: u64) -> Mat {
+    let lap = crate::graph::laplacian_sparse(wp);
+    let eig = crate::linalg::lanczos::smallest_eigs(&lap, d + 1, None, seed);
+    let n = wp.rows;
+    // skip the trivial constant eigenvector (eigenvalue ~ 0)
+    Mat::from_fn(n, d, |i, j| scale * eig.vectors.at(i, j + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::affinity::sne_affinities_sparse;
+    use crate::data::synth::swiss_roll;
+
+    #[test]
+    fn random_is_small_and_deterministic() {
+        let a = random_init(100, 2, 1e-4, 3);
+        let b = random_init(100, 2, 1e-4, 3);
+        assert!(a.max_abs_diff(&b) == 0.0);
+        assert!(a.data.iter().all(|v| v.abs() < 1e-2));
+    }
+
+    #[test]
+    fn spectral_init_reflects_geometry() {
+        // points on a line: the Fiedler vector orders them monotonically
+        let ds = swiss_roll(60, 3, 0.0, 1);
+        let p = sne_affinities_sparse(&ds.y, 8.0, 15);
+        let x = spectral_init(&p, 2, 1.0, 0);
+        assert_eq!(x.rows, 60);
+        assert_eq!(x.cols, 2);
+        // nontrivial: not all equal
+        let first = x.at(0, 0);
+        assert!(x.data.iter().any(|&v| (v - first).abs() > 1e-8));
+    }
+}

@@ -1,0 +1,62 @@
+//! # nle — Nonlinear Embeddings with Partial-Hessian Strategies
+//!
+//! A production-quality reproduction of *Partial-Hessian Strategies for
+//! Fast Learning of Nonlinear Embeddings* (Vladymyrov &
+//! Carreira-Perpiñán, ICML 2012) as a three-layer rust + JAX + Pallas
+//! system:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: the general
+//!   embedding formulation `E = E+ + lambda E-` ([`objective`]), seven
+//!   partial-Hessian direction strategies including the **spectral
+//!   direction** ([`opt`]), homotopy optimization, the full linear-algebra
+//!   substrate (sparse Cholesky, CG, Lanczos — [`linalg`]), entropic
+//!   affinities ([`affinity`]), datasets ([`data`]), quality metrics
+//!   ([`metrics`]), an embedding-job coordinator ([`coordinator`]) and
+//!   the figure-reproduction harness ([`bench_harness`]).
+//! * **Layer 2 (python/compile/model.py)** — the objectives as jax
+//!   functions, AOT-lowered to HLO text once by `make artifacts`.
+//! * **Layer 1 (python/compile/kernels/pairwise.py)** — the fused
+//!   pairwise-affinity Pallas kernel inside the L2 model.
+//!
+//! The [`runtime`] module loads the AOT artifacts through PJRT so the
+//! rust binary needs no python at run time; [`objective::xla`] exposes
+//! them behind the same [`objective::Objective`] trait as the native
+//! backend.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use nle::prelude::*;
+//!
+//! let data = nle::data::synth::swiss_roll(500, 3, 0.05, 42);
+//! let p = nle::affinity::sne_affinities(&data.y, 20.0);
+//! let obj = NativeObjective::with_affinities(Method::Ee, Attractive::Dense(p), 100.0, 2);
+//! let x0 = nle::init::random_init(500, 2, 1e-4, 0);
+//! let mut sd = SpectralDirection::new(None);
+//! let res = minimize(&obj, &mut sd, &x0, &OptOptions::default());
+//! println!("final E = {}", res.e);
+//! ```
+
+pub mod affinity;
+pub mod bench_harness;
+pub mod coordinator;
+pub mod data;
+pub mod graph;
+pub mod init;
+pub mod linalg;
+pub mod metrics;
+pub mod objective;
+pub mod opt;
+pub mod par;
+pub mod runtime;
+
+/// Convenient re-exports for examples and binaries.
+pub mod prelude {
+    pub use crate::linalg::dense::Mat;
+    pub use crate::objective::native::NativeObjective;
+    pub use crate::objective::xla::XlaObjective;
+    pub use crate::objective::{Attractive, Method, Objective, Repulsive};
+    pub use crate::opt::sd::SpectralDirection;
+    pub use crate::opt::{minimize, DirectionStrategy, OptOptions, OptResult, StopReason};
+    pub use crate::runtime::ArtifactRegistry;
+}

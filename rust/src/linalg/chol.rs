@@ -1,0 +1,190 @@
+//! Dense Cholesky factorization and triangular solves.
+//!
+//! Used by the spectral direction (paper section 2) when the attractive
+//! Laplacian is not sparsified (kappa = N, the COIL-20 setting of the
+//! paper), and as the reference implementation the sparse factorization
+//! in [`super::spchol`] is validated against.
+
+use super::dense::Mat;
+
+/// Error for non-pd inputs: carries the pivot index that failed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NotPositiveDefinite(pub usize);
+
+impl std::fmt::Display for NotPositiveDefinite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "matrix not positive definite at pivot {}", self.0)
+    }
+}
+impl std::error::Error for NotPositiveDefinite {}
+
+/// Lower-triangular Cholesky factor `L` with `A = L L^T`.
+///
+/// `A` must be symmetric pd; only the lower triangle is read. O(n^3/3).
+pub fn cholesky(a: &Mat) -> Result<Mat, NotPositiveDefinite> {
+    assert_eq!(a.rows, a.cols, "cholesky needs a square matrix");
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for j in 0..n {
+        // d = a_jj - sum_k l_jk^2
+        let mut d = a.at(j, j);
+        for k in 0..j {
+            let v = l.at(j, k);
+            d -= v * v;
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return Err(NotPositiveDefinite(j));
+        }
+        let djj = d.sqrt();
+        *l.at_mut(j, j) = djj;
+        // column j below the diagonal
+        for i in (j + 1)..n {
+            let mut s = a.at(i, j);
+            let (ri, rj) = (i * n, j * n);
+            for k in 0..j {
+                s -= l.data[ri + k] * l.data[rj + k];
+            }
+            *l.at_mut(i, j) = s / djj;
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `L y = b` (forward substitution), `L` lower triangular.
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        let ri = i * n;
+        for k in 0..i {
+            s -= l.data[ri + k] * y[k];
+        }
+        y[i] = s / l.data[ri + i];
+    }
+    y
+}
+
+/// Solve `L^T x = y` (back substitution), `L` lower triangular.
+pub fn solve_lower_t(l: &Mat, y: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l.data[k * n + i] * x[k];
+        }
+        x[i] = s / l.data[i * n + i];
+    }
+    x
+}
+
+/// Solve `A x = b` given the Cholesky factor `L` of `A`: two backsolves,
+/// O(n^2) — the core trick of the spectral direction ("two triangular
+/// systems ... which is O(N^2 d)", paper section 2).
+pub fn chol_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
+    solve_lower_t(l, &solve_lower(l, b))
+}
+
+/// Solve `A X = B` column-wise for a multi-column right-hand side stored
+/// row-major `n x d` (the gradient layout). Returns the same layout.
+pub fn chol_solve_mat(l: &Mat, b: &Mat) -> Mat {
+    let (n, d) = (b.rows, b.cols);
+    assert_eq!(l.rows, n);
+    let mut out = Mat::zeros(n, d);
+    let mut col = vec![0.0; n];
+    for j in 0..d {
+        for i in 0..n {
+            col[i] = b.at(i, j);
+        }
+        let x = chol_solve(l, &col);
+        for i in 0..n {
+            *out.at_mut(i, j) = x[i];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        // A = M M^T + n I is pd
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state as f64 / u64::MAX as f64) - 0.5
+        };
+        let m = Mat::from_fn(n, n, |_, _| next());
+        let mut a = m.matmul(&m.t());
+        for i in 0..n {
+            *a.at_mut(i, i) += n as f64;
+        }
+        a
+    }
+
+    #[test]
+    fn factor_recomposes() {
+        let a = spd(12, 3);
+        let l = cholesky(&a).unwrap();
+        let llt = l.matmul(&l.t());
+        assert!(llt.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn factor_is_lower_triangular() {
+        let a = spd(8, 5);
+        let l = cholesky(&a).unwrap();
+        for i in 0..8 {
+            for j in (i + 1)..8 {
+                assert_eq!(l.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn solve_residual_small() {
+        let a = spd(20, 7);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..20).map(|i| (i as f64).cos()).collect();
+        let x = chol_solve(&l, &b);
+        let r = a.matvec(&x);
+        for i in 0..20 {
+            assert!((r[i] - b[i]).abs() < 1e-9, "residual {} at {}", r[i] - b[i], i);
+        }
+    }
+
+    #[test]
+    fn multi_rhs_matches_single() {
+        let a = spd(10, 11);
+        let l = cholesky(&a).unwrap();
+        let b = Mat::from_fn(10, 2, |i, j| (i as f64) * 0.1 - j as f64);
+        let x = chol_solve_mat(&l, &b);
+        for j in 0..2 {
+            let col: Vec<f64> = (0..10).map(|i| b.at(i, j)).collect();
+            let xj = chol_solve(&l, &col);
+            for i in 0..10 {
+                assert!((x.at(i, j) - xj[i]).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut a = Mat::eye(3);
+        *a.at_mut(2, 2) = -1.0;
+        assert_eq!(cholesky(&a), Err(NotPositiveDefinite(2)));
+    }
+
+    #[test]
+    fn rejects_psd_singular() {
+        // rank-1 psd matrix: fails at the second pivot
+        let a = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert!(cholesky(&a).is_err());
+    }
+}

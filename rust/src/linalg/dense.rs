@@ -1,0 +1,217 @@
+//! Dense row-major matrices.
+//!
+//! `Mat` is the coordinate container of the whole library: embeddings are
+//! `N x d` matrices (one point per row, matching the `(N, d)` convention
+//! of the python layers), affinities are `N x N`. All heavy per-iteration
+//! math (gradient, directions) flows through either the sparse kernels in
+//! [`super::sparse`] or the blocked dense kernels here.
+
+use super::vecops;
+
+/// Dense row-major `rows x cols` matrix of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Wrap an existing buffer (must have `rows * cols` elements).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    /// Row `i` as a slice (this is a point for `N x d` matrices).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Transpose (allocates).
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// `self * other`, blocked i-k-j loop order (cache friendly for
+    /// row-major operands; the j loop vectorizes).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let oi = i * n;
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let bp = p * n;
+                for j in 0..n {
+                    out.data[oi + j] += a * other.data[bp + j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product `self * x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows).map(|i| vecops::dot(self.row(i), x)).collect()
+    }
+
+    /// Frobenius norm.
+    pub fn fro(&self) -> f64 {
+        vecops::nrm2(&self.data)
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f64, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    /// Symmetry defect `max |a_ij - a_ji|`.
+    pub fn asymmetry(&self) -> f64 {
+        assert_eq!(self.rows, self.cols);
+        let mut m = 0.0f64;
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                m = m.max((self.at(i, j) - self.at(j, i)).abs());
+            }
+        }
+        m
+    }
+
+    /// Mean of each column (used to center embeddings for comparison,
+    /// since E is shift invariant).
+    pub fn col_means(&self) -> Vec<f64> {
+        let mut mu = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            vecops::axpy(1.0, self.row(i), &mut mu);
+        }
+        vecops::scale(1.0 / self.rows as f64, &mut mu);
+        mu
+    }
+
+    /// Subtract column means in place.
+    pub fn center(&mut self) {
+        let mu = self.col_means();
+        for i in 0..self.rows {
+            let r = self.row_mut(i);
+            for j in 0..mu.len() {
+                r[j] -= mu[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f64);
+        assert_eq!(m.at(0, 0), 0.0);
+        assert_eq!(m.at(1, 2), 5.0);
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Mat::from_fn(3, 4, |i, j| (i + 7 * j) as f64);
+        assert_eq!(m.t().t(), m);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let m = Mat::from_fn(4, 4, |i, j| ((i * j) as f64).sin());
+        let i4 = Mat::eye(4);
+        assert!(m.matmul(&i4).max_abs_diff(&m) < 1e-15);
+        assert!(i4.matmul(&m).max_abs_diff(&m) < 1e-15);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = Mat::from_fn(3, 5, |i, j| (i as f64) - (j as f64) * 0.3);
+        let x: Vec<f64> = (0..5).map(|i| i as f64 + 0.5).collect();
+        let xm = Mat::from_vec(5, 1, x.clone());
+        let via_mm = a.matmul(&xm);
+        let via_mv = a.matvec(&x);
+        for i in 0..3 {
+            assert!((via_mm.at(i, 0) - via_mv[i]).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn center_removes_means() {
+        let mut m = Mat::from_fn(10, 2, |i, j| (i + j) as f64);
+        m.center();
+        let mu = m.col_means();
+        assert!(mu.iter().all(|v| v.abs() < 1e-12));
+    }
+
+    #[test]
+    fn asymmetry_detects() {
+        let mut m = Mat::eye(3);
+        assert_eq!(m.asymmetry(), 0.0);
+        *m.at_mut(0, 2) = 5.0;
+        assert_eq!(m.asymmetry(), 5.0);
+    }
+}

@@ -1,0 +1,188 @@
+//! Dense symmetric eigensolver (cyclic Jacobi).
+//!
+//! Substrate for spectral initialization (Laplacian eigenmaps, the
+//! initialization the paper recommends for nonconvex embeddings) and for
+//! measuring the local convergence-rate constant
+//! `r = ||B^{-1}(x*) H(x*) - I||_2` of theorem 2.1 in the `rates`
+//! experiment. Cubic cost, intended for N up to a couple thousand; larger
+//! problems use [`super::lanczos`].
+
+use super::dense::Mat;
+
+/// Eigen-decomposition `A = V diag(w) V^T` of a symmetric matrix.
+/// Eigenvalues ascending; `V` columns are the corresponding eigenvectors.
+pub struct SymEig {
+    pub values: Vec<f64>,
+    pub vectors: Mat, // column j = eigenvector j
+}
+
+/// Cyclic Jacobi with threshold sweeps. Converges quadratically; we run
+/// until off-diagonal Frobenius mass < tol or `max_sweeps`.
+pub fn sym_eig(a: &Mat) -> SymEig {
+    assert_eq!(a.rows, a.cols);
+    assert!(a.asymmetry() < 1e-8, "sym_eig requires a symmetric matrix");
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+    let max_sweeps = 64;
+    let tol = 1e-14 * a.fro().max(1e-300);
+    for _ in 0..max_sweeps {
+        // off-diagonal mass
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m.at(i, j) * m.at(i, j);
+            }
+        }
+        if off.sqrt() <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.at(p, q);
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = m.at(p, p);
+                let aqq = m.at(q, q);
+                // Jacobi rotation annihilating (p, q)
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rows/cols p and q of m
+                for k in 0..n {
+                    let mkp = m.at(k, p);
+                    let mkq = m.at(k, q);
+                    *m.at_mut(k, p) = c * mkp - s * mkq;
+                    *m.at_mut(k, q) = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m.at(p, k);
+                    let mqk = m.at(q, k);
+                    *m.at_mut(p, k) = c * mpk - s * mqk;
+                    *m.at_mut(q, k) = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v.at(k, p);
+                    let vkq = v.at(k, q);
+                    *v.at_mut(k, p) = c * vkp - s * vkq;
+                    *v.at_mut(k, q) = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // sort ascending
+    let mut idx: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m.at(i, i)).collect();
+    idx.sort_by(|&a, &b| diag[a].partial_cmp(&diag[b]).unwrap());
+    let values: Vec<f64> = idx.iter().map(|&i| diag[i]).collect();
+    let vectors = Mat::from_fn(n, n, |r, c| v.at(r, idx[c]));
+    SymEig { values, vectors }
+}
+
+/// Spectral norm ||A||_2 of a symmetric matrix (max |eigenvalue|).
+pub fn spectral_norm_sym(a: &Mat) -> f64 {
+    let e = sym_eig(a);
+    e.values.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+}
+
+/// Spectral norm of a general square matrix via power iteration on
+/// `A^T A` (used for the rate constant r of theorem 2.1, where
+/// `B^{-1} H - I` is not symmetric).
+pub fn spectral_norm(a: &Mat, iters: usize) -> f64 {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let at = a.t();
+    let mut x: Vec<f64> = (0..n).map(|i| ((i * 2654435761) % 1000) as f64 / 1000.0 + 0.1).collect();
+    let mut norm = 0.0;
+    for _ in 0..iters {
+        let y = at.matvec(&a.matvec(&x));
+        norm = super::vecops::nrm2(&y);
+        if norm == 0.0 {
+            return 0.0;
+        }
+        x = y.into_iter().map(|v| v / norm).collect();
+    }
+    norm.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Mat::from_fn(4, 4, |i, j| if i == j { (i + 1) as f64 } else { 0.0 });
+        let e = sym_eig(&a);
+        for (i, v) in e.values.iter().enumerate() {
+            assert!((v - (i + 1) as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn reconstruction() {
+        let m = Mat::from_fn(8, 8, |i, j| ((i * 3 + j * 7) as f64).sin());
+        let a = m.matmul(&m.t()); // symmetric psd
+        let e = sym_eig(&a);
+        // A V = V diag(w)
+        for c in 0..8 {
+            let col: Vec<f64> = (0..8).map(|r| e.vectors.at(r, c)).collect();
+            let av = a.matvec(&col);
+            for r in 0..8 {
+                assert!(
+                    (av[r] - e.values[c] * col[r]).abs() < 1e-8,
+                    "eigpair {c} residual"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn orthonormal_vectors() {
+        let m = Mat::from_fn(6, 6, |i, j| ((i + j) as f64).cos());
+        let a = m.matmul(&m.t());
+        let e = sym_eig(&a);
+        let vtv = e.vectors.t().matmul(&e.vectors);
+        assert!(vtv.max_abs_diff(&Mat::eye(6)) < 1e-9);
+    }
+
+    #[test]
+    fn known_2x2() {
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let e = sym_eig(&a);
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn laplacian_smallest_eigenvalue_zero() {
+        // path graph Laplacian: lambda_min = 0 with constant eigenvector
+        let n = 10;
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            let mut d = 0.0;
+            if i > 0 {
+                *a.at_mut(i, i - 1) = -1.0;
+                d += 1.0;
+            }
+            if i + 1 < n {
+                *a.at_mut(i, i + 1) = -1.0;
+                d += 1.0;
+            }
+            *a.at_mut(i, i) = d;
+        }
+        let e = sym_eig(&a);
+        assert!(e.values[0].abs() < 1e-10);
+        assert!(e.values[1] > 1e-6); // path is connected: single zero eig
+    }
+
+    #[test]
+    fn spectral_norms_agree() {
+        let m = Mat::from_fn(5, 5, |i, j| ((i * j) as f64 * 0.37).sin());
+        let a = m.matmul(&m.t());
+        let s1 = spectral_norm_sym(&a);
+        let s2 = spectral_norm(&a, 200);
+        assert!((s1 - s2).abs() < 1e-6 * s1.max(1.0));
+    }
+}

@@ -1,0 +1,189 @@
+//! Lanczos iteration for extremal eigenpairs of sparse symmetric matrices.
+//!
+//! Spectral initialization (Laplacian eigenmaps) needs the *smallest*
+//! nontrivial eigenvectors of the graph Laplacian. For sparse L we run
+//! Lanczos with full reorthogonalization on the spectrally shifted
+//! operator `sigma I - L` (sigma >= lambda_max, via Gershgorin), whose
+//! *largest* eigenpairs are L's smallest — no factorization needed.
+
+use super::dense::Mat;
+use super::sparse::SpMat;
+use super::vecops::{axpy, dot, nrm2, scale};
+
+/// Result of a Lanczos run: `k` eigenpairs, values ascending (of the
+/// original operator, not the shifted one).
+pub struct LanczosEig {
+    pub values: Vec<f64>,
+    /// `n x k`, column j is the eigenvector of `values[j]`.
+    pub vectors: Mat,
+}
+
+/// Gershgorin upper bound on the spectrum of a symmetric sparse matrix.
+pub fn gershgorin_max(a: &SpMat) -> f64 {
+    let n = a.rows;
+    let mut bound = 0.0f64;
+    let mut diag = vec![0.0; n];
+    let mut radius = vec![0.0; n];
+    for c in 0..n {
+        for p in a.colptr[c]..a.colptr[c + 1] {
+            let r = a.rowind[p];
+            let v = a.values[p];
+            if r == c {
+                diag[c] = v;
+            } else {
+                radius[c] += v.abs();
+            }
+        }
+    }
+    for i in 0..n {
+        bound = bound.max(diag[i] + radius[i]);
+    }
+    bound
+}
+
+/// Smallest `k` eigenpairs of a symmetric psd sparse matrix (e.g. a graph
+/// Laplacian). `m` is the Krylov dimension (default max(4k, 40)).
+pub fn smallest_eigs(a: &SpMat, k: usize, m: Option<usize>, seed: u64) -> LanczosEig {
+    let n = a.rows;
+    assert!(k <= n);
+    let m = m.unwrap_or_else(|| (4 * k).max(40)).min(n);
+    let sigma = gershgorin_max(a) + 1.0;
+
+    // Lanczos on  B = sigma I - A  (largest eigs of B = smallest of A)
+    let mut q = Vec::<Vec<f64>>::with_capacity(m + 1);
+    let mut alpha: Vec<f64> = Vec::with_capacity(m);
+    let mut beta: Vec<f64> = Vec::with_capacity(m);
+
+    // deterministic pseudo-random start
+    let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(12345);
+    let mut v0: Vec<f64> = (0..n)
+        .map(|_| {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state as f64 / u64::MAX as f64) - 0.5
+        })
+        .collect();
+    let nv = nrm2(&v0);
+    scale(1.0 / nv, &mut v0);
+    q.push(v0);
+
+    for j in 0..m {
+        // w = B q_j = sigma q_j - A q_j
+        let aq = a.matvec(&q[j]);
+        let mut w: Vec<f64> = (0..n).map(|i| sigma * q[j][i] - aq[i]).collect();
+        if j > 0 {
+            let b = beta[j - 1];
+            axpy(-b, &q[j - 1], &mut w);
+        }
+        let aj = dot(&w, &q[j]);
+        alpha.push(aj);
+        axpy(-aj, &q[j], &mut w);
+        // full reorthogonalization (twice is enough)
+        for _ in 0..2 {
+            for qi in q.iter() {
+                let c = dot(&w, qi);
+                axpy(-c, qi, &mut w);
+            }
+        }
+        let bj = nrm2(&w);
+        if bj < 1e-12 || j + 1 == m {
+            beta.push(bj);
+            break;
+        }
+        beta.push(bj);
+        scale(1.0 / bj, &mut w);
+        q.push(w);
+    }
+
+    // tridiagonal T: alpha on diag, beta off-diag
+    let mj = alpha.len();
+    let t = Mat::from_fn(mj, mj, |i, j| {
+        if i == j {
+            alpha[i]
+        } else if j + 1 == i || i + 1 == j {
+            beta[i.min(j)]
+        } else {
+            0.0
+        }
+    });
+    let e = super::eig::sym_eig(&t);
+    // largest k of B (descending) -> smallest k of A (ascending)
+    let mut out_vals = Vec::with_capacity(k);
+    let mut ritz_cols = Vec::with_capacity(k);
+    for jj in 0..k.min(mj) {
+        let col = mj - 1 - jj; // largest eigenvalues of T
+        out_vals.push(sigma - e.values[col]);
+        ritz_cols.push(col);
+    }
+    // ritz vectors: V = Q * S[:, col]
+    let mut vectors = Mat::zeros(n, out_vals.len());
+    for (outc, &col) in ritz_cols.iter().enumerate() {
+        for (j, qj) in q.iter().enumerate().take(mj) {
+            let s = e.vectors.at(j, col);
+            for i in 0..n {
+                *vectors.at_mut(i, outc) += s * qj[i];
+            }
+        }
+    }
+    LanczosEig { values: out_vals, vectors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_laplacian(n: usize) -> SpMat {
+        let mut trip = Vec::new();
+        for i in 0..n {
+            let mut d = 0.0;
+            if i > 0 {
+                trip.push((i, i - 1, -1.0));
+                d += 1.0;
+            }
+            if i + 1 < n {
+                trip.push((i, i + 1, -1.0));
+                d += 1.0;
+            }
+            trip.push((i, i, d));
+        }
+        SpMat::from_triplets(n, n, trip)
+    }
+
+    #[test]
+    fn gershgorin_bounds_path() {
+        let l = path_laplacian(20);
+        let b = gershgorin_max(&l);
+        assert!(b >= 4.0 - 1e-12 && b <= 4.0 + 1e-12); // interior rows: 2 + 2
+    }
+
+    #[test]
+    fn smallest_eigs_of_path_laplacian() {
+        // exact: lambda_k = 2 - 2 cos(pi k / n), k = 0..n-1
+        let n = 30;
+        let l = path_laplacian(n);
+        let res = smallest_eigs(&l, 3, Some(n), 7);
+        for (j, v) in res.values.iter().enumerate() {
+            let exact = 2.0 - 2.0 * (std::f64::consts::PI * j as f64 / n as f64).cos();
+            assert!((v - exact).abs() < 1e-6, "eig {j}: {v} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn eigenvector_residuals() {
+        let n = 25;
+        let l = path_laplacian(n);
+        let res = smallest_eigs(&l, 4, Some(n), 3);
+        for c in 0..4 {
+            let v: Vec<f64> = (0..n).map(|r| res.vectors.at(r, c)).collect();
+            let lv = l.matvec(&v);
+            let vn = nrm2(&v);
+            for i in 0..n {
+                assert!(
+                    (lv[i] - res.values[c] * v[i]).abs() < 1e-5 * vn.max(1.0),
+                    "residual at eigenpair {c}"
+                );
+            }
+        }
+    }
+}

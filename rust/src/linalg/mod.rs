@@ -1,0 +1,20 @@
+//! Dense & sparse linear-algebra substrate.
+//!
+//! Everything the partial-Hessian strategies need, implemented from
+//! scratch: dense/sparse Cholesky (the spectral direction's engine),
+//! linear CG (SD−'s inexact solver), symmetric eigensolvers (spectral
+//! initialization and the theorem 2.1 rate constant), and a
+//! fill-reducing ordering.
+
+pub mod cg;
+pub mod chol;
+pub mod dense;
+pub mod eig;
+pub mod lanczos;
+pub mod ordering;
+pub mod sparse;
+pub mod spchol;
+pub mod vecops;
+
+pub use dense::Mat;
+pub use sparse::SpMat;

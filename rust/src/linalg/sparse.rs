@@ -1,0 +1,298 @@
+//! Compressed-sparse-column (CSC) matrices.
+//!
+//! The kappa-sparsified attractive Laplacian `L+` of the spectral
+//! direction lives here, together with the kernels the optimizer needs:
+//! triplet assembly, matvec, permutation and symmetry checks. The sparse
+//! Cholesky factorization is in [`super::spchol`].
+
+use super::dense::Mat;
+
+/// CSC sparse matrix. Row indices within each column are strictly
+/// increasing; duplicates are summed at assembly.
+#[derive(Clone, Debug)]
+pub struct SpMat {
+    pub rows: usize,
+    pub cols: usize,
+    /// Column pointers, `cols + 1` entries.
+    pub colptr: Vec<usize>,
+    /// Row indices, `nnz` entries.
+    pub rowind: Vec<usize>,
+    /// Values, `nnz` entries.
+    pub values: Vec<f64>,
+}
+
+impl SpMat {
+    /// Assemble from (row, col, value) triplets; duplicates are summed,
+    /// explicit zeros kept (callers may rely on the pattern).
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: impl IntoIterator<Item = (usize, usize, f64)>,
+    ) -> Self {
+        let mut per_col: Vec<Vec<(usize, f64)>> = vec![Vec::new(); cols];
+        for (r, c, v) in triplets {
+            assert!(r < rows && c < cols, "triplet ({r},{c}) out of bounds");
+            per_col[c].push((r, v));
+        }
+        let mut colptr = Vec::with_capacity(cols + 1);
+        let mut rowind = Vec::new();
+        let mut values = Vec::new();
+        colptr.push(0);
+        for col in per_col.iter_mut() {
+            col.sort_unstable_by_key(|&(r, _)| r);
+            let mut i = 0;
+            while i < col.len() {
+                let r = col[i].0;
+                let mut v = col[i].1;
+                let mut j = i + 1;
+                while j < col.len() && col[j].0 == r {
+                    v += col[j].1;
+                    j += 1;
+                }
+                rowind.push(r);
+                values.push(v);
+                i = j;
+            }
+            colptr.push(rowind.len());
+        }
+        SpMat { rows, cols, colptr, rowind, values }
+    }
+
+    /// Dense -> sparse, dropping entries with `|v| <= drop_tol`.
+    pub fn from_dense(a: &Mat, drop_tol: f64) -> Self {
+        let mut trip = Vec::new();
+        for i in 0..a.rows {
+            for j in 0..a.cols {
+                let v = a.at(i, j);
+                if v.abs() > drop_tol {
+                    trip.push((i, j, v));
+                }
+            }
+        }
+        SpMat::from_triplets(a.rows, a.cols, trip)
+    }
+
+    /// Sparse identity scaled by `s`.
+    pub fn scaled_eye(n: usize, s: f64) -> Self {
+        SpMat::from_triplets(n, n, (0..n).map(|i| (i, i, s)))
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.rowind.len()
+    }
+
+    /// Entry accessor (binary search within the column), O(log nnz_col).
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        let lo = self.colptr[c];
+        let hi = self.colptr[c + 1];
+        match self.rowind[lo..hi].binary_search(&r) {
+            Ok(k) => self.values[lo + k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// `y = A x` (dense vector).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for c in 0..self.cols {
+            let xc = x[c];
+            if xc == 0.0 {
+                continue;
+            }
+            for p in self.colptr[c]..self.colptr[c + 1] {
+                y[self.rowind[p]] += self.values[p] * xc;
+            }
+        }
+        y
+    }
+
+    /// `Y = A X` for a row-major `cols x d` dense RHS, returns `rows x d`.
+    pub fn matmul_dense(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows, self.cols);
+        let d = x.cols;
+        let mut y = Mat::zeros(self.rows, d);
+        for c in 0..self.cols {
+            let xr = x.row(c);
+            for p in self.colptr[c]..self.colptr[c + 1] {
+                let r = self.rowind[p];
+                let v = self.values[p];
+                let yr = y.row_mut(r);
+                for j in 0..d {
+                    yr[j] += v * xr[j];
+                }
+            }
+        }
+        y
+    }
+
+    /// Transpose (exact, sorted output).
+    pub fn transpose(&self) -> SpMat {
+        let mut count = vec![0usize; self.rows + 1];
+        for &r in &self.rowind {
+            count[r + 1] += 1;
+        }
+        for i in 0..self.rows {
+            count[i + 1] += count[i];
+        }
+        let colptr = count.clone();
+        let mut next = count;
+        let mut rowind = vec![0usize; self.nnz()];
+        let mut values = vec![0.0; self.nnz()];
+        for c in 0..self.cols {
+            for p in self.colptr[c]..self.colptr[c + 1] {
+                let r = self.rowind[p];
+                let q = next[r];
+                rowind[q] = c;
+                values[q] = self.values[p];
+                next[r] += 1;
+            }
+        }
+        SpMat { rows: self.cols, cols: self.rows, colptr, rowind, values }
+    }
+
+    /// Materialize dense.
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for c in 0..self.cols {
+            for p in self.colptr[c]..self.colptr[c + 1] {
+                *m.at_mut(self.rowind[p], c) += self.values[p];
+            }
+        }
+        m
+    }
+
+    /// Symmetric permutation `P A P^T` for square symmetric `A`;
+    /// `perm[new] = old` (perm maps new index -> old index).
+    pub fn sym_perm(&self, perm: &[usize]) -> SpMat {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        assert_eq!(perm.len(), n);
+        let mut inv = vec![0usize; n];
+        for (new, &old) in perm.iter().enumerate() {
+            inv[old] = new;
+        }
+        let trip = (0..n).flat_map(|c| {
+            let inv = &inv;
+            (self.colptr[c]..self.colptr[c + 1])
+                .map(move |p| (inv[self.rowind[p]], inv[c], self.values[p]))
+        });
+        // clippy: collect first because self is borrowed inside the iterator
+        let trip: Vec<_> = trip.collect();
+        SpMat::from_triplets(n, n, trip)
+    }
+
+    /// Max |A_ij - A_ji| (symmetry defect).
+    pub fn asymmetry(&self) -> f64 {
+        let t = self.transpose();
+        let mut m = 0.0f64;
+        for c in 0..self.cols {
+            for p in self.colptr[c]..self.colptr[c + 1] {
+                m = m.max((self.values[p] - t.get(self.rowind[p], c)).abs());
+            }
+        }
+        m
+    }
+
+    /// `A + B` (same shape).
+    pub fn add(&self, other: &SpMat) -> SpMat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut trip = Vec::with_capacity(self.nnz() + other.nnz());
+        for m in [self, other] {
+            for c in 0..m.cols {
+                for p in m.colptr[c]..m.colptr[c + 1] {
+                    trip.push((m.rowind[p], c, m.values[p]));
+                }
+            }
+        }
+        SpMat::from_triplets(self.rows, self.cols, trip)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn example() -> SpMat {
+        // [[2, 0, 1],
+        //  [0, 3, 0],
+        //  [1, 0, 4]]
+        SpMat::from_triplets(
+            3,
+            3,
+            vec![(0, 0, 2.0), (2, 0, 1.0), (1, 1, 3.0), (0, 2, 1.0), (2, 2, 4.0)],
+        )
+    }
+
+    #[test]
+    fn assembly_sorted_and_summed() {
+        let a = SpMat::from_triplets(2, 2, vec![(1, 0, 1.0), (0, 0, 2.0), (1, 0, 3.0)]);
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.get(0, 0), 2.0);
+        assert_eq!(a.get(1, 0), 4.0);
+        assert_eq!(a.get(1, 1), 0.0);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let a = example();
+        let x = vec![1.0, 2.0, 3.0];
+        let y = a.matvec(&x);
+        let yd = a.to_dense().matvec(&x);
+        assert_eq!(y, yd);
+    }
+
+    #[test]
+    fn matmul_dense_matches() {
+        let a = example();
+        let x = Mat::from_fn(3, 2, |i, j| (i + j) as f64);
+        let y = a.matmul_dense(&x);
+        let yd = a.to_dense().matmul(&x);
+        assert!(y.max_abs_diff(&yd) < 1e-15);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = example();
+        let att = a.transpose().transpose();
+        assert!(a.to_dense().max_abs_diff(&att.to_dense()) < 1e-15);
+    }
+
+    #[test]
+    fn symmetric_example_has_zero_asymmetry() {
+        assert_eq!(example().asymmetry(), 0.0);
+    }
+
+    #[test]
+    fn sym_perm_conjugates() {
+        let a = example();
+        let perm = vec![2usize, 0, 1]; // new -> old
+        let p = a.sym_perm(&perm);
+        let ad = a.to_dense();
+        for new_i in 0..3 {
+            for new_j in 0..3 {
+                assert_eq!(p.get(new_i, new_j), ad.at(perm[new_i], perm[new_j]));
+            }
+        }
+    }
+
+    #[test]
+    fn from_dense_drops() {
+        let m = Mat::from_vec(2, 2, vec![1.0, 1e-13, 0.0, -2.0]);
+        let s = SpMat::from_dense(&m, 1e-12);
+        assert_eq!(s.nnz(), 2);
+    }
+
+    #[test]
+    fn add_matches_dense() {
+        let a = example();
+        let b = SpMat::scaled_eye(3, 0.5);
+        let c = a.add(&b);
+        let mut expect = a.to_dense();
+        for i in 0..3 {
+            *expect.at_mut(i, i) += 0.5;
+        }
+        assert!(c.to_dense().max_abs_diff(&expect) < 1e-15);
+    }
+}

@@ -1,0 +1,337 @@
+//! Sparse Cholesky factorization (CSparse-style up-looking LL^T).
+//!
+//! This is the engine of the paper's headline contribution: the spectral
+//! direction caches the Cholesky factor of the kappa-sparsified attractive
+//! Laplacian `4 L+ + mu I` **once** before iterating, then obtains each
+//! search direction with two sparse triangular backsolves whose cost is
+//! O(nnz(R)) — "essentially for free compared to computing the gradient"
+//! (paper section 3.2).
+//!
+//! Algorithm (Davis, *Direct Methods for Sparse Linear Systems*, ch. 4):
+//!   1. elimination tree of A (with path compression),
+//!   2. symbolic pass: row patterns via `ereach`, giving exact column
+//!      counts of L,
+//!   3. numeric up-looking pass: row k of L solves
+//!      `L[0..k,0..k] l_k = A[0..k,k]` over the `ereach` pattern.
+//!
+//! Only the *upper* triangle of the symmetric input is read (we access
+//! column k's entries with row < k), so callers may pass a full symmetric
+//! matrix.
+
+use super::sparse::SpMat;
+
+/// Sparse lower-triangular Cholesky factor, `A = L L^T`.
+///
+/// Each column of `L` stores its diagonal entry first, then strictly
+/// increasing sub-diagonal rows (a by-product of the up-looking order).
+#[derive(Clone, Debug)]
+pub struct SparseChol {
+    pub l: SpMat,
+    /// Elimination tree (parent of each column, `usize::MAX` = root).
+    pub parent: Vec<usize>,
+}
+
+/// Elimination tree of a symmetric matrix (upper triangle accessed).
+pub fn etree(a: &SpMat) -> Vec<usize> {
+    let n = a.cols;
+    let none = usize::MAX;
+    let mut parent = vec![none; n];
+    let mut ancestor = vec![none; n];
+    for k in 0..n {
+        for p in a.colptr[k]..a.colptr[k + 1] {
+            let mut i = a.rowind[p];
+            // walk from i up to the root or k, compressing paths
+            while i != none && i < k {
+                let next = ancestor[i];
+                ancestor[i] = k;
+                if next == none {
+                    parent[i] = k;
+                }
+                i = next;
+            }
+        }
+    }
+    parent
+}
+
+/// Nonzero pattern of row `k` of `L` (the `ereach` of Davis): columns
+/// `j < k` reachable in the etree from the entries of `A[0..k, k]`.
+/// Returns the pattern in topological (leaf-to-k) order segments; each
+/// segment is a path pushed in reverse so the overall order is valid for
+/// the numeric solve. `w` is a workspace marking visited nodes with `k`.
+fn ereach(a: &SpMat, k: usize, parent: &[usize], w: &mut [usize], stack: &mut Vec<usize>) {
+    stack.clear();
+    w[k] = k; // mark k itself
+    let mut path = Vec::new();
+    for p in a.colptr[k]..a.colptr[k + 1] {
+        let mut i = a.rowind[p];
+        if i >= k {
+            continue; // upper triangle only
+        }
+        path.clear();
+        // k is an ancestor of i in the etree whenever A(i,k) != 0, so the
+        // walk terminates at the w[k] = k mark; the i < k guard is a
+        // defensive stop for inconsistent inputs.
+        while i != usize::MAX && i < k && w[i] != k {
+            path.push(i);
+            w[i] = k;
+            i = parent[i];
+        }
+        // path is leaf->ancestor; append reversed so ancestors come later
+        for &j in path.iter().rev() {
+            stack.push(j);
+        }
+    }
+    // ensure increasing elimination order within the row pattern:
+    // ancestors must be processed after descendants; a stable sort by
+    // column index is a valid topological order for etree paths.
+    stack.sort_unstable();
+}
+
+/// Factorize symmetric pd `A` (upper triangle read). Errors with the
+/// failing pivot when not pd.
+pub fn cholesky_sparse(a: &SpMat) -> Result<SparseChol, super::chol::NotPositiveDefinite> {
+    assert_eq!(a.rows, a.cols, "sparse cholesky needs a square matrix");
+    let n = a.cols;
+    let parent = etree(a);
+    let mut w = vec![usize::MAX; n];
+    let mut pattern = Vec::new();
+
+    // ---- symbolic: exact column counts of L
+    let mut count = vec![1usize; n]; // diagonal of every column
+    for k in 0..n {
+        ereach(a, k, &parent, &mut w, &mut pattern);
+        for &j in &pattern {
+            count[j] += 1; // L(k, j) != 0
+        }
+    }
+    let mut colptr = vec![0usize; n + 1];
+    for j in 0..n {
+        colptr[j + 1] = colptr[j] + count[j];
+    }
+    let nnz = colptr[n];
+    let mut rowind = vec![0usize; nnz];
+    let mut values = vec![0.0f64; nnz];
+    // next free slot per column; slot 0 of each column reserved for diag
+    let mut head: Vec<usize> = (0..n).map(|j| colptr[j] + 1).collect();
+
+    // ---- numeric: up-looking, row k at a time
+    let mut w2 = vec![usize::MAX; n];
+    let mut x = vec![0.0f64; n];
+    for k in 0..n {
+        ereach(a, k, &parent, &mut w2, &mut pattern);
+        // scatter A[0..=k, k] into x
+        let mut d = 0.0;
+        for p in a.colptr[k]..a.colptr[k + 1] {
+            let i = a.rowind[p];
+            if i < k {
+                x[i] = a.values[p];
+            } else if i == k {
+                d = a.values[p];
+            }
+        }
+        // solve the triangular system over the pattern (ascending order)
+        for &j in &pattern {
+            let lkj = x[j] / values[colptr[j]]; // divide by L(j,j)
+            x[j] = 0.0;
+            // x -= L(j+1.., j) * lkj, but we only need rows in the pattern
+            // and row k; sub-diagonal entries of column j written so far
+            // all have row < k or == previous rows, we subtract for all.
+            for p in (colptr[j] + 1)..head[j] {
+                x[rowind[p]] -= values[p] * lkj;
+            }
+            d -= lkj * lkj;
+            // append L(k, j) to column j
+            rowind[head[j]] = k;
+            values[head[j]] = lkj;
+            head[j] += 1;
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return Err(super::chol::NotPositiveDefinite(k));
+        }
+        rowind[colptr[k]] = k;
+        values[colptr[k]] = d.sqrt();
+    }
+    let l = SpMat { rows: n, cols: n, colptr, rowind, values };
+    Ok(SparseChol { l, parent })
+}
+
+impl SparseChol {
+    /// nnz of the factor (fill-in diagnostic).
+    pub fn nnz(&self) -> usize {
+        self.l.nnz()
+    }
+
+    /// Forward solve `L y = b` in place.
+    pub fn solve_lower(&self, b: &mut [f64]) {
+        let l = &self.l;
+        for j in 0..l.cols {
+            let pj = l.colptr[j];
+            let bj = b[j] / l.values[pj];
+            b[j] = bj;
+            if bj != 0.0 {
+                for p in (pj + 1)..l.colptr[j + 1] {
+                    b[l.rowind[p]] -= l.values[p] * bj;
+                }
+            }
+        }
+    }
+
+    /// Back solve `L^T x = b` in place.
+    pub fn solve_lower_t(&self, b: &mut [f64]) {
+        let l = &self.l;
+        for j in (0..l.cols).rev() {
+            let pj = l.colptr[j];
+            let mut s = b[j];
+            for p in (pj + 1)..l.colptr[j + 1] {
+                s -= l.values[p] * b[l.rowind[p]];
+            }
+            b[j] = s / l.values[pj];
+        }
+    }
+
+    /// Solve `A x = b`: the spectral direction's two backsolves,
+    /// `R^T (R p) = -g` in the paper's notation (R = L^T).
+    pub fn solve(&self, b: &mut [f64]) {
+        self.solve_lower(b);
+        self.solve_lower_t(b);
+    }
+
+    /// Solve for a row-major `n x d` right-hand side, in place, column by
+    /// column (d is tiny — 2 for visualization — so we just gather).
+    pub fn solve_mat(&self, b: &mut super::dense::Mat) {
+        let (n, d) = (b.rows, b.cols);
+        assert_eq!(n, self.l.rows);
+        let mut col = vec![0.0; n];
+        for j in 0..d {
+            for i in 0..n {
+                col[i] = b.at(i, j);
+            }
+            self.solve(&mut col);
+            for i in 0..n {
+                *b.at_mut(i, j) = col[i];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::chol;
+    use crate::linalg::dense::Mat;
+
+    /// Laplacian-like spd test matrix: tridiagonal + arrow + shift.
+    fn test_matrix(n: usize) -> SpMat {
+        let mut trip = Vec::new();
+        for i in 0..n {
+            trip.push((i, i, 4.0 + (i % 3) as f64));
+            if i + 1 < n {
+                trip.push((i, i + 1, -1.0));
+                trip.push((i + 1, i, -1.0));
+            }
+            if i > 0 && i % 5 == 0 {
+                trip.push((0, i, -0.5));
+                trip.push((i, 0, -0.5));
+            }
+        }
+        SpMat::from_triplets(n, n, trip)
+    }
+
+    #[test]
+    fn etree_chain_for_tridiagonal() {
+        let mut trip = Vec::new();
+        for i in 0..5 {
+            trip.push((i, i, 2.0));
+            if i + 1 < 5 {
+                trip.push((i, i + 1, -1.0));
+                trip.push((i + 1, i, -1.0));
+            }
+        }
+        let a = SpMat::from_triplets(5, 5, trip);
+        let p = etree(&a);
+        assert_eq!(p, vec![1, 2, 3, 4, usize::MAX]);
+    }
+
+    #[test]
+    fn factor_matches_dense_cholesky() {
+        for n in [1, 2, 5, 17, 40] {
+            let a = test_matrix(n);
+            let sp = cholesky_sparse(&a).unwrap();
+            let ld = chol::cholesky(&a.to_dense()).unwrap();
+            let diff = sp.l.to_dense().max_abs_diff(&ld);
+            assert!(diff < 1e-10, "n={n} diff={diff}");
+        }
+    }
+
+    #[test]
+    fn recomposes() {
+        let a = test_matrix(30);
+        let sp = cholesky_sparse(&a).unwrap();
+        let l = sp.l.to_dense();
+        let llt = l.matmul(&l.t());
+        assert!(llt.max_abs_diff(&a.to_dense()) < 1e-10);
+    }
+
+    #[test]
+    fn solve_residual() {
+        let a = test_matrix(25);
+        let sp = cholesky_sparse(&a).unwrap();
+        let b: Vec<f64> = (0..25).map(|i| (i as f64 * 0.7).sin()).collect();
+        let mut x = b.clone();
+        sp.solve(&mut x);
+        let r = a.matvec(&x);
+        for i in 0..25 {
+            assert!((r[i] - b[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn solve_mat_matches_vector_solves() {
+        let a = test_matrix(12);
+        let sp = cholesky_sparse(&a).unwrap();
+        let b = Mat::from_fn(12, 2, |i, j| (i as f64) - 3.0 * j as f64);
+        let mut bm = b.clone();
+        sp.solve_mat(&mut bm);
+        for j in 0..2 {
+            let mut col: Vec<f64> = (0..12).map(|i| b.at(i, j)).collect();
+            sp.solve(&mut col);
+            for i in 0..12 {
+                assert!((bm.at(i, j) - col[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_identity_fast_path() {
+        let a = SpMat::scaled_eye(10, 9.0);
+        let sp = cholesky_sparse(&a).unwrap();
+        assert_eq!(sp.nnz(), 10);
+        let mut b = vec![18.0; 10];
+        sp.solve(&mut b);
+        assert!(b.iter().all(|&v| (v - 2.0).abs() < 1e-14));
+    }
+
+    #[test]
+    fn rejects_not_pd() {
+        let a = SpMat::from_triplets(2, 2, vec![(0, 0, 1.0), (1, 1, -1.0)]);
+        assert!(cholesky_sparse(&a).is_err());
+    }
+
+    #[test]
+    fn no_fill_means_factor_sparsity() {
+        // tridiagonal: L is bidiagonal, nnz = 2n - 1
+        let mut trip = Vec::new();
+        let n = 50;
+        for i in 0..n {
+            trip.push((i, i, 3.0));
+            if i + 1 < n {
+                trip.push((i, i + 1, -1.0));
+                trip.push((i + 1, i, -1.0));
+            }
+        }
+        let a = SpMat::from_triplets(n, n, trip);
+        let sp = cholesky_sparse(&a).unwrap();
+        assert_eq!(sp.nnz(), 2 * n - 1);
+    }
+}

@@ -1,0 +1,120 @@
+//! Flat-buffer vector kernels used throughout the optimizer hot loop.
+//!
+//! Everything here operates on `&[f64]` so the same kernels serve `Mat`
+//! (viewed as a flat `N*d` vector, which is exactly how the paper treats
+//! `vec(X)` in the `B_k p_k = -g_k` systems) and plain vectors.
+
+/// Dot product `x . y`.
+///
+/// Unrolled 4-wide so LLVM vectorizes without `-ffast-math`-style
+/// reassociation concerns (summation order is fixed and deterministic).
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let b = 4 * i;
+        s0 += x[b] * y[b];
+        s1 += x[b + 1] * y[b + 1];
+        s2 += x[b + 2] * y[b + 2];
+        s3 += x[b + 3] * y[b + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in 4 * chunks..n {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// `y += a * x`.
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// `y = x + a * p` (out-of-place step update).
+#[inline]
+pub fn step(x: &[f64], a: f64, p: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(p.len(), y.len());
+    for i in 0..y.len() {
+        y[i] = x[i] + a * p[i];
+    }
+}
+
+/// `x *= a`.
+#[inline]
+pub fn scale(a: f64, x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn nrm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// Infinity norm.
+#[inline]
+pub fn nrm_inf(x: &[f64]) -> f64 {
+    x.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+}
+
+/// Squared distance between two points of dimension `d` stored as slices.
+#[inline]
+pub fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        let t = a[i] - b[i];
+        s += t * t;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let x: Vec<f64> = (0..23).map(|i| i as f64 * 0.5 - 3.0).collect();
+        let y: Vec<f64> = (0..23).map(|i| (i as f64).sin()).collect();
+        let naive: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot(&x, &y) - naive).abs() < 1e-12 * naive.abs().max(1.0));
+    }
+
+    #[test]
+    fn dot_empty_and_small() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(dot(&[2.0], &[3.0]), 6.0);
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+    }
+
+    #[test]
+    fn axpy_step_scale() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+        let mut out = vec![0.0; 3];
+        step(&y, -1.0, &x, &mut out);
+        assert_eq!(out, vec![11.0, 22.0, 33.0]);
+        scale(0.5, &mut out);
+        assert_eq!(out, vec![5.5, 11.0, 16.5]);
+    }
+
+    #[test]
+    fn norms() {
+        assert_eq!(nrm2(&[3.0, 4.0]), 5.0);
+        assert_eq!(nrm_inf(&[-7.0, 4.0]), 7.0);
+        assert_eq!(sqdist(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+    }
+}

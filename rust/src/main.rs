@@ -1,0 +1,221 @@
+//! `nle` — CLI for the nonlinear-embedding framework.
+//!
+//! Subcommands map 1:1 to the paper's experiments (fig1..fig4, rates)
+//! plus a general-purpose `embed` runner and `info` for the artifact
+//! registry. See DESIGN.md section 5 for the experiment index.
+//!
+//! (Arg parsing is hand-rolled `--key value` matching; the offline build
+//! has no clap — see Cargo.toml.)
+
+use std::time::Duration;
+
+use nle::bench_harness::{fig1, fig2, fig3, fig4, rates};
+use nle::prelude::*;
+
+const USAGE: &str = "\
+nle — Partial-Hessian strategies for nonlinear embeddings (ICML 2012)
+
+USAGE: nle <command> [--key value ...]
+
+COMMANDS
+  fig1    COIL learning curves from a shared basin (EE + s-SNE)
+          [--objects 10] [--views 72] [--ambient 256] [--budget 20]
+          [--strategies gd,fp,diagh,cg,lbfgs,sd,sdm]
+  fig2    random restarts under a wall budget (EE + s-SNE)
+          [--inits 10] [--budget 5] [--ambient 256]
+          [--strategies gd,fp,cg,lbfgs,sd,sdm]
+  fig3    homotopy optimization of EE over lambda
+          [--lambda-steps 50] [--budget 120] [--ambient 256]
+          [--strategies gd,fp,cg,lbfgs,sd,sdm]
+  fig4    large-scale learning curves (EE + t-SNE), sparse SD
+          [--n 2000] [--budget 60] [--kappa 7] [--strategies fp,lbfgs,sd,sdm]
+  rates   theorem 2.1 rate constants r = ||B^-1 H - I|| [--n 40]
+  all     run every experiment at default scale
+  embed   one embedding run
+          [--data swiss|coil|mnist|clusters] [--n 500] [--method ee]
+          [--strategy sd] [--lambda 100] [--perplexity 20]
+          [--max-iters 500] [--backend native|xla] [--out results/embedding.csv]
+  info    list available AOT artifacts [--artifacts artifacts]
+";
+
+/// Tiny `--key value` parser: returns a lookup map; bare flags get "true".
+struct Args(std::collections::HashMap<String, String>);
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut map = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                let key = key.replace('-', "_");
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    map.insert(key, argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    map.insert(key, "true".to_string());
+                    i += 1;
+                }
+            } else {
+                eprintln!("ignoring stray argument {:?}", argv[i]);
+                i += 1;
+            }
+        }
+        Args(map)
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.0.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.0.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+fn parse_strategies(s: &str) -> Vec<String> {
+    s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    let args = Args::parse(&argv[1..]);
+
+    match cmd.as_str() {
+        "fig1" => fig1::run(&fig1::Fig1Config {
+            objects: args.get("objects", 10),
+            views: args.get("views", 72),
+            ambient: args.get("ambient", 256),
+            budget: Duration::from_secs_f64(args.get("budget", 20.0)),
+            strategies: parse_strategies(&args.get_str("strategies", "gd,fp,diagh,cg,lbfgs,sd,sdm")),
+            ..Default::default()
+        }),
+        "fig2" => fig2::run(&fig2::Fig2Config {
+            inits: args.get("inits", 10),
+            ambient: args.get("ambient", 256),
+            budget: Duration::from_secs_f64(args.get("budget", 5.0)),
+            strategies: parse_strategies(&args.get_str("strategies", "gd,fp,cg,lbfgs,sd,sdm")),
+            ..Default::default()
+        }),
+        "fig3" => fig3::run(&fig3::Fig3Config {
+            lambda_steps: args.get("lambda_steps", 50),
+            ambient: args.get("ambient", 256),
+            budget: Some(Duration::from_secs_f64(args.get("budget", 120.0))),
+            strategies: parse_strategies(&args.get_str("strategies", "gd,fp,cg,lbfgs,sd,sdm")),
+            ..Default::default()
+        }),
+        "fig4" => fig4::run(&fig4::Fig4Config {
+            n: args.get("n", 2000),
+            kappa: args.get("kappa", 7),
+            budget: Duration::from_secs_f64(args.get("budget", 60.0)),
+            strategies: parse_strategies(&args.get_str("strategies", "fp,lbfgs,sd,sdm")),
+            ..Default::default()
+        }),
+        "rates" => rates::run(&rates::RatesConfig { n: args.get("n", 40), ..Default::default() }),
+        "all" => {
+            fig1::run(&fig1::Fig1Config {
+                budget: Duration::from_secs(10),
+                ..Default::default()
+            })?;
+            fig2::run(&fig2::Fig2Config {
+                inits: 10,
+                budget: Duration::from_secs(3),
+                ..Default::default()
+            })?;
+            fig3::run(&fig3::Fig3Config {
+                budget: Some(Duration::from_secs(60)),
+                ..Default::default()
+            })?;
+            fig4::run(&fig4::Fig4Config {
+                n: 1000,
+                budget: Duration::from_secs(30),
+                ..Default::default()
+            })?;
+            rates::run(&rates::RatesConfig::default())
+        }
+        "embed" => {
+            let data = args.get_str("data", "swiss");
+            let n: usize = args.get("n", 500);
+            let ds = match data.as_str() {
+                "swiss" => nle::data::synth::swiss_roll(n, 3, 0.05, 1),
+                "coil" => nle::data::coil::generate(&nle::data::coil::CoilParams {
+                    views: (n / 10).max(4),
+                    ..Default::default()
+                }),
+                "mnist" => nle::data::mnist_like::generate(
+                    &nle::data::mnist_like::MnistLikeParams { n, ..Default::default() },
+                ),
+                "clusters" => nle::data::synth::clusters(n, 5, 20, 15.0, 1),
+                other => anyhow::bail!("unknown dataset {other}"),
+            };
+            let n_actual = ds.y.rows;
+            let method = Method::parse(&args.get_str("method", "ee"))
+                .ok_or_else(|| anyhow::anyhow!("bad method"))?;
+            let lambda: f64 = args.get("lambda", 100.0);
+            let perplexity: f64 = args.get("perplexity", 20.0);
+            let strategy = args.get_str("strategy", "sd");
+            let backend = args.get_str("backend", "native");
+            let p = nle::affinity::sne_affinities(&ds.y, perplexity.min(n_actual as f64 / 3.0));
+            let obj: Box<dyn Objective> = match backend.as_str() {
+                "native" => Box::new(NativeObjective::with_affinities(
+                    method,
+                    Attractive::Dense(p),
+                    lambda,
+                    2,
+                )),
+                "xla" => {
+                    let reg = std::sync::Arc::new(ArtifactRegistry::open("artifacts")?);
+                    Box::new(XlaObjective::new(reg, method, Attractive::Dense(p), lambda, 2)?)
+                }
+                other => anyhow::bail!("unknown backend {other}"),
+            };
+            let x0 = nle::init::random_init(n_actual, 2, 1e-4, 0);
+            let mut strat = nle::opt::strategy_by_name(&strategy, None)
+                .ok_or_else(|| anyhow::anyhow!("unknown strategy {strategy}"))?;
+            let t0 = std::time::Instant::now();
+            let res = minimize(
+                obj.as_ref(),
+                strat.as_mut(),
+                &x0,
+                &OptOptions { max_iters: args.get("max_iters", 500), ..Default::default() },
+            );
+            println!(
+                "embed[{}/{strategy}/{backend}]: N = {n_actual}, E = {:.6e}, iters = {}, {:.2}s, stop = {:?}",
+                method.name(),
+                res.e,
+                res.iters(),
+                t0.elapsed().as_secs_f64(),
+                res.stop
+            );
+            let out = args.get_str("out", "results/embedding.csv");
+            let path = std::path::PathBuf::from(out);
+            if let Some(parent) = path.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            nle::data::loader::save_embedding_csv(&path, &res.x, &ds.labels)?;
+            println!("embedding written to {}", path.display());
+            Ok(())
+        }
+        "info" => {
+            let reg = ArtifactRegistry::open(args.get_str("artifacts", "artifacts"))?;
+            println!("PJRT platform: {}", reg.client().platform_name());
+            println!("available artifacts:");
+            for (m, n, d) in reg.available() {
+                println!("  {:<10} N = {:>6}  d = {}", m.name(), n, d);
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Embedding-quality metrics and CSV emitters for the learning curves.
+
+pub mod quality;
+pub mod timing;
+
+pub use quality::{knn_recall, label_knn_accuracy};
+pub use timing::CurveWriter;

@@ -1,0 +1,80 @@
+//! Embedding-quality metrics: neighborhood preservation and label purity
+//! (used to compare the FP vs SD embeddings of fig. 4 quantitatively —
+//! the paper shows pictures; we report numbers too).
+
+use crate::affinity::knn::knn;
+use crate::linalg::dense::Mat;
+
+/// Fraction of each point's k nearest neighbors in data space that are
+/// also among its k nearest neighbors in the embedding, averaged
+/// (k-ary neighborhood preservation).
+pub fn knn_recall(y: &Mat, x: &Mat, k: usize) -> f64 {
+    assert_eq!(y.rows, x.rows);
+    let gy = knn(y, k);
+    let gx = knn(x, k);
+    let n = y.rows;
+    let mut total = 0.0;
+    for i in 0..n {
+        let in_data: std::collections::HashSet<usize> =
+            gy.neighbors[i].iter().map(|&(j, _)| j).collect();
+        let hits = gx.neighbors[i]
+            .iter()
+            .filter(|&&(j, _)| in_data.contains(&j))
+            .count();
+        total += hits as f64 / k as f64;
+    }
+    total / n as f64
+}
+
+/// k-NN label classification accuracy in the embedding: how well class
+/// structure (digits, objects) is preserved.
+pub fn label_knn_accuracy(x: &Mat, labels: &[usize], k: usize) -> f64 {
+    assert_eq!(x.rows, labels.len());
+    let g = knn(x, k);
+    let n = x.rows;
+    let mut correct = 0usize;
+    for i in 0..n {
+        let mut votes = std::collections::HashMap::new();
+        for &(j, _) in &g.neighbors[i] {
+            *votes.entry(labels[j]).or_insert(0usize) += 1;
+        }
+        let pred = votes.into_iter().max_by_key(|&(_, c)| c).map(|(l, _)| l);
+        if pred == Some(labels[i]) {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    #[test]
+    fn identical_embedding_has_perfect_recall() {
+        let mut rng = Rng::new(1);
+        let y = Mat::from_fn(40, 3, |_, _| rng.normal());
+        assert!((knn_recall(&y, &y, 5) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_embedding_has_low_recall() {
+        let mut rng = Rng::new(2);
+        let y = Mat::from_fn(60, 3, |_, _| rng.normal());
+        let x = Mat::from_fn(60, 2, |_, _| rng.normal());
+        let r = knn_recall(&y, &x, 5);
+        assert!(r < 0.5, "recall {r}");
+    }
+
+    #[test]
+    fn separated_clusters_have_high_label_accuracy() {
+        // two tight, far-apart clusters in the embedding
+        let x = Mat::from_fn(20, 2, |i, j| {
+            let base = if i < 10 { 0.0 } else { 100.0 };
+            base + 0.01 * ((i * 7 + j * 3) % 11) as f64
+        });
+        let labels: Vec<usize> = (0..20).map(|i| if i < 10 { 0 } else { 1 }).collect();
+        assert_eq!(label_knn_accuracy(&x, &labels, 3), 1.0);
+    }
+}

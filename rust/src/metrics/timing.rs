@@ -1,0 +1,68 @@
+//! CSV emitters for learning curves and figure data.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::opt::IterStats;
+
+/// Writes learning-curve CSVs: one row per iteration, tagged with the
+/// method/strategy so multiple runs can share one file (long format,
+/// plot-friendly).
+pub struct CurveWriter {
+    file: std::fs::File,
+}
+
+impl CurveWriter {
+    pub fn create(path: &Path) -> std::io::Result<Self> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "tag,strategy,iter,time_s,e,grad_inf,alpha,nfev")?;
+        Ok(CurveWriter { file })
+    }
+
+    pub fn write_trace(
+        &mut self,
+        tag: &str,
+        strategy: &str,
+        trace: &[IterStats],
+    ) -> std::io::Result<()> {
+        for s in trace {
+            writeln!(
+                self.file,
+                "{tag},{strategy},{},{:.6},{:.10e},{:.6e},{:.6},{}",
+                s.iter, s.time_s, s.e, s.grad_inf, s.alpha, s.nfev
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Arbitrary extra row (totals, setup times, ...).
+    pub fn write_row(&mut self, cols: &[String]) -> std::io::Result<()> {
+        writeln!(self.file, "{}", cols.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let path = std::env::temp_dir().join("nle_curve_test.csv");
+        {
+            let mut w = CurveWriter::create(&path).unwrap();
+            w.write_trace(
+                "t1",
+                "sd",
+                &[IterStats { iter: 0, time_s: 0.1, e: 2.0, grad_inf: 0.5, alpha: 1.0, nfev: 1 }],
+            )
+            .unwrap();
+        }
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.starts_with("tag,strategy,iter"));
+        assert!(content.contains("t1,sd,0,"));
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,143 @@
+//! Embedding objectives: the generic attraction/repulsion family of the
+//! paper's section 1, `E(X; lambda) = E+(X) + lambda E-(X)`.
+//!
+//! Two interchangeable backends implement [`Objective`]:
+//! * [`native`] — pure rust, O(Nd) memory, rayon-parallel; arbitrary N.
+//! * [`xla`] — the three-layer hot path: AOT-compiled jax/Pallas
+//!   artifacts executed through PJRT (see `crate::runtime`).
+//! Cross-backend parity is enforced in rust/tests/integration_runtime.rs.
+
+pub mod hessian;
+pub mod native;
+pub mod xla;
+
+use crate::linalg::dense::Mat;
+use crate::linalg::sparse::SpMat;
+
+/// The embedding methods covered by the general formulation (paper
+/// section 1 + DESIGN.md section 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Spectral / Laplacian-eigenmaps attractive term only (lambda = 0).
+    Spectral,
+    /// Elastic embedding (unnormalized, Gaussian kernel).
+    Ee,
+    /// Symmetric SNE (normalized, Gaussian kernel).
+    Ssne,
+    /// t-SNE (normalized, Student kernel).
+    Tsne,
+}
+
+impl Method {
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Spectral => "spectral",
+            Method::Ee => "ee",
+            Method::Ssne => "ssne",
+            Method::Tsne => "tsne",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        match s {
+            "spectral" => Some(Method::Spectral),
+            "ee" => Some(Method::Ee),
+            "ssne" | "s-sne" | "sne" => Some(Method::Ssne),
+            "tsne" | "t-sne" => Some(Method::Tsne),
+            _ => None,
+        }
+    }
+
+    /// Is the attractive Hessian `4 L+ (x) I_d` constant in X? True for
+    /// the Gaussian-kernel methods; for t-SNE the spectral direction
+    /// freezes L+ at X = 0, where K = 1 and w+ = p (paper section 2).
+    pub fn attractive_hessian_constant(self) -> bool {
+        !matches!(self, Method::Tsne)
+    }
+}
+
+/// Attractive weights, dense or kNN-sparse (large-N path).
+#[derive(Clone, Debug)]
+pub enum Attractive {
+    Dense(Mat),
+    Sparse(SpMat),
+}
+
+impl Attractive {
+    pub fn n(&self) -> usize {
+        match self {
+            Attractive::Dense(m) => m.rows,
+            Attractive::Sparse(s) => s.rows,
+        }
+    }
+
+    /// Materialize (or clone) as dense — used by the XLA backend and the
+    /// explicit-Hessian validator; avoid at large N.
+    pub fn to_dense(&self) -> Mat {
+        match self {
+            Attractive::Dense(m) => m.clone(),
+            Attractive::Sparse(s) => s.to_dense(),
+        }
+    }
+
+    /// Row degrees `d+_n = sum_m w+_nm` (the FP strategy's diagonal).
+    pub fn degrees(&self) -> Vec<f64> {
+        match self {
+            Attractive::Dense(m) => crate::graph::degrees_dense(m),
+            Attractive::Sparse(s) => {
+                let mut deg = vec![0.0; s.rows];
+                for c in 0..s.cols {
+                    for p in s.colptr[c]..s.colptr[c + 1] {
+                        if s.rowind[p] != c {
+                            deg[s.rowind[p]] += s.values[p];
+                        }
+                    }
+                }
+                deg
+            }
+        }
+    }
+}
+
+/// Repulsive weights W- (EE only; the normalized models repel through
+/// their partition function instead).
+#[derive(Clone, Debug)]
+pub enum Repulsive {
+    /// `w-_nm = c` for all n != m (the common EE choice).
+    Uniform(f64),
+    Dense(Mat),
+}
+
+/// An embedding objective: energy + gradient of `E(X; lambda)`.
+///
+/// `Send + Sync` so the coordinator can run jobs on worker threads.
+pub trait Objective: Send + Sync {
+    fn n(&self) -> usize;
+    fn dim(&self) -> usize;
+    fn method(&self) -> Method;
+    fn lambda(&self) -> f64;
+    /// Homotopy support: change lambda without rebuilding weights.
+    fn set_lambda(&mut self, lam: f64);
+    /// Energy and gradient, the O(N^2 d) hot spot.
+    fn eval(&self, x: &Mat) -> (f64, Mat);
+    /// Energy only (line-search evaluations; may be cheaper than eval).
+    fn energy(&self, x: &Mat) -> f64 {
+        self.eval(x).0
+    }
+    /// The attractive weights W+ (P for the normalized models), from
+    /// which the spectral direction builds its partial Hessian.
+    fn attractive(&self) -> &Attractive;
+    /// Count of energy/gradient evaluations so far (diagnostics; the
+    /// paper reports "number of error function evaluations" in fig. 3).
+    fn eval_count(&self) -> usize {
+        0
+    }
+    /// Relative accuracy of the gradients this backend produces. The
+    /// near-singular solves (SD, SD-) scale their mu shift by this so
+    /// that backend noise in the Laplacian's small-eigenvalue directions
+    /// is not amplified into the direction (f64 native: machine eps;
+    /// f32 XLA artifacts: f32 eps with slack for cancellation).
+    fn grad_accuracy(&self) -> f64 {
+        1e-12
+    }
+}

@@ -1,0 +1,525 @@
+//! Native rust backend for the embedding objectives.
+//!
+//! Streams the O(N^2 d) pairwise computation row-by-row in parallel —
+//! O(N d) memory, no N x N intermediates — so it scales to the paper's
+//! fig. 4 sizes. Semantics mirror python/compile/kernels/ref.py exactly;
+//! parity with the XLA backend is asserted in the integration tests.
+//!
+//! Gradients are the Laplacian forms of the paper (eqs. 2-3) rearranged
+//! per-row: for weights w_nm, `(4 X L)_n = 4 sum_m w_nm (x_n - x_m)`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::{Attractive, Method, Objective, Repulsive};
+use crate::linalg::dense::Mat;
+use crate::linalg::vecops::sqdist;
+
+/// Pure-rust objective. Holds the data-side weights; X is passed per call.
+pub struct NativeObjective {
+    method: Method,
+    wp: Attractive,
+    wm: Repulsive,
+    lambda: f64,
+    dim: usize,
+    evals: AtomicUsize,
+}
+
+impl NativeObjective {
+    pub fn new(method: Method, wp: Attractive, wm: Repulsive, lambda: f64, dim: usize) -> Self {
+        NativeObjective { method, wp, wm, lambda, dim, evals: AtomicUsize::new(0) }
+    }
+
+    /// Standard construction used by the experiments: SNE affinities as
+    /// W+ (= P) and uniform repulsion for EE.
+    pub fn with_affinities(method: Method, p: Attractive, lambda: f64, dim: usize) -> Self {
+        NativeObjective::new(method, p, Repulsive::Uniform(1.0), lambda, dim)
+    }
+
+    #[inline]
+    fn wm_at(&self, n: usize, m: usize) -> f64 {
+        match &self.wm {
+            Repulsive::Uniform(c) => {
+                if n == m {
+                    0.0
+                } else {
+                    *c
+                }
+            }
+            Repulsive::Dense(w) => w.at(n, m),
+        }
+    }
+
+    /// Attraction energy + gradient accumulation for row n into `gn`:
+    /// E+ contribution and `sum_m w+_nm K1-form (x_n - x_m)` terms.
+    /// Returns the energy contribution of row n.
+    fn attract_row(&self, x: &Mat, n: usize, gn: &mut [f64]) -> f64 {
+        let d = x.cols;
+        let xn = x.row(n);
+        let mut e = 0.0;
+        let mut acc = move |m: usize, w: f64| -> f64 {
+            if w == 0.0 || m == n {
+                return 0.0;
+            }
+            let xm = x.row(m);
+            let d2 = sqdist(xn, xm);
+            let (econtrib, gw) = match self.method {
+                // E+ = w d2, grad weight w
+                Method::Spectral | Method::Ee | Method::Ssne => (w * d2, w),
+                // E+ = w log(1+d2), grad weight w K (K = 1/(1+d2))
+                Method::Tsne => {
+                    let k = 1.0 / (1.0 + d2);
+                    (w * (1.0 + d2).ln(), w * k)
+                }
+            };
+            for i in 0..d {
+                gn[i] += 4.0 * gw * (xn[i] - xm[i]);
+            }
+            econtrib
+        };
+        match &self.wp {
+            Attractive::Dense(w) => {
+                for m in 0..x.rows {
+                    e += acc(m, w.at(n, m));
+                }
+            }
+            Attractive::Sparse(s) => {
+                // CSC of a symmetric matrix: column n holds row n's weights
+                for p in s.colptr[n]..s.colptr[n + 1] {
+                    e += acc(s.rowind[p], s.values[p]);
+                }
+            }
+        }
+        e
+    }
+
+
+
+}
+
+
+/// Cursor over one row of the attractive weights during a full 0..N
+/// sweep: O(1) amortized for both dense rows and sorted sparse columns.
+enum WpRow<'a> {
+    Dense(&'a [f64]),
+    Sparse { rows: &'a [usize], vals: &'a [f64], pos: usize },
+}
+
+impl<'a> WpRow<'a> {
+    #[inline]
+    fn at(&mut self, m: usize) -> f64 {
+        match self {
+            WpRow::Dense(r) => r[m],
+            WpRow::Sparse { rows, vals, pos } => {
+                while *pos < rows.len() && rows[*pos] < m {
+                    *pos += 1;
+                }
+                if *pos < rows.len() && rows[*pos] == m {
+                    vals[*pos]
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+}
+
+impl NativeObjective {
+    /// Row cursor for the fused sweeps.
+    fn wp_row(&self, n: usize) -> WpRow<'_> {
+        match &self.wp {
+            Attractive::Dense(w) => WpRow::Dense(w.row(n)),
+            Attractive::Sparse(s) => WpRow::Sparse {
+                rows: &s.rowind[s.colptr[n]..s.colptr[n + 1]],
+                vals: &s.values[s.colptr[n]..s.colptr[n + 1]],
+                pos: 0,
+            },
+        }
+    }
+
+    /// Fused EE row: one pass over m computing d2 once per pair and
+    /// accumulating attraction + repulsion energy and (optionally) the
+    /// gradient. Returns the row's full energy contribution.
+    fn ee_row_fused(&self, x: &Mat, n: usize, mut gn: Option<&mut [f64]>) -> f64 {
+        let d = x.cols;
+        let xn = x.row(n);
+        let lam = self.lambda;
+        let mut wp = self.wp_row(n);
+        let mut e = 0.0;
+        for m in 0..x.rows {
+            if m == n {
+                continue;
+            }
+            let xm = x.row(m);
+            let d2 = sqdist(xn, xm);
+            let wr = wp.at(m);
+            let wrep = self.wm_at(n, m);
+            let k = if wrep != 0.0 { (-d2).exp() } else { 0.0 };
+            e += wr * d2 + lam * wrep * k;
+            if let Some(gn) = gn.as_deref_mut() {
+                let coef = 4.0 * (wr - lam * wrep * k);
+                if d == 2 {
+                    gn[0] += coef * (xn[0] - xm[0]);
+                    gn[1] += coef * (xn[1] - xm[1]);
+                } else {
+                    for i in 0..d {
+                        gn[i] += coef * (xn[i] - xm[i]);
+                    }
+                }
+            }
+        }
+        e
+    }
+
+    /// Normalized-model pass 1 for one row: attraction energy + this
+    /// row's partition-sum contribution, one d2 per pair.
+    fn norm_row_attr_partition(&self, x: &Mat, n: usize) -> (f64, f64) {
+        let xn = x.row(n);
+        let mut wp = self.wp_row(n);
+        let (mut e, mut s) = (0.0, 0.0);
+        for m in 0..x.rows {
+            if m == n {
+                continue;
+            }
+            let d2 = sqdist(xn, x.row(m));
+            let wr = wp.at(m);
+            match self.method {
+                Method::Ssne => {
+                    s += (-d2).exp();
+                    if wr != 0.0 {
+                        e += wr * d2;
+                    }
+                }
+                Method::Tsne => {
+                    s += 1.0 / (1.0 + d2);
+                    if wr != 0.0 {
+                        e += wr * (1.0 + d2).ln();
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+        (e, s)
+    }
+
+    /// Normalized-model pass 2 for one row: the fused gradient
+    /// (attractive + repulsive weights), one d2 per pair.
+    fn norm_row_grad(&self, x: &Mat, n: usize, inv_s: f64, gn: &mut [f64]) {
+        let d = x.cols;
+        let xn = x.row(n);
+        let lam = self.lambda;
+        let mut wp = self.wp_row(n);
+        for m in 0..x.rows {
+            if m == n {
+                continue;
+            }
+            let xm = x.row(m);
+            let d2 = sqdist(xn, xm);
+            let wr = wp.at(m);
+            // w_nm of eq. (2): ssne p - lam q; tsne (p - lam q) K
+            let coef = 4.0
+                * match self.method {
+                    Method::Ssne => wr - lam * inv_s * (-d2).exp(),
+                    Method::Tsne => {
+                        let k = 1.0 / (1.0 + d2);
+                        (wr - lam * inv_s * k) * k
+                    }
+                    _ => unreachable!(),
+                };
+            if d == 2 {
+                gn[0] += coef * (xn[0] - xm[0]);
+                gn[1] += coef * (xn[1] - xm[1]);
+            } else {
+                for i in 0..d {
+                    gn[i] += coef * (xn[i] - xm[i]);
+                }
+            }
+        }
+    }
+}
+
+
+/// Assemble per-row results into (E, G).
+fn collect_rows(
+    n: usize,
+    d: usize,
+    results: Vec<(f64, Vec<f64>)>,
+    e0: f64,
+) -> (f64, Mat) {
+    let mut g = Mat::zeros(n, d);
+    let mut e = e0;
+    for (row, (er, gr)) in results.into_iter().enumerate() {
+        e += er;
+        g.row_mut(row).copy_from_slice(&gr);
+    }
+    (e, g)
+}
+
+impl Objective for NativeObjective {
+    fn n(&self) -> usize {
+        self.wp.n()
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn method(&self) -> Method {
+        self.method
+    }
+
+    fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    fn set_lambda(&mut self, lam: f64) {
+        self.lambda = lam;
+    }
+
+    fn eval(&self, x: &Mat) -> (f64, Mat) {
+        self.evals.fetch_add(1, Ordering::Relaxed);
+        let n = x.rows;
+        let d = x.cols;
+        assert_eq!(n, self.n(), "X has wrong number of rows");
+        assert_eq!(d, self.dim);
+
+        match self.method {
+            Method::Spectral => {
+                let results: Vec<(f64, Vec<f64>)> = crate::par::par_map(n, |row| {
+                    let mut gn = vec![0.0; d];
+                    let e = self.attract_row(x, row, &mut gn);
+                    (e, gn)
+                });
+                collect_rows(n, d, results, 0.0)
+            }
+            Method::Ee => {
+                // single fused pass: one d2 per pair serves both terms
+                let results: Vec<(f64, Vec<f64>)> = crate::par::par_map(n, |row| {
+                    let mut gn = vec![0.0; d];
+                    let e = self.ee_row_fused(x, row, Some(&mut gn));
+                    (e, gn)
+                });
+                collect_rows(n, d, results, 0.0)
+            }
+            Method::Ssne | Method::Tsne => {
+                // pass 1: attraction energy + partition function together
+                let parts: Vec<(f64, f64)> =
+                    crate::par::par_map(n, |row| self.norm_row_attr_partition(x, row));
+                let (e_attr, s) = parts
+                    .into_iter()
+                    .fold((0.0, 0.0), |(ea, ss), (e, p)| (ea + e, ss + p));
+                let inv_s = 1.0 / s;
+                // pass 2: fused gradient
+                let rows: Vec<Vec<f64>> = crate::par::par_map(n, |row| {
+                    let mut gn = vec![0.0; d];
+                    if self.lambda != 0.0 || true {
+                        self.norm_row_grad(x, row, inv_s, &mut gn);
+                    }
+                    gn
+                });
+                let mut g = Mat::zeros(n, d);
+                for (row, gr) in rows.into_iter().enumerate() {
+                    g.row_mut(row).copy_from_slice(&gr);
+                }
+                (e_attr + self.lambda * s.ln(), g)
+            }
+        }
+    }
+
+    fn energy(&self, x: &Mat) -> f64 {
+        self.evals.fetch_add(1, Ordering::Relaxed);
+        let n = x.rows;
+        match self.method {
+            Method::Spectral => crate::par::par_sum(n, |row| {
+                // attraction only; sparse rows stay O(nnz)
+                let xn = x.row(row);
+                match &self.wp {
+                    Attractive::Dense(w) => {
+                        let wr = w.row(row);
+                        let mut e = 0.0;
+                        for m in 0..n {
+                            if m != row && wr[m] != 0.0 {
+                                e += wr[m] * sqdist(xn, x.row(m));
+                            }
+                        }
+                        e
+                    }
+                    Attractive::Sparse(sp) => {
+                        let mut e = 0.0;
+                        for p in sp.colptr[row]..sp.colptr[row + 1] {
+                            let m = sp.rowind[p];
+                            if m != row {
+                                e += sp.values[p] * sqdist(xn, x.row(m));
+                            }
+                        }
+                        e
+                    }
+                }
+            }),
+            Method::Ee => crate::par::par_sum(n, |row| self.ee_row_fused(x, row, None)),
+            Method::Ssne | Method::Tsne => {
+                // single pass: attraction + partition together
+                let parts: Vec<(f64, f64)> =
+                    crate::par::par_map(n, |row| self.norm_row_attr_partition(x, row));
+                let (e_attr, s) = parts
+                    .into_iter()
+                    .fold((0.0, 0.0), |(ea, ss), (e, p)| (ea + e, ss + p));
+                e_attr + self.lambda * s.ln()
+            }
+        }
+    }
+
+    fn attractive(&self) -> &Attractive {
+        &self.wp
+    }
+
+    fn eval_count(&self) -> usize {
+        self.evals.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::linalg::sparse::SpMat;
+
+    fn setup(n: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let mut w = Mat::from_fn(n, n, |_, _| rng.uniform());
+        let mut total = 0.0;
+        for i in 0..n {
+            *w.at_mut(i, i) = 0.0;
+            for j in 0..i {
+                let v = 0.5 * (w.at(i, j) + w.at(j, i));
+                *w.at_mut(i, j) = v;
+                *w.at_mut(j, i) = v;
+            }
+        }
+        for v in &w.data {
+            total += v;
+        }
+        for v in w.data.iter_mut() {
+            *v /= total;
+        }
+        (x, w)
+    }
+
+    /// Finite-difference gradient check for every method.
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let (x, w) = setup(14, 1);
+        for (method, lam) in [
+            (Method::Spectral, 0.0),
+            (Method::Ee, 7.0),
+            (Method::Ssne, 1.0),
+            (Method::Tsne, 1.0),
+        ] {
+            let obj = NativeObjective::with_affinities(
+                method,
+                Attractive::Dense(w.clone()),
+                lam,
+                2,
+            );
+            let (_, g) = obj.eval(&x);
+            let eps = 1e-6;
+            for &(i, j) in &[(0usize, 0usize), (3, 1), (13, 0), (7, 1)] {
+                let mut xp = x.clone();
+                *xp.at_mut(i, j) += eps;
+                let mut xm = x.clone();
+                *xm.at_mut(i, j) -= eps;
+                let fd = (obj.energy(&xp) - obj.energy(&xm)) / (2.0 * eps);
+                let gv = g.at(i, j);
+                assert!(
+                    (fd - gv).abs() < 1e-5 * gv.abs().max(1.0),
+                    "{}: fd {fd} vs g {gv} at ({i},{j})",
+                    method.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn energy_matches_eval() {
+        let (x, w) = setup(20, 2);
+        for (method, lam) in [
+            (Method::Spectral, 0.0),
+            (Method::Ee, 3.0),
+            (Method::Ssne, 1.0),
+            (Method::Tsne, 1.0),
+        ] {
+            let obj = NativeObjective::with_affinities(
+                method,
+                Attractive::Dense(w.clone()),
+                lam,
+                2,
+            );
+            let (e, _) = obj.eval(&x);
+            let e2 = obj.energy(&x);
+            assert!((e - e2).abs() < 1e-10 * e.abs().max(1.0), "{}", method.name());
+        }
+    }
+
+    #[test]
+    fn sparse_attractive_matches_dense() {
+        let (x, w) = setup(16, 3);
+        for (method, lam) in [(Method::Ee, 5.0), (Method::Ssne, 1.0), (Method::Tsne, 1.0)] {
+            let dense = NativeObjective::with_affinities(
+                method,
+                Attractive::Dense(w.clone()),
+                lam,
+                2,
+            );
+            let sparse = NativeObjective::with_affinities(
+                method,
+                Attractive::Sparse(SpMat::from_dense(&w, 0.0)),
+                lam,
+                2,
+            );
+            let (ed, gd) = dense.eval(&x);
+            let (es, gs) = sparse.eval(&x);
+            assert!((ed - es).abs() < 1e-10 * ed.abs().max(1.0));
+            assert!(gd.max_abs_diff(&gs) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn ee_lambda_zero_equals_spectral() {
+        let (x, w) = setup(12, 4);
+        let ee =
+            NativeObjective::with_affinities(Method::Ee, Attractive::Dense(w.clone()), 0.0, 2);
+        let sp =
+            NativeObjective::with_affinities(Method::Spectral, Attractive::Dense(w), 0.0, 2);
+        let (e1, g1) = ee.eval(&x);
+        let (e2, g2) = sp.eval(&x);
+        assert!((e1 - e2).abs() < 1e-12);
+        assert!(g1.max_abs_diff(&g2) < 1e-12);
+    }
+
+    #[test]
+    fn shift_invariance() {
+        let (x, w) = setup(10, 5);
+        for (method, lam) in [(Method::Ee, 2.0), (Method::Ssne, 1.0), (Method::Tsne, 1.0)] {
+            let obj =
+                NativeObjective::with_affinities(method, Attractive::Dense(w.clone()), lam, 2);
+            let mut xs = x.clone();
+            for i in 0..10 {
+                xs.row_mut(i)[0] += 5.0;
+                xs.row_mut(i)[1] -= 2.0;
+            }
+            let e0 = obj.energy(&x);
+            let e1 = obj.energy(&xs);
+            assert!((e0 - e1).abs() < 1e-9 * e0.abs().max(1.0), "{}", method.name());
+        }
+    }
+
+    #[test]
+    fn eval_counter_increments() {
+        let (x, w) = setup(8, 6);
+        let obj = NativeObjective::with_affinities(Method::Ee, Attractive::Dense(w), 1.0, 2);
+        assert_eq!(obj.eval_count(), 0);
+        obj.eval(&x);
+        obj.energy(&x);
+        assert_eq!(obj.eval_count(), 2);
+    }
+}

@@ -1,0 +1,137 @@
+//! XLA-backed objective: the three-layer hot path.
+//!
+//! The energy/gradient evaluation runs the AOT-compiled jax/Pallas
+//! artifact (L1 kernel inside the L2 model, lowered once by `make
+//! artifacts`) through PJRT. The constant weight matrices are uploaded to
+//! device buffers once at construction; per iteration only X (N*d f32)
+//! and lambda cross the host/device boundary.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::{Attractive, Method, Objective};
+use crate::linalg::dense::Mat;
+use crate::runtime::{decode_energy_grad, ArtifactRegistry};
+
+/// Objective evaluated through a PJRT executable.
+///
+/// The PJRT CPU client is internally synchronized but the `xla` crate's
+/// wrappers hold raw pointers, so we serialize executions with a mutex
+/// and assert thread-safety manually (`unsafe impl Send/Sync`).
+pub struct XlaObjective {
+    method: Method,
+    n: usize,
+    dim: usize,
+    lambda: Mutex<f64>,
+    wp: Attractive,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    /// device-resident constant weights (W+ [, W-])
+    const_bufs: Mutex<Vec<xla::PjRtBuffer>>,
+    registry: Arc<ArtifactRegistry>,
+    evals: AtomicUsize,
+}
+
+// Safety: all mutation goes through the mutexes above; the PJRT CPU
+// client tolerates concurrent compile/execute from multiple threads (it
+// is the same client jax uses multi-threaded). Raw pointers inside the
+// xla wrappers are never aliased mutably by this type.
+unsafe impl Send for XlaObjective {}
+unsafe impl Sync for XlaObjective {}
+
+impl XlaObjective {
+    /// Build from a registry. `wp` is P for the normalized methods / W+
+    /// for EE & spectral; EE uses uniform repulsive weights
+    /// `w-_nm = 1 - delta_nm` (matching `NativeObjective`'s default).
+    pub fn new(
+        registry: Arc<ArtifactRegistry>,
+        method: Method,
+        wp: Attractive,
+        lambda: f64,
+        dim: usize,
+    ) -> anyhow::Result<Self> {
+        let n = wp.n();
+        let exe = registry.executable(method, n, dim)?;
+        let wp_dense = wp.to_dense();
+        let mut const_bufs = vec![registry.upload(&wp_dense)?];
+        if method == Method::Ee {
+            // uniform W-: ones off the diagonal
+            let wm = Mat::from_fn(n, n, |i, j| if i == j { 0.0 } else { 1.0 });
+            const_bufs.push(registry.upload(&wm)?);
+        }
+        Ok(XlaObjective {
+            method,
+            n,
+            dim,
+            lambda: Mutex::new(lambda),
+            wp,
+            exe,
+            const_bufs: Mutex::new(const_bufs),
+            registry,
+            evals: AtomicUsize::new(0),
+        })
+    }
+
+    fn run(&self, x: &Mat) -> (f64, Mat) {
+        self.evals.fetch_add(1, Ordering::Relaxed);
+        let xbuf = self.registry.upload(x).expect("upload X");
+        let lam = *self.lambda.lock().unwrap();
+        let consts = self.const_bufs.lock().unwrap();
+        // ABI (see python/compile/model.py MODELS):
+        //   spectral: (X, Wp); ee: (X, Wp, Wm, lam); ssne/tsne: (X, P, lam)
+        let result = match self.method {
+            Method::Spectral => self.exe.execute_b(&[&xbuf, &consts[0]]),
+            Method::Ee => {
+                let lbuf = self.registry.upload_scalar(lam).expect("upload lam");
+                self.exe.execute_b(&[&xbuf, &consts[0], &consts[1], &lbuf])
+            }
+            Method::Ssne | Method::Tsne => {
+                let lbuf = self.registry.upload_scalar(lam).expect("upload lam");
+                self.exe.execute_b(&[&xbuf, &consts[0], &lbuf])
+            }
+        }
+        .expect("pjrt execute");
+        decode_energy_grad(result, self.n, self.dim).expect("decode outputs")
+    }
+}
+
+impl Objective for XlaObjective {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn method(&self) -> Method {
+        self.method
+    }
+
+    fn lambda(&self) -> f64 {
+        *self.lambda.lock().unwrap()
+    }
+
+    fn set_lambda(&mut self, lam: f64) {
+        *self.lambda.lock().unwrap() = lam;
+    }
+
+    fn eval(&self, x: &Mat) -> (f64, Mat) {
+        self.run(x)
+    }
+
+    fn attractive(&self) -> &Attractive {
+        &self.wp
+    }
+
+    fn eval_count(&self) -> usize {
+        self.evals.load(Ordering::Relaxed)
+    }
+
+    fn grad_accuracy(&self) -> f64 {
+        // f32 artifacts: machine eps ~ 1.2e-7. The mu shift this feeds
+        // must stay small enough not to clip the near-null expansion
+        // directions EE needs early on, so no extra slack is added; the
+        // per-component projection in SD handles the exactly-null space.
+        1e-7
+    }
+}

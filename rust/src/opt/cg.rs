@@ -1,0 +1,141 @@
+//! Nonlinear conjugate gradients (Polak–Ribière+ with automatic
+//! restarts) — one of the paper's baselines ("typical choices for large
+//! problems"), paired with the strong-Wolfe line search since CG needs
+//! curvature control and steps beyond 1.
+
+use super::DirectionStrategy;
+use crate::linalg::dense::Mat;
+use crate::linalg::vecops::{dot, nrm2};
+use crate::objective::Objective;
+
+pub struct NonlinearCg {
+    prev_g: Option<Mat>,
+    prev_p: Option<Mat>,
+}
+
+impl NonlinearCg {
+    pub fn new() -> Self {
+        NonlinearCg { prev_g: None, prev_p: None }
+    }
+}
+
+impl Default for NonlinearCg {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DirectionStrategy for NonlinearCg {
+    fn name(&self) -> &'static str {
+        "cg"
+    }
+
+    fn direction(&mut self, _obj: &dyn Objective, _x: &Mat, g: &Mat, k: usize) -> Mat {
+        let nd = g.data.len();
+        let restart_every = nd.max(10);
+        let beta = match (&self.prev_g, &self.prev_p) {
+            (Some(pg), Some(_)) if k % restart_every != 0 => {
+                // PR+: beta = max(0, g.(g - g_prev) / ||g_prev||^2)
+                let mut num = 0.0;
+                for i in 0..nd {
+                    num += g.data[i] * (g.data[i] - pg.data[i]);
+                }
+                let den = nrm2(&pg.data).powi(2).max(1e-300);
+                (num / den).max(0.0)
+            }
+            _ => 0.0,
+        };
+        let mut p = Mat::zeros(g.rows, g.cols);
+        match &self.prev_p {
+            Some(pp) if beta > 0.0 => {
+                for i in 0..nd {
+                    p.data[i] = -g.data[i] + beta * pp.data[i];
+                }
+                // safeguard: restart if not descent
+                if dot(&p.data, &g.data) >= 0.0 {
+                    for i in 0..nd {
+                        p.data[i] = -g.data[i];
+                    }
+                }
+            }
+            _ => {
+                for i in 0..nd {
+                    p.data[i] = -g.data[i];
+                }
+            }
+        }
+        self.prev_g = Some(g.clone());
+        self.prev_p = Some(p.clone());
+        p
+    }
+
+    fn notify_accept(&mut self, _x_new: &Mat, g_new: &Mat, _alpha: f64) {
+        // prev_g must be the gradient where the *direction was built*;
+        // PR+ uses g_{k} - g_{k-1}, so store the accepted gradient.
+        self.prev_g = Some(g_new.clone());
+    }
+
+    fn wants_wolfe(&self) -> bool {
+        true
+    }
+
+    fn natural_step(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::objective::native::NativeObjective;
+    use crate::objective::{Attractive, Method};
+    use crate::opt::{minimize, OptOptions};
+
+    fn setup(n: usize, seed: u64) -> (NativeObjective, Mat) {
+        let mut rng = Rng::new(seed);
+        let mut w = Mat::from_fn(n, n, |_, _| rng.uniform());
+        for i in 0..n {
+            *w.at_mut(i, i) = 0.0;
+            for j in 0..i {
+                let v = w.at(i, j);
+                *w.at_mut(j, i) = v;
+            }
+        }
+        let obj = NativeObjective::with_affinities(Method::Ee, Attractive::Dense(w), 3.0, 2);
+        let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+        (obj, x)
+    }
+
+    #[test]
+    fn beats_gd_at_equal_iterations() {
+        let (obj, x) = setup(16, 5);
+        let opts = OptOptions { max_iters: 40, ..Default::default() };
+        let mut cg = NonlinearCg::new();
+        let rc = minimize(&obj, &mut cg, &x, &opts);
+        let mut gd = crate::opt::gd::GradientDescent::new();
+        let rg = minimize(&obj, &mut gd, &x, &opts);
+        assert!(rc.e <= rg.e * 1.001, "cg {} vs gd {}", rc.e, rg.e);
+    }
+
+    #[test]
+    fn first_direction_is_steepest_descent() {
+        let (obj, x) = setup(10, 6);
+        let (_, g) = obj.eval(&x);
+        let mut cg = NonlinearCg::new();
+        let p = cg.direction(&obj, &x, &g, 0);
+        for i in 0..p.data.len() {
+            assert_eq!(p.data[i], -g.data[i]);
+        }
+    }
+
+    #[test]
+    fn monotone_decrease() {
+        let (obj, x) = setup(14, 7);
+        let mut cg = NonlinearCg::new();
+        let res = minimize(&obj, &mut cg, &x, &OptOptions { max_iters: 30, ..Default::default() });
+        for w in res.trace.windows(2) {
+            assert!(w[1].e <= w[0].e + 1e-10);
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Gradient descent (`B_k = I`) — the baseline used by the original SNE
+//! and t-SNE papers, "very slow with ill-conditioned problems"
+//! (paper sections 1 and 3: over an order of magnitude slower than FP).
+
+use super::DirectionStrategy;
+use crate::linalg::dense::Mat;
+use crate::objective::Objective;
+
+pub struct GradientDescent;
+
+impl GradientDescent {
+    pub fn new() -> Self {
+        GradientDescent
+    }
+}
+
+impl Default for GradientDescent {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DirectionStrategy for GradientDescent {
+    fn name(&self) -> &'static str {
+        "gd"
+    }
+
+    fn direction(&mut self, _obj: &dyn Objective, _x: &Mat, g: &Mat, _k: usize) -> Mat {
+        Mat::from_vec(g.rows, g.cols, g.data.iter().map(|v| -v).collect())
+    }
+
+    fn natural_step(&self) -> bool {
+        false // alpha = 1 along -g is meaningless; scale-aware start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::objective::native::NativeObjective;
+    use crate::objective::{Attractive, Method};
+    use crate::opt::{minimize, OptOptions, StopReason};
+
+    #[test]
+    fn descends_on_spectral_problem() {
+        let n = 12;
+        let mut rng = Rng::new(4);
+        let mut w = Mat::from_fn(n, n, |_, _| rng.uniform());
+        for i in 0..n {
+            *w.at_mut(i, i) = 0.0;
+            for j in 0..i {
+                let v = w.at(i, j);
+                *w.at_mut(j, i) = v;
+            }
+        }
+        let obj = NativeObjective::with_affinities(Method::Ee, Attractive::Dense(w), 2.0, 2);
+        let x0 = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let mut s = GradientDescent::new();
+        let res = minimize(&obj, &mut s, &x0, &OptOptions { max_iters: 50, ..Default::default() });
+        assert!(res.e < res.trace[0].e, "no decrease");
+        assert_ne!(res.stop, StopReason::LineSearchFailed);
+        // energies decrease monotonically under Armijo
+        for w in res.trace.windows(2) {
+            assert!(w[1].e <= w[0].e + 1e-12);
+        }
+    }
+}

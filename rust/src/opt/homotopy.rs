@@ -1,0 +1,199 @@
+//! Homotopy optimization over lambda (paper fig. 3; Carreira-Perpiñán
+//! 2010): start near lambda = 0 where E is convex (spectral), follow the
+//! path of minima X(lambda) while lambda increases on a log-spaced grid,
+//! minimizing to a relative tolerance at each stage.
+//!
+//! The spectral direction's factor does not depend on lambda, so SD
+//! prepares **once** for the whole path — a structural advantage the
+//! fig. 3 totals expose.
+
+use std::time::Duration;
+
+use super::{minimize, DirectionStrategy, OptOptions, OptResult, StopReason};
+use crate::linalg::dense::Mat;
+use crate::objective::Objective;
+
+/// Per-lambda stage record (the two central plots of fig. 3).
+#[derive(Clone, Debug)]
+pub struct HomotopyStage {
+    pub lambda: f64,
+    pub iters: usize,
+    pub time_s: f64,
+    pub e: f64,
+    pub nfev: usize,
+    pub stop: StopReason,
+}
+
+pub struct HomotopyResult {
+    pub x: Mat,
+    pub stages: Vec<HomotopyStage>,
+}
+
+impl HomotopyResult {
+    pub fn total_time(&self) -> f64 {
+        self.stages.iter().map(|s| s.time_s).sum()
+    }
+    pub fn total_iters(&self) -> usize {
+        self.stages.iter().map(|s| s.iters).sum()
+    }
+    pub fn total_nfev(&self) -> usize {
+        self.stages.iter().map(|s| s.nfev).sum()
+    }
+}
+
+/// Log-spaced lambda schedule (paper: 50 values from 1e-4 to 1e2).
+pub fn log_lambda_schedule(lo: f64, hi: f64, steps: usize) -> Vec<f64> {
+    assert!(lo > 0.0 && hi > lo && steps >= 2);
+    let (llo, lhi) = (lo.ln(), hi.ln());
+    (0..steps)
+        .map(|i| (llo + (lhi - llo) * i as f64 / (steps - 1) as f64).exp())
+        .collect()
+}
+
+/// Run the homotopy: minimize at each lambda, warm-starting from the
+/// previous stage's minimizer. `per_stage` controls the inner loops
+/// (paper: rel_tol 1e-6, max 1e4 iterations).
+pub fn homotopy<O: Objective>(
+    obj: &mut O,
+    strategy: &mut dyn DirectionStrategy,
+    x0: &Mat,
+    lambdas: &[f64],
+    per_stage: &OptOptions,
+    total_budget: Option<Duration>,
+) -> HomotopyResult {
+    let start = std::time::Instant::now();
+    let mut x = x0.clone();
+    let mut stages = Vec::with_capacity(lambdas.len());
+    // SD's factor is lambda-independent: prepare once up front
+    obj.set_lambda(lambdas[0]);
+    strategy.prepare(obj, &x).expect("strategy preparation failed");
+
+    for &lam in lambdas {
+        obj.set_lambda(lam);
+        let mut opts = per_stage.clone();
+        if let Some(budget) = total_budget {
+            let left = budget.saturating_sub(start.elapsed());
+            if left.is_zero() {
+                break;
+            }
+            opts.time_budget = Some(match opts.time_budget {
+                Some(t) => t.min(left),
+                None => left,
+            });
+        }
+        let res: OptResult = minimize_without_prepare(obj, strategy, &x, &opts);
+        stages.push(HomotopyStage {
+            lambda: lam,
+            iters: res.iters(),
+            time_s: res.trace.last().map(|t| t.time_s).unwrap_or(0.0),
+            e: res.e,
+            nfev: res.trace.last().map(|t| t.nfev).unwrap_or(0),
+            stop: res.stop,
+        });
+        x = res.x;
+    }
+    HomotopyResult { x, stages }
+}
+
+/// `minimize` but skipping `strategy.prepare` (already done for the whole
+/// path). Implemented by wrapping the strategy in a prepare-suppressing
+/// adapter.
+fn minimize_without_prepare(
+    obj: &dyn Objective,
+    strategy: &mut dyn DirectionStrategy,
+    x0: &Mat,
+    opts: &OptOptions,
+) -> OptResult {
+    struct NoPrep<'a>(&'a mut dyn DirectionStrategy);
+    impl<'a> DirectionStrategy for NoPrep<'a> {
+        fn name(&self) -> &'static str {
+            self.0.name()
+        }
+        fn prepare(&mut self, _obj: &dyn Objective, _x0: &Mat) -> anyhow::Result<()> {
+            Ok(()) // suppressed
+        }
+        fn direction(&mut self, obj: &dyn Objective, x: &Mat, g: &Mat, k: usize) -> Mat {
+            self.0.direction(obj, x, g, k)
+        }
+        fn notify_accept(&mut self, x_new: &Mat, g_new: &Mat, alpha: f64) {
+            self.0.notify_accept(x_new, g_new, alpha)
+        }
+        fn natural_step(&self) -> bool {
+            self.0.natural_step()
+        }
+        fn wants_wolfe(&self) -> bool {
+            self.0.wants_wolfe()
+        }
+    }
+    let mut np = NoPrep(strategy);
+    minimize(obj, &mut np, x0, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::objective::native::NativeObjective;
+    use crate::objective::{Attractive, Method};
+
+    #[test]
+    fn schedule_is_log_spaced() {
+        let s = log_lambda_schedule(1e-4, 1e2, 50);
+        assert_eq!(s.len(), 50);
+        assert!((s[0] - 1e-4).abs() < 1e-12);
+        assert!((s[49] - 1e2).abs() < 1e-10);
+        // constant ratio
+        let r0 = s[1] / s[0];
+        for w in s.windows(2) {
+            assert!((w[1] / w[0] - r0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn homotopy_tracks_the_path() {
+        let n = 20;
+        let mut rng = Rng::new(9);
+        let y = Mat::from_fn(n, 4, |_, _| rng.normal());
+        let p = crate::affinity::sne_affinities(&y, 5.0);
+        let mut obj =
+            NativeObjective::with_affinities(Method::Ee, Attractive::Dense(p), 1.0, 2);
+        let x0 = Mat::from_fn(n, 2, |_, _| 1e-3 * rng.normal());
+        let lambdas = log_lambda_schedule(1e-3, 10.0, 8);
+        let mut sd = crate::opt::sd::SpectralDirection::new(None);
+        let opts = OptOptions { max_iters: 200, rel_tol: 1e-7, ..Default::default() };
+        let res = homotopy(&mut obj, &mut sd, &x0, &lambdas, &opts, None);
+        assert_eq!(res.stages.len(), 8);
+        // embedding grows in scale as lambda increases (repulsion kicks in)
+        let scale: f64 = res.x.data.iter().map(|v| v * v).sum::<f64>();
+        let scale0: f64 = x0.data.iter().map(|v| v * v).sum::<f64>();
+        assert!(scale > scale0);
+        // every stage did some work and recorded stats
+        for st in &res.stages {
+            assert!(st.e.is_finite());
+        }
+        assert!(res.total_iters() > 0);
+    }
+
+    #[test]
+    fn budget_truncates() {
+        let n = 16;
+        let mut rng = Rng::new(10);
+        let y = Mat::from_fn(n, 4, |_, _| rng.normal());
+        let p = crate::affinity::sne_affinities(&y, 4.0);
+        let mut obj =
+            NativeObjective::with_affinities(Method::Ee, Attractive::Dense(p), 1.0, 2);
+        let x0 = Mat::from_fn(n, 2, |_, _| 1e-3 * rng.normal());
+        let lambdas = log_lambda_schedule(1e-4, 100.0, 50);
+        let mut sd = crate::opt::sd::SpectralDirection::new(None);
+        let opts = OptOptions { max_iters: 10_000, rel_tol: 1e-9, ..Default::default() };
+        let res = homotopy(
+            &mut obj,
+            &mut sd,
+            &x0,
+            &lambdas,
+            &opts,
+            Some(Duration::from_millis(200)),
+        );
+        assert!(res.stages.len() <= 50);
+    }
+}

@@ -1,0 +1,153 @@
+//! Limited-memory BFGS (two-loop recursion, Nocedal & Wright alg. 7.4).
+//!
+//! The strongest generic baseline in the paper's comparison; m = 100 was
+//! the best value the authors found. Its weakness — "with large Nd it
+//! requires an initial period of many iterations before its Hessian
+//! approximation is good" (section 3.1) — is exactly what fig. 4 shows
+//! against the spectral direction.
+
+use std::collections::VecDeque;
+
+use super::DirectionStrategy;
+use crate::linalg::dense::Mat;
+use crate::linalg::vecops::{axpy, dot};
+use crate::objective::Objective;
+
+pub struct Lbfgs {
+    m: usize,
+    /// (s, y, 1/(y.s)) pairs, most recent last
+    pairs: VecDeque<(Vec<f64>, Vec<f64>, f64)>,
+    prev: Option<(Vec<f64>, Vec<f64>)>, // (x, g) where last direction was built
+}
+
+impl Lbfgs {
+    pub fn new(m: usize) -> Self {
+        Lbfgs { m, pairs: VecDeque::new(), prev: None }
+    }
+
+    pub fn memory(&self) -> usize {
+        self.m
+    }
+}
+
+impl DirectionStrategy for Lbfgs {
+    fn name(&self) -> &'static str {
+        "lbfgs"
+    }
+
+    fn prepare(&mut self, _obj: &dyn Objective, _x0: &Mat) -> anyhow::Result<()> {
+        self.pairs.clear();
+        self.prev = None;
+        Ok(())
+    }
+
+    fn direction(&mut self, _obj: &dyn Objective, x: &Mat, g: &Mat, _k: usize) -> Mat {
+        let nd = g.data.len();
+        let mut q = g.data.clone();
+        let mut alphas = Vec::with_capacity(self.pairs.len());
+        for (s, y, rho) in self.pairs.iter().rev() {
+            let a = rho * dot(s, &q);
+            axpy(-a, y, &mut q);
+            alphas.push(a);
+        }
+        // H0 = gamma I with gamma = s.y / y.y of the most recent pair
+        if let Some((s, y, _)) = self.pairs.back() {
+            let gamma = dot(s, y) / dot(y, y).max(1e-300);
+            for v in q.iter_mut() {
+                *v *= gamma;
+            }
+        }
+        for ((s, y, rho), a) in self.pairs.iter().zip(alphas.into_iter().rev()) {
+            let b = rho * dot(y, &q);
+            axpy(a - b, s, &mut q);
+        }
+        let mut p = Mat::from_vec(g.rows, g.cols, q);
+        for v in p.data.iter_mut() {
+            *v = -*v;
+        }
+        // remember the point/gradient this direction was built at
+        self.prev = Some((x.data.clone(), g.data.clone()));
+        let _ = nd;
+        p
+    }
+
+    fn notify_accept(&mut self, x_new: &Mat, g_new: &Mat, _alpha: f64) {
+        if let Some((px, pg)) = self.prev.take() {
+            let s: Vec<f64> = x_new.data.iter().zip(&px).map(|(a, b)| a - b).collect();
+            let y: Vec<f64> = g_new.data.iter().zip(&pg).map(|(a, b)| a - b).collect();
+            let ys = dot(&y, &s);
+            // curvature guard: skip pairs that would break pd-ness
+            if ys > 1e-10 * dot(&s, &s).sqrt() * dot(&y, &y).sqrt() {
+                if self.pairs.len() == self.m {
+                    self.pairs.pop_front();
+                }
+                self.pairs.push_back((s, y, 1.0 / ys));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::objective::native::NativeObjective;
+    use crate::objective::{Attractive, Method};
+    use crate::opt::{minimize, OptOptions};
+
+    fn setup(n: usize, seed: u64) -> (NativeObjective, Mat) {
+        let mut rng = Rng::new(seed);
+        let mut w = Mat::from_fn(n, n, |_, _| rng.uniform());
+        for i in 0..n {
+            *w.at_mut(i, i) = 0.0;
+            for j in 0..i {
+                let v = w.at(i, j);
+                *w.at_mut(j, i) = v;
+            }
+        }
+        let obj = NativeObjective::with_affinities(Method::Ee, Attractive::Dense(w), 3.0, 2);
+        let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+        (obj, x)
+    }
+
+    #[test]
+    fn first_direction_is_steepest_descent() {
+        let (obj, x) = setup(10, 1);
+        let (_, g) = obj.eval(&x);
+        let mut s = Lbfgs::new(10);
+        let p = s.direction(&obj, &x, &g, 0);
+        for i in 0..p.data.len() {
+            assert_eq!(p.data[i], -g.data[i]);
+        }
+    }
+
+    #[test]
+    fn beats_gd_substantially() {
+        let (obj, x) = setup(18, 2);
+        let opts = OptOptions { max_iters: 60, ..Default::default() };
+        let mut lb = Lbfgs::new(20);
+        let rl = minimize(&obj, &mut lb, &x, &opts);
+        let mut gd = crate::opt::gd::GradientDescent::new();
+        let rg = minimize(&obj, &mut gd, &x, &opts);
+        assert!(rl.e < rg.e, "lbfgs {} vs gd {}", rl.e, rg.e);
+    }
+
+    #[test]
+    fn memory_is_bounded() {
+        let (obj, x) = setup(12, 3);
+        let mut s = Lbfgs::new(3);
+        let _ = minimize(&obj, &mut s, &x, &OptOptions { max_iters: 20, ..Default::default() });
+        assert!(s.pairs.len() <= 3);
+    }
+
+    #[test]
+    fn curvature_guard_skips_bad_pairs() {
+        let mut s = Lbfgs::new(5);
+        // fabricate an accept where y.s = 0 (no curvature information)
+        s.prev = Some((vec![0.0, 0.0], vec![1.0, 0.0]));
+        let x_new = Mat::from_vec(1, 2, vec![0.0, 1.0]);
+        let g_new = Mat::from_vec(1, 2, vec![1.0, 0.0]);
+        s.notify_accept(&x_new, &g_new, 1.0);
+        assert!(s.pairs.is_empty());
+    }
+}

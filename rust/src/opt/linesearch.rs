@@ -1,0 +1,232 @@
+//! Line searches (Nocedal & Wright ch. 3).
+//!
+//! * [`backtracking`] — the paper's main choice: first Wolfe condition
+//!   (sufficient decrease) with halving, plus the *adaptive initial step*
+//!   described in section 3: "the initial backtracking step at iteration
+//!   k equals the accepted step from the previous iteration".
+//! * [`strong_wolfe`] — bracket + zoom, used by nonlinear CG, which needs
+//!   curvature control and steps > 1.
+
+use crate::linalg::dense::Mat;
+use crate::linalg::vecops;
+use crate::objective::Objective;
+
+/// Result of a line search.
+#[derive(Clone, Debug)]
+pub struct LineSearchResult {
+    pub alpha: f64,
+    pub e_new: f64,
+    /// number of objective evaluations spent
+    pub nfev: usize,
+    pub success: bool,
+}
+
+/// Armijo backtracking: find `alpha` with
+/// `E(x + alpha p) <= E(x) + c1 alpha g.p`, halving from `alpha0`.
+pub fn backtracking(
+    obj: &dyn Objective,
+    x: &Mat,
+    p: &Mat,
+    e0: f64,
+    gtp: f64,
+    alpha0: f64,
+    c1: f64,
+    max_evals: usize,
+) -> LineSearchResult {
+    debug_assert!(gtp < 0.0, "backtracking needs a descent direction");
+    let mut alpha = alpha0;
+    let mut trial = Mat::zeros(x.rows, x.cols);
+    let mut nfev = 0;
+    while nfev < max_evals {
+        vecops::step(&x.data, alpha, &p.data, &mut trial.data);
+        let e = obj.energy(&trial);
+        nfev += 1;
+        if e <= e0 + c1 * alpha * gtp && e.is_finite() {
+            return LineSearchResult { alpha, e_new: e, nfev, success: true };
+        }
+        alpha *= 0.5;
+    }
+    LineSearchResult { alpha: 0.0, e_new: e0, nfev, success: false }
+}
+
+/// Strong-Wolfe line search (bracketing + zoom; Algorithm 3.5/3.6 of
+/// Nocedal & Wright). Evaluates energy *and* gradient at trial points.
+/// Returns the new point's (alpha, E, G) so the caller reuses the final
+/// gradient.
+pub struct WolfeResult {
+    pub alpha: f64,
+    pub e_new: f64,
+    pub g_new: Option<Mat>,
+    pub nfev: usize,
+    pub success: bool,
+}
+
+pub fn strong_wolfe(
+    obj: &dyn Objective,
+    x: &Mat,
+    p: &Mat,
+    e0: f64,
+    gtp0: f64,
+    alpha0: f64,
+    c1: f64,
+    c2: f64,
+    max_evals: usize,
+) -> WolfeResult {
+    debug_assert!(gtp0 < 0.0);
+    let phi = |alpha: f64, trial: &mut Mat| -> (f64, f64, Mat) {
+        vecops::step(&x.data, alpha, &p.data, &mut trial.data);
+        let (e, g) = obj.eval(trial);
+        let dphi = vecops::dot(&g.data, &p.data);
+        (e, dphi, g)
+    };
+    let mut trial = Mat::zeros(x.rows, x.cols);
+    let mut nfev = 0;
+
+    let mut alpha_prev = 0.0;
+    let mut e_prev = e0;
+    let mut alpha = alpha0;
+    let alpha_max = 64.0 * alpha0.max(1.0);
+    let mut result: Option<(f64, f64, Mat)> = None;
+    let mut bracket: Option<(f64, f64, f64, f64)> = None; // (lo, e_lo, hi, dphi_lo)
+
+    for i in 0..max_evals {
+        let (e, dphi, g) = phi(alpha, &mut trial);
+        nfev += 1;
+        if e > e0 + c1 * alpha * gtp0 || (i > 0 && e >= e_prev) {
+            bracket = Some((alpha_prev, e_prev, alpha, f64::NAN));
+            break;
+        }
+        if dphi.abs() <= -c2 * gtp0 {
+            result = Some((alpha, e, g));
+            break;
+        }
+        if dphi >= 0.0 {
+            bracket = Some((alpha, e, alpha_prev, dphi));
+            break;
+        }
+        alpha_prev = alpha;
+        e_prev = e;
+        alpha = (2.0 * alpha).min(alpha_max);
+        if alpha >= alpha_max {
+            result = Some((alpha, e, g));
+            break;
+        }
+    }
+
+    if result.is_none() {
+        if let Some((mut lo, mut e_lo, mut hi, _)) = bracket {
+            // zoom
+            for _ in 0..max_evals {
+                if nfev >= max_evals {
+                    break;
+                }
+                let mid = 0.5 * (lo + hi);
+                let (e, dphi, g) = phi(mid, &mut trial);
+                nfev += 1;
+                if e > e0 + c1 * mid * gtp0 || e >= e_lo {
+                    hi = mid;
+                } else {
+                    if dphi.abs() <= -c2 * gtp0 {
+                        result = Some((mid, e, g));
+                        break;
+                    }
+                    if dphi * (hi - lo) >= 0.0 {
+                        hi = lo;
+                    }
+                    lo = mid;
+                    e_lo = e;
+                }
+                if (hi - lo).abs() < 1e-14 {
+                    break;
+                }
+            }
+            // fall back to lo if zoom exhausted but we made progress
+            if result.is_none() && e_lo < e0 && lo > 0.0 {
+                let (e, _, g) = phi(lo, &mut trial);
+                nfev += 1;
+                result = Some((lo, e, g));
+            }
+        }
+    }
+
+    match result {
+        Some((alpha, e, g)) => WolfeResult { alpha, e_new: e, g_new: Some(g), nfev, success: true },
+        None => WolfeResult { alpha: 0.0, e_new: e0, g_new: None, nfev, success: false },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::{Attractive, Method};
+    use crate::objective::native::NativeObjective;
+    use crate::data::Rng;
+
+    fn quadratic_setup() -> (NativeObjective, Mat) {
+        let n = 10;
+        let mut rng = Rng::new(1);
+        let mut w = Mat::from_fn(n, n, |_, _| rng.uniform());
+        for i in 0..n {
+            *w.at_mut(i, i) = 0.0;
+            for j in 0..i {
+                let v = w.at(i, j);
+                *w.at_mut(j, i) = v;
+            }
+        }
+        let obj =
+            NativeObjective::with_affinities(Method::Spectral, Attractive::Dense(w), 0.0, 2);
+        let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+        (obj, x)
+    }
+
+    #[test]
+    fn backtracking_satisfies_armijo() {
+        let (obj, x) = quadratic_setup();
+        let (e0, g) = obj.eval(&x);
+        let p = Mat::from_vec(x.rows, x.cols, g.data.iter().map(|v| -v).collect());
+        let gtp = vecops::dot(&g.data, &p.data);
+        let res = backtracking(&obj, &x, &p, e0, gtp, 1.0, 1e-4, 50);
+        assert!(res.success);
+        assert!(res.e_new <= e0 + 1e-4 * res.alpha * gtp + 1e-12);
+        assert!(res.alpha > 0.0);
+    }
+
+    #[test]
+    fn backtracking_fails_on_ascent_budget() {
+        let (obj, x) = quadratic_setup();
+        let (e0, g) = obj.eval(&x);
+        // ascent direction: +g; with gtp forced negative the search
+        // cannot find decrease and must exhaust its budget
+        let res = backtracking(&obj, &x, &g, e0, -1.0, 1.0, 1e-4, 8);
+        assert!(!res.success);
+        assert_eq!(res.nfev, 8);
+    }
+
+    #[test]
+    fn strong_wolfe_satisfies_both_conditions() {
+        let (obj, x) = quadratic_setup();
+        let (e0, g) = obj.eval(&x);
+        let p = Mat::from_vec(x.rows, x.cols, g.data.iter().map(|v| -v).collect());
+        let gtp = vecops::dot(&g.data, &p.data);
+        let res = strong_wolfe(&obj, &x, &p, e0, gtp, 1.0, 1e-4, 0.4, 40);
+        assert!(res.success);
+        // armijo
+        assert!(res.e_new <= e0 + 1e-4 * res.alpha * gtp + 1e-10);
+        // curvature
+        let gn = res.g_new.unwrap();
+        let dphi = vecops::dot(&gn.data, &p.data);
+        assert!(dphi.abs() <= 0.4 * gtp.abs() + 1e-10, "dphi {dphi} gtp {gtp}");
+    }
+
+    #[test]
+    fn wolfe_can_extend_beyond_one() {
+        let (obj, x) = quadratic_setup();
+        let (e0, g) = obj.eval(&x);
+        // tiny direction: -0.001 g; the minimizer along it is far past 1
+        let p = Mat::from_vec(x.rows, x.cols, g.data.iter().map(|v| -0.001 * v).collect());
+        let gtp = vecops::dot(&g.data, &p.data);
+        let res = strong_wolfe(&obj, &x, &p, e0, gtp, 1.0, 1e-4, 0.4, 60);
+        assert!(res.success);
+        assert!(res.alpha > 1.0, "alpha {}", res.alpha);
+    }
+}

@@ -1,0 +1,334 @@
+//! Partial-Hessian optimization strategies — the paper's contribution.
+//!
+//! Directions solve `B_k p_k = -g_k` with `B_k` a pd partial Hessian
+//! (section 2); a line search on the Wolfe sufficient-decrease condition
+//! produces the next iterate, and theorem 2.1 guarantees global
+//! convergence as long as `B_k` stays pd with bounded condition number.
+//!
+//! | strategy | B_k | module |
+//! |----------|-----|--------|
+//! | GD       | I                                   | [`gd`] |
+//! | FP       | 4 D+ (x) I (diagonal fixed point)   | [`fp`] |
+//! | DiagH    | diag(full Hessian), psd-clipped     | [`diagh`] |
+//! | CG       | nonlinear conjugate gradients (PR+) | [`cg`] |
+//! | L-BFGS   | rank-2m inverse-Hessian estimate    | [`lbfgs`] |
+//! | SD       | 4 L+ (x) I + mu I, cached Cholesky  | [`sd`] |
+//! | SD-      | 4 L+ + 8 lam Lxx_(i=j), inexact CG  | [`sdm`] |
+
+pub mod cg;
+pub mod diagh;
+pub mod fp;
+pub mod gd;
+pub mod homotopy;
+pub mod lbfgs;
+pub mod linesearch;
+pub mod sd;
+pub mod sdm;
+
+use std::time::{Duration, Instant};
+
+use crate::linalg::dense::Mat;
+use crate::linalg::vecops;
+use crate::objective::Objective;
+
+/// Per-iteration record (the learning curves of figs. 1 and 4).
+#[derive(Clone, Debug)]
+pub struct IterStats {
+    pub iter: usize,
+    /// cumulative wall time since optimization start (seconds)
+    pub time_s: f64,
+    pub e: f64,
+    pub grad_inf: f64,
+    pub alpha: f64,
+    /// cumulative objective evaluations (fig. 3 reports these)
+    pub nfev: usize,
+}
+
+/// Why the optimizer stopped.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    GradTol,
+    RelTol,
+    MaxIters,
+    TimeBudget,
+    LineSearchFailed,
+}
+
+/// Optimization outcome: final iterate + full trace.
+pub struct OptResult {
+    pub x: Mat,
+    pub e: f64,
+    pub trace: Vec<IterStats>,
+    pub stop: StopReason,
+}
+
+impl OptResult {
+    pub fn iters(&self) -> usize {
+        self.trace.len().saturating_sub(1)
+    }
+}
+
+/// Loop controls. Defaults mirror the paper's experiments.
+#[derive(Clone, Debug)]
+pub struct OptOptions {
+    pub max_iters: usize,
+    pub time_budget: Option<Duration>,
+    /// stop when |E_k - E_{k-1}| / |E_{k-1}| < rel_tol (paper fig. 3: 1e-6)
+    pub rel_tol: f64,
+    /// stop when ||g||_inf < grad_tol
+    pub grad_tol: f64,
+    /// Armijo constant
+    pub c1: f64,
+    /// adaptive initial step (paper section 3); when false, always try 1
+    pub adaptive_step: bool,
+    /// max energy evaluations per line search
+    pub ls_max_evals: usize,
+    /// consecutive sub-rel_tol iterations required before stopping
+    /// (guards against spurious stops when the backend's energy
+    /// resolution (f32 XLA) quantizes small decreases to zero)
+    pub rel_tol_patience: usize,
+}
+
+impl Default for OptOptions {
+    fn default() -> Self {
+        OptOptions {
+            max_iters: 10_000,
+            time_budget: None,
+            rel_tol: 1e-8,
+            grad_tol: 1e-7,
+            c1: 1e-4,
+            adaptive_step: true,
+            ls_max_evals: 50,
+            rel_tol_patience: 3,
+        }
+    }
+}
+
+/// A search-direction strategy (one row of the paper's comparison).
+pub trait DirectionStrategy: Send {
+    fn name(&self) -> &'static str;
+
+    /// One-time setup at `x0` (e.g. SD caches its Cholesky factor here —
+    /// the setup cost reported separately in fig. 4).
+    fn prepare(&mut self, _obj: &dyn Objective, _x0: &Mat) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// Compute `p_k` from the gradient `g` at `x` (iteration `k`).
+    fn direction(&mut self, obj: &dyn Objective, x: &Mat, g: &Mat, k: usize) -> Mat;
+
+    /// Called after a step is accepted with the *new* iterate and its
+    /// gradient (L-BFGS and CG maintain state here).
+    fn notify_accept(&mut self, _x_new: &Mat, _g_new: &Mat, _alpha: f64) {}
+
+    /// Strategies whose natural step is 1 (quasi-Newton-like). Others
+    /// (GD) start the very first backtracking from a gradient-scaled
+    /// guess.
+    fn natural_step(&self) -> bool {
+        true
+    }
+
+    /// Use the strong-Wolfe search (CG wants curvature control + steps
+    /// beyond 1); everything else uses plain backtracking.
+    fn wants_wolfe(&self) -> bool {
+        false
+    }
+}
+
+/// Run the optimizer loop: directions from `strategy`, steps from the
+/// line search, stats per iteration.
+pub fn minimize(
+    obj: &dyn Objective,
+    strategy: &mut dyn DirectionStrategy,
+    x0: &Mat,
+    opts: &OptOptions,
+) -> OptResult {
+    let start = Instant::now();
+    let mut x = x0.clone();
+    strategy.prepare(obj, &x).expect("strategy preparation failed");
+    let (mut e, mut g) = obj.eval(&x);
+    let mut nfev = 1usize;
+    let mut trace = vec![IterStats {
+        iter: 0,
+        time_s: start.elapsed().as_secs_f64(),
+        e,
+        grad_inf: vecops::nrm_inf(&g.data),
+        alpha: 0.0,
+        nfev,
+    }];
+    let mut prev_alpha = 1.0f64;
+    let mut stop = StopReason::MaxIters;
+    let mut flat_iters = 0usize;
+
+    for k in 0..opts.max_iters {
+        if vecops::nrm_inf(&g.data) < opts.grad_tol {
+            stop = StopReason::GradTol;
+            break;
+        }
+        if let Some(budget) = opts.time_budget {
+            if start.elapsed() >= budget {
+                stop = StopReason::TimeBudget;
+                break;
+            }
+        }
+
+        let mut p = strategy.direction(obj, &x, &g, k);
+        let mut gtp = vecops::dot(&g.data, &p.data);
+        let gn = vecops::nrm2(&g.data);
+        let pn = vecops::nrm2(&p.data);
+        if !(gtp < -1e-12 * gn * pn) {
+            // not a descent direction (numerical trouble): steepest descent
+            p = Mat::from_vec(g.rows, g.cols, g.data.iter().map(|v| -v).collect());
+            gtp = -gn * gn;
+        }
+
+        // initial step: the paper's adaptive scheme (start backtracking
+        // from the previously accepted alpha). We deviate in one respect:
+        // the paper's strictly conservative variant ("once the step
+        // decreases it cannot increase again") can stall permanently at a
+        // tiny alpha after one hard iteration; letting the trial step
+        // grow back (x2 per iteration, capped at the natural step) costs
+        // at most one extra backtrack and restores the step sizes the
+        // paper reports (~0.1-1 for SD).
+        let alpha0 = if k == 0 {
+            if strategy.natural_step() {
+                1.0
+            } else {
+                // scale so the first GD trial moves O(1) distance
+                (1.0 / vecops::nrm_inf(&p.data).max(1e-12)).min(1.0)
+            }
+        } else if opts.adaptive_step {
+            let cap = if strategy.natural_step() { 1.0 } else { f64::INFINITY };
+            (2.0 * prev_alpha).min(cap)
+        } else {
+            1.0
+        };
+
+        let (alpha, e_new, g_new, used) = if strategy.wants_wolfe() {
+            let r = linesearch::strong_wolfe(obj, &x, &p, e, gtp, alpha0, opts.c1, 0.4, opts.ls_max_evals);
+            if !r.success {
+                stop = StopReason::LineSearchFailed;
+                break;
+            }
+            (r.alpha, r.e_new, r.g_new, r.nfev)
+        } else {
+            let r = linesearch::backtracking(obj, &x, &p, e, gtp, alpha0, opts.c1, opts.ls_max_evals);
+            if !r.success {
+                stop = StopReason::LineSearchFailed;
+                break;
+            }
+            (r.alpha, r.e_new, None, r.nfev)
+        };
+        nfev += used;
+
+        // accept
+        let mut x_new = Mat::zeros(x.rows, x.cols);
+        vecops::step(&x.data, alpha, &p.data, &mut x_new.data);
+        let g_new = match g_new {
+            Some(g) => g,
+            None => {
+                nfev += 1;
+                obj.eval(&x_new).1
+            }
+        };
+        strategy.notify_accept(&x_new, &g_new, alpha);
+
+        let rel = (e - e_new).abs() / e.abs().max(1e-300);
+        x = x_new;
+        g = g_new;
+        let e_prev = e;
+        e = e_new;
+        prev_alpha = alpha;
+
+        trace.push(IterStats {
+            iter: k + 1,
+            time_s: start.elapsed().as_secs_f64(),
+            e,
+            grad_inf: vecops::nrm_inf(&g.data),
+            alpha,
+            nfev,
+        });
+
+        if rel < opts.rel_tol && e_prev.is_finite() {
+            flat_iters += 1;
+            if flat_iters >= opts.rel_tol_patience {
+                stop = StopReason::RelTol;
+                break;
+            }
+        } else {
+            flat_iters = 0;
+        }
+    }
+
+    OptResult { x, e, trace, stop }
+}
+
+/// Remove per-dimension (column) means in place. The embedding energies
+/// are shift invariant, so the true gradient has exactly zero column
+/// mean and the Laplacian systems have the constant vector in their
+/// null space; projecting numerical noise out of that direction keeps
+/// the near-singular solves (SD, SD-) well behaved — essential for the
+/// f32 XLA backend, whose gradient noise would otherwise be amplified
+/// by 1/mu into a huge constant offset.
+pub fn center_columns(m: &mut Mat) {
+    let (n, d) = (m.rows, m.cols);
+    for j in 0..d {
+        let mut mean = 0.0;
+        for i in 0..n {
+            mean += m.at(i, j);
+        }
+        mean /= n as f64;
+        for i in 0..n {
+            *m.at_mut(i, j) -= mean;
+        }
+    }
+}
+
+/// Like [`center_columns`] but per connected component of the attractive
+/// graph: the Laplacian's null space is spanned by component indicators,
+/// so each component's mean must be projected out independently (a
+/// disconnected kNN graph otherwise lets the mu-shifted solve blow up
+/// along 1/mu per component).
+pub fn center_columns_by_component(m: &mut Mat, comp: &[usize]) {
+    let (n, d) = (m.rows, m.cols);
+    assert_eq!(comp.len(), n);
+    let ncomp = comp.iter().copied().max().map_or(0, |c| c + 1);
+    let mut count = vec![0usize; ncomp];
+    for &c in comp {
+        count[c] += 1;
+    }
+    for j in 0..d {
+        let mut mean = vec![0.0; ncomp];
+        for i in 0..n {
+            mean[comp[i]] += m.at(i, j);
+        }
+        for c in 0..ncomp {
+            mean[c] /= count[c].max(1) as f64;
+        }
+        for i in 0..n {
+            // singleton components (isolated vertices, e.g. kappa = 0)
+            // have no shift-invariant subspace within the graph term;
+            // zeroing them would annihilate the direction entirely
+            if count[comp[i]] > 1 {
+                *m.at_mut(i, j) -= mean[comp[i]];
+            }
+        }
+    }
+}
+
+/// Construct a strategy by name (CLI / harness helper).
+pub fn strategy_by_name(name: &str, kappa: Option<usize>) -> Option<Box<dyn DirectionStrategy>> {
+    match name {
+        "gd" => Some(Box::new(gd::GradientDescent::new())),
+        "fp" => Some(Box::new(fp::FixedPoint::new())),
+        "diagh" => Some(Box::new(diagh::DiagHessian::new())),
+        "cg" => Some(Box::new(cg::NonlinearCg::new())),
+        "lbfgs" => Some(Box::new(lbfgs::Lbfgs::new(100))),
+        "sd" => Some(Box::new(sd::SpectralDirection::new(kappa))),
+        "sdm" | "sd-" => Some(Box::new(sdm::SdMinus::new(kappa))),
+        _ => None,
+    }
+}
+
+/// All strategy names in the paper's comparison order.
+pub const ALL_STRATEGIES: &[&str] = &["gd", "fp", "diagh", "cg", "lbfgs", "sd", "sdm"];

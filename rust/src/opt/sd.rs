@@ -1,0 +1,311 @@
+//! The Spectral Direction (SD) — the paper's recommended strategy.
+//!
+//! `B = 4 L+ (x) I_d + mu I`, the Hessian of the *attractive* (spectral)
+//! part only: psd, constant for Gaussian-kernel methods (EE, s-SNE), and
+//! block-diagonal with d identical N x N blocks — so one sparse Cholesky
+//! factorization of an N x N matrix, cached **before the first
+//! iteration**, turns every subsequent direction into two triangular
+//! backsolves per dimension: "essentially for free compared to computing
+//! the gradient".
+//!
+//! Refinements from section 2 of the paper, all implemented here:
+//! 1. `mu = 1e-10 min(L+_nn)` shifts the psd system pd (E is shift
+//!    invariant, so L+ has the constant null vector);
+//! 2. Cholesky factor cached; backsolves are O(nnz(R) d) per iteration;
+//! 3. user-controlled kappa-NN sparsification of L+ (kappa = N keeps
+//!    the full matrix; kappa = 0 degenerates to FP);
+//! for t-SNE, whose attractive Hessian depends on X, the factor is built
+//! from L+ at X = 0 (where the Student kernel K = 1 and w+ = p) and kept
+//! frozen, exactly as in section 3.2.
+
+use super::DirectionStrategy;
+use crate::affinity::sparsify_weights;
+use crate::graph::laplacian_sparse;
+use crate::linalg::dense::Mat;
+use crate::linalg::ordering::rcm;
+use crate::linalg::spchol::{cholesky_sparse, SparseChol};
+use crate::linalg::sparse::SpMat;
+use crate::objective::{Attractive, Objective};
+
+pub struct SpectralDirection {
+    /// kappa sparsity level (None = no sparsification)
+    kappa: Option<usize>,
+    chol: Option<SparseChol>,
+    /// RCM permutation (new -> old) applied before factorization
+    perm: Vec<usize>,
+    /// connected components of the (sparsified) attractive graph — the
+    /// Laplacian null space the solves must be projected against
+    comp: Vec<usize>,
+    /// FP-like scale (4 x mean attractive degree per component) used for
+    /// the null-space (inter-component) part of the direction
+    comp_scale: Vec<f64>,
+    /// setup wall time (the fig. 4 "setup" cost)
+    pub setup_seconds: f64,
+    /// nnz of the cached factor (fill diagnostic)
+    pub factor_nnz: usize,
+}
+
+impl SpectralDirection {
+    pub fn new(kappa: Option<usize>) -> Self {
+        SpectralDirection { kappa, chol: None, perm: Vec::new(), comp: Vec::new(), comp_scale: Vec::new(), setup_seconds: 0.0, factor_nnz: 0 }
+    }
+
+    /// Build `4 L+ + mu I` from the objective's attractive weights;
+    /// returns the system and the component labels of the graph.
+    fn build_system(&self, obj: &dyn Objective) -> (SpMat, Vec<usize>) {
+        let wp_sparse: SpMat = match (obj.attractive(), self.kappa) {
+            (Attractive::Dense(w), Some(k)) if k + 1 < w.rows => sparsify_weights(w, k),
+            (Attractive::Dense(w), _) => SpMat::from_dense(w, 0.0),
+            (Attractive::Sparse(s), _) => s.clone(), // already a kNN graph
+        };
+        let comp = crate::graph::components(&wp_sparse);
+        let lap = laplacian_sparse(&wp_sparse);
+        let n = lap.rows;
+        // mu = 1e-10 min L+_nn (paper); guard against isolated vertices
+        let mut min_diag = f64::INFINITY;
+        let mut max_diag = 0.0f64;
+        for i in 0..n {
+            let d = lap.get(i, i);
+            if d > 0.0 {
+                min_diag = min_diag.min(d);
+            }
+            max_diag = max_diag.max(d);
+        }
+        if !min_diag.is_finite() {
+            min_diag = 1.0;
+        }
+        // paper: mu = 1e-10 min(L+_nn) — assumes f64-exact gradients.
+        // Near-null eigendirections of L+ are amplified by 1/mu in the
+        // solve, so mu must also dominate the backend's gradient noise
+        // (f32 XLA artifacts report grad_accuracy ~ 1e-5).
+        let mu = (1e-10 * min_diag)
+            .max(obj.grad_accuracy() * 4.0 * max_diag)
+            .max(1e-300);
+        let mut b = lap;
+        for v in b.values.iter_mut() {
+            *v *= 4.0;
+        }
+        (b.add(&SpMat::scaled_eye(n, mu)), comp)
+    }
+}
+
+impl DirectionStrategy for SpectralDirection {
+    fn name(&self) -> &'static str {
+        "sd"
+    }
+
+    fn prepare(&mut self, obj: &dyn Objective, _x0: &Mat) -> anyhow::Result<()> {
+        let t0 = std::time::Instant::now();
+        let (b, comp) = self.build_system(obj);
+        // FP-like scale per component for the null-space motion below:
+        // 4 x mean attractive degree (B's diagonal is 4 L+_nn + mu)
+        let ncomp = comp.iter().copied().max().map_or(0, |c| c + 1);
+        let mut scale = vec![0.0; ncomp];
+        let mut count = vec![0usize; ncomp];
+        for i in 0..b.rows {
+            scale[comp[i]] += b.get(i, i);
+            count[comp[i]] += 1;
+        }
+        for c in 0..ncomp {
+            scale[c] = (scale[c] / count[c].max(1) as f64).max(1e-300);
+        }
+        self.comp_scale = scale;
+        self.comp = comp;
+        // fill-reducing permutation helps only when B is actually sparse
+        let n = b.rows;
+        let dense_frac = b.nnz() as f64 / (n as f64 * n as f64);
+        let (bp, perm) = if dense_frac < 0.5 {
+            let perm = rcm(&b);
+            (b.sym_perm(&perm), perm)
+        } else {
+            (b, (0..n).collect())
+        };
+        let chol = cholesky_sparse(&bp)
+            .map_err(|e| anyhow::anyhow!("SD system not pd (should be impossible): {e}"))?;
+        self.factor_nnz = chol.nnz();
+        self.perm = perm;
+        self.chol = Some(chol);
+        self.setup_seconds = t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    fn direction(&mut self, _obj: &dyn Objective, _x: &Mat, g: &Mat, _k: usize) -> Mat {
+        let chol = self.chol.as_ref().expect("prepare() not called");
+        let n = g.rows;
+        let d = g.cols;
+        // Split the gradient against the Laplacian's null space (the
+        // component indicator vectors). Those directions are shifted only
+        // by mu, so solving them through B would amplify any gradient
+        // mass there — numerical noise or genuine inter-component
+        // repulsion — by 1/mu into astronomically long directions that
+        // destroy f32 backends and stall the line search. Instead the
+        // in-component part goes through the Cholesky solve and the
+        // null (per-component-mean) part takes an FP-scaled diagonal
+        // step, so clusters still separate at a sane rate.
+        let mut gc = g.clone();
+        super::center_columns_by_component(&mut gc, &self.comp);
+        let mut p = Mat::zeros(n, d);
+        let mut col = vec![0.0; n];
+        for j in 0..d {
+            // permuted solve: B p = -g  =>  (P B P^T)(P p) = -P g
+            for newi in 0..n {
+                col[newi] = -gc.at(self.perm[newi], j);
+            }
+            chol.solve(&mut col);
+            for newi in 0..n {
+                *p.at_mut(self.perm[newi], j) = col[newi];
+            }
+        }
+        super::center_columns_by_component(&mut p, &self.comp);
+        // null-space (inter-component) motion: -mean(g) / (4 avg deg)
+        if self.comp_scale.len() > 1 {
+            let mut ncount = vec![0usize; self.comp_scale.len()];
+            for &c in &self.comp {
+                ncount[c] += 1;
+            }
+            for j in 0..d {
+                let mut mean = vec![0.0; self.comp_scale.len()];
+                for i in 0..n {
+                    mean[self.comp[i]] += g.at(i, j);
+                }
+                for (c, m) in mean.iter_mut().enumerate() {
+                    *m /= ncount[c].max(1) as f64;
+                }
+                for i in 0..n {
+                    let c = self.comp[i];
+                    if ncount[c] > 1 {
+                        *p.at_mut(i, j) -= mean[c] / self.comp_scale[c];
+                    }
+                }
+            }
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::linalg::vecops::dot;
+    use crate::objective::native::NativeObjective;
+    use crate::objective::{Attractive, Method};
+    use crate::opt::{minimize, OptOptions};
+
+    fn setup(method: Method, lam: f64, n: usize, seed: u64) -> (NativeObjective, Mat) {
+        let mut rng = Rng::new(seed);
+        let y = Mat::from_fn(n, 5, |_, _| rng.normal());
+        let p = crate::affinity::sne_affinities(&y, (n as f64 / 4.0).max(2.0));
+        let obj = NativeObjective::with_affinities(method, Attractive::Dense(p), lam, 2);
+        let x = Mat::from_fn(n, 2, |_, _| 0.1 * rng.normal());
+        (obj, x)
+    }
+
+    #[test]
+    fn direction_is_descent() {
+        for method in [Method::Ee, Method::Ssne, Method::Tsne] {
+            let lam = if method == Method::Ee { 10.0 } else { 1.0 };
+            let (obj, x) = setup(method, lam, 24, 1);
+            let mut s = SpectralDirection::new(None);
+            s.prepare(&obj, &x).unwrap();
+            let (_, g) = obj.eval(&x);
+            let p = s.direction(&obj, &x, &g, 0);
+            assert!(dot(&p.data, &g.data) < 0.0, "{}", method.name());
+        }
+    }
+
+    #[test]
+    fn solves_the_sd_system() {
+        let (obj, x) = setup(Method::Ee, 5.0, 20, 2);
+        let mut s = SpectralDirection::new(None);
+        s.prepare(&obj, &x).unwrap();
+        let (_, g) = obj.eval(&x);
+        let p = s.direction(&obj, &x, &g, 0);
+        // check B p = -g with B = 4 L+ + mu I
+        let (b, _) = s.build_system(&obj);
+        for j in 0..2 {
+            let col: Vec<f64> = (0..20).map(|i| p.at(i, j)).collect();
+            let bp = b.matvec(&col);
+            for i in 0..20 {
+                assert!(
+                    (bp[i] + g.at(i, j)).abs() < 1e-8 * g.at(i, j).abs().max(1.0),
+                    "residual at ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn newton_on_spectral_problem() {
+        // For lam = 0 (pure spectral E+), SD *is* Newton: from any x0 the
+        // direction jumps to the (regularized) global minimum in 1 step.
+        let (obj, x) = setup(Method::Spectral, 0.0, 16, 3);
+        let mut s = SpectralDirection::new(None);
+        s.prepare(&obj, &x).unwrap();
+        let (e0, g) = obj.eval(&x);
+        let p = s.direction(&obj, &x, &g, 0);
+        let mut x1 = x.clone();
+        crate::linalg::vecops::axpy(1.0, &p.data, &mut x1.data);
+        let (e1, g1) = obj.eval(&x1);
+        assert!(e1 < e0);
+        // gradient nearly zero after one unit step
+        assert!(
+            crate::linalg::vecops::nrm_inf(&g1.data) < 1e-6 * crate::linalg::vecops::nrm_inf(&g.data),
+            "one Newton step should zero the spectral gradient"
+        );
+    }
+
+    #[test]
+    fn kappa_family_interpolates_to_fp() {
+        // kappa-sparsified SD directions still descend
+        let (obj, x) = setup(Method::Ee, 20.0, 30, 4);
+        for kappa in [2, 5, 10] {
+            let mut s = SpectralDirection::new(Some(kappa));
+            s.prepare(&obj, &x).unwrap();
+            let (_, g) = obj.eval(&x);
+            let p = s.direction(&obj, &x, &g, 0);
+            assert!(dot(&p.data, &g.data) < 0.0, "kappa {kappa}");
+        }
+        // sparser kappa -> sparser factor
+        let mut s2 = SpectralDirection::new(Some(2));
+        s2.prepare(&obj, &x).unwrap();
+        let mut sfull = SpectralDirection::new(None);
+        sfull.prepare(&obj, &x).unwrap();
+        assert!(s2.factor_nnz <= sfull.factor_nnz);
+    }
+
+    #[test]
+    fn converges_on_ee() {
+        let (obj, x) = setup(Method::Ee, 10.0, 26, 5);
+        let mut s = SpectralDirection::new(None);
+        let res = minimize(
+            &obj,
+            &mut s,
+            &x,
+            &OptOptions { max_iters: 300, grad_tol: 1e-5, rel_tol: 1e-14, ..Default::default() },
+        );
+        // linear local rate (th. 2.1): expect a substantial contraction of
+        // the gradient within the budget, not a fixed absolute tolerance
+        let g0 = res.trace.first().unwrap().grad_inf;
+        let g1 = res.trace.last().unwrap().grad_inf;
+        assert!(g1 < 1e-3 * g0, "gradient only shrank {g0:.3e} -> {g1:.3e}");
+        for w in res.trace.windows(2) {
+            assert!(w[1].e <= w[0].e + 1e-10);
+        }
+    }
+
+    #[test]
+    fn sparse_attractive_input() {
+        // sparse P from kNN affinities feeds SD directly
+        let mut rng = Rng::new(6);
+        let y = Mat::from_fn(40, 4, |_, _| rng.normal());
+        let p = crate::affinity::sne_affinities_sparse(&y, 6.0, 12);
+        let obj = NativeObjective::with_affinities(Method::Ee, Attractive::Sparse(p), 10.0, 2);
+        let x = Mat::from_fn(40, 2, |_, _| 0.1 * rng.normal());
+        let mut s = SpectralDirection::new(Some(7));
+        s.prepare(&obj, &x).unwrap();
+        let (_, g) = obj.eval(&x);
+        let pdir = s.direction(&obj, &x, &g, 0);
+        assert!(dot(&pdir.data, &g.data) < 0.0);
+    }
+}

@@ -1,0 +1,289 @@
+//! SD− : the partial Hessian `4 L+ + 8 lam Lxx_(i=j)` (paper section 3).
+//!
+//! Adds the psd same-dimension diagonal blocks of the repulsive Hessian
+//! `8 Lxx` on top of the spectral direction's `4 L+`. The system now
+//! depends on X, so it is rebuilt every iteration and solved *inexactly*
+//! with warm-started linear CG (relative tolerance 0.1, at most 50
+//! iterations — the paper's exact settings). Uses the most Hessian
+//! information of all strategies, needs the fewest iterations (fig. 1),
+//! but pays a much higher per-iteration cost (fig. 4: only 37 EE / 13
+//! t-SNE iterations within the hour).
+//!
+//! Same-dimension psd weights c_nm (so Wxx(i,i)_nm = c_nm (x_in-x_im)^2):
+//!   EE    : lam w-_nm exp(-d2)              (from eq. 3)
+//!   s-SNE : lam q_nm                        (K2 = 1 part of eq. 2)
+//!   t-SNE : 2 lam q_nm K^2                  (K2 = 2 K^2 part of eq. 2)
+
+use super::DirectionStrategy;
+use crate::affinity::sparsify_weights;
+use crate::graph::laplacian_sparse;
+use crate::linalg::cg as lincg;
+use crate::linalg::dense::Mat;
+use crate::linalg::sparse::SpMat;
+use crate::linalg::vecops::sqdist;
+use crate::objective::{Attractive, Method, Objective};
+
+pub struct SdMinus {
+    kappa: Option<usize>,
+    /// 4 L+ (+ mu I), built once
+    base: Option<SpMat>,
+    /// previous direction per dimension (CG warm start)
+    warm: Option<Mat>,
+    /// inexact-solve controls (paper: 0.1 / 50)
+    pub cg_tol: f64,
+    pub cg_max_iter: usize,
+    /// cumulative inner CG iterations (diagnostics)
+    pub inner_iters: usize,
+}
+
+impl SdMinus {
+    pub fn new(kappa: Option<usize>) -> Self {
+        SdMinus { kappa, base: None, warm: None, cg_tol: 0.1, cg_max_iter: 50, inner_iters: 0 }
+    }
+
+    /// Dense same-dimension weight matrix c_nm at the current X, plus
+    /// its Laplacian-degree vectors per dimension.
+    fn cxx(&self, obj: &dyn Objective, x: &Mat) -> Mat {
+        let n = x.rows;
+        let lam = obj.lambda();
+        let method = obj.method();
+        // partition function for the normalized models
+        let s = match method {
+            Method::Ssne | Method::Tsne => crate::par::par_sum(n, |a| {
+                    let xa = x.row(a);
+                    let mut acc = 0.0;
+                    for b in 0..n {
+                        if b != a {
+                            let d2 = sqdist(xa, x.row(b));
+                            acc += match method {
+                                Method::Ssne => (-d2).exp(),
+                                _ => 1.0 / (1.0 + d2),
+                            };
+                        }
+                    }
+                    acc
+                }),
+            _ => 1.0,
+        };
+        let rows: Vec<Vec<f64>> = crate::par::par_map(n, |a| {
+                let xa = x.row(a);
+                let mut r = vec![0.0; n];
+                for b in 0..n {
+                    if b == a {
+                        continue;
+                    }
+                    let d2 = sqdist(xa, x.row(b));
+                    r[b] = match method {
+                        Method::Spectral => 0.0,
+                        Method::Ee => lam * (-d2).exp(), // w- = 1 uniform
+                        Method::Ssne => lam * (-d2).exp() / s,
+                        Method::Tsne => {
+                            let k = 1.0 / (1.0 + d2);
+                            2.0 * lam * k * k * k / s // q K^2 = K^3 / s
+                        }
+                    };
+                }
+                r
+            });
+        let mut c = Mat::zeros(n, n);
+        for (a, r) in rows.into_iter().enumerate() {
+            c.row_mut(a).copy_from_slice(&r);
+        }
+        c
+    }
+}
+
+impl DirectionStrategy for SdMinus {
+    fn name(&self) -> &'static str {
+        "sdm"
+    }
+
+    fn prepare(&mut self, obj: &dyn Objective, _x0: &Mat) -> anyhow::Result<()> {
+        // base = 4 L+ + mu I (same construction as SD)
+        let wp_sparse: SpMat = match (obj.attractive(), self.kappa) {
+            (Attractive::Dense(w), Some(k)) if k + 1 < w.rows => sparsify_weights(w, k),
+            (Attractive::Dense(w), _) => SpMat::from_dense(w, 0.0),
+            (Attractive::Sparse(sp), _) => sp.clone(),
+        };
+        let lap = laplacian_sparse(&wp_sparse);
+        let n = lap.rows;
+        let mut min_diag = f64::INFINITY;
+        for i in 0..n {
+            let d = lap.get(i, i);
+            if d > 0.0 {
+                min_diag = min_diag.min(d);
+            }
+        }
+        if !min_diag.is_finite() {
+            min_diag = 1.0;
+        }
+        let mut max_diag = 0.0f64;
+        for i in 0..n {
+            max_diag = max_diag.max(lap.get(i, i));
+        }
+        // see SpectralDirection::build_system for the mu rationale
+        let mu = (1e-10 * min_diag)
+            .max(obj.grad_accuracy() * 4.0 * max_diag)
+            .max(1e-300);
+        let mut base = lap;
+        for v in base.values.iter_mut() {
+            *v *= 4.0;
+        }
+        self.base = Some(base.add(&SpMat::scaled_eye(n, mu)));
+        self.warm = None;
+        self.inner_iters = 0;
+        Ok(())
+    }
+
+    fn direction(&mut self, obj: &dyn Objective, x: &Mat, g: &Mat, _k: usize) -> Mat {
+        let base = self.base.as_ref().expect("prepare() not called");
+        let n = x.rows;
+        let d = x.cols;
+        // shift-direction projection, as in SpectralDirection::direction
+        let mut g = g.clone();
+        super::center_columns(&mut g);
+        let g = &g;
+        let c = self.cxx(obj, x);
+        let mut p = match self.warm.take() {
+            Some(w) if w.rows == n && w.cols == d => w,
+            _ => Mat::zeros(n, d),
+        };
+        // block-diagonal over dimensions: solve each i independently
+        for i in 0..d {
+            // degrees of Wxx(i,i): deg_a = sum_b c_ab (x_ai - x_bi)^2
+            let mut deg = vec![0.0; n];
+            for a in 0..n {
+                let xai = x.at(a, i);
+                let mut s = 0.0;
+                for b in 0..n {
+                    let diff = xai - x.at(b, i);
+                    s += c.at(a, b) * diff * diff;
+                }
+                deg[a] = s;
+            }
+            let rhs: Vec<f64> = (0..n).map(|a| -g.at(a, i)).collect();
+            let mut xi: Vec<f64> = (0..n).map(|a| p.at(a, i)).collect();
+            let mut apply = |v: &[f64], out: &mut [f64]| {
+                // out = (4 L+ + mu I) v + 8 (D_i - Wxx_i) v
+                let bv = base.matvec(v);
+                out.copy_from_slice(&bv);
+                for a in 0..n {
+                    let xai = x.at(a, i);
+                    let mut wv = 0.0;
+                    for b in 0..n {
+                        let diff = xai - x.at(b, i);
+                        wv += c.at(a, b) * diff * diff * v[b];
+                    }
+                    // note: Wxx(i,i)_ab = c_ab (x_ai - x_bi)^2
+                    out[a] += 8.0 * (deg[a] * v[a] - wv);
+                }
+            };
+            let diag: Vec<f64> = (0..n).map(|a| base.get(a, a) + 8.0 * deg[a]).collect();
+            let res = lincg::solve(&mut apply, &rhs, &mut xi, Some(&diag), self.cg_tol, self.cg_max_iter);
+            self.inner_iters += res.iters;
+            for a in 0..n {
+                *p.at_mut(a, i) = xi[a];
+            }
+        }
+        super::center_columns(&mut p);
+        self.warm = Some(p.clone());
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::linalg::vecops::dot;
+    use crate::objective::native::NativeObjective;
+    use crate::opt::{minimize, OptOptions};
+
+    fn setup(method: Method, lam: f64, n: usize, seed: u64) -> (NativeObjective, Mat) {
+        let mut rng = Rng::new(seed);
+        let y = Mat::from_fn(n, 4, |_, _| rng.normal());
+        let p = crate::affinity::sne_affinities(&y, (n as f64 / 4.0).max(2.0));
+        let obj = NativeObjective::with_affinities(method, Attractive::Dense(p), lam, 2);
+        let x = Mat::from_fn(n, 2, |_, _| 0.2 * rng.normal());
+        (obj, x)
+    }
+
+    #[test]
+    fn direction_is_descent_all_methods() {
+        for (method, lam) in [(Method::Ee, 10.0), (Method::Ssne, 1.0), (Method::Tsne, 1.0)] {
+            let (obj, x) = setup(method, lam, 18, 1);
+            let mut s = SdMinus::new(None);
+            s.prepare(&obj, &x).unwrap();
+            let (_, g) = obj.eval(&x);
+            let p = s.direction(&obj, &x, &g, 0);
+            assert!(dot(&p.data, &g.data) < 0.0, "{}", method.name());
+        }
+    }
+
+    #[test]
+    fn uses_fewer_iterations_than_sd_on_ee() {
+        // more Hessian information -> deeper steps (fig. 1's "SD- uses
+        // the fewest iterations"). The comparison is only meaningful
+        // inside one basin (from far starts the two strategies reach
+        // different local minima), so use the paper's fig. 1 protocol:
+        // converge first, perturb slightly, re-converge with both.
+        let (obj, x_far) = setup(Method::Ee, 30.0, 24, 2);
+        let opts = OptOptions { max_iters: 400, rel_tol: 1e-10, ..Default::default() };
+        let mut sd0 = crate::opt::sd::SpectralDirection::new(None);
+        let x_star = minimize(&obj, &mut sd0, &x_far, &opts).x;
+        let mut rng = crate::data::Rng::new(99);
+        let mut x0 = x_star.clone();
+        for v in x0.data.iter_mut() {
+            *v += 0.02 * rng.normal();
+        }
+        let opts = OptOptions { max_iters: 400, rel_tol: 1e-8, ..Default::default() };
+        let mut sdm = SdMinus::new(None);
+        sdm.cg_tol = 1e-8;
+        sdm.cg_max_iter = 500;
+        let rm = minimize(&obj, &mut sdm, &x0, &opts);
+        let mut sd = crate::opt::sd::SpectralDirection::new(None);
+        let rs = minimize(&obj, &mut sd, &x0, &opts);
+        assert!(
+            rm.iters() <= rs.iters(),
+            "sdm {} vs sd {} iterations",
+            rm.iters(),
+            rs.iters()
+        );
+        assert!(rm.e <= rs.e * 1.001, "sdm E {} vs sd E {}", rm.e, rs.e);
+    }
+
+    #[test]
+    fn exact_solve_agrees_with_explicit_system() {
+        // with tol ~ 0 and many iterations the CG solve must match a
+        // dense solve of (4L+ + muI + 8 Lxx_ii)
+        let (obj, x) = setup(Method::Ee, 5.0, 12, 3);
+        let mut s = SdMinus::new(None);
+        s.cg_tol = 1e-12;
+        s.cg_max_iter = 500;
+        s.prepare(&obj, &x).unwrap();
+        let (_, g) = obj.eval(&x);
+        let p = s.direction(&obj, &x, &g, 0);
+        // explicit dense check for dimension 0
+        let n = 12;
+        let c = s.cxx(&obj, &x);
+        let base = s.base.as_ref().unwrap().to_dense();
+        let mut bmat = base.clone();
+        for a in 0..n {
+            for b in 0..n {
+                let diff = x.at(a, 0) - x.at(b, 0);
+                let w = c.at(a, b) * diff * diff;
+                *bmat.at_mut(a, a) += 8.0 * w;
+                *bmat.at_mut(a, b) -= 8.0 * w;
+            }
+        }
+        let col: Vec<f64> = (0..n).map(|a| p.at(a, 0)).collect();
+        let bp = bmat.matvec(&col);
+        for a in 0..n {
+            assert!(
+                (bp[a] + g.at(a, 0)).abs() < 1e-6 * g.at(a, 0).abs().max(1.0),
+                "residual {} at {a}",
+                bp[a] + g.at(a, 0)
+            );
+        }
+    }
+}

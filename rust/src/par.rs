@@ -1,0 +1,105 @@
+//! Minimal data-parallel helpers on std::thread::scope.
+//!
+//! The offline build has no rayon (see Cargo.toml); these cover the two
+//! patterns the hot paths need — a parallel indexed map and a parallel
+//! sum — with contiguous chunking (cache-friendly for row-major data).
+//! Thread count defaults to the machine's parallelism, overridable with
+//! `NLE_THREADS` (the figure harnesses set expectations in
+//! EXPERIMENTS.md).
+
+use std::sync::OnceLock;
+
+/// Worker count: `NLE_THREADS` env var or available parallelism.
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("NLE_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// Parallel map over `0..n`, preserving order. Falls back to serial for
+/// small `n` (thread spawn ~10us each; pairwise rows cost far more).
+pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n < 32 {
+        return (0..n).map(f).collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let fref = &f;
+    std::thread::scope(|s| {
+        let mut rest = out.as_mut_slice();
+        let mut start = 0;
+        while start < n {
+            let len = chunk.min(n - start);
+            let (head, tail) = rest.split_at_mut(len);
+            rest = tail;
+            let base = start;
+            s.spawn(move || {
+                for (off, slot) in head.iter_mut().enumerate() {
+                    *slot = Some(fref(base + off));
+                }
+            });
+            start += len;
+        }
+    });
+    out.into_iter().map(|v| v.expect("worker filled every slot")).collect()
+}
+
+/// Parallel sum of `f(i)` over `0..n`.
+pub fn par_sum<F: Fn(usize) -> f64 + Sync>(n: usize, f: F) -> f64 {
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n < 32 {
+        return (0..n).map(f).sum();
+    }
+    let chunk = n.div_ceil(threads);
+    let fref = &f;
+    let partials: Vec<f64> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        let mut start = 0;
+        while start < n {
+            let end = (start + chunk).min(n);
+            handles.push(s.spawn(move || (start..end).map(fref).sum::<f64>()));
+            start = end;
+        }
+        handles.into_iter().map(|h| h.join().expect("par_sum worker panicked")).collect()
+    });
+    partials.into_iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_serial() {
+        let serial: Vec<usize> = (0..1000).map(|i| i * i).collect();
+        let parallel = par_map(1000, |i| i * i);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn par_map_small_and_empty() {
+        assert_eq!(par_map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(par_map(3, |i| i + 1), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn par_sum_matches_serial() {
+        let serial: f64 = (0..10_000).map(|i| (i as f64).sqrt()).sum();
+        let parallel = par_sum(10_000, |i| (i as f64).sqrt());
+        assert!((serial - parallel).abs() < 1e-6);
+    }
+
+    #[test]
+    fn thread_count_positive() {
+        assert!(num_threads() >= 1);
+    }
+}

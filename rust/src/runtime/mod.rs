@@ -1,0 +1,195 @@
+//! PJRT runtime: load AOT artifacts (HLO text emitted by
+//! `python/compile/aot.py`) and execute them on the request path.
+//!
+//! Python runs once at build time (`make artifacts`); this module is what
+//! the rust binary uses afterwards — `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. Constant
+//! inputs (the affinity matrices) are transferred to device buffers once
+//! per objective and reused across iterations via `execute_b`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::linalg::dense::Mat;
+use crate::objective::Method;
+
+/// Entry of `artifacts/manifest.txt` (line format: `name method n d file`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub method: String,
+    pub n: usize,
+    pub d: usize,
+    pub file: String,
+}
+
+/// Parse the line-based manifest written by aot.py. `#` lines are
+/// comments; blank lines ignored.
+pub fn parse_manifest(text: &str) -> anyhow::Result<Vec<ManifestEntry>> {
+    let mut entries = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        anyhow::ensure!(
+            fields.len() == 5,
+            "manifest line {} has {} fields, want 5: {line:?}",
+            lineno + 1,
+            fields.len()
+        );
+        entries.push(ManifestEntry {
+            name: fields[0].to_string(),
+            method: fields[1].to_string(),
+            n: fields[2].parse().map_err(|e| anyhow::anyhow!("bad n: {e}"))?,
+            d: fields[3].parse().map_err(|e| anyhow::anyhow!("bad d: {e}"))?,
+            file: fields[4].to_string(),
+        });
+    }
+    Ok(entries)
+}
+
+/// Registry of AOT artifacts: lazily compiles executables per
+/// (method, N, d) and caches them for the session.
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    entries: Vec<ManifestEntry>,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<(Method, usize, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// Safety: the xla crate's wrappers hold Rc/raw pointers, but the PJRT CPU
+// client itself is thread-safe (it is the same client jax drives from many
+// threads); all registry mutation is behind the cache mutex and the
+// wrapped pointers are never exposed mutably. Coordinator jobs may
+// therefore share a registry across worker threads.
+unsafe impl Send for ArtifactRegistry {}
+unsafe impl Sync for ArtifactRegistry {}
+
+impl ArtifactRegistry {
+    /// Open a registry at `dir` (must contain manifest.txt).
+    pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            )
+        })?;
+        let entries = parse_manifest(&text)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(ArtifactRegistry { dir, entries, client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// All (method, n, d) combinations available.
+    pub fn available(&self) -> Vec<(Method, usize, usize)> {
+        self.entries
+            .iter()
+            .filter_map(|a| Method::parse(&a.method).map(|m| (m, a.n, a.d)))
+            .collect()
+    }
+
+    fn entry(&self, method: Method, n: usize, d: usize) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .find(|a| a.method == method.name() && a.n == n && a.d == d)
+    }
+
+    /// Compile (or fetch cached) the executable for a shape.
+    pub fn executable(
+        &self,
+        method: Method,
+        n: usize,
+        d: usize,
+    ) -> anyhow::Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(&(method, n, d)) {
+            return Ok(exe.clone());
+        }
+        let entry = self.entry(method, n, d).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no artifact for {} N={n} d={d}; run `make artifacts SIZES=...` \
+                 (available: {:?})",
+                method.name(),
+                self.available()
+            )
+        })?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", entry.name))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert((method, n, d), exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload a row-major f64 matrix as an f32 device buffer.
+    pub fn upload(&self, m: &Mat) -> anyhow::Result<xla::PjRtBuffer> {
+        let data: Vec<f32> = m.data.iter().map(|&v| v as f32).collect();
+        self.client
+            .buffer_from_host_buffer(&data, &[m.rows, m.cols], None)
+            .map_err(|e| anyhow::anyhow!("upload: {e:?}"))
+    }
+
+    /// Upload an f32 scalar.
+    pub fn upload_scalar(&self, v: f64) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&[v as f32], &[], None)
+            .map_err(|e| anyhow::anyhow!("upload scalar: {e:?}"))
+    }
+}
+
+/// Decode the `(E, G)` tuple output of a model artifact.
+pub fn decode_energy_grad(
+    result: Vec<Vec<xla::PjRtBuffer>>,
+    n: usize,
+    d: usize,
+) -> anyhow::Result<(f64, Mat)> {
+    let buf = result
+        .into_iter()
+        .next()
+        .and_then(|v| v.into_iter().next())
+        .ok_or_else(|| anyhow::anyhow!("empty execution result"))?;
+    let lit = buf.to_literal_sync().map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+    let (e_lit, g_lit) = lit.to_tuple2().map_err(|e| anyhow::anyhow!("tuple2: {e:?}"))?;
+    let e = e_lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("E decode: {e:?}"))?[0] as f64;
+    let g_raw = g_lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("G decode: {e:?}"))?;
+    anyhow::ensure!(g_raw.len() == n * d, "G has {} elements, want {}", g_raw.len(), n * d);
+    let g = Mat::from_vec(n, d, g_raw.into_iter().map(|v| v as f64).collect());
+    Ok((e, g))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let text = "# name method n d file\n\
+                    ee_16x2 ee 16 2 ee_16x2.hlo.txt\n\
+                    \n\
+                    tsne_720x2 tsne 720 2 tsne_720x2.hlo.txt\n";
+        let m = parse_manifest(text).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].n, 16);
+        assert_eq!(m[1].method, "tsne");
+        assert_eq!(m[1].file, "tsne_720x2.hlo.txt");
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(parse_manifest("a b c\n").is_err());
+        assert!(parse_manifest("name method notanumber 2 f.txt\n").is_err());
+    }
+}

@@ -1,0 +1,247 @@
+//! Integration tests for the optimization stack: every strategy on every
+//! method, end-to-end embedding quality, homotopy path behaviour, rate
+//! ordering (theorem 2.1), and the paper's qualitative claims at test
+//! scale.
+
+use nle::affinity::sne_affinities;
+use nle::data::{synth, Rng};
+use nle::linalg::dense::Mat;
+use nle::metrics::quality::{knn_recall, label_knn_accuracy};
+use nle::objective::hessian::{full_hessian, rate_constant, sd_partial_hessian};
+use nle::objective::native::NativeObjective;
+use nle::objective::{Attractive, Method, Objective};
+use nle::opt::homotopy::{homotopy, log_lambda_schedule};
+use nle::opt::{minimize, strategy_by_name, DirectionStrategy, OptOptions, StopReason, ALL_STRATEGIES};
+
+fn small_problem(
+    n: usize,
+    method: Method,
+    lam: f64,
+    seed: u64,
+) -> (NativeObjective, Mat) {
+    let mut rng = Rng::new(seed);
+    let y = Mat::from_fn(n, 5, |_, _| rng.normal());
+    let p = sne_affinities(&y, (n as f64 / 5.0).max(3.0));
+    let obj = NativeObjective::with_affinities(method, Attractive::Dense(p), lam, 2);
+    let x0 = Mat::from_fn(n, 2, |_, _| 1e-2 * rng.normal());
+    (obj, x0)
+}
+
+#[test]
+fn every_strategy_decreases_every_method() {
+    for (method, lam) in [
+        (Method::Ee, 50.0),
+        (Method::Ssne, 1.0),
+        (Method::Tsne, 1.0),
+    ] {
+        for name in ALL_STRATEGIES {
+            let (obj, x0) = small_problem(24, method, lam, 7);
+            let mut s = strategy_by_name(name, None).unwrap();
+            let res = minimize(
+                &obj,
+                s.as_mut(),
+                &x0,
+                &OptOptions { max_iters: 40, ..Default::default() },
+            );
+            assert!(
+                res.e < res.trace[0].e,
+                "{name} failed to decrease {} (E {} -> {})",
+                method.name(),
+                res.trace[0].e,
+                res.e
+            );
+            assert_ne!(res.stop, StopReason::LineSearchFailed, "{name}/{}", method.name());
+        }
+    }
+}
+
+#[test]
+fn sd_beats_gd_by_an_order_of_magnitude_in_iterations() {
+    // the paper's headline at miniature scale: iterations to reach the
+    // same energy threshold differ by >= 10x between SD and GD
+    let (obj, x0) = small_problem(40, Method::Ee, 20.0, 11);
+    let mut sd = nle::opt::sd::SpectralDirection::new(None);
+    let rs = minimize(
+        &obj,
+        &mut sd,
+        &x0,
+        &OptOptions { max_iters: 400, rel_tol: 1e-10, ..Default::default() },
+    );
+    let target = rs.e * 1.02; // within 2% of SD's minimum
+    let sd_iters = rs
+        .trace
+        .iter()
+        .position(|t| t.e <= target)
+        .unwrap_or(rs.trace.len());
+    let mut gd = nle::opt::gd::GradientDescent::new();
+    let rg = minimize(
+        &obj,
+        &mut gd,
+        &x0,
+        &OptOptions { max_iters: 4000, rel_tol: 1e-14, ..Default::default() },
+    );
+    let gd_iters = rg
+        .trace
+        .iter()
+        .position(|t| t.e <= target)
+        .unwrap_or(10 * rg.trace.len()); // never reached: count as 10x budget
+    assert!(
+        gd_iters >= 10 * sd_iters.max(1),
+        "sd {sd_iters} vs gd {gd_iters} iterations to target"
+    );
+}
+
+#[test]
+fn swiss_roll_embedding_preserves_neighborhoods() {
+    let ds = synth::swiss_roll(150, 3, 0.02, 3);
+    let p = sne_affinities(&ds.y, 12.0);
+    let obj = NativeObjective::with_affinities(Method::Ee, Attractive::Dense(p), 100.0, 2);
+    // spectral (Laplacian eigenmaps) initialization, as the paper
+    // recommends for nonconvex embeddings, then SD refinement
+    let p_sparse = nle::linalg::sparse::SpMat::from_dense(&obj.attractive().to_dense(), 0.0);
+    let x0 = nle::init::spectral_init(&p_sparse, 2, 1.0, 4);
+    let mut sd = nle::opt::sd::SpectralDirection::new(None);
+    let res = minimize(
+        &obj,
+        &mut sd,
+        &x0,
+        &OptOptions { max_iters: 400, ..Default::default() },
+    );
+    let recall = knn_recall(&ds.y, &res.x, 10);
+    assert!(recall > 0.4, "knn recall too low: {recall}");
+}
+
+#[test]
+fn clusters_separate_in_embedding() {
+    let ds = synth::clusters(100, 5, 16, 20.0, 5);
+    let p = sne_affinities(&ds.y, 10.0);
+    let obj = NativeObjective::with_affinities(Method::Ssne, Attractive::Dense(p), 1.0, 2);
+    let x0 = nle::init::random_init(100, 2, 1e-3, 2);
+    let mut sd = nle::opt::sd::SpectralDirection::new(None);
+    let res = minimize(
+        &obj,
+        &mut sd,
+        &x0,
+        &OptOptions { max_iters: 300, ..Default::default() },
+    );
+    let acc = label_knn_accuracy(&res.x, &ds.labels, 5);
+    assert!(acc > 0.9, "label knn accuracy {acc}");
+}
+
+#[test]
+fn homotopy_reaches_deeper_or_equal_minimum_than_direct() {
+    // fig. 3's motivation: homotopy "usually finds a deeper minimum"
+    let (mut obj, x0) = small_problem(30, Method::Ee, 100.0, 13);
+    let lambdas = log_lambda_schedule(1e-4, 100.0, 12);
+    let opts = OptOptions { max_iters: 400, rel_tol: 1e-7, ..Default::default() };
+    let mut sd1 = nle::opt::sd::SpectralDirection::new(None);
+    let hres = homotopy(&mut obj, &mut sd1, &x0, &lambdas, &opts, None);
+    let e_homotopy = hres.stages.last().unwrap().e;
+    obj.set_lambda(100.0);
+    let mut sd2 = nle::opt::sd::SpectralDirection::new(None);
+    let direct = minimize(&obj, &mut sd2, &x0, &opts);
+    assert!(
+        e_homotopy <= direct.e * 1.05,
+        "homotopy {e_homotopy} vs direct {}",
+        direct.e
+    );
+}
+
+#[test]
+fn rate_constants_shrink_as_partial_hessian_approaches_full() {
+    // th. 2.1: r = ||B^-1 H - I|| governs the local rate and shrinks as
+    // B approaches H. Two robust instances of that claim:
+    //  (a) B = H gives r ~ 0 (Newton);
+    //  (b) B = 4 L+ approaches H as lambda -> 0 (the spectral limit),
+    //      so r(SD) must increase monotonically with lambda.
+    let mut r_prev = -1.0;
+    for lam in [0.2, 1.0, 5.0] {
+        let (obj, x0) = small_problem(16, Method::Ee, lam, 17);
+        let mut sd = nle::opt::sd::SpectralDirection::new(None);
+        let res = minimize(
+            &obj,
+            &mut sd,
+            &x0,
+            &OptOptions { max_iters: 3000, grad_tol: 1e-9, rel_tol: 1e-15, ..Default::default() },
+        );
+        let h = full_hessian(&obj, &res.x);
+        let nd = 32;
+        let mut h_reg = h.clone();
+        for i in 0..nd {
+            *h_reg.at_mut(i, i) += 1e-8;
+        }
+        // (a) Newton reference
+        let r_newton = rate_constant(&h_reg, &h_reg);
+        assert!(r_newton < 1e-6, "r(Newton) = {r_newton}");
+        // (b) SD rate grows with lambda
+        let mut b_sd = sd_partial_hessian(&obj, 2);
+        for i in 0..nd {
+            *b_sd.at_mut(i, i) += 1e-8;
+        }
+        let r_sd = rate_constant(&b_sd, &h_reg);
+        assert!(
+            r_sd > r_prev,
+            "r(SD) not increasing with lambda: {r_sd} after {r_prev}"
+        );
+        r_prev = r_sd;
+    }
+}
+
+#[test]
+fn tsne_frozen_laplacian_still_converges() {
+    // section 3.2: for t-SNE the SD factor is built once (L+ at X = 0)
+    // and frozen; directions must stay descent and the optimizer must
+    // make steady progress
+    let (obj, x0) = small_problem(30, Method::Tsne, 1.0, 19);
+    let mut sd = nle::opt::sd::SpectralDirection::new(None);
+    let res = minimize(
+        &obj,
+        &mut sd,
+        &x0,
+        &OptOptions { max_iters: 150, ..Default::default() },
+    );
+    assert!(res.e < res.trace[0].e * 0.99);
+    for w in res.trace.windows(2) {
+        assert!(w[1].e <= w[0].e + 1e-10);
+    }
+}
+
+#[test]
+fn kappa_zero_sd_equals_fp_directions() {
+    // section 2 refinement 3: kappa = 0 degenerates SD to the FP diagonal
+    let (obj, x0) = small_problem(20, Method::Ee, 10.0, 23);
+    let (_, g) = obj.eval(&x0);
+    let mut sd0 = nle::opt::sd::SpectralDirection::new(Some(0));
+    sd0.prepare(&obj, &x0).unwrap();
+    let p_sd = sd0.direction(&obj, &x0, &g, 0);
+    let mut fp = nle::opt::fp::FixedPoint::new();
+    fp.prepare(&obj, &x0).unwrap();
+    let p_fp = fp.direction(&obj, &x0, &g, 0);
+    // kappa = 0 keeps no off-diagonal weights: L+ becomes the zero
+    // matrix, so B = mu I — proportional to, not equal to, FP's 4 D+.
+    // Both must be strict descent; check angle between them instead.
+    let cos = nle::linalg::vecops::dot(&p_sd.data, &p_fp.data)
+        / (nle::linalg::vecops::nrm2(&p_sd.data) * nle::linalg::vecops::nrm2(&p_fp.data));
+    assert!(cos > 0.5, "kappa=0 SD and FP disagree: cos {cos}");
+}
+
+#[test]
+fn time_budget_is_respected() {
+    let (obj, x0) = small_problem(40, Method::Ee, 50.0, 29);
+    let mut sd = nle::opt::sd::SpectralDirection::new(None);
+    let t0 = std::time::Instant::now();
+    let res = minimize(
+        &obj,
+        &mut sd,
+        &x0,
+        &OptOptions {
+            max_iters: usize::MAX,
+            time_budget: Some(std::time::Duration::from_millis(300)),
+            rel_tol: 1e-16,
+            grad_tol: 0.0,
+            ..Default::default()
+        },
+    );
+    assert!(t0.elapsed().as_secs_f64() < 3.0, "budget wildly exceeded");
+    assert_eq!(res.stop, StopReason::TimeBudget);
+}

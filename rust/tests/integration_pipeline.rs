@@ -1,0 +1,132 @@
+//! End-to-end pipeline tests: data -> affinities -> objective ->
+//! coordinator jobs -> metrics, mirroring what the figure harnesses do
+//! at miniature scale.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use nle::coordinator::{run_batch, run_batch_sync, EmbeddingJob, JobEvent};
+use nle::data::{coil, mnist_like, synth};
+use nle::metrics::quality::label_knn_accuracy;
+use nle::objective::{Attractive, Method};
+
+#[test]
+fn coil_pipeline_produces_separable_embedding() {
+    let ds = coil::generate(&coil::CoilParams {
+        objects: 4,
+        views: 18,
+        ambient_dim: 64,
+        ..Default::default()
+    });
+    let p = nle::affinity::sne_affinities(&ds.y, 8.0);
+    let mut job = EmbeddingJob::native(
+        "coil-mini",
+        Method::Ee,
+        100.0,
+        Arc::new(Attractive::Dense(p)),
+        "sd",
+        None,
+    );
+    job.opts.max_iters = 300;
+    let res = job.run().unwrap();
+    let acc = label_knn_accuracy(&res.x, &ds.labels, 5);
+    assert!(acc > 0.8, "COIL-mini label accuracy {acc}");
+}
+
+#[test]
+fn mnist_like_sparse_pipeline_runs() {
+    let ds = mnist_like::generate(&mnist_like::MnistLikeParams {
+        n: 300,
+        ambient_dim: 96,
+        ..Default::default()
+    });
+    let p = nle::affinity::sne_affinities_sparse(&ds.y, 10.0, 30);
+    let mut job = EmbeddingJob::native(
+        "mnist-mini",
+        Method::Tsne,
+        1.0,
+        Arc::new(Attractive::Sparse(p)),
+        "sd",
+        None,
+    );
+    job.kappa = Some(7);
+    job.opts.max_iters = 150;
+    let res = job.run().unwrap();
+    assert!(res.e.is_finite());
+    let acc = label_knn_accuracy(&res.x, &ds.labels, 5);
+    assert!(acc > 0.5, "MNIST-mini label accuracy {acc}");
+}
+
+#[test]
+fn fig2_style_batch_under_budget() {
+    let ds = synth::clusters(60, 3, 12, 12.0, 9);
+    let p = Arc::new(Attractive::Dense(nle::affinity::sne_affinities(&ds.y, 8.0)));
+    let mut jobs: Vec<EmbeddingJob> = Vec::new();
+    for s in ["gd", "fp", "sd"] {
+        for seed in 0..3u64 {
+            let mut j = EmbeddingJob::native(
+                format!("{s}:{seed}"),
+                Method::Ssne,
+                1.0,
+                p.clone(),
+                s,
+                Some(Duration::from_millis(400)),
+            );
+            j.init.seed = seed;
+            j.opts.max_iters = 100_000;
+            j.opts.rel_tol = 1e-15;
+            jobs.push(j);
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let results = run_batch_sync(jobs, 1);
+    assert_eq!(results.len(), 9);
+    // sequential budgeted batch: total time ~ 9 * 0.4 s (plus overhead)
+    assert!(t0.elapsed() < Duration::from_secs(20));
+    for r in results {
+        let r = r.unwrap();
+        assert!(r.e.is_finite(), "{}", r.name);
+    }
+}
+
+#[test]
+fn batch_events_track_lifecycle() {
+    let ds = synth::clusters(30, 2, 8, 10.0, 11);
+    let p = Arc::new(Attractive::Dense(nle::affinity::sne_affinities(&ds.y, 6.0)));
+    let mut jobs = Vec::new();
+    for i in 0..3 {
+        let mut j = EmbeddingJob::native(
+            format!("ev{i}"),
+            Method::Ee,
+            5.0,
+            p.clone(),
+            "fp",
+            None,
+        );
+        j.opts.max_iters = 20;
+        jobs.push(j);
+    }
+    let (tx, rx) = std::sync::mpsc::channel();
+    let results = run_batch(jobs, 2, Some(tx));
+    assert!(results.iter().all(|r| r.is_ok()));
+    let events: Vec<JobEvent> = rx.try_iter().collect();
+    let started = events.iter().filter(|e| matches!(e, JobEvent::Started { .. })).count();
+    let finished = events.iter().filter(|e| matches!(e, JobEvent::Finished { .. })).count();
+    assert_eq!(started, 3);
+    assert_eq!(finished, 3);
+}
+
+#[test]
+fn embedding_csv_roundtrip_through_pipeline() {
+    let ds = synth::swiss_roll(50, 3, 0.01, 13);
+    let p = Arc::new(Attractive::Dense(nle::affinity::sne_affinities(&ds.y, 8.0)));
+    let mut job = EmbeddingJob::native("csv", Method::Ee, 50.0, p, "sd", None);
+    job.opts.max_iters = 50;
+    let res = job.run().unwrap();
+    let path = std::env::temp_dir().join("nle_pipeline_roundtrip.csv");
+    nle::data::loader::save_embedding_csv(&path, &res.x, &ds.labels).unwrap();
+    let loaded = nle::data::loader::load_csv(&path).unwrap();
+    assert_eq!(loaded.y.rows, 50);
+    assert!(loaded.y.max_abs_diff(&res.x) < 1e-5);
+    std::fs::remove_file(&path).ok();
+}

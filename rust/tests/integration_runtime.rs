@@ -1,0 +1,146 @@
+//! Integration tests for the XLA runtime path (L1/L2 artifacts executed
+//! through PJRT) and its parity with the native backend.
+//!
+//! These tests require `make artifacts` to have produced
+//! artifacts/manifest.txt; they are skipped (with a note) otherwise so
+//! `cargo test` works on a fresh checkout.
+
+use std::sync::Arc;
+
+use nle::data::Rng;
+use nle::linalg::dense::Mat;
+use nle::objective::native::NativeObjective;
+use nle::objective::xla::XlaObjective;
+use nle::objective::{Attractive, Method, Objective};
+use nle::runtime::ArtifactRegistry;
+
+fn registry() -> Option<Arc<ArtifactRegistry>> {
+    match ArtifactRegistry::open("artifacts") {
+        Ok(r) => Some(Arc::new(r)),
+        Err(e) => {
+            eprintln!("skipping runtime tests (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+fn test_weights(n: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let y = Mat::from_fn(n, 4, |_, _| rng.normal());
+    nle::affinity::sne_affinities(&y, (n as f64 / 6.0).max(3.0))
+}
+
+#[test]
+fn artifacts_cover_all_methods() {
+    let Some(reg) = registry() else { return };
+    let avail = reg.available();
+    for m in [Method::Spectral, Method::Ee, Method::Ssne, Method::Tsne] {
+        assert!(
+            avail.iter().any(|&(mm, _, _)| mm == m),
+            "no artifact for {}",
+            m.name()
+        );
+    }
+}
+
+#[test]
+fn xla_matches_native_energy_and_gradient() {
+    let Some(reg) = registry() else { return };
+    let n = 128; // must exist in the artifact grid
+    let p = test_weights(n, 1);
+    let mut rng = Rng::new(2);
+    let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+    for (method, lam) in [
+        (Method::Spectral, 0.0),
+        (Method::Ee, 10.0),
+        (Method::Ssne, 1.0),
+        (Method::Tsne, 1.0),
+    ] {
+        let native = NativeObjective::with_affinities(
+            method,
+            Attractive::Dense(p.clone()),
+            lam,
+            2,
+        );
+        let xla = XlaObjective::new(
+            reg.clone(),
+            method,
+            Attractive::Dense(p.clone()),
+            lam,
+            2,
+        )
+        .expect("build xla objective");
+        let (e_n, g_n) = native.eval(&x);
+        let (e_x, g_x) = xla.eval(&x);
+        // f32 artifact vs f64 native: tolerances scale with magnitudes
+        let e_tol = 1e-4 * e_n.abs().max(1.0);
+        assert!(
+            (e_n - e_x).abs() < e_tol,
+            "{}: E native {e_n} vs xla {e_x}",
+            method.name()
+        );
+        let g_scale = g_n.data.iter().fold(0.0f64, |m, v| m.max(v.abs())).max(1e-12);
+        let g_diff = g_n.max_abs_diff(&g_x);
+        assert!(
+            g_diff < 1e-3 * g_scale,
+            "{}: gradient diff {g_diff} (scale {g_scale})",
+            method.name()
+        );
+    }
+}
+
+#[test]
+fn xla_lambda_is_runtime_input() {
+    // one artifact serves the whole homotopy path: changing lambda
+    // changes E without recompiling
+    let Some(reg) = registry() else { return };
+    let n = 128;
+    let p = test_weights(n, 3);
+    let mut rng = Rng::new(4);
+    let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+    let mut obj =
+        XlaObjective::new(reg, Method::Ee, Attractive::Dense(p), 1.0, 2).unwrap();
+    let (e1, _) = obj.eval(&x);
+    obj.set_lambda(50.0);
+    let (e2, _) = obj.eval(&x);
+    assert!(e2 > e1, "lambda increase must increase EE energy ({e1} -> {e2})");
+}
+
+#[test]
+fn xla_executable_cache_reuses_compilations() {
+    let Some(reg) = registry() else { return };
+    let e1 = reg.executable(Method::Ee, 128, 2).unwrap();
+    let e2 = reg.executable(Method::Ee, 128, 2).unwrap();
+    assert!(Arc::ptr_eq(&e1, &e2), "executable not cached");
+}
+
+#[test]
+fn missing_shape_gives_helpful_error() {
+    let Some(reg) = registry() else { return };
+    let err = match reg.executable(Method::Ee, 12345, 2) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("expected an error for a missing shape"),
+    };
+    assert!(err.contains("12345"), "error should name the missing shape: {err}");
+    assert!(err.contains("make artifacts"), "error should say how to fix: {err}");
+}
+
+#[test]
+fn full_optimization_on_xla_backend() {
+    // the three-layer hot path end-to-end: SD + line search with every
+    // energy/gradient evaluation flowing through PJRT
+    let Some(reg) = registry() else { return };
+    let n = 128;
+    let p = test_weights(n, 5);
+    let obj = XlaObjective::new(reg, Method::Ee, Attractive::Dense(p), 20.0, 2).unwrap();
+    let x0 = nle::init::random_init(n, 2, 1e-3, 6);
+    let mut sd = nle::opt::sd::SpectralDirection::new(None);
+    let res = nle::opt::minimize(
+        &obj,
+        &mut sd,
+        &x0,
+        &nle::opt::OptOptions { max_iters: 60, ..Default::default() },
+    );
+    assert!(res.e < res.trace[0].e * 0.5, "insufficient decrease on XLA path");
+    assert!(obj.eval_count() > 60, "evaluations must flow through PJRT");
+}

@@ -1,0 +1,315 @@
+//! Property-based tests over the library's core invariants.
+//!
+//! The offline build has no proptest; `Cases` below is a small in-tree
+//! driver: seeded random instances, many cases per property, failure
+//! messages carrying the seed for reproduction.
+
+use nle::affinity::{sne_affinities, sparsify_weights};
+use nle::data::Rng;
+use nle::graph::{laplacian_dense, laplacian_sparse};
+use nle::linalg::chol;
+use nle::linalg::dense::Mat;
+use nle::linalg::ordering::rcm;
+use nle::linalg::spchol::cholesky_sparse;
+use nle::linalg::sparse::SpMat;
+use nle::linalg::vecops::{dot, nrm2};
+use nle::objective::native::NativeObjective;
+use nle::objective::{Attractive, Method, Objective};
+use nle::opt::linesearch::backtracking;
+
+/// Mini property-test driver: `n_cases` seeded instances of a property.
+struct Cases {
+    n_cases: usize,
+    base_seed: u64,
+}
+
+impl Cases {
+    fn new(n_cases: usize, base_seed: u64) -> Self {
+        Cases { n_cases, base_seed }
+    }
+
+    fn run(&self, prop: impl Fn(&mut Rng, u64)) {
+        for i in 0..self.n_cases {
+            let seed = self.base_seed.wrapping_add(i as u64);
+            let mut rng = Rng::new(seed);
+            prop(&mut rng, seed);
+        }
+    }
+}
+
+/// Random symmetric nonnegative weights with zero diagonal.
+fn rand_weights(rng: &mut Rng, n: usize) -> Mat {
+    let mut w = Mat::from_fn(n, n, |_, _| rng.uniform());
+    for i in 0..n {
+        *w.at_mut(i, i) = 0.0;
+        for j in 0..i {
+            let v = w.at(i, j);
+            *w.at_mut(j, i) = v;
+        }
+    }
+    w
+}
+
+/// Random spd sparse matrix (ring graph + random chords, diagonally
+/// dominant so it is pd).
+fn rand_spd_sparse(rng: &mut Rng, n: usize) -> SpMat {
+    let mut trip = Vec::new();
+    for i in 0..n {
+        trip.push((i, i, 2.0 + rng.uniform() * 3.0));
+        let j = (i + 1) % n;
+        let v = -rng.uniform();
+        trip.push((i, j, v));
+        trip.push((j, i, v));
+        if rng.uniform() < 0.3 {
+            let k = rng.below(n);
+            if k != i {
+                let v2 = -0.5 * rng.uniform();
+                trip.push((i, k, v2));
+                trip.push((k, i, v2));
+            }
+        }
+    }
+    let a = SpMat::from_triplets(n, n, trip);
+    let mut diag_boost = vec![0.0; n];
+    for c in 0..n {
+        for p in a.colptr[c]..a.colptr[c + 1] {
+            if a.rowind[p] != c {
+                diag_boost[c] += a.values[p].abs();
+            }
+        }
+    }
+    let boost = SpMat::from_triplets(n, n, (0..n).map(|i| (i, i, diag_boost[i] + 0.1)));
+    a.add(&boost)
+}
+
+#[test]
+fn prop_laplacian_psd_and_zero_rowsum() {
+    Cases::new(25, 100).run(|rng, seed| {
+        let n = 3 + rng.below(20);
+        let w = rand_weights(rng, n);
+        let l = laplacian_dense(&w);
+        for i in 0..n {
+            let s: f64 = l.row(i).iter().sum();
+            assert!(s.abs() < 1e-10, "seed {seed}: row sum {s}");
+        }
+        for _ in 0..5 {
+            let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let q = dot(&u, &l.matvec(&u));
+            assert!(q >= -1e-10, "seed {seed}: quadratic form {q}");
+        }
+    });
+}
+
+#[test]
+fn prop_sparse_dense_laplacian_agree() {
+    Cases::new(20, 200).run(|rng, seed| {
+        let n = 3 + rng.below(15);
+        let w = rand_weights(rng, n);
+        let ld = laplacian_dense(&w);
+        let ls = laplacian_sparse(&SpMat::from_dense(&w, 0.0));
+        assert!(
+            ls.to_dense().max_abs_diff(&ld) < 1e-12,
+            "seed {seed}: sparse != dense Laplacian"
+        );
+    });
+}
+
+#[test]
+fn prop_sparse_cholesky_matches_dense() {
+    Cases::new(20, 300).run(|rng, seed| {
+        let n = 4 + rng.below(30);
+        let a = rand_spd_sparse(rng, n);
+        let sp = cholesky_sparse(&a).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let ld = chol::cholesky(&a.to_dense()).unwrap();
+        let diff = sp.l.to_dense().max_abs_diff(&ld);
+        assert!(diff < 1e-8, "seed {seed}: factor diff {diff}");
+    });
+}
+
+#[test]
+fn prop_cholesky_solve_residual() {
+    Cases::new(20, 400).run(|rng, seed| {
+        let n = 4 + rng.below(40);
+        let a = rand_spd_sparse(rng, n);
+        let sp = cholesky_sparse(&a).unwrap();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut x = b.clone();
+        sp.solve(&mut x);
+        let r = a.matvec(&x);
+        let bn = nrm2(&b).max(1e-12);
+        for i in 0..n {
+            assert!(
+                (r[i] - b[i]).abs() < 1e-8 * bn,
+                "seed {seed}: residual {} at {i}",
+                r[i] - b[i]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_rcm_permutation_preserves_solution() {
+    Cases::new(15, 500).run(|rng, seed| {
+        let n = 5 + rng.below(25);
+        let a = rand_spd_sparse(rng, n);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut x_direct = b.clone();
+        cholesky_sparse(&a).unwrap().solve(&mut x_direct);
+        let perm = rcm(&a);
+        let ap = a.sym_perm(&perm);
+        let chol = cholesky_sparse(&ap).unwrap();
+        let mut bp: Vec<f64> = (0..n).map(|i| b[perm[i]]).collect();
+        chol.solve(&mut bp);
+        for i in 0..n {
+            assert!(
+                (bp[i] - x_direct[perm[i]]).abs() < 1e-7,
+                "seed {seed}: permuted solve mismatch"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_entropic_affinities_are_a_distribution() {
+    Cases::new(8, 600).run(|rng, seed| {
+        let n = 10 + rng.below(30);
+        let d = 2 + rng.below(4);
+        let y = Mat::from_fn(n, d, |_, _| rng.normal());
+        let perp = 3.0 + rng.uniform() * (n as f64 / 3.0 - 3.0);
+        let p = sne_affinities(&y, perp);
+        let total: f64 = p.data.iter().sum();
+        assert!((total - 1.0).abs() < 1e-8, "seed {seed}: sum {total}");
+        assert!(p.asymmetry() < 1e-12, "seed {seed}");
+        assert!(p.data.iter().all(|&v| v >= 0.0), "seed {seed}: negative affinity");
+    });
+}
+
+#[test]
+fn prop_sparsify_keeps_symmetry_and_nonnegativity() {
+    Cases::new(15, 700).run(|rng, seed| {
+        let n = 6 + rng.below(20);
+        let w = rand_weights(rng, n);
+        let kappa = 1 + rng.below(n - 2);
+        let s = sparsify_weights(&w, kappa);
+        assert!(s.asymmetry() < 1e-12, "seed {seed}");
+        assert!(s.values.iter().all(|&v| v >= 0.0), "seed {seed}");
+        assert!(s.nnz() <= w.rows * 2 * kappa, "seed {seed}: too dense");
+    });
+}
+
+#[test]
+fn prop_native_gradient_matches_finite_differences() {
+    Cases::new(6, 800).run(|rng, seed| {
+        let n = 6 + rng.below(10);
+        let w = rand_weights(rng, n);
+        let methods = [
+            (Method::Ee, 1.0 + rng.uniform() * 20.0),
+            (Method::Ssne, 1.0),
+            (Method::Tsne, 1.0),
+        ];
+        let (method, lam) = methods[rng.below(3)];
+        let obj = NativeObjective::with_affinities(method, Attractive::Dense(w), lam, 2);
+        let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let (_, g) = obj.eval(&x);
+        let eps = 1e-6;
+        for _ in 0..4 {
+            let (i, j) = (rng.below(n), rng.below(2));
+            let mut xp = x.clone();
+            *xp.at_mut(i, j) += eps;
+            let mut xm = x.clone();
+            *xm.at_mut(i, j) -= eps;
+            let fd = (obj.energy(&xp) - obj.energy(&xm)) / (2.0 * eps);
+            let gv = g.at(i, j);
+            assert!(
+                (fd - gv).abs() < 1e-4 * gv.abs().max(1.0),
+                "seed {seed} {}: fd {fd} vs {gv}",
+                method.name()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_every_strategy_produces_descent_directions() {
+    Cases::new(5, 900).run(|rng, seed| {
+        let n = 10 + rng.below(10);
+        let y = Mat::from_fn(n, 4, |_, _| rng.normal());
+        let p = sne_affinities(&y, (n as f64 / 4.0).max(2.0));
+        let obj =
+            NativeObjective::with_affinities(Method::Ee, Attractive::Dense(p), 10.0, 2);
+        let x = Mat::from_fn(n, 2, |_, _| 0.3 * rng.normal());
+        let (_, g) = obj.eval(&x);
+        for name in nle::opt::ALL_STRATEGIES {
+            let mut s = nle::opt::strategy_by_name(name, None).unwrap();
+            s.prepare(&obj, &x).unwrap();
+            let p_dir = s.direction(&obj, &x, &g, 0);
+            let gtp = dot(&p_dir.data, &g.data);
+            assert!(gtp < 0.0, "seed {seed}: {name} gave non-descent gtp = {gtp}");
+        }
+    });
+}
+
+#[test]
+fn prop_line_search_guarantees_sufficient_decrease() {
+    Cases::new(10, 1000).run(|rng, seed| {
+        let n = 8 + rng.below(12);
+        let w = rand_weights(rng, n);
+        let obj =
+            NativeObjective::with_affinities(Method::Ee, Attractive::Dense(w), 5.0, 2);
+        let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let (e0, g) = obj.eval(&x);
+        let p = Mat::from_vec(n, 2, g.data.iter().map(|v| -v).collect());
+        let gtp = dot(&g.data, &p.data);
+        let res = backtracking(&obj, &x, &p, e0, gtp, 1.0, 1e-4, 60);
+        assert!(res.success, "seed {seed}");
+        assert!(
+            res.e_new <= e0 + 1e-4 * res.alpha * gtp + 1e-9 * e0.abs(),
+            "seed {seed}: armijo violated"
+        );
+    });
+}
+
+#[test]
+fn prop_energies_decrease_monotonically_under_optimizer() {
+    Cases::new(4, 1100).run(|rng, seed| {
+        let n = 12;
+        let y = Mat::from_fn(n, 3, |_, _| rng.normal());
+        let p = sne_affinities(&y, 4.0);
+        let method = [Method::Ee, Method::Ssne, Method::Tsne][rng.below(3)];
+        let lam = if method == Method::Ee { 10.0 } else { 1.0 };
+        let obj = NativeObjective::with_affinities(method, Attractive::Dense(p), lam, 2);
+        let x0 = Mat::from_fn(n, 2, |_, _| 0.1 * rng.normal());
+        let mut sd = nle::opt::sd::SpectralDirection::new(None);
+        let res = nle::opt::minimize(
+            &obj,
+            &mut sd,
+            &x0,
+            &nle::opt::OptOptions { max_iters: 50, ..Default::default() },
+        );
+        for w in res.trace.windows(2) {
+            assert!(
+                w[1].e <= w[0].e + 1e-9 * w[0].e.abs().max(1.0),
+                "seed {seed}: energy increased {} -> {}",
+                w[0].e,
+                w[1].e
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_knn_symmetrized_edges_unique() {
+    Cases::new(10, 1200).run(|rng, seed| {
+        let n = 10 + rng.below(20);
+        let y = Mat::from_fn(n, 3, |_, _| rng.normal());
+        let k = 1 + rng.below(5);
+        let g = nle::affinity::knn(&y, k);
+        let edges = g.sym_edges();
+        let mut seen = std::collections::HashSet::new();
+        for &(i, j, d2) in &edges {
+            assert!(i < j, "seed {seed}");
+            assert!(d2 >= 0.0, "seed {seed}");
+            assert!(seen.insert((i, j)), "seed {seed}: duplicate edge ({i},{j})");
+        }
+    });
+}
