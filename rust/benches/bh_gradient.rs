@@ -1,0 +1,29 @@
+//! Gradient-engine comparison bench: exact O(N^2 d) sweeps vs the
+//! Barnes-Hut O(N log N + nnz) engine — the scaling wall the engine
+//! refactor removes.
+//!
+//! Delegates to the `scal` harness (bench_harness/scalability.rs) so
+//! there is exactly one implementation of the comparison protocol
+//! (workload, warmup, error metric); this target just picks
+//! bench-sized sweeps for EE and t-SNE. Full sweeps + CSV output:
+//! `cargo run --release -- scal`.
+
+use nle::bench_harness::scalability::{run, ScalConfig};
+use nle::objective::Method;
+
+fn main() {
+    for method in [Method::Ee, Method::Tsne] {
+        let lambda = if method == Method::Ee { 100.0 } else { 1.0 };
+        run(&ScalConfig {
+            sizes: vec![2_000, 8_000, 20_000],
+            thetas: vec![0.25, 0.5, 1.0],
+            method,
+            lambda,
+            reps: 3,
+            sd_iters: 0, // engine timing only; the SD demo lives in `scal`
+            csv_name: format!("scalability_{}.csv", method.name()),
+            ..Default::default()
+        })
+        .expect("scalability harness failed");
+    }
+}

@@ -50,6 +50,8 @@ pub fn run(cfg: &Fig4Config) -> anyhow::Result<()> {
     let dir = results_dir();
 
     for (method, lam, tag) in [(Method::Ee, cfg.lambda_ee, "ee"), (Method::Tsne, 1.0, "tsne")] {
+        // EngineSpec::Auto: exact at the default N = 2000, Barnes-Hut
+        // beyond 4096 — announced below so the curves are attributable
         let obj = NativeObjective::with_affinities(
             method,
             Attractive::Sparse(env.p.clone()),
@@ -59,8 +61,9 @@ pub fn run(cfg: &Fig4Config) -> anyhow::Result<()> {
         let x0 = crate::init::random_init(cfg.n, 2, 1e-4, 42);
         let mut writer = CurveWriter::create(&dir.join(format!("fig4_{tag}.csv")))?;
         println!(
-            "fig4 [{tag}]: {:?} budget/strategy",
-            cfg.budget
+            "fig4 [{tag}]: {:?} budget/strategy, {} gradient engine",
+            cfg.budget,
+            obj.engine_name()
         );
         println!(
             "  {:<8} {:>8} {:>12} {:>10} {:>10} {:>8}",

@@ -11,5 +11,6 @@ pub mod fig2;
 pub mod fig3;
 pub mod fig4;
 pub mod rates;
+pub mod scalability;
 
 pub use common::{coil_setup, mnist_setup, CoilEnv};

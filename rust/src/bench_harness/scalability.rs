@@ -1,0 +1,196 @@
+//! Engine scalability figure (the refactor's headline): exact vs
+//! Barnes–Hut wall-clock per (E, ∇E) evaluation and relative gradient
+//! error, swept across N and θ on a kNN-sparse swiss-roll workload —
+//! the large-N regime of paper section 3.2 that the exact O(N²d) engine
+//! cannot reach. Also demonstrates the spectral direction end-to-end on
+//! the Barnes–Hut engine (sparse-Laplacian Cholesky; no N×N dense
+//! matrix is ever materialized).
+//!
+//! Output: `results/scalability.csv` (long format: one row per
+//! (N, engine, θ)) and a printed summary table.
+
+use std::io::Write;
+use std::time::Instant;
+
+use super::common::results_dir;
+use crate::objective::engine::EngineSpec;
+use crate::objective::native::NativeObjective;
+use crate::objective::{Attractive, Method, Objective};
+use crate::opt::{minimize, OptOptions};
+
+pub struct ScalConfig {
+    pub sizes: Vec<usize>,
+    pub thetas: Vec<f64>,
+    pub method: Method,
+    pub lambda: f64,
+    pub perplexity: f64,
+    /// kNN candidate set size for the sparse affinities.
+    pub knn: usize,
+    /// timing repetitions per engine (one extra warmup evaluation).
+    pub reps: usize,
+    /// SD iterations at the largest N on the Barnes–Hut engine
+    /// (0 = skip); exercises the sparse Cholesky path end-to-end.
+    pub sd_iters: usize,
+    /// Output file under results/. Callers running several sweeps in
+    /// one process (benches/bh_gradient.rs, one per method) pass
+    /// distinct names — each `run` truncates its own file.
+    pub csv_name: String,
+}
+
+impl Default for ScalConfig {
+    fn default() -> Self {
+        ScalConfig {
+            sizes: vec![2_000, 5_000, 10_000, 20_000],
+            thetas: vec![0.2, 0.5, 0.8],
+            method: Method::Ee,
+            lambda: 100.0,
+            perplexity: 20.0,
+            knn: 60,
+            reps: 3,
+            sd_iters: 5,
+            csv_name: "scalability.csv".to_string(),
+        }
+    }
+}
+
+/// Mean seconds per call after one warmup.
+fn time_avg(reps: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps.max(1) {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps.max(1) as f64
+}
+
+pub fn run(cfg: &ScalConfig) -> anyhow::Result<()> {
+    let dir = results_dir();
+    let path = dir.join(&cfg.csv_name);
+    let mut file = std::fs::File::create(&path)?;
+    writeln!(file, "method,n,engine,theta,eval_s,speedup,grad_rel_err,energy_rel_err")?;
+    println!(
+        "scalability [{}]: sizes {:?}, thetas {:?}, k = {}",
+        cfg.method.name(),
+        cfg.sizes,
+        cfg.thetas,
+        cfg.knn
+    );
+    println!(
+        "  {:>7} {:>11} {:>6} {:>12} {:>9} {:>13} {:>13}",
+        "N", "engine", "theta", "eval (s)", "speedup", "grad relerr", "E relerr"
+    );
+
+    let n_max = cfg.sizes.iter().max().copied();
+    let mut sd_done = false;
+    for &n in &cfg.sizes {
+        // swiss roll in R^3: generation + exact kNN stay tractable at
+        // N = 20k (kNN is O(N^2 D) with D = 3, parallel over rows)
+        let data = crate::data::synth::swiss_roll(n, 3, 0.05, 42);
+        let k = cfg.knn.min(n.saturating_sub(1)).max(2);
+        let p = crate::affinity::sne_affinities_sparse(&data.y, cfg.perplexity.min(k as f64), k);
+        let x = crate::init::random_init(n, 2, 1e-2, 1);
+
+        let exact = NativeObjective::with_engine(
+            cfg.method,
+            Attractive::Sparse(p.clone()),
+            cfg.lambda,
+            2,
+            EngineSpec::Exact,
+        );
+        let (e_ref, g_ref) = exact.eval(&x);
+        let t_exact = time_avg(cfg.reps, || {
+            let _ = exact.eval(&x);
+        });
+        writeln!(file, "{},{n},exact,,{t_exact:.6e},1.0,0.0,0.0", cfg.method.name())?;
+        println!(
+            "  {n:>7} {:>11} {:>6} {t_exact:>12.4} {:>9} {:>13} {:>13}",
+            "exact", "-", "1.0x", "-", "-"
+        );
+
+        for &theta in &cfg.thetas {
+            let bh = NativeObjective::with_engine(
+                cfg.method,
+                Attractive::Sparse(p.clone()),
+                cfg.lambda,
+                2,
+                EngineSpec::BarnesHut { theta },
+            );
+            let (e_bh, g_bh) = bh.eval(&x);
+            let t_bh = time_avg(cfg.reps, || {
+                let _ = bh.eval(&x);
+            });
+            let gerr = g_bh.rel_fro_err(&g_ref);
+            let eerr = (e_bh - e_ref).abs() / e_ref.abs().max(1e-300);
+            let speedup = t_exact / t_bh.max(1e-12);
+            writeln!(
+                file,
+                "{},{n},bh,{theta},{t_bh:.6e},{speedup:.3},{gerr:.6e},{eerr:.6e}",
+                cfg.method.name()
+            )?;
+            println!(
+                "  {n:>7} {:>11} {theta:>6.2} {t_bh:>12.4} {:>8.1}x {gerr:>13.3e} {eerr:>13.3e}",
+                "barnes-hut", speedup
+            );
+        }
+
+        // spectral direction end-to-end on the BH engine at the largest
+        // N, reusing this iteration's affinities (recomputing the exact
+        // kNN at N = 20k would double the most expensive setup step):
+        // the sparse kNN W+ feeds the kappa-sparsified Laplacian
+        // Cholesky, so the pipeline is O(N log N + nnz) per iteration.
+        if cfg.sd_iters > 0 && Some(n) == n_max && !sd_done {
+            sd_done = true;
+            let obj = NativeObjective::with_engine(
+                cfg.method,
+                Attractive::Sparse(p),
+                cfg.lambda,
+                2,
+                EngineSpec::BarnesHut { theta: 0.5 },
+            );
+            let x0 = crate::init::random_init(n, 2, 1e-4, 0);
+            let mut sd = crate::opt::sd::SpectralDirection::new(Some(7));
+            let t0 = Instant::now();
+            let res = minimize(
+                &obj,
+                &mut sd,
+                &x0,
+                &OptOptions { max_iters: cfg.sd_iters, ..Default::default() },
+            );
+            println!(
+                "  sd+bh end-to-end at N = {n}: E {:.4e} -> {:.4e} in {} iters, {:.2}s \
+                 (setup {:.2}s, factor nnz {})",
+                res.trace.first().map(|t| t.e).unwrap_or(f64::NAN),
+                res.e,
+                res.iters(),
+                t0.elapsed().as_secs_f64(),
+                sd.setup_seconds,
+                sd.factor_nnz
+            );
+        }
+    }
+    println!("scalability: wrote {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny smoke run: the harness completes and writes the CSV.
+    #[test]
+    fn smoke_small() {
+        let cfg = ScalConfig {
+            sizes: vec![150],
+            thetas: vec![0.5],
+            reps: 1,
+            sd_iters: 2,
+            knn: 12,
+            perplexity: 4.0,
+            ..Default::default()
+        };
+        run(&cfg).unwrap();
+        let text = std::fs::read_to_string(results_dir().join("scalability.csv")).unwrap();
+        assert!(text.lines().count() >= 3);
+        assert!(text.contains("barnes-hut") || text.contains(",bh,"));
+    }
+}

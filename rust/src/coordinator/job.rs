@@ -4,6 +4,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::linalg::dense::Mat;
+use crate::objective::engine::EngineSpec;
 use crate::objective::native::NativeObjective;
 use crate::objective::xla::XlaObjective;
 use crate::objective::{Attractive, Method, Objective};
@@ -45,6 +46,9 @@ pub struct EmbeddingJob {
     pub strategy: String,
     /// kappa sparsification for SD/SD-
     pub kappa: Option<usize>,
+    /// gradient engine for the native backend (ignored by XLA):
+    /// `Auto` picks Barnes–Hut on large kNN-sparse problems
+    pub engine: EngineSpec,
     pub init: InitSpec,
     pub opts: OptOptions,
     pub backend: Backend,
@@ -68,6 +72,7 @@ impl EmbeddingJob {
             dim: 2,
             strategy: strategy.to_string(),
             kappa: None,
+            engine: EngineSpec::Auto,
             init: InitSpec::default(),
             opts: OptOptions { time_budget: budget, ..Default::default() },
             backend: Backend::Native,
@@ -78,11 +83,12 @@ impl EmbeddingJob {
     pub fn build_objective(&self) -> anyhow::Result<Box<dyn Objective>> {
         let wp = (*self.weights).clone();
         Ok(match &self.backend {
-            Backend::Native => Box::new(NativeObjective::with_affinities(
+            Backend::Native => Box::new(NativeObjective::with_engine(
                 self.method,
                 wp,
                 self.lambda,
                 self.dim,
+                self.engine,
             )),
             Backend::Xla(reg) => Box::new(XlaObjective::new(
                 reg.clone(),
@@ -150,6 +156,27 @@ mod tests {
         let res = job.run().unwrap();
         assert!(res.e.is_finite());
         assert!(res.iters <= 50);
+        assert_eq!(res.x.rows, n);
+    }
+
+    #[test]
+    fn job_with_explicit_bh_engine_runs() {
+        let n = 24;
+        let mut rng = Rng::new(7);
+        let y = Mat::from_fn(n, 3, |_, _| rng.normal());
+        let p = crate::affinity::sne_affinities_sparse(&y, 4.0, 8);
+        let mut job = EmbeddingJob::native(
+            "bh",
+            Method::Ee,
+            10.0,
+            Arc::new(Attractive::Sparse(p)),
+            "sd",
+            None,
+        );
+        job.engine = EngineSpec::BarnesHut { theta: 0.5 };
+        job.opts.max_iters = 20;
+        let res = job.run().unwrap();
+        assert!(res.e.is_finite());
         assert_eq!(res.x.rows, n);
     }
 

@@ -6,13 +6,16 @@
 //! system:
 //!
 //! * **Layer 3 (this crate)** — the paper's contribution: the general
-//!   embedding formulation `E = E+ + lambda E-` ([`objective`]), seven
-//!   partial-Hessian direction strategies including the **spectral
-//!   direction** ([`opt`]), homotopy optimization, the full linear-algebra
-//!   substrate (sparse Cholesky, CG, Lanczos — [`linalg`]), entropic
-//!   affinities ([`affinity`]), datasets ([`data`]), quality metrics
-//!   ([`metrics`]), an embedding-job coordinator ([`coordinator`]) and
-//!   the figure-reproduction harness ([`bench_harness`]).
+//!   embedding formulation `E = E+ + lambda E-` ([`objective`]) with
+//!   pluggable gradient engines (exact O(N²d) or O(N log N) Barnes–Hut
+//!   over a quadtree/octree — [`objective::engine`], [`spatial`]),
+//!   seven partial-Hessian direction strategies including the
+//!   **spectral direction** ([`opt`]), homotopy optimization, the full
+//!   linear-algebra substrate (sparse Cholesky, CG, Lanczos —
+//!   [`linalg`]), entropic affinities ([`affinity`]), datasets
+//!   ([`data`]), quality metrics ([`metrics`]), an embedding-job
+//!   coordinator ([`coordinator`]) and the figure-reproduction harness
+//!   ([`bench_harness`]).
 //! * **Layer 2 (python/compile/model.py)** — the objectives as jax
 //!   functions, AOT-lowered to HLO text once by `make artifacts`.
 //! * **Layer 1 (python/compile/kernels/pairwise.py)** — the fused
@@ -30,11 +33,35 @@
 //!
 //! let data = nle::data::synth::swiss_roll(500, 3, 0.05, 42);
 //! let p = nle::affinity::sne_affinities(&data.y, 20.0);
+//! // engine selection is automatic: exact O(N^2 d) sweeps at this N
 //! let obj = NativeObjective::with_affinities(Method::Ee, Attractive::Dense(p), 100.0, 2);
 //! let x0 = nle::init::random_init(500, 2, 1e-4, 0);
 //! let mut sd = SpectralDirection::new(None);
 //! let res = minimize(&obj, &mut sd, &x0, &OptOptions::default());
 //! println!("final E = {}", res.e);
+//! ```
+//!
+//! At large N, switch the attraction to kNN-sparse affinities and the
+//! repulsion to the O(N log N) Barnes–Hut engine (picked automatically
+//! by `EngineSpec::Auto` beyond ~4k points, or forced explicitly):
+//!
+//! ```no_run
+//! use nle::prelude::*;
+//!
+//! let n = 20_000;
+//! let data = nle::data::synth::swiss_roll(n, 3, 0.05, 42);
+//! let p = nle::affinity::sne_affinities_sparse(&data.y, 20.0, 60);
+//! let obj = NativeObjective::with_engine(
+//!     Method::Ee,
+//!     Attractive::Sparse(p),
+//!     100.0,
+//!     2,
+//!     EngineSpec::BarnesHut { theta: 0.5 },
+//! );
+//! let x0 = nle::init::random_init(n, 2, 1e-4, 0);
+//! let mut sd = SpectralDirection::new(Some(7)); // sparse-Laplacian Cholesky
+//! let res = minimize(&obj, &mut sd, &x0, &OptOptions::default());
+//! println!("final E = {} ({} engine)", res.e, obj.engine_name());
 //! ```
 
 pub mod affinity;
@@ -49,10 +76,14 @@ pub mod objective;
 pub mod opt;
 pub mod par;
 pub mod runtime;
+pub mod spatial;
 
 /// Convenient re-exports for examples and binaries.
 pub mod prelude {
     pub use crate::linalg::dense::Mat;
+    pub use crate::objective::engine::{
+        BarnesHutEngine, EngineSpec, ExactEngine, GradientEngine,
+    };
     pub use crate::objective::native::NativeObjective;
     pub use crate::objective::xla::XlaObjective;
     pub use crate::objective::{Attractive, Method, Objective, Repulsive};

@@ -109,6 +109,19 @@ impl Mat {
         vecops::nrm2(&self.data)
     }
 
+    /// Relative Frobenius error `||self - other||_F / ||other||_F`
+    /// (with `other` the reference; floored to avoid 0/0). The metric
+    /// the engine-parity tests and scalability harness report.
+    pub fn rel_fro_err(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut num = 0.0;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            let d = a - b;
+            num += d * d;
+        }
+        num.sqrt() / other.fro().max(1e-300)
+    }
+
     /// Max |a_ij - b_ij|.
     pub fn max_abs_diff(&self, other: &Mat) -> f64 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
@@ -205,6 +218,15 @@ mod tests {
         m.center();
         let mu = m.col_means();
         assert!(mu.iter().all(|v| v.abs() < 1e-12));
+    }
+
+    #[test]
+    fn rel_fro_err_basics() {
+        let a = Mat::from_vec(1, 2, vec![3.0, 4.0]);
+        let b = Mat::zeros(1, 2);
+        assert_eq!(a.rel_fro_err(&a), 0.0);
+        // ||a - b|| = 5, ||a|| = 5 -> err vs reference a is 1
+        assert!((b.rel_fro_err(&a) - 1.0).abs() < 1e-15);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 use std::time::Duration;
 
-use nle::bench_harness::{fig1, fig2, fig3, fig4, rates};
+use nle::bench_harness::{fig1, fig2, fig3, fig4, rates, scalability};
 use nle::prelude::*;
 
 const USAGE: &str = "\
@@ -30,11 +30,17 @@ COMMANDS
   fig4    large-scale learning curves (EE + t-SNE), sparse SD
           [--n 2000] [--budget 60] [--kappa 7] [--strategies fp,lbfgs,sd,sdm]
   rates   theorem 2.1 rate constants r = ||B^-1 H - I|| [--n 40]
+  scal    gradient-engine scalability: exact vs Barnes-Hut wall-clock
+          and gradient error across N and theta (kNN-sparse swiss roll)
+          [--sizes 2000,5000,10000,20000] [--thetas 0.2,0.5,0.8]
+          [--method ee] [--lambda 100] [--knn 60] [--reps 3] [--sd-iters 5]
   all     run every experiment at default scale
   embed   one embedding run
           [--data swiss|coil|mnist|clusters] [--n 500] [--method ee]
           [--strategy sd] [--lambda 100] [--perplexity 20]
-          [--max-iters 500] [--backend native|xla] [--out results/embedding.csv]
+          [--max-iters 500] [--backend native|xla]
+          [--engine auto|exact|bh|bh:<theta>] [--knn 0 (0 = dense W+)]
+          [--out results/embedding.csv]
   info    list available AOT artifacts [--artifacts artifacts]
 ";
 
@@ -76,6 +82,16 @@ fn parse_strategies(s: &str) -> Vec<String> {
     s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect()
 }
 
+/// Parse a comma-separated list, failing loudly on any malformed entry
+/// (a silently dropped `20k` would otherwise yield an empty sweep).
+fn parse_csv<T: std::str::FromStr>(key: &str, s: &str) -> anyhow::Result<Vec<T>> {
+    let vals: Option<Vec<T>> = s.split(',').map(|x| x.trim().parse().ok()).collect();
+    match vals {
+        Some(v) if !v.is_empty() => Ok(v),
+        _ => anyhow::bail!("bad --{key} value {s:?} (want a comma-separated list)"),
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first().cloned() else {
@@ -115,6 +131,24 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         }),
         "rates" => rates::run(&rates::RatesConfig { n: args.get("n", 40), ..Default::default() }),
+        "scal" => {
+            let sizes: Vec<usize> =
+                parse_csv("sizes", &args.get_str("sizes", "2000,5000,10000,20000"))?;
+            let thetas: Vec<f64> = parse_csv("thetas", &args.get_str("thetas", "0.2,0.5,0.8"))?;
+            let method = Method::parse(&args.get_str("method", "ee"))
+                .ok_or_else(|| anyhow::anyhow!("bad method"))?;
+            scalability::run(&scalability::ScalConfig {
+                sizes,
+                thetas,
+                method,
+                lambda: args.get("lambda", 100.0),
+                perplexity: args.get("perplexity", 20.0),
+                knn: args.get("knn", 60),
+                reps: args.get("reps", 3),
+                sd_iters: args.get("sd_iters", 5),
+                ..Default::default()
+            })
+        }
         "all" => {
             fig1::run(&fig1::Fig1Config {
                 budget: Duration::from_secs(10),
@@ -132,6 +166,11 @@ fn main() -> anyhow::Result<()> {
             fig4::run(&fig4::Fig4Config {
                 n: 1000,
                 budget: Duration::from_secs(30),
+                ..Default::default()
+            })?;
+            scalability::run(&scalability::ScalConfig {
+                sizes: vec![1000, 2000],
+                sd_iters: 3,
                 ..Default::default()
             })?;
             rates::run(&rates::RatesConfig::default())
@@ -158,17 +197,33 @@ fn main() -> anyhow::Result<()> {
             let perplexity: f64 = args.get("perplexity", 20.0);
             let strategy = args.get_str("strategy", "sd");
             let backend = args.get_str("backend", "native");
-            let p = nle::affinity::sne_affinities(&ds.y, perplexity.min(n_actual as f64 / 3.0));
+            let engine = EngineSpec::parse(&args.get_str("engine", "auto"))
+                .ok_or_else(|| anyhow::anyhow!("bad engine (auto|exact|bh|bh:<theta>)"))?;
+            anyhow::ensure!(n_actual >= 2, "dataset has only {n_actual} points");
+            // --knn k > 0 switches to kNN-sparse affinities, the
+            // representation the Barnes-Hut engine streams in O(nnz)
+            let knn: usize = args.get("knn", 0);
+            let wp = if knn > 0 {
+                let k = knn.min(n_actual - 1);
+                Attractive::Sparse(nle::affinity::sne_affinities_sparse(
+                    &ds.y,
+                    perplexity.min(k as f64),
+                    k,
+                ))
+            } else {
+                Attractive::Dense(
+                    nle::affinity::sne_affinities(&ds.y, perplexity.min(n_actual as f64 / 3.0)),
+                )
+            };
             let obj: Box<dyn Objective> = match backend.as_str() {
-                "native" => Box::new(NativeObjective::with_affinities(
-                    method,
-                    Attractive::Dense(p),
-                    lambda,
-                    2,
-                )),
+                "native" => {
+                    let native = NativeObjective::with_engine(method, wp, lambda, 2, engine);
+                    println!("embed: native backend, {} engine", native.engine_name());
+                    Box::new(native)
+                }
                 "xla" => {
                     let reg = std::sync::Arc::new(ArtifactRegistry::open("artifacts")?);
-                    Box::new(XlaObjective::new(reg, method, Attractive::Dense(p), lambda, 2)?)
+                    Box::new(XlaObjective::new(reg, method, wp, lambda, 2)?)
                 }
                 other => anyhow::bail!("unknown backend {other}"),
             };

@@ -1,0 +1,256 @@
+//! Barnes–Hut gradient engine: O(N log N + nnz(W⁺)) per evaluation.
+//!
+//! The attractive term of every method streams over the *stored*
+//! attractive weights (O(nnz) for the kNN-sparse large-N path, as in
+//! Barnes-Hut-SNE, van der Maaten 2013). The repulsive term is what
+//! costs O(N²) exactly, and is approximated per row by θ-criterion
+//! traversal of a quadtree/octree over the embedding
+//! ([`crate::spatial::NTree`]):
+//!
+//! * **EE** (uniform W⁻ = c): Gaussian field `F_n = Σ_m e^{-d²_nm}` and
+//!   force `Σ_m e^{-d²}(x_n - x_m)`; a cell of count C at its center of
+//!   mass x_c contributes `C e^{-d²_c}` / `C e^{-d²_c}(x_n - x_c)`.
+//!   `E⁻ = c Σ_n F_n`, `∇⁻_n = -4 λ c force_n`.
+//! * **s-SNE**: same Gaussian field; the partition sum is `Z = Σ_n F_n`
+//!   and the repulsive gradient is `-4 λ/Z · force_n` — one traversal
+//!   per row yields both, with the 1/Z normalization applied after the
+//!   global reduction (exactly the Barnes-Hut-SNE trick).
+//! * **t-SNE**: Student field `Σ K` (K = 1/(1+d²)) for Z, force
+//!   `Σ K²(x_n - x_m)`; cells contribute `C·K(d²_c)` and
+//!   `C·K²(d²_c)(x_n - x_c)`.
+//!
+//! The tree is rebuilt per evaluation (the embedding moves every
+//! iteration); the build is O(N log N) and well below traversal cost.
+//! θ → 0 degenerates to the exact sums, which is how the engine is
+//! property-tested against [`super::ExactEngine`]. Configurations the
+//! tree cannot serve (d > 3, dense W⁻) are resolved to the exact
+//! engine up front by [`super::EngineSpec::build`]; the per-call
+//! fallback below only defends direct trait users who construct
+//! [`BarnesHutEngine`] without going through the spec.
+
+use super::{
+    attract_row_stream, collect_rows, EngineContext, EngineSpec, ExactEngine, GradientEngine,
+};
+use crate::linalg::dense::Mat;
+use crate::objective::{Method, Repulsive};
+use crate::spatial::{NTree, Visit};
+
+pub struct BarnesHutEngine {
+    theta: f64,
+}
+
+impl BarnesHutEngine {
+    pub fn new(theta: f64) -> Self {
+        assert!(theta.is_finite() && theta >= 0.0, "theta must be >= 0 (got {theta})");
+        BarnesHutEngine { theta }
+    }
+
+    pub fn theta(&self) -> f64 {
+        self.theta
+    }
+
+    /// Uniform repulsive weight, if EE can be tree-served.
+    fn uniform_wm(ctx: &EngineContext<'_>) -> f64 {
+        match ctx.wm {
+            Repulsive::Uniform(c) => *c,
+            Repulsive::Dense(_) => unreachable!("checked by bh_applicable"),
+        }
+    }
+
+    /// Per-row repulsive field and (optionally) unnormalized force for
+    /// the Gaussian kernel (EE, s-SNE): field += C e^{-d²},
+    /// force += C e^{-d²}(x_n - x_c).
+    fn gaussian_row(
+        &self,
+        tree: &NTree<'_>,
+        x: &Mat,
+        row: usize,
+        force: Option<&mut [f64]>,
+    ) -> f64 {
+        let xn = x.row(row);
+        let d = x.cols;
+        let mut field = 0.0;
+        match force {
+            Some(force) => {
+                tree.traverse(row, self.theta, |v| match v {
+                    Visit::Cell { com, count, d2 } => {
+                        let k = count * (-d2).exp();
+                        field += k;
+                        for j in 0..d {
+                            force[j] += k * (xn[j] - com[j]);
+                        }
+                    }
+                    Visit::Point { m, d2 } => {
+                        let k = (-d2).exp();
+                        field += k;
+                        let xm = x.row(m);
+                        for j in 0..d {
+                            force[j] += k * (xn[j] - xm[j]);
+                        }
+                    }
+                });
+            }
+            None => {
+                tree.traverse(row, self.theta, |v| match v {
+                    Visit::Cell { count, d2, .. } => field += count * (-d2).exp(),
+                    Visit::Point { d2, .. } => field += (-d2).exp(),
+                });
+            }
+        }
+        field
+    }
+
+    /// Per-row Student field (Σ K for Z) and optionally the force
+    /// Σ K²(x_n - x_m) for t-SNE.
+    fn student_row(
+        &self,
+        tree: &NTree<'_>,
+        x: &Mat,
+        row: usize,
+        force: Option<&mut [f64]>,
+    ) -> f64 {
+        let xn = x.row(row);
+        let d = x.cols;
+        let mut field = 0.0;
+        match force {
+            Some(force) => {
+                tree.traverse(row, self.theta, |v| match v {
+                    Visit::Cell { com, count, d2 } => {
+                        let k = 1.0 / (1.0 + d2);
+                        field += count * k;
+                        let k2 = count * k * k;
+                        for j in 0..d {
+                            force[j] += k2 * (xn[j] - com[j]);
+                        }
+                    }
+                    Visit::Point { m, d2 } => {
+                        let k = 1.0 / (1.0 + d2);
+                        field += k;
+                        let k2 = k * k;
+                        let xm = x.row(m);
+                        for j in 0..d {
+                            force[j] += k2 * (xn[j] - xm[j]);
+                        }
+                    }
+                });
+            }
+            None => {
+                tree.traverse(row, self.theta, |v| match v {
+                    Visit::Cell { count, d2, .. } => field += count / (1.0 + d2),
+                    Visit::Point { d2, .. } => field += 1.0 / (1.0 + d2),
+                });
+            }
+        }
+        field
+    }
+}
+
+impl GradientEngine for BarnesHutEngine {
+    fn name(&self) -> &'static str {
+        "barnes-hut"
+    }
+
+    fn eval(&self, ctx: &EngineContext<'_>, x: &Mat) -> (f64, Mat) {
+        if !EngineSpec::bh_applicable(ctx.method, ctx.wm, x.cols) {
+            return ExactEngine.eval(ctx, x);
+        }
+        let n = x.rows;
+        let d = x.cols;
+        match ctx.method {
+            Method::Spectral => {
+                // attraction only: identical to the exact streaming path
+                let results: Vec<(f64, Vec<f64>)> = crate::par::par_map(n, |row| {
+                    let mut gn = vec![0.0; d];
+                    let e = attract_row_stream(ctx.method, ctx.wp, x, row, Some(&mut gn));
+                    (e, gn)
+                });
+                collect_rows(n, d, results, 0.0)
+            }
+            Method::Ee => {
+                let c = Self::uniform_wm(ctx);
+                let lam = ctx.lambda;
+                let tree = NTree::build(x);
+                let results: Vec<(f64, Vec<f64>)> = crate::par::par_map(n, |row| {
+                    let mut gn = vec![0.0; d];
+                    let mut e = attract_row_stream(ctx.method, ctx.wp, x, row, Some(&mut gn));
+                    let mut force = vec![0.0; d];
+                    let field = self.gaussian_row(&tree, x, row, Some(&mut force));
+                    e += lam * c * field;
+                    for j in 0..d {
+                        gn[j] -= 4.0 * lam * c * force[j];
+                    }
+                    (e, gn)
+                });
+                collect_rows(n, d, results, 0.0)
+            }
+            Method::Ssne | Method::Tsne => {
+                let lam = ctx.lambda;
+                let tree = NTree::build(x);
+                // one traversal per row: attraction energy + gradient,
+                // repulsive field (for Z) + unnormalized force. The
+                // buffer packs [attr grad | raw force] per row.
+                let rows: Vec<(f64, f64, Vec<f64>)> = crate::par::par_map(n, |row| {
+                    let mut buf = vec![0.0; 2 * d];
+                    let (attr_g, force) = buf.split_at_mut(d);
+                    let e_attr = attract_row_stream(ctx.method, ctx.wp, x, row, Some(attr_g));
+                    let field = match ctx.method {
+                        Method::Ssne => self.gaussian_row(&tree, x, row, Some(force)),
+                        Method::Tsne => self.student_row(&tree, x, row, Some(force)),
+                        _ => unreachable!(),
+                    };
+                    (e_attr, field, buf)
+                });
+                let (mut e_attr, mut z) = (0.0, 0.0);
+                for (ea, f, _) in &rows {
+                    e_attr += ea;
+                    z += f;
+                }
+                let scale = 4.0 * lam / z;
+                let mut g = Mat::zeros(n, d);
+                for (row, (_, _, buf)) in rows.into_iter().enumerate() {
+                    let gr = g.row_mut(row);
+                    for j in 0..d {
+                        gr[j] = buf[j] - scale * buf[d + j];
+                    }
+                }
+                (e_attr + lam * z.ln(), g)
+            }
+        }
+    }
+
+    fn energy(&self, ctx: &EngineContext<'_>, x: &Mat) -> f64 {
+        if !EngineSpec::bh_applicable(ctx.method, ctx.wm, x.cols) {
+            return ExactEngine.energy(ctx, x);
+        }
+        let n = x.rows;
+        match ctx.method {
+            Method::Spectral => {
+                crate::par::par_sum(n, |row| attract_row_stream(ctx.method, ctx.wp, x, row, None))
+            }
+            Method::Ee => {
+                let c = Self::uniform_wm(ctx);
+                let lam = ctx.lambda;
+                let tree = NTree::build(x);
+                crate::par::par_sum(n, |row| {
+                    attract_row_stream(ctx.method, ctx.wp, x, row, None)
+                        + lam * c * self.gaussian_row(&tree, x, row, None)
+                })
+            }
+            Method::Ssne | Method::Tsne => {
+                let tree = NTree::build(x);
+                let parts: Vec<(f64, f64)> = crate::par::par_map(n, |row| {
+                    let e_attr = attract_row_stream(ctx.method, ctx.wp, x, row, None);
+                    let field = match ctx.method {
+                        Method::Ssne => self.gaussian_row(&tree, x, row, None),
+                        Method::Tsne => self.student_row(&tree, x, row, None),
+                        _ => unreachable!(),
+                    };
+                    (e_attr, field)
+                });
+                let (e_attr, z) =
+                    parts.into_iter().fold((0.0, 0.0), |(ea, zz), (e, f)| (ea + e, zz + f));
+                e_attr + ctx.lambda * z.ln()
+            }
+        }
+    }
+}

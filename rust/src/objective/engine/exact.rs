@@ -1,0 +1,239 @@
+//! The exact O(N²d) gradient engine — the reference semantics.
+//!
+//! Streams the pairwise computation row-by-row in parallel (O(Nd)
+//! memory, no N×N intermediates), fusing energy terms so each squared
+//! distance is computed once per pair. These are the row loops that
+//! lived inside `NativeObjective` before the engine refactor; their
+//! semantics mirror python/compile/kernels/ref.py exactly and every
+//! other engine is property-tested against them.
+//!
+//! Gradients are the Laplacian forms of the paper (eqs. 2-3) rearranged
+//! per-row: for weights w_nm, `(4 X L)_n = 4 Σ_m w_nm (x_n - x_m)`.
+
+use super::{attract_row_stream, collect_rows, EngineContext, GradientEngine};
+use crate::linalg::dense::Mat;
+use crate::linalg::vecops::sqdist;
+use crate::objective::{Attractive, Method, Repulsive};
+
+/// The exact engine is stateless: everything comes from the context.
+pub struct ExactEngine;
+
+/// Cursor over one row of the attractive weights during a full 0..N
+/// sweep: O(1) amortized for both dense rows and sorted sparse columns.
+enum WpRow<'a> {
+    Dense(&'a [f64]),
+    Sparse { rows: &'a [usize], vals: &'a [f64], pos: usize },
+}
+
+impl<'a> WpRow<'a> {
+    #[inline]
+    fn at(&mut self, m: usize) -> f64 {
+        match self {
+            WpRow::Dense(r) => r[m],
+            WpRow::Sparse { rows, vals, pos } => {
+                while *pos < rows.len() && rows[*pos] < m {
+                    *pos += 1;
+                }
+                if *pos < rows.len() && rows[*pos] == m {
+                    vals[*pos]
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+}
+
+/// Row cursor for the fused sweeps.
+fn wp_row(wp: &Attractive, n: usize) -> WpRow<'_> {
+    match wp {
+        Attractive::Dense(w) => WpRow::Dense(w.row(n)),
+        Attractive::Sparse(s) => WpRow::Sparse {
+            rows: &s.rowind[s.colptr[n]..s.colptr[n + 1]],
+            vals: &s.values[s.colptr[n]..s.colptr[n + 1]],
+            pos: 0,
+        },
+    }
+}
+
+#[inline]
+fn wm_at(wm: &Repulsive, n: usize, m: usize) -> f64 {
+    match wm {
+        Repulsive::Uniform(c) => {
+            if n == m {
+                0.0
+            } else {
+                *c
+            }
+        }
+        Repulsive::Dense(w) => w.at(n, m),
+    }
+}
+
+/// Fused EE row: one pass over m computing d² once per pair and
+/// accumulating attraction + repulsion energy and (optionally) the
+/// gradient. Returns the row's full energy contribution.
+fn ee_row_fused(ctx: &EngineContext<'_>, x: &Mat, n: usize, mut gn: Option<&mut [f64]>) -> f64 {
+    let d = x.cols;
+    let xn = x.row(n);
+    let lam = ctx.lambda;
+    let mut wp = wp_row(ctx.wp, n);
+    let mut e = 0.0;
+    for m in 0..x.rows {
+        if m == n {
+            continue;
+        }
+        let xm = x.row(m);
+        let d2 = sqdist(xn, xm);
+        let wr = wp.at(m);
+        let wrep = wm_at(ctx.wm, n, m);
+        let k = if wrep != 0.0 { (-d2).exp() } else { 0.0 };
+        e += wr * d2 + lam * wrep * k;
+        if let Some(gn) = gn.as_deref_mut() {
+            let coef = 4.0 * (wr - lam * wrep * k);
+            if d == 2 {
+                gn[0] += coef * (xn[0] - xm[0]);
+                gn[1] += coef * (xn[1] - xm[1]);
+            } else {
+                for i in 0..d {
+                    gn[i] += coef * (xn[i] - xm[i]);
+                }
+            }
+        }
+    }
+    e
+}
+
+/// Normalized-model pass 1 for one row: attraction energy + this row's
+/// partition-sum contribution, one d² per pair.
+fn norm_row_attr_partition(ctx: &EngineContext<'_>, x: &Mat, n: usize) -> (f64, f64) {
+    let xn = x.row(n);
+    let mut wp = wp_row(ctx.wp, n);
+    let (mut e, mut s) = (0.0, 0.0);
+    for m in 0..x.rows {
+        if m == n {
+            continue;
+        }
+        let d2 = sqdist(xn, x.row(m));
+        let wr = wp.at(m);
+        match ctx.method {
+            Method::Ssne => {
+                s += (-d2).exp();
+                if wr != 0.0 {
+                    e += wr * d2;
+                }
+            }
+            Method::Tsne => {
+                s += 1.0 / (1.0 + d2);
+                if wr != 0.0 {
+                    e += wr * (1.0 + d2).ln();
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+    (e, s)
+}
+
+/// Normalized-model pass 2 for one row: the fused gradient (attractive
+/// + repulsive weights), one d² per pair.
+fn norm_row_grad(ctx: &EngineContext<'_>, x: &Mat, n: usize, inv_s: f64, gn: &mut [f64]) {
+    let d = x.cols;
+    let xn = x.row(n);
+    let lam = ctx.lambda;
+    let mut wp = wp_row(ctx.wp, n);
+    for m in 0..x.rows {
+        if m == n {
+            continue;
+        }
+        let xm = x.row(m);
+        let d2 = sqdist(xn, xm);
+        let wr = wp.at(m);
+        // w_nm of eq. (2): ssne p - lam q; tsne (p - lam q) K
+        let coef = 4.0
+            * match ctx.method {
+                Method::Ssne => wr - lam * inv_s * (-d2).exp(),
+                Method::Tsne => {
+                    let k = 1.0 / (1.0 + d2);
+                    (wr - lam * inv_s * k) * k
+                }
+                _ => unreachable!(),
+            };
+        if d == 2 {
+            gn[0] += coef * (xn[0] - xm[0]);
+            gn[1] += coef * (xn[1] - xm[1]);
+        } else {
+            for i in 0..d {
+                gn[i] += coef * (xn[i] - xm[i]);
+            }
+        }
+    }
+}
+
+impl GradientEngine for ExactEngine {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn eval(&self, ctx: &EngineContext<'_>, x: &Mat) -> (f64, Mat) {
+        let n = x.rows;
+        let d = x.cols;
+        match ctx.method {
+            Method::Spectral => {
+                // attraction only: stream the stored weights, O(nnz)
+                let results: Vec<(f64, Vec<f64>)> = crate::par::par_map(n, |row| {
+                    let mut gn = vec![0.0; d];
+                    let e = attract_row_stream(ctx.method, ctx.wp, x, row, Some(&mut gn));
+                    (e, gn)
+                });
+                collect_rows(n, d, results, 0.0)
+            }
+            Method::Ee => {
+                // single fused pass: one d² per pair serves both terms
+                let results: Vec<(f64, Vec<f64>)> = crate::par::par_map(n, |row| {
+                    let mut gn = vec![0.0; d];
+                    let e = ee_row_fused(ctx, x, row, Some(&mut gn));
+                    (e, gn)
+                });
+                collect_rows(n, d, results, 0.0)
+            }
+            Method::Ssne | Method::Tsne => {
+                // pass 1: attraction energy + partition function together
+                let parts: Vec<(f64, f64)> =
+                    crate::par::par_map(n, |row| norm_row_attr_partition(ctx, x, row));
+                let (e_attr, s) =
+                    parts.into_iter().fold((0.0, 0.0), |(ea, ss), (e, p)| (ea + e, ss + p));
+                let inv_s = 1.0 / s;
+                // pass 2: fused gradient
+                let rows: Vec<Vec<f64>> = crate::par::par_map(n, |row| {
+                    let mut gn = vec![0.0; d];
+                    norm_row_grad(ctx, x, row, inv_s, &mut gn);
+                    gn
+                });
+                let mut g = Mat::zeros(n, d);
+                for (row, gr) in rows.into_iter().enumerate() {
+                    g.row_mut(row).copy_from_slice(&gr);
+                }
+                (e_attr + ctx.lambda * s.ln(), g)
+            }
+        }
+    }
+
+    fn energy(&self, ctx: &EngineContext<'_>, x: &Mat) -> f64 {
+        let n = x.rows;
+        match ctx.method {
+            Method::Spectral => {
+                crate::par::par_sum(n, |row| attract_row_stream(ctx.method, ctx.wp, x, row, None))
+            }
+            Method::Ee => crate::par::par_sum(n, |row| ee_row_fused(ctx, x, row, None)),
+            Method::Ssne | Method::Tsne => {
+                // single pass: attraction + partition together
+                let parts: Vec<(f64, f64)> =
+                    crate::par::par_map(n, |row| norm_row_attr_partition(ctx, x, row));
+                let (e_attr, s) =
+                    parts.into_iter().fold((0.0, 0.0), |(ea, ss), (e, p)| (ea + e, ss + p));
+                e_attr + ctx.lambda * s.ln()
+            }
+        }
+    }
+}

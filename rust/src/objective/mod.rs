@@ -3,10 +3,14 @@
 //!
 //! Two interchangeable backends implement [`Objective`]:
 //! * [`native`] — pure rust, O(Nd) memory, rayon-parallel; arbitrary N.
+//!   Evaluation is delegated to a pluggable [`engine`]: the exact
+//!   O(N²d) sweeps or the O(N log N + nnz) Barnes–Hut engine.
 //! * [`xla`] — the three-layer hot path: AOT-compiled jax/Pallas
 //!   artifacts executed through PJRT (see `crate::runtime`).
-//! Cross-backend parity is enforced in rust/tests/integration_runtime.rs.
+//! Cross-backend parity is enforced in rust/tests/integration_runtime.rs;
+//! cross-engine parity in rust/tests/engine_parity.rs.
 
+pub mod engine;
 pub mod hessian;
 pub mod native;
 pub mod xla;
@@ -80,10 +84,17 @@ impl Attractive {
         }
     }
 
-    /// Row degrees `d+_n = sum_m w+_nm` (the FP strategy's diagonal).
+    /// Row degrees `d+_n = sum_{m != n} w+_nm` (the FP strategy's
+    /// diagonal). Self-loops `w_nn` are excluded in *both*
+    /// representations: the paper's weights have `w_nn = 0`, and the
+    /// graph Laplacian `D - W` every strategy is built on cancels the
+    /// diagonal anyway, so a nonzero `w_nn` must not leak into the
+    /// degrees (regression test below).
     pub fn degrees(&self) -> Vec<f64> {
         match self {
-            Attractive::Dense(m) => crate::graph::degrees_dense(m),
+            Attractive::Dense(m) => (0..m.rows)
+                .map(|i| m.row(i).iter().sum::<f64>() - m.at(i, i))
+                .collect(),
             Attractive::Sparse(s) => {
                 let mut deg = vec![0.0; s.rows];
                 for c in 0..s.cols {
@@ -139,5 +150,49 @@ pub trait Objective: Send + Sync {
     /// f32 XLA artifacts: f32 eps with slack for cancellation).
     fn grad_accuracy(&self) -> f64 {
         1e-12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Regression: dense and sparse degrees must agree and exclude the
+    /// diagonal. The seed's dense arm went through
+    /// `graph::degrees_dense`, which *includes* `w_nn`, while the
+    /// sparse arm skipped it — an inconsistency that only showed on
+    /// weights with explicit self-loops.
+    #[test]
+    fn degrees_exclude_diagonal_in_both_representations() {
+        // symmetric 3x3 with a deliberately nonzero diagonal
+        let w = Mat::from_vec(
+            3,
+            3,
+            vec![
+                9.0, 1.0, 2.0, //
+                1.0, 7.0, 3.0, //
+                2.0, 3.0, 5.0,
+            ],
+        );
+        let dense = Attractive::Dense(w.clone());
+        let sparse = Attractive::Sparse(SpMat::from_dense(&w, 0.0));
+        let want = vec![3.0, 4.0, 5.0]; // off-diagonal row sums only
+        assert_eq!(dense.degrees(), want);
+        assert_eq!(sparse.degrees(), want);
+    }
+
+    #[test]
+    fn degrees_zero_diagonal_unchanged() {
+        let mut w = Mat::from_fn(4, 4, |i, j| (i + j) as f64);
+        for i in 0..4 {
+            *w.at_mut(i, i) = 0.0;
+        }
+        let dense = Attractive::Dense(w.clone()).degrees();
+        let sparse = Attractive::Sparse(SpMat::from_dense(&w, 0.0)).degrees();
+        for i in 0..4 {
+            assert!((dense[i] - sparse[i]).abs() < 1e-15);
+            let manual: f64 = (0..4).filter(|&j| j != i).map(|j| w.at(i, j)).sum();
+            assert!((dense[i] - manual).abs() < 1e-15);
+        }
     }
 }

@@ -1,257 +1,89 @@
 //! Native rust backend for the embedding objectives.
 //!
-//! Streams the O(N^2 d) pairwise computation row-by-row in parallel —
-//! O(N d) memory, no N x N intermediates — so it scales to the paper's
-//! fig. 4 sizes. Semantics mirror python/compile/kernels/ref.py exactly;
-//! parity with the XLA backend is asserted in the integration tests.
+//! Since the engine refactor this type is a thin coordinator: it owns
+//! the data-side weights (W⁺, W⁻, λ, method) and delegates every
+//! energy/gradient evaluation to a pluggable
+//! [`GradientEngine`](crate::objective::engine::GradientEngine) —
+//! the exact O(N²d) row sweeps ([`engine::exact`]) or the
+//! O(N log N + nnz) Barnes–Hut engine ([`engine::barneshut`]). The
+//! default ([`EngineSpec::Auto`]) picks Barnes–Hut for large
+//! kNN-sparse problems in d ≤ 3 and the exact engine everywhere else,
+//! so small-N behavior is bit-identical to the pre-refactor code.
 //!
-//! Gradients are the Laplacian forms of the paper (eqs. 2-3) rearranged
-//! per-row: for weights w_nm, `(4 X L)_n = 4 sum_m w_nm (x_n - x_m)`.
+//! Cross-backend parity with the XLA objective is asserted in the
+//! integration tests; cross-engine parity in rust/tests/engine_parity.rs.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use super::engine::{EngineContext, EngineSpec, GradientEngine};
 use super::{Attractive, Method, Objective, Repulsive};
 use crate::linalg::dense::Mat;
-use crate::linalg::vecops::sqdist;
 
-/// Pure-rust objective. Holds the data-side weights; X is passed per call.
+/// Pure-rust objective. Holds the data-side weights; X is passed per
+/// call; evaluation is delegated to the configured engine.
 pub struct NativeObjective {
     method: Method,
     wp: Attractive,
     wm: Repulsive,
     lambda: f64,
     dim: usize,
+    engine: Box<dyn GradientEngine>,
     evals: AtomicUsize,
 }
 
 impl NativeObjective {
+    /// Full constructor with automatic engine selection.
     pub fn new(method: Method, wp: Attractive, wm: Repulsive, lambda: f64, dim: usize) -> Self {
-        NativeObjective { method, wp, wm, lambda, dim, evals: AtomicUsize::new(0) }
+        Self::new_with_engine(method, wp, wm, lambda, dim, EngineSpec::Auto)
+    }
+
+    /// Full constructor with explicit engine selection.
+    pub fn new_with_engine(
+        method: Method,
+        wp: Attractive,
+        wm: Repulsive,
+        lambda: f64,
+        dim: usize,
+        spec: EngineSpec,
+    ) -> Self {
+        let engine = spec.build(method, &wp, &wm, dim);
+        NativeObjective { method, wp, wm, lambda, dim, engine, evals: AtomicUsize::new(0) }
     }
 
     /// Standard construction used by the experiments: SNE affinities as
-    /// W+ (= P) and uniform repulsion for EE.
+    /// W⁺ (= P) and uniform repulsion for EE; automatic engine choice.
     pub fn with_affinities(method: Method, p: Attractive, lambda: f64, dim: usize) -> Self {
         NativeObjective::new(method, p, Repulsive::Uniform(1.0), lambda, dim)
     }
 
+    /// Like [`with_affinities`](Self::with_affinities) but with an
+    /// explicit gradient engine, e.g.
+    /// `EngineSpec::BarnesHut { theta: 0.5 }` for the large-N path.
+    pub fn with_engine(
+        method: Method,
+        p: Attractive,
+        lambda: f64,
+        dim: usize,
+        spec: EngineSpec,
+    ) -> Self {
+        NativeObjective::new_with_engine(method, p, Repulsive::Uniform(1.0), lambda, dim, spec)
+    }
+
+    /// Name of the resolved engine ("exact" / "barnes-hut").
+    pub fn engine_name(&self) -> &'static str {
+        self.engine.name()
+    }
+
     #[inline]
-    fn wm_at(&self, n: usize, m: usize) -> f64 {
-        match &self.wm {
-            Repulsive::Uniform(c) => {
-                if n == m {
-                    0.0
-                } else {
-                    *c
-                }
-            }
-            Repulsive::Dense(w) => w.at(n, m),
+    fn ctx(&self) -> EngineContext<'_> {
+        EngineContext {
+            method: self.method,
+            wp: &self.wp,
+            wm: &self.wm,
+            lambda: self.lambda,
+            dim: self.dim,
         }
     }
-
-    /// Attraction energy + gradient accumulation for row n into `gn`:
-    /// E+ contribution and `sum_m w+_nm K1-form (x_n - x_m)` terms.
-    /// Returns the energy contribution of row n.
-    fn attract_row(&self, x: &Mat, n: usize, gn: &mut [f64]) -> f64 {
-        let d = x.cols;
-        let xn = x.row(n);
-        let mut e = 0.0;
-        let mut acc = move |m: usize, w: f64| -> f64 {
-            if w == 0.0 || m == n {
-                return 0.0;
-            }
-            let xm = x.row(m);
-            let d2 = sqdist(xn, xm);
-            let (econtrib, gw) = match self.method {
-                // E+ = w d2, grad weight w
-                Method::Spectral | Method::Ee | Method::Ssne => (w * d2, w),
-                // E+ = w log(1+d2), grad weight w K (K = 1/(1+d2))
-                Method::Tsne => {
-                    let k = 1.0 / (1.0 + d2);
-                    (w * (1.0 + d2).ln(), w * k)
-                }
-            };
-            for i in 0..d {
-                gn[i] += 4.0 * gw * (xn[i] - xm[i]);
-            }
-            econtrib
-        };
-        match &self.wp {
-            Attractive::Dense(w) => {
-                for m in 0..x.rows {
-                    e += acc(m, w.at(n, m));
-                }
-            }
-            Attractive::Sparse(s) => {
-                // CSC of a symmetric matrix: column n holds row n's weights
-                for p in s.colptr[n]..s.colptr[n + 1] {
-                    e += acc(s.rowind[p], s.values[p]);
-                }
-            }
-        }
-        e
-    }
-
-
-
-}
-
-
-/// Cursor over one row of the attractive weights during a full 0..N
-/// sweep: O(1) amortized for both dense rows and sorted sparse columns.
-enum WpRow<'a> {
-    Dense(&'a [f64]),
-    Sparse { rows: &'a [usize], vals: &'a [f64], pos: usize },
-}
-
-impl<'a> WpRow<'a> {
-    #[inline]
-    fn at(&mut self, m: usize) -> f64 {
-        match self {
-            WpRow::Dense(r) => r[m],
-            WpRow::Sparse { rows, vals, pos } => {
-                while *pos < rows.len() && rows[*pos] < m {
-                    *pos += 1;
-                }
-                if *pos < rows.len() && rows[*pos] == m {
-                    vals[*pos]
-                } else {
-                    0.0
-                }
-            }
-        }
-    }
-}
-
-impl NativeObjective {
-    /// Row cursor for the fused sweeps.
-    fn wp_row(&self, n: usize) -> WpRow<'_> {
-        match &self.wp {
-            Attractive::Dense(w) => WpRow::Dense(w.row(n)),
-            Attractive::Sparse(s) => WpRow::Sparse {
-                rows: &s.rowind[s.colptr[n]..s.colptr[n + 1]],
-                vals: &s.values[s.colptr[n]..s.colptr[n + 1]],
-                pos: 0,
-            },
-        }
-    }
-
-    /// Fused EE row: one pass over m computing d2 once per pair and
-    /// accumulating attraction + repulsion energy and (optionally) the
-    /// gradient. Returns the row's full energy contribution.
-    fn ee_row_fused(&self, x: &Mat, n: usize, mut gn: Option<&mut [f64]>) -> f64 {
-        let d = x.cols;
-        let xn = x.row(n);
-        let lam = self.lambda;
-        let mut wp = self.wp_row(n);
-        let mut e = 0.0;
-        for m in 0..x.rows {
-            if m == n {
-                continue;
-            }
-            let xm = x.row(m);
-            let d2 = sqdist(xn, xm);
-            let wr = wp.at(m);
-            let wrep = self.wm_at(n, m);
-            let k = if wrep != 0.0 { (-d2).exp() } else { 0.0 };
-            e += wr * d2 + lam * wrep * k;
-            if let Some(gn) = gn.as_deref_mut() {
-                let coef = 4.0 * (wr - lam * wrep * k);
-                if d == 2 {
-                    gn[0] += coef * (xn[0] - xm[0]);
-                    gn[1] += coef * (xn[1] - xm[1]);
-                } else {
-                    for i in 0..d {
-                        gn[i] += coef * (xn[i] - xm[i]);
-                    }
-                }
-            }
-        }
-        e
-    }
-
-    /// Normalized-model pass 1 for one row: attraction energy + this
-    /// row's partition-sum contribution, one d2 per pair.
-    fn norm_row_attr_partition(&self, x: &Mat, n: usize) -> (f64, f64) {
-        let xn = x.row(n);
-        let mut wp = self.wp_row(n);
-        let (mut e, mut s) = (0.0, 0.0);
-        for m in 0..x.rows {
-            if m == n {
-                continue;
-            }
-            let d2 = sqdist(xn, x.row(m));
-            let wr = wp.at(m);
-            match self.method {
-                Method::Ssne => {
-                    s += (-d2).exp();
-                    if wr != 0.0 {
-                        e += wr * d2;
-                    }
-                }
-                Method::Tsne => {
-                    s += 1.0 / (1.0 + d2);
-                    if wr != 0.0 {
-                        e += wr * (1.0 + d2).ln();
-                    }
-                }
-                _ => unreachable!(),
-            }
-        }
-        (e, s)
-    }
-
-    /// Normalized-model pass 2 for one row: the fused gradient
-    /// (attractive + repulsive weights), one d2 per pair.
-    fn norm_row_grad(&self, x: &Mat, n: usize, inv_s: f64, gn: &mut [f64]) {
-        let d = x.cols;
-        let xn = x.row(n);
-        let lam = self.lambda;
-        let mut wp = self.wp_row(n);
-        for m in 0..x.rows {
-            if m == n {
-                continue;
-            }
-            let xm = x.row(m);
-            let d2 = sqdist(xn, xm);
-            let wr = wp.at(m);
-            // w_nm of eq. (2): ssne p - lam q; tsne (p - lam q) K
-            let coef = 4.0
-                * match self.method {
-                    Method::Ssne => wr - lam * inv_s * (-d2).exp(),
-                    Method::Tsne => {
-                        let k = 1.0 / (1.0 + d2);
-                        (wr - lam * inv_s * k) * k
-                    }
-                    _ => unreachable!(),
-                };
-            if d == 2 {
-                gn[0] += coef * (xn[0] - xm[0]);
-                gn[1] += coef * (xn[1] - xm[1]);
-            } else {
-                for i in 0..d {
-                    gn[i] += coef * (xn[i] - xm[i]);
-                }
-            }
-        }
-    }
-}
-
-
-/// Assemble per-row results into (E, G).
-fn collect_rows(
-    n: usize,
-    d: usize,
-    results: Vec<(f64, Vec<f64>)>,
-    e0: f64,
-) -> (f64, Mat) {
-    let mut g = Mat::zeros(n, d);
-    let mut e = e0;
-    for (row, (er, gr)) in results.into_iter().enumerate() {
-        e += er;
-        g.row_mut(row).copy_from_slice(&gr);
-    }
-    (e, g)
 }
 
 impl Objective for NativeObjective {
@@ -277,95 +109,16 @@ impl Objective for NativeObjective {
 
     fn eval(&self, x: &Mat) -> (f64, Mat) {
         self.evals.fetch_add(1, Ordering::Relaxed);
-        let n = x.rows;
-        let d = x.cols;
-        assert_eq!(n, self.n(), "X has wrong number of rows");
-        assert_eq!(d, self.dim);
-
-        match self.method {
-            Method::Spectral => {
-                let results: Vec<(f64, Vec<f64>)> = crate::par::par_map(n, |row| {
-                    let mut gn = vec![0.0; d];
-                    let e = self.attract_row(x, row, &mut gn);
-                    (e, gn)
-                });
-                collect_rows(n, d, results, 0.0)
-            }
-            Method::Ee => {
-                // single fused pass: one d2 per pair serves both terms
-                let results: Vec<(f64, Vec<f64>)> = crate::par::par_map(n, |row| {
-                    let mut gn = vec![0.0; d];
-                    let e = self.ee_row_fused(x, row, Some(&mut gn));
-                    (e, gn)
-                });
-                collect_rows(n, d, results, 0.0)
-            }
-            Method::Ssne | Method::Tsne => {
-                // pass 1: attraction energy + partition function together
-                let parts: Vec<(f64, f64)> =
-                    crate::par::par_map(n, |row| self.norm_row_attr_partition(x, row));
-                let (e_attr, s) = parts
-                    .into_iter()
-                    .fold((0.0, 0.0), |(ea, ss), (e, p)| (ea + e, ss + p));
-                let inv_s = 1.0 / s;
-                // pass 2: fused gradient
-                let rows: Vec<Vec<f64>> = crate::par::par_map(n, |row| {
-                    let mut gn = vec![0.0; d];
-                    if self.lambda != 0.0 || true {
-                        self.norm_row_grad(x, row, inv_s, &mut gn);
-                    }
-                    gn
-                });
-                let mut g = Mat::zeros(n, d);
-                for (row, gr) in rows.into_iter().enumerate() {
-                    g.row_mut(row).copy_from_slice(&gr);
-                }
-                (e_attr + self.lambda * s.ln(), g)
-            }
-        }
+        assert_eq!(x.rows, self.n(), "X has wrong number of rows");
+        assert_eq!(x.cols, self.dim);
+        self.engine.eval(&self.ctx(), x)
     }
 
     fn energy(&self, x: &Mat) -> f64 {
         self.evals.fetch_add(1, Ordering::Relaxed);
-        let n = x.rows;
-        match self.method {
-            Method::Spectral => crate::par::par_sum(n, |row| {
-                // attraction only; sparse rows stay O(nnz)
-                let xn = x.row(row);
-                match &self.wp {
-                    Attractive::Dense(w) => {
-                        let wr = w.row(row);
-                        let mut e = 0.0;
-                        for m in 0..n {
-                            if m != row && wr[m] != 0.0 {
-                                e += wr[m] * sqdist(xn, x.row(m));
-                            }
-                        }
-                        e
-                    }
-                    Attractive::Sparse(sp) => {
-                        let mut e = 0.0;
-                        for p in sp.colptr[row]..sp.colptr[row + 1] {
-                            let m = sp.rowind[p];
-                            if m != row {
-                                e += sp.values[p] * sqdist(xn, x.row(m));
-                            }
-                        }
-                        e
-                    }
-                }
-            }),
-            Method::Ee => crate::par::par_sum(n, |row| self.ee_row_fused(x, row, None)),
-            Method::Ssne | Method::Tsne => {
-                // single pass: attraction + partition together
-                let parts: Vec<(f64, f64)> =
-                    crate::par::par_map(n, |row| self.norm_row_attr_partition(x, row));
-                let (e_attr, s) = parts
-                    .into_iter()
-                    .fold((0.0, 0.0), |(ea, ss), (e, p)| (ea + e, ss + p));
-                e_attr + self.lambda * s.ln()
-            }
-        }
+        assert_eq!(x.rows, self.n(), "X has wrong number of rows");
+        assert_eq!(x.cols, self.dim);
+        self.engine.energy(&self.ctx(), x)
     }
 
     fn attractive(&self) -> &Attractive {
@@ -521,5 +274,45 @@ mod tests {
         obj.eval(&x);
         obj.energy(&x);
         assert_eq!(obj.eval_count(), 2);
+    }
+
+    /// Small problems auto-select the exact engine (pre-refactor
+    /// behavior preserved bit-for-bit); an explicit θ = 0 Barnes–Hut
+    /// engine reproduces it up to summation order.
+    #[test]
+    fn engine_selection_and_theta_zero_parity() {
+        let (x, w) = setup(18, 7);
+        for (method, lam) in [
+            (Method::Spectral, 0.0),
+            (Method::Ee, 5.0),
+            (Method::Ssne, 1.0),
+            (Method::Tsne, 1.0),
+        ] {
+            let exact = NativeObjective::with_affinities(
+                method,
+                Attractive::Dense(w.clone()),
+                lam,
+                2,
+            );
+            assert_eq!(exact.engine_name(), "exact");
+            let bh = NativeObjective::with_engine(
+                method,
+                Attractive::Dense(w.clone()),
+                lam,
+                2,
+                EngineSpec::BarnesHut { theta: 0.0 },
+            );
+            assert_eq!(bh.engine_name(), "barnes-hut");
+            let (ee, ge) = exact.eval(&x);
+            let (eb, gb) = bh.eval(&x);
+            assert!(
+                (ee - eb).abs() < 1e-9 * ee.abs().max(1.0),
+                "{}: E exact {ee} vs bh {eb}",
+                method.name()
+            );
+            assert!(ge.max_abs_diff(&gb) < 1e-9, "{}", method.name());
+            let delta = (exact.energy(&x) - bh.energy(&x)).abs();
+            assert!(delta < 1e-9 * ee.abs().max(1.0), "{}", method.name());
+        }
     }
 }

@@ -1,0 +1,357 @@
+//! Region tree (quadtree / octree) with center-of-mass aggregation and
+//! θ-criterion traversal — the spatial core of the Barnes–Hut engine.
+//!
+//! Built by recursive bisection over an index array: every node owns a
+//! contiguous range of `order`, so leaves need no per-point allocation
+//! and traversal is cache-friendly. Cells are cubes (equal side in every
+//! dimension, halved per level), which makes the θ-criterion a single
+//! compare: a cell of side `s` at squared distance `d²` from the query
+//! is summarized by its center of mass iff `s² ≤ θ² d²`.
+//!
+//! The tree borrows the point matrix (`N x d`, one point per row) for
+//! its lifetime: it is rebuilt per gradient evaluation (the embedding
+//! moves every iteration), which is O(N log N) and far below the
+//! traversal cost it amortizes.
+
+use crate::linalg::dense::Mat;
+use crate::linalg::vecops::sqdist;
+
+/// Points per leaf before splitting. Small enough that opened leaves
+/// stay cheap, large enough to bound tree size (~2N/LEAF_CAP nodes).
+const LEAF_CAP: usize = 8;
+
+/// Hard depth bound: duplicate (or pathologically close) points stop
+/// splitting and simply share a leaf, which traversal handles exactly.
+const MAX_DEPTH: usize = 48;
+
+const NO_CHILD: u32 = u32::MAX;
+
+struct Node {
+    /// Geometric cell center (first `dim` entries used).
+    center: [f64; 3],
+    /// Half the cell side.
+    half: f64,
+    /// Center of mass of the contained points.
+    com: [f64; 3],
+    /// Number of contained points.
+    count: u32,
+    /// Index of the first of `2^dim` contiguous children, or NO_CHILD.
+    first_child: u32,
+    /// Contained range of `order` (valid for every node; used by leaves).
+    start: u32,
+    end: u32,
+}
+
+/// One step of a θ-traversal: either a whole cell summarized by its
+/// center of mass, or a single point from an opened leaf.
+pub enum Visit<'a> {
+    /// A cell passing the θ-criterion: center of mass (length `dim`),
+    /// point count, and squared distance from the query to the com.
+    Cell { com: &'a [f64], count: f64, d2: f64 },
+    /// An individual point `m != query` with its squared distance.
+    Point { m: usize, d2: f64 },
+}
+
+/// Quadtree (d = 2) / octree (d = 3) over the rows of an `N x d` matrix.
+pub struct NTree<'a> {
+    x: &'a Mat,
+    dim: usize,
+    nodes: Vec<Node>,
+    /// Permutation of point indices; each node owns a contiguous slice.
+    order: Vec<u32>,
+}
+
+impl<'a> NTree<'a> {
+    /// Build over all rows of `x`. Supports `d` in 1..=3.
+    pub fn build(x: &'a Mat) -> NTree<'a> {
+        let dim = x.cols;
+        assert!(
+            (1..=3).contains(&dim),
+            "NTree supports d in 1..=3 (got {dim}); higher-d repulsion needs the exact engine"
+        );
+        let n = x.rows;
+        let mut tree =
+            NTree { x, dim, nodes: Vec::new(), order: (0..n as u32).collect() };
+        if n == 0 {
+            return tree;
+        }
+        // bounding cube: centered on the bbox, side = max extent
+        let mut lo = [f64::INFINITY; 3];
+        let mut hi = [f64::NEG_INFINITY; 3];
+        for i in 0..n {
+            let r = x.row(i);
+            for j in 0..dim {
+                lo[j] = lo[j].min(r[j]);
+                hi[j] = hi[j].max(r[j]);
+            }
+        }
+        let mut center = [0.0; 3];
+        let mut half = 0.0f64;
+        for j in 0..dim {
+            center[j] = 0.5 * (lo[j] + hi[j]);
+            half = half.max(0.5 * (hi[j] - lo[j]));
+        }
+        // degenerate clouds (all points equal) still get a nonzero cell
+        half = half.max(1e-12);
+        tree.nodes.reserve(2 * n / LEAF_CAP + 16);
+        tree.nodes.push(Node {
+            center,
+            half,
+            com: [0.0; 3],
+            count: n as u32,
+            first_child: NO_CHILD,
+            start: 0,
+            end: n as u32,
+        });
+        // one scratch buffer reused by every split: the tree build sits
+        // on the per-evaluation hot path, so no per-node allocations
+        let mut scratch: Vec<u32> = Vec::with_capacity(n);
+        tree.split(0, 0, &mut scratch);
+        tree
+    }
+
+    /// Number of nodes (diagnostics).
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Orthant of point `pi` relative to a cell center (bit j set iff
+    /// coordinate j is on the upper side).
+    #[inline]
+    fn orthant(&self, pi: u32, center: &[f64; 3]) -> usize {
+        let r = self.x.row(pi as usize);
+        let mut orth = 0usize;
+        for j in 0..self.dim {
+            if r[j] >= center[j] {
+                orth |= 1 << j;
+            }
+        }
+        orth
+    }
+
+    fn split(&mut self, node: usize, depth: usize, scratch: &mut Vec<u32>) {
+        let (start, end) = (self.nodes[node].start as usize, self.nodes[node].end as usize);
+        // center of mass over the owned range
+        let mut com = [0.0f64; 3];
+        for &pi in &self.order[start..end] {
+            let r = self.x.row(pi as usize);
+            for j in 0..self.dim {
+                com[j] += r[j];
+            }
+        }
+        let cnt = (end - start) as f64;
+        for c in com.iter_mut() {
+            *c /= cnt;
+        }
+        self.nodes[node].com = com;
+        if end - start <= LEAF_CAP || depth >= MAX_DEPTH {
+            return; // leaf
+        }
+        let nchild = 1usize << self.dim;
+        let center = self.nodes[node].center;
+        let half = self.nodes[node].half;
+        // counting partition of the owned range by orthant, through the
+        // shared scratch buffer — no allocations on the build hot path
+        scratch.clear();
+        scratch.extend_from_slice(&self.order[start..end]);
+        let mut counts = [0usize; 8];
+        for &pi in scratch.iter() {
+            counts[self.orthant(pi, &center)] += 1;
+        }
+        let mut offs = [0usize; 9]; // child range starts, relative to `start`
+        for o in 0..nchild {
+            offs[o + 1] = offs[o] + counts[o];
+        }
+        let mut cursor = offs;
+        for i in 0..scratch.len() {
+            let pi = scratch[i];
+            let o = self.orthant(pi, &center);
+            self.order[start + cursor[o]] = pi;
+            cursor[o] += 1;
+        }
+        // children own the contiguous sub-ranges
+        let first_child = self.nodes.len() as u32;
+        self.nodes[node].first_child = first_child;
+        let qh = 0.5 * half;
+        for orth in 0..nchild {
+            let mut ccenter = center;
+            for j in 0..self.dim {
+                ccenter[j] += if orth & (1 << j) != 0 { qh } else { -qh };
+            }
+            self.nodes.push(Node {
+                center: ccenter,
+                half: qh,
+                com: [0.0; 3],
+                count: counts[orth] as u32,
+                first_child: NO_CHILD,
+                start: (start + offs[orth]) as u32,
+                end: (start + offs[orth + 1]) as u32,
+            });
+        }
+        for c in 0..nchild {
+            let ci = first_child as usize + c;
+            if self.nodes[ci].count > 0 {
+                self.split(ci, depth + 1, scratch);
+            }
+        }
+    }
+
+    /// θ-traversal for query point `query` (a row index of the backing
+    /// matrix): calls `visit` once per accepted cell (`Visit::Cell`) or
+    /// per individual point of an opened leaf (`Visit::Point`, with
+    /// `m == query` skipped). θ = 0 never accepts a cell, reproducing
+    /// the exact pairwise sum.
+    ///
+    /// Note: a cell *containing* the query can only be accepted when
+    /// `θ ≥ 1/√d` (the com is at most `side·√d/2` away), so for the
+    /// customary θ ≤ 0.5 the query never contributes to its own field.
+    pub fn traverse<F: FnMut(Visit<'_>)>(&self, query: usize, theta: f64, mut visit: F) {
+        if self.nodes.is_empty() {
+            return;
+        }
+        let xq = self.x.row(query);
+        let theta2 = theta * theta;
+        let mut stack: Vec<u32> = Vec::with_capacity(64);
+        stack.push(0);
+        while let Some(ni) = stack.pop() {
+            let node = &self.nodes[ni as usize];
+            if node.count == 0 {
+                continue;
+            }
+            let com = &node.com[..self.dim];
+            let d2 = sqdist(xq, com);
+            let side = 2.0 * node.half;
+            if side * side <= theta2 * d2 {
+                visit(Visit::Cell { com, count: node.count as f64, d2 });
+            } else if node.first_child == NO_CHILD {
+                for &pi in &self.order[node.start as usize..node.end as usize] {
+                    let m = pi as usize;
+                    if m == query {
+                        continue;
+                    }
+                    visit(Visit::Point { m, d2: sqdist(xq, self.x.row(m)) });
+                }
+            } else {
+                for c in 0..(1u32 << self.dim) {
+                    stack.push(node.first_child + c);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    fn cloud(n: usize, d: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(n, d, |_, _| rng.normal())
+    }
+
+    /// θ = 0 traversal enumerates every other point exactly once.
+    #[test]
+    fn theta_zero_enumerates_all_pairs() {
+        for d in [1usize, 2, 3] {
+            let x = cloud(200, d, 7);
+            let tree = NTree::build(&x);
+            for q in [0usize, 57, 199] {
+                let mut seen = vec![false; 200];
+                tree.traverse(q, 0.0, |v| match v {
+                    Visit::Point { m, d2 } => {
+                        assert!(!seen[m], "point {m} visited twice");
+                        seen[m] = true;
+                        let want = crate::linalg::vecops::sqdist(x.row(q), x.row(m));
+                        assert!((d2 - want).abs() < 1e-12);
+                    }
+                    Visit::Cell { .. } => panic!("theta = 0 must never accept a cell"),
+                });
+                assert_eq!(
+                    seen.iter().filter(|&&s| s).count(),
+                    199,
+                    "query {q}: every other point exactly once"
+                );
+                assert!(!seen[q], "query must be excluded");
+            }
+        }
+    }
+
+    /// Total mass over any traversal equals N - 1 (counts conserved).
+    #[test]
+    fn mass_conservation_under_theta() {
+        let x = cloud(500, 2, 3);
+        let tree = NTree::build(&x);
+        for theta in [0.2, 0.5, 1.0] {
+            let mut mass = 0.0;
+            let mut cells = 0usize;
+            tree.traverse(42, theta, |v| match v {
+                Visit::Cell { count, .. } => {
+                    mass += count;
+                    cells += 1;
+                }
+                Visit::Point { .. } => mass += 1.0,
+            });
+            // the query's own leaf is always opened for theta <= 0.5;
+            // at theta = 1.0 its cell may be accepted and include it
+            assert!(
+                (mass - 499.0).abs() < 1.5,
+                "theta {theta}: mass {mass} (want ~499)"
+            );
+            if theta > 0.0 {
+                assert!(cells > 0, "theta {theta} should accept some cells");
+            }
+        }
+    }
+
+    /// Gaussian field via the tree converges to the exact field as θ→0.
+    #[test]
+    fn field_converges_with_theta() {
+        let x = cloud(400, 2, 11);
+        let tree = NTree::build(&x);
+        let q = 13;
+        let exact: f64 = (0..400)
+            .filter(|&m| m != q)
+            .map(|m| (-crate::linalg::vecops::sqdist(x.row(q), x.row(m))).exp())
+            .sum();
+        for (theta, bound) in [(1.0, 0.5), (0.5, 1e-2), (0.25, 1e-2), (0.0, 1e-12)] {
+            let mut field = 0.0;
+            tree.traverse(q, theta, |v| match v {
+                Visit::Cell { count, d2, .. } => field += count * (-d2).exp(),
+                Visit::Point { d2, .. } => field += (-d2).exp(),
+            });
+            let err = (field - exact).abs() / exact.abs().max(1e-300);
+            assert!(err < bound, "theta {theta}: rel err {err} >= {bound}");
+        }
+    }
+
+    /// Duplicate points must not blow the depth bound.
+    #[test]
+    fn duplicates_terminate() {
+        let mut x = cloud(64, 2, 5);
+        for i in 1..32 {
+            let (a, b) = (x.at(0, 0), x.at(0, 1));
+            x.row_mut(i)[0] = a;
+            x.row_mut(i)[1] = b;
+        }
+        let tree = NTree::build(&x);
+        let mut visited = 0usize;
+        tree.traverse(0, 0.0, |v| {
+            if let Visit::Point { .. } = v {
+                visited += 1;
+            }
+        });
+        assert_eq!(visited, 63);
+        assert!(tree.node_count() < 10_000);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let x0 = Mat::zeros(0, 2);
+        let t0 = NTree::build(&x0);
+        assert_eq!(t0.node_count(), 0);
+        let x1 = Mat::from_vec(1, 2, vec![3.0, 4.0]);
+        let t1 = NTree::build(&x1);
+        t1.traverse(0, 0.5, |_| panic!("no other points to visit"));
+    }
+}

@@ -1,0 +1,205 @@
+//! Cross-engine parity: the Barnes–Hut engine against the exact
+//! reference semantics.
+//!
+//! * θ → 0 is *identical* to the exact engine (the tree opens every
+//!   cell), and the approximation error shrinks as θ does;
+//! * θ = 0.5 (the customary operating point) stays within 1e-2
+//!   relative gradient error on a 500-point swiss-roll workload;
+//! * dense and kNN-sparse attractive weights agree under both engines
+//!   for all four methods;
+//! * the spectral direction optimizes end-to-end on the BH engine.
+
+use nle::linalg::sparse::SpMat;
+use nle::prelude::*;
+
+/// 500-point swiss roll: kNN-sparse affinities + a spread embedding
+/// probe (scale 1.0 keeps pairwise distances O(1), so the repulsive
+/// field actually matters and the test exercises the approximation).
+fn swiss_setup() -> (SpMat, Mat) {
+    let data = nle::data::synth::swiss_roll(500, 3, 0.05, 42);
+    let p = nle::affinity::sne_affinities_sparse(&data.y, 20.0, 60);
+    let x = nle::init::random_init(500, 2, 1.0, 3);
+    (p, x)
+}
+
+/// Property: the BH gradient converges to the exact gradient as θ → 0,
+/// is exact at θ = 0, and meets the 1e-2 bound at θ = 0.5.
+#[test]
+fn bh_gradient_converges_to_exact_as_theta_shrinks() {
+    let (p, x) = swiss_setup();
+    for (method, lam) in [(Method::Ee, 100.0), (Method::Ssne, 1.0), (Method::Tsne, 1.0)] {
+        let exact = NativeObjective::with_engine(
+            method,
+            Attractive::Sparse(p.clone()),
+            lam,
+            2,
+            EngineSpec::Exact,
+        );
+        let (e_ref, g_ref) = exact.eval(&x);
+        let err_at = |theta: f64| -> (f64, f64) {
+            let bh = NativeObjective::with_engine(
+                method,
+                Attractive::Sparse(p.clone()),
+                lam,
+                2,
+                EngineSpec::BarnesHut { theta },
+            );
+            let (e, g) = bh.eval(&x);
+            (g.rel_fro_err(&g_ref), (e - e_ref).abs() / e_ref.abs().max(1e-300))
+        };
+
+        let (g_coarse, _) = err_at(1.0);
+        let (g_mid, e_mid) = err_at(0.5);
+        let (g_fine, _) = err_at(0.05);
+        let (g_zero, e_zero) = err_at(0.0);
+
+        // acceptance bound at the customary operating point
+        assert!(g_mid < 1e-2, "{}: theta=0.5 grad rel err {g_mid}", method.name());
+        assert!(e_mid < 1e-2, "{}: theta=0.5 energy rel err {e_mid}", method.name());
+        // convergence: finer theta is no worse than the coarse setting
+        assert!(
+            g_fine <= g_coarse + 1e-9,
+            "{}: err(0.05) = {g_fine} > err(1.0) = {g_coarse}",
+            method.name()
+        );
+        // theta = 0 opens every cell: exact up to summation order
+        assert!(g_zero < 1e-9, "{}: theta=0 grad err {g_zero}", method.name());
+        assert!(e_zero < 1e-9, "{}: theta=0 energy err {e_zero}", method.name());
+    }
+}
+
+/// Dense vs kNN-sparse attractive weights must agree for all four
+/// methods, under the exact engine (tight) and the BH engine at fixed
+/// θ (the tree only sees X, so the representations are identical).
+#[test]
+fn attract_dense_sparse_parity_all_methods() {
+    let n = 40;
+    let mut rng = nle::data::Rng::new(9);
+    let y = Mat::from_fn(n, 4, |_, _| rng.normal());
+    let w = nle::affinity::sne_affinities(&y, 8.0);
+    let ws = SpMat::from_dense(&w, 0.0);
+    let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+    for (method, lam) in [
+        (Method::Spectral, 0.0),
+        (Method::Ee, 5.0),
+        (Method::Ssne, 1.0),
+        (Method::Tsne, 1.0),
+    ] {
+        for spec in [EngineSpec::Exact, EngineSpec::BarnesHut { theta: 0.25 }] {
+            let dense = NativeObjective::with_engine(
+                method,
+                Attractive::Dense(w.clone()),
+                lam,
+                2,
+                spec,
+            );
+            let sparse = NativeObjective::with_engine(
+                method,
+                Attractive::Sparse(ws.clone()),
+                lam,
+                2,
+                spec,
+            );
+            let (ed, gd) = dense.eval(&x);
+            let (es, gs) = sparse.eval(&x);
+            assert!(
+                (ed - es).abs() < 1e-9 * ed.abs().max(1.0),
+                "{} [{}]: E dense {ed} vs sparse {es}",
+                method.name(),
+                spec.name()
+            );
+            assert!(
+                gd.max_abs_diff(&gs) < 1e-9,
+                "{} [{}]: grad mismatch {}",
+                method.name(),
+                spec.name(),
+                gd.max_abs_diff(&gs)
+            );
+            // energy() must agree with eval().0 within either engine
+            let e2 = dense.energy(&x);
+            assert!((e2 - ed).abs() < 1e-9 * ed.abs().max(1.0));
+        }
+    }
+}
+
+/// `energy()` and `eval().0` must agree within the BH engine at a fixed
+/// X (same tree, same θ — the cheap line-search path may not drift from
+/// the gradient path). Checked for every method that builds a tree.
+#[test]
+fn bh_energy_consistent_with_eval() {
+    let (p, x) = swiss_setup();
+    for (method, lam) in [(Method::Ee, 100.0), (Method::Ssne, 1.0), (Method::Tsne, 1.0)] {
+        let obj = NativeObjective::with_engine(
+            method,
+            Attractive::Sparse(p.clone()),
+            lam,
+            2,
+            EngineSpec::BarnesHut { theta: 0.5 },
+        );
+        let (e, _) = obj.eval(&x);
+        let e2 = obj.energy(&x);
+        assert!(
+            (e - e2).abs() < 1e-10 * e.abs().max(1.0),
+            "{}: eval E {e} vs energy {e2}",
+            method.name()
+        );
+    }
+}
+
+/// Spectral direction end-to-end on the Barnes–Hut engine: sparse W+
+/// feeds the sparse-Laplacian Cholesky, the BH engine feeds gradients;
+/// the energy must decrease monotonically. (The N = 20k version runs in
+/// the `scal` harness; this keeps the test suite fast.)
+#[test]
+fn spectral_direction_runs_on_bh_engine() {
+    let n = 300;
+    let data = nle::data::synth::swiss_roll(n, 3, 0.05, 7);
+    let p = nle::affinity::sne_affinities_sparse(&data.y, 10.0, 30);
+    let obj = NativeObjective::with_engine(
+        Method::Ee,
+        Attractive::Sparse(p),
+        50.0,
+        2,
+        EngineSpec::BarnesHut { theta: 0.5 },
+    );
+    assert_eq!(obj.engine_name(), "barnes-hut");
+    let x0 = nle::init::random_init(n, 2, 1e-4, 0);
+    let mut sd = SpectralDirection::new(Some(7));
+    let res = minimize(
+        &obj,
+        &mut sd,
+        &x0,
+        &OptOptions { max_iters: 40, ..Default::default() },
+    );
+    assert!(res.e.is_finite());
+    assert!(res.trace.len() > 1, "no iterations ran");
+    for w in res.trace.windows(2) {
+        assert!(w[1].e <= w[0].e + 1e-9 * w[0].e.abs().max(1.0), "energy increased");
+    }
+    let e0 = res.trace.first().unwrap().e;
+    assert!(res.e < e0, "no progress: {e0} -> {}", res.e);
+}
+
+/// Auto-selection: small problems stay exact; a >= 4096-point sparse EE
+/// problem flips to Barnes–Hut without any caller change.
+#[test]
+fn auto_selects_bh_at_scale() {
+    let small = nle::affinity::sne_affinities_sparse(
+        &Mat::from_fn(64, 3, |i, j| (i * 3 + j) as f64 * 0.1),
+        5.0,
+        10,
+    );
+    let obj = NativeObjective::with_affinities(Method::Ee, Attractive::Sparse(small), 1.0, 2);
+    assert_eq!(obj.engine_name(), "exact");
+
+    // a chain graph is enough to check selection without building
+    // real affinities at N = 4096
+    let n = 4096;
+    let chain = SpMat::from_triplets(
+        n,
+        n,
+        (1..n).flat_map(|i| [(i, i - 1, 1.0), (i - 1, i, 1.0)]),
+    );
+    let obj = NativeObjective::with_affinities(Method::Ee, Attractive::Sparse(chain), 1.0, 2);
+    assert_eq!(obj.engine_name(), "barnes-hut");
+}

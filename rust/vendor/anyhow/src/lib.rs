@@ -1,0 +1,115 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! Implements exactly the subset this repository uses: the [`Error`]
+//! type (constructible from any `std::error::Error` via `?`), the
+//! [`Result`] alias, and the `anyhow!` / `bail!` / `ensure!` macros.
+//! API-compatible with the real crate for these entry points, so the
+//! dependency in `rust/Cargo.toml` can be switched to the crates.io
+//! `anyhow` without touching any call site.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A string-backed error that records its source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from a message (the `anyhow!` macro's entry point).
+    pub fn msg<M: Into<String>>(m: M) -> Self {
+        Error { msg: m.into(), source: None }
+    }
+
+    /// The root-cause chain, outermost first (diagnostics helper).
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn StdError + 'static)> {
+        let mut next: Option<&(dyn StdError + 'static)> =
+            self.source.as_deref().map(|e| e as &(dyn StdError + 'static));
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        for cause in self.chain() {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+// Like the real anyhow: Error deliberately does NOT implement
+// std::error::Error, so this blanket conversion (what makes `?` work on
+// io::Error etc.) does not collide with core's reflexive From.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// `Result<T, anyhow::Error>` alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_and_conversions() {
+        fn fails() -> crate::Result<()> {
+            crate::ensure!(1 + 1 == 3, "math broke: {}", 42);
+            Ok(())
+        }
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "math broke: 42");
+
+        fn io_pass_through() -> crate::Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        let e = io_pass_through().unwrap_err();
+        assert!(e.chain().count() >= 1);
+        assert!(!format!("{e:?}").is_empty());
+
+        fn bails() -> crate::Result<()> {
+            crate::bail!("stop");
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "stop");
+    }
+}
