@@ -1,0 +1,19 @@
+//! Neighbor-index bench: exact brute force vs HNSW graph construction
+//! and affinity-stage wall-clock — the preprocessing wall the index
+//! refactor removes.
+//!
+//! Delegates to the `ann` harness (bench_harness/ann.rs) so there is
+//! exactly one implementation of the comparison protocol (workload,
+//! recall metric, CSV schema); this target just picks bench-sized
+//! sweeps. Full sweeps + CSV output: `cargo run --release -- ann`.
+
+use nle::bench_harness::ann::{AnnConfig, run};
+
+fn main() {
+    run(&AnnConfig {
+        sizes: vec![2_000, 10_000, 20_000],
+        csv_name: "ann_bench.csv".to_string(),
+        ..Default::default()
+    })
+    .expect("ann harness failed");
+}

@@ -9,6 +9,8 @@
 //! `p_nm = (p_{m|n} + p_{n|m}) / 2N`, summing to 1 over all pairs —
 //! exactly the P matrix of the normalized models, also used as W+ for EE.
 
+use super::knn::KnnGraph;
+use crate::index::IndexSpec;
 use crate::linalg::dense::Mat;
 use crate::linalg::sparse::SpMat;
 use crate::linalg::vecops::sqdist;
@@ -103,10 +105,27 @@ pub fn sne_affinities(y: &Mat, perplexity: f64) -> Mat {
 
 /// Sparse SNE affinities over a kNN candidate set (k ≈ 3 * perplexity is
 /// the usual choice): memory O(N k), the large-N path of fig. 4.
+///
+/// Neighbor search goes through `IndexSpec::Auto`: exact below 4096
+/// points (bit-for-bit the historical result), HNSW above — making the
+/// whole preprocessing stage O(N log N) exactly where the Barnes–Hut
+/// engine takes over the iterations.
 pub fn sne_affinities_sparse(y: &Mat, perplexity: f64, k: usize) -> SpMat {
-    let n = y.rows;
-    assert!(perplexity < k as f64 + 1.0, "perplexity must be < k");
-    let g = super::knn::knn(y, k);
+    sne_affinities_sparse_with(y, perplexity, k, IndexSpec::Auto)
+}
+
+/// [`sne_affinities_sparse`] with an explicit neighbor-index selection.
+pub fn sne_affinities_sparse_with(y: &Mat, perplexity: f64, k: usize, spec: IndexSpec) -> SpMat {
+    let g = super::knn::knn_with(y, k, spec);
+    sne_affinities_from_graph(&g, perplexity)
+}
+
+/// Entropic calibration over a prebuilt neighbor graph — the seam that
+/// lets a job build its kNN graph once and reuse it for both the
+/// affinities and the spectral direction's Laplacian sparsity pattern.
+pub fn sne_affinities_from_graph(g: &KnnGraph, perplexity: f64) -> SpMat {
+    let n = g.neighbors.len();
+    assert!(perplexity < g.k as f64 + 1.0, "perplexity must be < k");
     let cond: Vec<Vec<(usize, f64)>> = crate::par::par_map(n, |i| {
             let d2: Vec<f64> = g.neighbors[i].iter().map(|&(_, d)| d).collect();
             let cal = calibrate(&d2, perplexity, 1e-6, 100);
@@ -117,7 +136,7 @@ pub fn sne_affinities_sparse(y: &Mat, perplexity: f64, k: usize) -> SpMat {
                 .collect::<Vec<(usize, f64)>>()
         });
     let scale = 1.0 / (2.0 * n as f64);
-    let mut trip = Vec::with_capacity(2 * n * k);
+    let mut trip = Vec::with_capacity(2 * n * g.k);
     for (i, nb) in cond.iter().enumerate() {
         for &(j, p) in nb {
             // symmetrization: both (i,j) and (j,i) get both contributions
@@ -210,6 +229,15 @@ mod tests {
         let total: f64 = p.values.iter().sum();
         assert!((total - 1.0).abs() < 1e-10);
         assert!(p.asymmetry() < 1e-12);
+    }
+
+    #[test]
+    fn from_graph_matches_sparse() {
+        let y = random_data(40, 3, 6);
+        let g = crate::affinity::knn(&y, 10);
+        let a = sne_affinities_from_graph(&g, 5.0);
+        let b = sne_affinities_sparse(&y, 5.0, 10);
+        assert!(a.to_dense().max_abs_diff(&b.to_dense()) < 1e-15);
     }
 
     #[test]

@@ -1,11 +1,13 @@
-//! Exact k-nearest-neighbor search (blocked brute force, parallel rows).
+//! k-nearest-neighbor graphs over the pluggable index layer.
 //!
 //! Used to sparsify affinities for the spectral direction's kappa-NN
 //! Laplacian (paper section 2, refinement (3)) and to restrict entropic
-//! affinity calibration to a neighborhood at large N.
+//! affinity calibration to a neighborhood at large N. The search itself
+//! lives in [`crate::index`] (exact scan or HNSW); this module owns the
+//! graph container the affinity pipeline consumes.
 
+use crate::index::IndexSpec;
 use crate::linalg::dense::Mat;
-use crate::linalg::vecops::sqdist;
 
 /// Neighbor lists: for each point, `k` (index, squared distance) pairs in
 /// increasing distance, excluding the point itself.
@@ -14,39 +16,17 @@ pub struct KnnGraph {
     pub neighbors: Vec<Vec<(usize, f64)>>,
 }
 
-/// Exact kNN by brute force: O(N^2 D) but embarrassingly parallel and
-/// cache-friendly (row-major points).
+/// Exact kNN: O(N^2 D) brute force ([`crate::index::ExactIndex`]) — the
+/// reference semantics. Prefer [`knn_with`] where an approximate index
+/// is acceptable; `IndexSpec::Auto` keeps exactness below 4096 points.
 pub fn knn(y: &Mat, k: usize) -> KnnGraph {
-    let n = y.rows;
-    assert!(k < n, "k must be < N");
-    let neighbors: Vec<Vec<(usize, f64)>> = crate::par::par_map(n, |i| {
-            let yi = y.row(i);
-            // max-heap of size k on distance (keep the k smallest)
-            let mut heap: Vec<(f64, usize)> = Vec::with_capacity(k + 1);
-            for j in 0..n {
-                if j == i {
-                    continue;
-                }
-                let d2 = sqdist(yi, y.row(j));
-                if heap.len() < k {
-                    heap.push((d2, j));
-                    if heap.len() == k {
-                        heap.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-                    }
-                } else if d2 < heap[0].0 {
-                    // replace current max, restore descending order
-                    heap[0] = (d2, j);
-                    let mut idx = 0;
-                    while idx + 1 < k && heap[idx].0 < heap[idx + 1].0 {
-                        heap.swap(idx, idx + 1);
-                        idx += 1;
-                    }
-                }
-            }
-            heap.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-            heap.into_iter().map(|(d2, j)| (j, d2)).collect::<Vec<(usize, f64)>>()
-        });
-    KnnGraph { k, neighbors }
+    crate::index::knn_graph(y, k, IndexSpec::Exact)
+}
+
+/// kNN through the selected neighbor index (build once, query all rows
+/// in parallel): O(N^2 D) for `Exact`, O(N log N) for `Hnsw`.
+pub fn knn_with(y: &Mat, k: usize, spec: IndexSpec) -> KnnGraph {
+    crate::index::knn_graph(y, k, spec)
 }
 
 impl KnnGraph {
@@ -67,6 +47,7 @@ impl KnnGraph {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::vecops::sqdist;
 
     fn grid_points() -> Mat {
         // 1-D line of points 0, 1, 2, ..., 9 embedded in 2-D

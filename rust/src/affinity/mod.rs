@@ -1,11 +1,14 @@
-//! Affinity construction: entropic (perplexity) SNE affinities, exact
-//! kNN graphs, and the kappa-sparsification used by the spectral
-//! direction.
+//! Affinity construction: entropic (perplexity) SNE affinities, kNN
+//! graphs over the pluggable neighbor-index layer ([`crate::index`]),
+//! and the kappa-sparsification used by the spectral direction.
 
 pub mod entropic;
 pub mod knn;
 pub mod sparsify;
 
-pub use entropic::{sne_affinities, sne_affinities_sparse};
-pub use knn::knn;
-pub use sparsify::sparsify_weights;
+pub use entropic::{
+    row_perplexity, sne_affinities, sne_affinities_from_graph, sne_affinities_sparse,
+    sne_affinities_sparse_with,
+};
+pub use knn::{knn, knn_with, KnnGraph};
+pub use sparsify::{sparsify_from_graph, sparsify_weights};

@@ -8,6 +8,7 @@
 //! Crucially the *gradient* always uses the full W+; only the curvature
 //! model B_k is sparsified, so convergence (th. 2.1) is unaffected.
 
+use super::knn::KnnGraph;
 use crate::linalg::dense::Mat;
 use crate::linalg::sparse::SpMat;
 
@@ -47,6 +48,38 @@ pub fn sparsify_weights(w: &Mat, kappa: usize) -> SpMat {
             }
         }
     }
+    SpMat::from_triplets(n, n, trip)
+}
+
+/// [`sparsify_weights`] restricted to a prebuilt neighbor graph: each
+/// row's kappa picks are drawn from its graph neighborhood instead of a
+/// full O(N) scan — O(N k log k) total, and the pattern the job shares
+/// between the affinity stage and the spectral direction. Semantically
+/// identical to `sparsify_weights` whenever the kappa largest weights
+/// of every row live inside its neighborhood (true for entropic
+/// affinities built over the same graph, whose weights decay with
+/// distance row-wise).
+pub fn sparsify_from_graph(w: &Mat, g: &KnnGraph, kappa: usize) -> SpMat {
+    assert_eq!(w.rows, w.cols);
+    let n = w.rows;
+    assert_eq!(g.neighbors.len(), n, "graph/weights size mismatch");
+    if kappa == 0 {
+        return SpMat::from_triplets(n, n, std::iter::empty());
+    }
+    let mut keep = std::collections::HashSet::new();
+    let mut idx: Vec<usize> = Vec::new();
+    for i in 0..n {
+        idx.clear();
+        idx.extend(g.neighbors[i].iter().map(|&(j, _)| j));
+        idx.sort_unstable_by(|&a, &b| w.at(i, b).partial_cmp(&w.at(i, a)).unwrap());
+        for &j in idx.iter().take(kappa) {
+            if w.at(i, j) > 0.0 {
+                keep.insert((i, j));
+                keep.insert((j, i)); // symmetrize the pattern
+            }
+        }
+    }
+    let trip = keep.into_iter().map(|(i, j)| (i, j, w.at(i, j)));
     SpMat::from_triplets(n, n, trip)
 }
 
@@ -93,6 +126,22 @@ mod tests {
             let cnt = t.colptr[i + 1] - t.colptr[i];
             assert!((4..=8).contains(&cnt), "row {i} has {cnt}");
         }
+    }
+
+    #[test]
+    fn graph_restricted_matches_full_scan_on_full_graph() {
+        // with k = N-1 the graph imposes no restriction, so both paths
+        // must agree exactly, for every kappa
+        let mut rng = Rng::new(9);
+        let y = Mat::from_fn(18, 3, |_, _| rng.normal());
+        let w = crate::affinity::sne_affinities_sparse(&y, 5.0, 17).to_dense();
+        let g = crate::affinity::knn(&y, 17);
+        for kappa in [1, 4, 17] {
+            let a = sparsify_weights(&w, kappa);
+            let b = sparsify_from_graph(&w, &g, kappa);
+            assert!(a.to_dense().max_abs_diff(&b.to_dense()) < 1e-15, "kappa {kappa}");
+        }
+        assert_eq!(sparsify_from_graph(&w, &g, 0).nnz(), 0);
     }
 
     #[test]

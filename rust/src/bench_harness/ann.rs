@@ -1,0 +1,129 @@
+//! Neighbor-index comparison harness (the `ann` CLI command): exact
+//! brute force vs HNSW across N on the swiss-roll workload — build
+//! wall-clock, whole-graph query wall-clock, recall against the exact
+//! neighbor sets, and the downstream affinity-stage wall-clock (kNN +
+//! entropic calibration), which is the number the acceptance criterion
+//! cares about: the preprocessing stage was the last O(N²) wall left
+//! after the Barnes–Hut engine refactor.
+//!
+//! Output: `results/ann.csv` (one row per (N, index)) and a printed
+//! summary table.
+
+use std::io::Write;
+use std::time::Instant;
+
+use super::common::results_dir;
+use crate::index::{graph_recall, IndexSpec, knn_graph};
+
+pub struct AnnConfig {
+    pub sizes: Vec<usize>,
+    /// neighbors per point in the graph (acceptance: k = 10).
+    pub k: usize,
+    /// perplexity for the affinity-stage timing (must be < k + 1).
+    pub perplexity: f64,
+    /// HNSW knobs under test.
+    pub m: usize,
+    pub ef_construction: usize,
+    pub ef_search: usize,
+    pub csv_name: String,
+}
+
+impl Default for AnnConfig {
+    fn default() -> Self {
+        AnnConfig {
+            sizes: vec![2_000, 5_000, 10_000, 20_000],
+            k: 10,
+            perplexity: 8.0,
+            m: crate::index::DEFAULT_M,
+            ef_construction: crate::index::DEFAULT_EF_CONSTRUCTION,
+            ef_search: crate::index::DEFAULT_EF_SEARCH,
+            csv_name: "ann.csv".to_string(),
+        }
+    }
+}
+
+pub fn run(cfg: &AnnConfig) -> anyhow::Result<()> {
+    let dir = results_dir();
+    let path = dir.join(&cfg.csv_name);
+    let mut file = std::fs::File::create(&path)?;
+    writeln!(file, "n,index,graph_s,affinity_s,recall,graph_speedup,affinity_speedup")?;
+    let hnsw = IndexSpec::Hnsw {
+        m: cfg.m,
+        ef_construction: cfg.ef_construction,
+        ef_search: cfg.ef_search,
+    };
+    println!(
+        "ann: sizes {:?}, k = {}, hnsw m = {} efc = {} efs = {}",
+        cfg.sizes, cfg.k, cfg.m, cfg.ef_construction, cfg.ef_search
+    );
+    println!(
+        "  {:>7} {:>6} {:>12} {:>12} {:>8} {:>10} {:>10}",
+        "N", "index", "graph (s)", "affinity(s)", "recall", "g-speedup", "a-speedup"
+    );
+    for &n in &cfg.sizes {
+        let data = crate::data::synth::swiss_roll(n, 3, 0.05, 42);
+        let k = cfg.k.min(n.saturating_sub(1)).max(1);
+        let perp = cfg.perplexity.min(k as f64);
+
+        // graph construction (index build + one query per point)
+        let t0 = Instant::now();
+        let g_exact = knn_graph(&data.y, k, IndexSpec::Exact);
+        let t_exact = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let g_hnsw = knn_graph(&data.y, k, hnsw);
+        let t_hnsw = t0.elapsed().as_secs_f64();
+        let recall = graph_recall(&g_exact, &g_hnsw);
+
+        // entropic calibration over the graphs just built (reusing
+        // them — the seam jobs use); affinity stage = graph search +
+        // calibration, what an embedding job pays before iteration 1
+        let t0 = Instant::now();
+        let _p = crate::affinity::sne_affinities_from_graph(&g_exact, perp);
+        let a_exact = t_exact + t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let _p = crate::affinity::sne_affinities_from_graph(&g_hnsw, perp);
+        let a_hnsw = t_hnsw + t0.elapsed().as_secs_f64();
+
+        let g_speedup = t_exact / t_hnsw.max(1e-12);
+        let a_speedup = a_exact / a_hnsw.max(1e-12);
+        writeln!(file, "{n},exact,{t_exact:.6e},{a_exact:.6e},1.0,1.0,1.0")?;
+        writeln!(
+            file,
+            "{n},hnsw,{t_hnsw:.6e},{a_hnsw:.6e},{recall:.4},{g_speedup:.3},{a_speedup:.3}"
+        )?;
+        println!(
+            "  {n:>7} {:>6} {t_exact:>12.4} {a_exact:>12.4} {:>8} {:>10} {:>10}",
+            "exact", "1.000", "-", "-"
+        );
+        println!(
+            "  {n:>7} {:>6} {t_hnsw:>12.4} {a_hnsw:>12.4} {recall:>8.4} {g_speedup:>9.1}x {a_speedup:>9.1}x",
+            "hnsw"
+        );
+    }
+    println!("ann: wrote {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny smoke run: the harness completes, writes the CSV, and the
+    /// HNSW rows carry a sane recall.
+    #[test]
+    fn smoke_small() {
+        let cfg = AnnConfig {
+            sizes: vec![300],
+            k: 8,
+            perplexity: 5.0,
+            csv_name: "ann_smoke.csv".to_string(),
+            ..Default::default()
+        };
+        run(&cfg).unwrap();
+        let text = std::fs::read_to_string(results_dir().join("ann_smoke.csv")).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        let hnsw_row = text.lines().last().unwrap();
+        let recall: f64 = hnsw_row.split(',').nth(4).unwrap().parse().unwrap();
+        assert!(recall >= 0.9, "recall {recall}");
+    }
+}

@@ -5,6 +5,7 @@
 //! configurable: defaults are container-friendly; the paper's full
 //! settings are one flag away (see EXPERIMENTS.md for the mapping).
 
+pub mod ann;
 pub mod common;
 pub mod fig1;
 pub mod fig2;

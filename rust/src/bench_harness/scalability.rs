@@ -13,6 +13,7 @@ use std::io::Write;
 use std::time::Instant;
 
 use super::common::results_dir;
+use crate::index::{AUTO_HNSW_MIN_N, IndexSpec};
 use crate::objective::engine::EngineSpec;
 use crate::objective::native::NativeObjective;
 use crate::objective::{Attractive, Method, Objective};
@@ -26,6 +27,10 @@ pub struct ScalConfig {
     pub perplexity: f64,
     /// kNN candidate set size for the sparse affinities.
     pub knn: usize,
+    /// neighbor index for the approximate pipeline's affinity stage
+    /// (`Auto` = HNSW at N ≥ 4096); the exact rows always time the
+    /// brute-force stage for comparison.
+    pub index: IndexSpec,
     /// timing repetitions per engine (one extra warmup evaluation).
     pub reps: usize,
     /// SD iterations at the largest N on the Barnes–Hut engine
@@ -46,6 +51,7 @@ impl Default for ScalConfig {
             lambda: 100.0,
             perplexity: 20.0,
             knn: 60,
+            index: IndexSpec::Auto,
             reps: 3,
             sd_iters: 5,
             csv_name: "scalability.csv".to_string(),
@@ -67,17 +73,21 @@ pub fn run(cfg: &ScalConfig) -> anyhow::Result<()> {
     let dir = results_dir();
     let path = dir.join(&cfg.csv_name);
     let mut file = std::fs::File::create(&path)?;
-    writeln!(file, "method,n,engine,theta,eval_s,speedup,grad_rel_err,energy_rel_err")?;
+    writeln!(
+        file,
+        "method,n,engine,theta,affinity_s,eval_s,total_s,speedup,grad_rel_err,energy_rel_err"
+    )?;
     println!(
-        "scalability [{}]: sizes {:?}, thetas {:?}, k = {}",
+        "scalability [{}]: sizes {:?}, thetas {:?}, k = {}, index = {}",
         cfg.method.name(),
         cfg.sizes,
         cfg.thetas,
-        cfg.knn
+        cfg.knn,
+        cfg.index.name()
     );
     println!(
-        "  {:>7} {:>11} {:>6} {:>12} {:>9} {:>13} {:>13}",
-        "N", "engine", "theta", "eval (s)", "speedup", "grad relerr", "E relerr"
+        "  {:>7} {:>11} {:>6} {:>12} {:>12} {:>9} {:>13} {:>13}",
+        "N", "engine", "theta", "affinity (s)", "eval (s)", "speedup", "grad relerr", "E relerr"
     );
 
     let n_max = cfg.sizes.iter().max().copied();
@@ -87,7 +97,24 @@ pub fn run(cfg: &ScalConfig) -> anyhow::Result<()> {
         // N = 20k (kNN is O(N^2 D) with D = 3, parallel over rows)
         let data = crate::data::synth::swiss_roll(n, 3, 0.05, 42);
         let k = cfg.knn.min(n.saturating_sub(1)).max(2);
-        let p = crate::affinity::sne_affinities_sparse(&data.y, cfg.perplexity.min(k as f64), k);
+        let perp = cfg.perplexity.min(k as f64);
+
+        // affinity stage, timed for both pipelines: the exact O(N² D)
+        // brute force (what every run used to pay) and the configured
+        // index. This is the column that turns the sweep into *total*
+        // pipeline time rather than per-iteration time only.
+        let t0 = Instant::now();
+        let p = crate::affinity::sne_affinities_sparse_with(&data.y, perp, k, IndexSpec::Exact);
+        let aff_exact = t0.elapsed().as_secs_f64();
+        let indexed_is_exact = cfg.index == IndexSpec::Exact
+            || (cfg.index == IndexSpec::Auto && n < AUTO_HNSW_MIN_N);
+        let (p, aff_index) = if indexed_is_exact {
+            (p, aff_exact)
+        } else {
+            let t0 = Instant::now();
+            let pi = crate::affinity::sne_affinities_sparse_with(&data.y, perp, k, cfg.index);
+            (pi, t0.elapsed().as_secs_f64())
+        };
         let x = crate::init::random_init(n, 2, 1e-2, 1);
 
         let exact = NativeObjective::with_engine(
@@ -101,9 +128,14 @@ pub fn run(cfg: &ScalConfig) -> anyhow::Result<()> {
         let t_exact = time_avg(cfg.reps, || {
             let _ = exact.eval(&x);
         });
-        writeln!(file, "{},{n},exact,,{t_exact:.6e},1.0,0.0,0.0", cfg.method.name())?;
+        writeln!(
+            file,
+            "{},{n},exact,,{aff_exact:.6e},{t_exact:.6e},{:.6e},1.0,0.0,0.0",
+            cfg.method.name(),
+            aff_exact + t_exact
+        )?;
         println!(
-            "  {n:>7} {:>11} {:>6} {t_exact:>12.4} {:>9} {:>13} {:>13}",
+            "  {n:>7} {:>11} {:>6} {aff_exact:>12.4} {t_exact:>12.4} {:>9} {:>13} {:>13}",
             "exact", "-", "1.0x", "-", "-"
         );
 
@@ -124,11 +156,12 @@ pub fn run(cfg: &ScalConfig) -> anyhow::Result<()> {
             let speedup = t_exact / t_bh.max(1e-12);
             writeln!(
                 file,
-                "{},{n},bh,{theta},{t_bh:.6e},{speedup:.3},{gerr:.6e},{eerr:.6e}",
-                cfg.method.name()
+                "{},{n},bh,{theta},{aff_index:.6e},{t_bh:.6e},{:.6e},{speedup:.3},{gerr:.6e},{eerr:.6e}",
+                cfg.method.name(),
+                aff_index + t_bh
             )?;
             println!(
-                "  {n:>7} {:>11} {theta:>6.2} {t_bh:>12.4} {:>8.1}x {gerr:>13.3e} {eerr:>13.3e}",
+                "  {n:>7} {:>11} {theta:>6.2} {aff_index:>12.4} {t_bh:>12.4} {:>8.1}x {gerr:>13.3e} {eerr:>13.3e}",
                 "barnes-hut", speedup
             );
         }
@@ -192,5 +225,7 @@ mod tests {
         let text = std::fs::read_to_string(results_dir().join("scalability.csv")).unwrap();
         assert!(text.lines().count() >= 3);
         assert!(text.contains("barnes-hut") || text.contains(",bh,"));
+        // the affinity-stage column is part of the contract now
+        assert!(text.lines().next().unwrap().contains("affinity_s"));
     }
 }

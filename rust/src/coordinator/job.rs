@@ -3,6 +3,8 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::affinity::KnnGraph;
+use crate::index::IndexSpec;
 use crate::linalg::dense::Mat;
 use crate::objective::engine::EngineSpec;
 use crate::objective::native::NativeObjective;
@@ -49,6 +51,14 @@ pub struct EmbeddingJob {
     /// gradient engine for the native backend (ignored by XLA):
     /// `Auto` picks Barnes–Hut on large kNN-sparse problems
     pub engine: EngineSpec,
+    /// neighbor index consumed at construction time by
+    /// [`EmbeddingJob::from_data`] (which records it here); for jobs
+    /// built from caller-supplied `weights` the affinities already
+    /// exist, so this field is informational only
+    pub index: IndexSpec,
+    /// kNN graph built once by the affinity stage and shared with the
+    /// spectral direction's kappa sparsification (None = recompute)
+    pub graph: Option<Arc<KnnGraph>>,
     pub init: InitSpec,
     pub opts: OptOptions,
     pub backend: Backend,
@@ -73,8 +83,55 @@ impl EmbeddingJob {
             strategy: strategy.to_string(),
             kappa: None,
             engine: EngineSpec::Auto,
+            index: IndexSpec::Auto,
+            graph: None,
             init: InitSpec::default(),
             opts: OptOptions { time_budget: budget, ..Default::default() },
+            backend: Backend::Native,
+        }
+    }
+
+    /// Native-backend job straight from raw points: builds the kNN
+    /// graph exactly once through the selected neighbor index and
+    /// derives the entropic affinities from it. Neighborhood reuse is
+    /// structural: the sparse W⁺ *is* the graph's pattern, and the
+    /// spectral direction's Laplacian adopts a sparse W⁺'s pattern
+    /// directly — so no stage recomputes neighbor search. The graph is
+    /// also kept on `job.graph` for strategies that sparsify *dense*
+    /// weights with kappa (`SpectralDirection::with_graph`), where it
+    /// replaces an O(N)-per-row rescan. With `IndexSpec::Auto` +
+    /// `EngineSpec::Auto` the whole pipeline — neighbor search,
+    /// calibration, gradient, factorization — is O(N log N + nnz)
+    /// beyond 4096 points.
+    ///
+    /// The strategy defaults to `"sd"` (the paper's recommendation);
+    /// overwrite `job.strategy` / `job.opts` as needed.
+    pub fn from_data(
+        name: impl Into<String>,
+        y: &Mat,
+        method: Method,
+        lambda: f64,
+        perplexity: f64,
+        k: usize,
+        index: IndexSpec,
+    ) -> Self {
+        let n = y.rows;
+        let k = k.min(n.saturating_sub(1)).max(1);
+        let graph = Arc::new(crate::affinity::knn_with(y, k, index));
+        let p = crate::affinity::sne_affinities_from_graph(&graph, perplexity.min(k as f64));
+        EmbeddingJob {
+            name: name.into(),
+            method,
+            lambda,
+            weights: Arc::new(Attractive::Sparse(p)),
+            dim: 2,
+            strategy: "sd".to_string(),
+            kappa: None,
+            engine: EngineSpec::Auto,
+            index,
+            graph: Some(graph),
+            init: InitSpec::default(),
+            opts: OptOptions::default(),
             backend: Backend::Native,
         }
     }
@@ -104,8 +161,9 @@ impl EmbeddingJob {
     pub fn run(&self) -> anyhow::Result<JobResult> {
         let obj = self.build_objective()?;
         let x0 = crate::init::random_init(obj.n(), self.dim, self.init.scale, self.init.seed);
-        let mut strategy = crate::opt::strategy_by_name(&self.strategy, self.kappa)
-            .ok_or_else(|| anyhow::anyhow!("unknown strategy {:?}", self.strategy))?;
+        let mut strategy =
+            crate::opt::strategy_by_name_with(&self.strategy, self.kappa, self.graph.clone())
+                .ok_or_else(|| anyhow::anyhow!("unknown strategy {:?}", self.strategy))?;
         let res = minimize(obj.as_ref(), strategy.as_mut(), &x0, &self.opts);
         Ok(JobResult {
             name: self.name.clone(),
@@ -178,6 +236,19 @@ mod tests {
         let res = job.run().unwrap();
         assert!(res.e.is_finite());
         assert_eq!(res.x.rows, n);
+    }
+
+    #[test]
+    fn from_data_builds_graph_once_and_runs() {
+        let data = crate::data::synth::swiss_roll(120, 3, 0.05, 4);
+        let mut job =
+            EmbeddingJob::from_data("fd", &data.y, Method::Ee, 10.0, 8.0, 12, IndexSpec::Exact);
+        job.opts.max_iters = 15;
+        assert!(job.graph.is_some());
+        assert_eq!(job.graph.as_ref().unwrap().neighbors.len(), 120);
+        let res = job.run().unwrap();
+        assert!(res.e.is_finite());
+        assert_eq!(res.x.rows, 120);
     }
 
     #[test]

@@ -1,0 +1,443 @@
+//! Hierarchical navigable small world index (Malkov & Yashunin, 2016),
+//! written from scratch — the offline build has no `hnsw_rs` (the crate
+//! the annembed line of work uses for the same job).
+//!
+//! Structure: every point gets a geometric random level; level-ℓ points
+//! participate in graphs at layers 0..=ℓ. Upper layers are sparse
+//! "express lanes" for greedy descent; layer 0 holds everyone. A query
+//! greedily descends to layer 1, then runs a best-first beam search
+//! (width `ef`) at layer 0. Degrees are bounded by `M` (2M at layer 0)
+//! with the paper's diversity heuristic (alg. 4), which keeps edges
+//! spread across directions so greedy routing does not get stuck on
+//! one side of a manifold.
+//!
+//! Costs with fixed knobs: build O(N log N · M D), query
+//! O(log N + ef · M D). The visited set is an epoch-stamped buffer
+//! reused across searches (owned during construction, thread-local for
+//! queries), so no search pays an O(N) clear. Level sampling is
+//! deterministically seeded: index quality must not vary run to run
+//! (experiment reproducibility is part of the deliverable, as with
+//! `data::rng`).
+
+use std::cell::RefCell;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::NeighborIndex;
+use crate::data::Rng;
+use crate::linalg::dense::Mat;
+use crate::linalg::vecops::sqdist;
+
+/// Hard cap on sampled levels (geometric tail; never reached below
+/// astronomically large N).
+const MAX_LEVEL: usize = 32;
+
+/// Total-ordered squared distance for heaps (never NaN: inputs are
+/// finite coordinates).
+#[derive(Clone, Copy)]
+struct D(f64);
+
+impl PartialEq for D {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for D {}
+
+impl PartialOrd for D {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for D {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Epoch-stamped visited set: `begin` is O(1) amortized (the stamp
+/// array is zeroed only on first use and on epoch wrap), so a search
+/// costs O(nodes actually touched) instead of O(N).
+#[derive(Default)]
+struct Visited {
+    stamp: Vec<u32>,
+    epoch: u32,
+}
+
+impl Visited {
+    fn begin(&mut self, n: usize) {
+        if self.stamp.len() < n {
+            self.stamp.resize(n, 0);
+        }
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // u32 wrap after ~4e9 searches: stale stamps could alias
+            self.stamp.fill(0);
+            self.epoch = 1;
+        }
+    }
+
+    /// Mark `i`; returns true the first time within the current epoch.
+    #[inline]
+    fn insert(&mut self, i: usize) -> bool {
+        if self.stamp[i] == self.epoch {
+            false
+        } else {
+            self.stamp[i] = self.epoch;
+            true
+        }
+    }
+}
+
+thread_local! {
+    /// Query-path scratch: one per worker thread, resized on demand, so
+    /// parallel graph construction (`index::knn_graph`) clears it once
+    /// per thread rather than once per query.
+    static VISITED: RefCell<Visited> = RefCell::new(Visited::default());
+}
+
+/// The built index. Borrows the point matrix for its lifetime (like
+/// [`crate::spatial::NTree`]); queries are `&self` and thread-safe;
+/// construction is sequential (insertion order is part of the
+/// deterministic result).
+pub struct HnswIndex<'a> {
+    points: &'a Mat,
+    m: usize,
+    m0: usize,
+    ef_construction: usize,
+    ef_search: usize,
+    /// adjacency lists per node per layer: `neighbors[node][layer]`
+    /// exists for `layer <= level(node)`
+    neighbors: Vec<Vec<Vec<u32>>>,
+    /// entry point: a node of maximal level
+    entry: usize,
+    max_level: usize,
+}
+
+impl<'a> HnswIndex<'a> {
+    /// Build over `y` (N × D). `m` is the out-degree bound at layers
+    /// > 0 (layer 0 allows `2m`); `ef_construction`/`ef_search` trade
+    /// build/query time for recall.
+    pub fn build(y: &'a Mat, m: usize, ef_construction: usize, ef_search: usize) -> Self {
+        assert!(y.rows < u32::MAX as usize, "HNSW ids are u32");
+        let m = m.max(2);
+        let mut idx = HnswIndex {
+            points: y,
+            m,
+            m0: 2 * m,
+            ef_construction: ef_construction.max(m),
+            ef_search: ef_search.max(1),
+            neighbors: Vec::with_capacity(y.rows),
+            entry: 0,
+            max_level: 0,
+        };
+        let level_mult = 1.0 / (m as f64).ln();
+        let mut rng = Rng::new(0x9E37_79B9_7F4A_7C15);
+        let mut visited = Visited::default();
+        for i in 0..y.rows {
+            let u = rng.uniform().clamp(1e-12, 1.0);
+            let level = ((-u.ln() * level_mult) as usize).min(MAX_LEVEL);
+            idx.insert(i, level, &mut visited);
+        }
+        idx
+    }
+
+    fn insert(&mut self, i: usize, level: usize, visited: &mut Visited) {
+        self.neighbors.push(vec![Vec::new(); level + 1]);
+        debug_assert_eq!(self.neighbors.len(), i + 1);
+        if i == 0 {
+            self.entry = 0;
+            self.max_level = level;
+            return;
+        }
+        // the slice borrows the 'a matrix, not self, so the adjacency
+        // mutations below can proceed while q is alive
+        let q: &[f64] = self.points.row(i);
+        let top = self.max_level;
+        let mut ep = self.entry;
+        // greedy descent through the layers above the new node's level
+        for layer in (level + 1..=top).rev() {
+            ep = self.greedy_closest(q, ep, layer);
+        }
+        // beam-search + connect at the layers the node participates in
+        let mut eps = vec![ep];
+        for layer in (0..=level.min(top)).rev() {
+            let found = self.search_layer(q, &eps, self.ef_construction, layer, visited);
+            let cap = if layer == 0 { self.m0 } else { self.m };
+            let selected = self.select_diverse(&found, cap);
+            for &s in &selected {
+                self.neighbors[s as usize][layer].push(i as u32);
+                if self.neighbors[s as usize][layer].len() > cap {
+                    self.shrink(s as usize, layer, cap);
+                }
+            }
+            self.neighbors[i][layer] = selected;
+            // next (lower) layer starts from everything this one found
+            eps.clear();
+            eps.extend(found.iter().map(|&(_, t)| t as usize));
+        }
+        if level > top {
+            self.max_level = level;
+            self.entry = i;
+        }
+    }
+
+    /// Re-apply the diversity bound to an over-full adjacency list.
+    fn shrink(&mut self, node: usize, layer: usize, cap: usize) {
+        let here = self.points.row(node);
+        let mut cand: Vec<(f64, u32)> = self.neighbors[node][layer]
+            .iter()
+            .map(|&t| (sqdist(here, self.points.row(t as usize)), t))
+            .collect();
+        cand.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+        let kept = self.select_diverse(&cand, cap);
+        self.neighbors[node][layer] = kept;
+    }
+
+    /// Pure greedy walk at one layer: follow the best edge until no
+    /// neighbor improves on the current node.
+    fn greedy_closest(&self, q: &[f64], start: usize, layer: usize) -> usize {
+        let mut cur = start;
+        let mut curd = sqdist(q, self.points.row(cur));
+        loop {
+            let mut improved = false;
+            for &t in &self.neighbors[cur][layer] {
+                let d = sqdist(q, self.points.row(t as usize));
+                if d < curd {
+                    cur = t as usize;
+                    curd = d;
+                    improved = true;
+                }
+            }
+            if !improved {
+                return cur;
+            }
+        }
+    }
+
+    /// Best-first beam search at one layer (paper alg. 2): returns up
+    /// to `ef` nodes as `(d², id)` in increasing distance.
+    fn search_layer(
+        &self,
+        q: &[f64],
+        entries: &[usize],
+        ef: usize,
+        layer: usize,
+        visited: &mut Visited,
+    ) -> Vec<(f64, u32)> {
+        visited.begin(self.neighbors.len());
+        // frontier: min-heap on distance; results: max-heap bounded to ef
+        let mut frontier: BinaryHeap<Reverse<(D, u32)>> = BinaryHeap::new();
+        let mut results: BinaryHeap<(D, u32)> = BinaryHeap::new();
+        for &e in entries {
+            if !visited.insert(e) {
+                continue;
+            }
+            let d = sqdist(q, self.points.row(e));
+            frontier.push(Reverse((D(d), e as u32)));
+            results.push((D(d), e as u32));
+        }
+        while results.len() > ef {
+            results.pop();
+        }
+        while let Some(&Reverse((D(dc), c))) = frontier.peek() {
+            let worst = results.peek().map(|&(D(d), _)| d).unwrap_or(f64::INFINITY);
+            if dc > worst && results.len() >= ef {
+                break;
+            }
+            frontier.pop();
+            for &t in &self.neighbors[c as usize][layer] {
+                let t = t as usize;
+                if !visited.insert(t) {
+                    continue;
+                }
+                let d = sqdist(q, self.points.row(t));
+                let worst = results.peek().map(|&(D(w), _)| w).unwrap_or(f64::INFINITY);
+                if results.len() < ef || d < worst {
+                    frontier.push(Reverse((D(d), t as u32)));
+                    results.push((D(d), t as u32));
+                    if results.len() > ef {
+                        results.pop();
+                    }
+                }
+            }
+        }
+        let mut out: Vec<(f64, u32)> = results.into_iter().map(|(D(d), t)| (d, t)).collect();
+        out.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+        out
+    }
+
+    /// The paper's neighbor-selection heuristic (alg. 4 with
+    /// keepPrunedConnections): from candidates in increasing distance
+    /// to the query (the `f64` of each pair), keep those closer to the
+    /// query than to any already-kept candidate, then backfill with the
+    /// nearest rejects up to `cap`.
+    fn select_diverse(&self, cand: &[(f64, u32)], cap: usize) -> Vec<u32> {
+        if cand.len() <= cap {
+            return cand.iter().map(|&(_, t)| t).collect();
+        }
+        let mut kept: Vec<(f64, u32)> = Vec::with_capacity(cap);
+        let mut pruned: Vec<(f64, u32)> = Vec::new();
+        for &(d, t) in cand {
+            if kept.len() >= cap {
+                break;
+            }
+            let tp = self.points.row(t as usize);
+            let dominated =
+                kept.iter().any(|&(_, s)| sqdist(tp, self.points.row(s as usize)) < d);
+            if dominated {
+                pruned.push((d, t));
+            } else {
+                kept.push((d, t));
+            }
+        }
+        let mut backfill = pruned.into_iter();
+        while kept.len() < cap {
+            match backfill.next() {
+                Some(x) => kept.push(x),
+                None => break,
+            }
+        }
+        kept.into_iter().map(|(_, t)| t).collect()
+    }
+
+    /// Descend to layer 1 greedily, then beam-search layer 0 using the
+    /// calling thread's reusable visited scratch.
+    fn search(&self, q: &[f64], ef: usize) -> Vec<(f64, u32)> {
+        if self.neighbors.is_empty() {
+            return Vec::new();
+        }
+        let mut ep = self.entry;
+        for layer in (1..=self.max_level).rev() {
+            ep = self.greedy_closest(q, ep, layer);
+        }
+        VISITED.with(|v| {
+            let mut v = v.borrow_mut();
+            self.search_layer(q, &[ep], ef, 0, &mut v)
+        })
+    }
+}
+
+impl NeighborIndex for HnswIndex<'_> {
+    fn name(&self) -> &'static str {
+        "hnsw"
+    }
+
+    fn len(&self) -> usize {
+        self.points.rows
+    }
+
+    fn query(&self, q: &[f64], k: usize) -> Vec<(usize, f64)> {
+        self.search(q, self.ef_search.max(k))
+            .into_iter()
+            .take(k)
+            .map(|(d, t)| (t as usize, d))
+            .collect()
+    }
+
+    fn query_point(&self, i: usize, k: usize) -> Vec<(usize, f64)> {
+        self.search(self.points.row(i), self.ef_search.max(k + 1))
+            .into_iter()
+            .filter(|&(_, t)| t as usize != i)
+            .take(k)
+            .map(|(d, t)| (t as usize, d))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::{graph_recall, IndexSpec, knn_graph};
+
+    fn gaussian(n: usize, d: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(n, d, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn high_recall_on_small_gaussian() {
+        let y = gaussian(400, 5, 1);
+        let exact = knn_graph(&y, 8, IndexSpec::Exact);
+        let approx = knn_graph(&y, 8, IndexSpec::hnsw_default());
+        let r = graph_recall(&exact, &approx);
+        assert!(r >= 0.95, "recall {r}");
+    }
+
+    #[test]
+    fn results_sorted_and_exclude_self() {
+        let y = gaussian(200, 3, 2);
+        let idx = HnswIndex::build(&y, 8, 100, 50);
+        for i in [0usize, 57, 199] {
+            let nb = idx.query_point(i, 10);
+            assert_eq!(nb.len(), 10);
+            assert!(nb.iter().all(|&(j, _)| j != i));
+            for w in nb.windows(2) {
+                assert!(w[0].1 <= w[1].1);
+            }
+            // distances are genuine squared distances
+            for &(j, d2) in &nb {
+                assert!((d2 - sqdist(y.row(i), y.row(j))).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_across_builds() {
+        let y = gaussian(150, 4, 3);
+        let a = HnswIndex::build(&y, 6, 80, 40);
+        let b = HnswIndex::build(&y, 6, 80, 40);
+        for i in 0..150 {
+            assert_eq!(a.query_point(i, 5), b.query_point(i, 5));
+        }
+    }
+
+    #[test]
+    fn arbitrary_query_returns_stored_point() {
+        let y = gaussian(100, 3, 4);
+        let idx = HnswIndex::build(&y, 8, 100, 50);
+        let hit = idx.query(y.row(42), 1);
+        assert_eq!(hit.len(), 1);
+        assert_eq!(hit[0].0, 42);
+        assert_eq!(hit[0].1, 0.0);
+    }
+
+    #[test]
+    fn tiny_inputs() {
+        let y = gaussian(1, 3, 5);
+        let idx = HnswIndex::build(&y, 4, 10, 10);
+        assert!(idx.query_point(0, 3).is_empty());
+        let y = gaussian(3, 3, 6);
+        let idx = HnswIndex::build(&y, 4, 10, 10);
+        assert_eq!(idx.query_point(0, 2).len(), 2);
+        // k beyond N-1 returns what exists
+        assert_eq!(idx.query_point(0, 10).len(), 2);
+    }
+
+    #[test]
+    fn degree_bounds_hold() {
+        let y = gaussian(300, 3, 7);
+        let idx = HnswIndex::build(&y, 5, 60, 30);
+        for lists in &idx.neighbors {
+            for (layer, nb) in lists.iter().enumerate() {
+                let cap = if layer == 0 { idx.m0 } else { idx.m };
+                assert!(nb.len() <= cap, "layer {layer} degree {}", nb.len());
+            }
+        }
+    }
+
+    #[test]
+    fn visited_epochs_are_independent() {
+        // back-to-back searches on one thread share the scratch; results
+        // must not leak between epochs
+        let y = gaussian(120, 3, 8);
+        let idx = HnswIndex::build(&y, 8, 60, 40);
+        let first = idx.query_point(3, 6);
+        for i in 0..120 {
+            let _ = idx.query_point(i, 6);
+        }
+        assert_eq!(idx.query_point(3, 6), first);
+    }
+}

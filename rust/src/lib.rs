@@ -12,9 +12,10 @@
 //!   seven partial-Hessian direction strategies including the
 //!   **spectral direction** ([`opt`]), homotopy optimization, the full
 //!   linear-algebra substrate (sparse Cholesky, CG, Lanczos —
-//!   [`linalg`]), entropic affinities ([`affinity`]), datasets
-//!   ([`data`]), quality metrics ([`metrics`]), an embedding-job
-//!   coordinator ([`coordinator`]) and the figure-reproduction harness
+//!   [`linalg`]), entropic affinities over pluggable neighbor indices
+//!   (exact or HNSW — [`affinity`], [`index`]), datasets ([`data`]),
+//!   quality metrics ([`metrics`]), an embedding-job coordinator
+//!   ([`coordinator`]) and the figure-reproduction harness
 //!   ([`bench_harness`]).
 //! * **Layer 2 (python/compile/model.py)** — the objectives as jax
 //!   functions, AOT-lowered to HLO text once by `make artifacts`.
@@ -69,6 +70,7 @@ pub mod bench_harness;
 pub mod coordinator;
 pub mod data;
 pub mod graph;
+pub mod index;
 pub mod init;
 pub mod linalg;
 pub mod metrics;
@@ -80,6 +82,7 @@ pub mod spatial;
 
 /// Convenient re-exports for examples and binaries.
 pub mod prelude {
+    pub use crate::index::{ExactIndex, HnswIndex, IndexSpec, NeighborIndex};
     pub use crate::linalg::dense::Mat;
     pub use crate::objective::engine::{
         BarnesHutEngine, EngineSpec, ExactEngine, GradientEngine,

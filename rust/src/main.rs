@@ -2,14 +2,14 @@
 //!
 //! Subcommands map 1:1 to the paper's experiments (fig1..fig4, rates)
 //! plus a general-purpose `embed` runner and `info` for the artifact
-//! registry. See DESIGN.md section 5 for the experiment index.
+//! registry. See DESIGN.md section 6 for the experiment index.
 //!
 //! (Arg parsing is hand-rolled `--key value` matching; the offline build
 //! has no clap — see Cargo.toml.)
 
 use std::time::Duration;
 
-use nle::bench_harness::{fig1, fig2, fig3, fig4, rates, scalability};
+use nle::bench_harness::{ann, fig1, fig2, fig3, fig4, rates, scalability};
 use nle::prelude::*;
 
 const USAGE: &str = "\
@@ -31,17 +31,29 @@ COMMANDS
           [--n 2000] [--budget 60] [--kappa 7] [--strategies fp,lbfgs,sd,sdm]
   rates   theorem 2.1 rate constants r = ||B^-1 H - I|| [--n 40]
   scal    gradient-engine scalability: exact vs Barnes-Hut wall-clock
-          and gradient error across N and theta (kNN-sparse swiss roll)
+          and gradient error across N and theta (kNN-sparse swiss roll),
+          plus the affinity-stage wall-clock for both neighbor indices
           [--sizes 2000,5000,10000,20000] [--thetas 0.2,0.5,0.8]
           [--method ee] [--lambda 100] [--knn 60] [--reps 3] [--sd-iters 5]
+          [--index auto|exact|hnsw|hnsw:<m>[,<efc>[,<efs>]]]
+  ann     neighbor-index comparison: exact vs HNSW graph build +
+          affinity-stage wall-clock and recall across N (swiss roll)
+          [--sizes 2000,5000,10000,20000] [--k 10] [--perplexity 8]
+          [--m 16] [--efc 128] [--efs 100]
   all     run every experiment at default scale
   embed   one embedding run
           [--data swiss|coil|mnist|clusters] [--n 500] [--method ee]
           [--strategy sd] [--lambda 100] [--perplexity 20]
           [--max-iters 500] [--backend native|xla]
           [--engine auto|exact|bh|bh:<theta>] [--knn 0 (0 = dense W+)]
+          [--index auto|exact|hnsw|hnsw:<m>[,<efc>[,<efs>]]]
           [--out results/embedding.csv]
   info    list available AOT artifacts [--artifacts artifacts]
+
+Neighbor indices (--index): 'auto' uses exact brute force below 4096
+points and HNSW above (same threshold as the Barnes-Hut engine), so
+large-N runs are O(N log N) end to end. 'hnsw:<m>[,<efc>[,<efs>]]'
+sets the out-degree bound and the construction/search beam widths.
 ";
 
 /// Tiny `--key value` parser: returns a lookup map; bare flags get "true".
@@ -137,6 +149,8 @@ fn main() -> anyhow::Result<()> {
             let thetas: Vec<f64> = parse_csv("thetas", &args.get_str("thetas", "0.2,0.5,0.8"))?;
             let method = Method::parse(&args.get_str("method", "ee"))
                 .ok_or_else(|| anyhow::anyhow!("bad method"))?;
+            let index = IndexSpec::parse(&args.get_str("index", "auto"))
+                .ok_or_else(|| anyhow::anyhow!("bad index (auto|exact|hnsw|hnsw:<m>[,..])"))?;
             scalability::run(&scalability::ScalConfig {
                 sizes,
                 thetas,
@@ -144,8 +158,22 @@ fn main() -> anyhow::Result<()> {
                 lambda: args.get("lambda", 100.0),
                 perplexity: args.get("perplexity", 20.0),
                 knn: args.get("knn", 60),
+                index,
                 reps: args.get("reps", 3),
                 sd_iters: args.get("sd_iters", 5),
+                ..Default::default()
+            })
+        }
+        "ann" => {
+            let sizes: Vec<usize> =
+                parse_csv("sizes", &args.get_str("sizes", "2000,5000,10000,20000"))?;
+            ann::run(&ann::AnnConfig {
+                sizes,
+                k: args.get("k", 10),
+                perplexity: args.get("perplexity", 8.0),
+                m: args.get("m", nle::index::DEFAULT_M),
+                ef_construction: args.get("efc", nle::index::DEFAULT_EF_CONSTRUCTION),
+                ef_search: args.get("efs", nle::index::DEFAULT_EF_SEARCH),
                 ..Default::default()
             })
         }
@@ -173,6 +201,7 @@ fn main() -> anyhow::Result<()> {
                 sd_iters: 3,
                 ..Default::default()
             })?;
+            ann::run(&ann::AnnConfig { sizes: vec![1000, 2000], ..Default::default() })?;
             rates::run(&rates::RatesConfig::default())
         }
         "embed" => {
@@ -199,16 +228,20 @@ fn main() -> anyhow::Result<()> {
             let backend = args.get_str("backend", "native");
             let engine = EngineSpec::parse(&args.get_str("engine", "auto"))
                 .ok_or_else(|| anyhow::anyhow!("bad engine (auto|exact|bh|bh:<theta>)"))?;
+            let index = IndexSpec::parse(&args.get_str("index", "auto"))
+                .ok_or_else(|| anyhow::anyhow!("bad index (auto|exact|hnsw|hnsw:<m>[,..])"))?;
             anyhow::ensure!(n_actual >= 2, "dataset has only {n_actual} points");
             // --knn k > 0 switches to kNN-sparse affinities, the
-            // representation the Barnes-Hut engine streams in O(nnz)
+            // representation the Barnes-Hut engine streams in O(nnz);
+            // --index picks the neighbor search that builds them
             let knn: usize = args.get("knn", 0);
             let wp = if knn > 0 {
                 let k = knn.min(n_actual - 1);
-                Attractive::Sparse(nle::affinity::sne_affinities_sparse(
+                Attractive::Sparse(nle::affinity::sne_affinities_sparse_with(
                     &ds.y,
                     perplexity.min(k as f64),
                     k,
+                    index,
                 ))
             } else {
                 Attractive::Dense(

@@ -62,22 +62,17 @@ pub const DEFAULT_THETA: f64 = 0.5;
 pub const AUTO_BH_MIN_N: usize = 4096;
 
 /// Engine selection, resolvable from config/CLI strings.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub enum EngineSpec {
     /// Barnes–Hut for large sparse-attractive problems in d ≤ 3 with a
     /// tree-compatible repulsion; exact otherwise.
+    #[default]
     Auto,
     /// Always the exact O(N²d) engine.
     Exact,
     /// Always Barnes–Hut with the given θ (0 = exact semantics at tree
     /// cost; 0.5 is the customary speed/accuracy point).
     BarnesHut { theta: f64 },
-}
-
-impl Default for EngineSpec {
-    fn default() -> Self {
-        EngineSpec::Auto
-    }
 }
 
 impl EngineSpec {

@@ -318,14 +318,38 @@ pub fn center_columns_by_component(m: &mut Mat, comp: &[usize]) {
 
 /// Construct a strategy by name (CLI / harness helper).
 pub fn strategy_by_name(name: &str, kappa: Option<usize>) -> Option<Box<dyn DirectionStrategy>> {
+    strategy_by_name_with(name, kappa, None)
+}
+
+/// [`strategy_by_name`] with an optional shared neighbor graph: the
+/// kappa-sparsifying strategies (SD, SD⁻) reuse it for their Laplacian
+/// sparsity pattern instead of recomputing neighborhoods — the seam
+/// `EmbeddingJob` uses to build the kNN graph exactly once per job.
+pub fn strategy_by_name_with(
+    name: &str,
+    kappa: Option<usize>,
+    graph: Option<std::sync::Arc<crate::affinity::KnnGraph>>,
+) -> Option<Box<dyn DirectionStrategy>> {
     match name {
         "gd" => Some(Box::new(gd::GradientDescent::new())),
         "fp" => Some(Box::new(fp::FixedPoint::new())),
         "diagh" => Some(Box::new(diagh::DiagHessian::new())),
         "cg" => Some(Box::new(cg::NonlinearCg::new())),
         "lbfgs" => Some(Box::new(lbfgs::Lbfgs::new(100))),
-        "sd" => Some(Box::new(sd::SpectralDirection::new(kappa))),
-        "sdm" | "sd-" => Some(Box::new(sdm::SdMinus::new(kappa))),
+        "sd" => {
+            let s = sd::SpectralDirection::new(kappa);
+            Some(Box::new(match graph {
+                Some(g) => s.with_graph(g),
+                None => s,
+            }))
+        }
+        "sdm" | "sd-" => {
+            let s = sdm::SdMinus::new(kappa);
+            Some(Box::new(match graph {
+                Some(g) => s.with_graph(g),
+                None => s,
+            }))
+        }
         _ => None,
     }
 }

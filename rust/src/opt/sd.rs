@@ -18,8 +18,11 @@
 //! from L+ at X = 0 (where the Student kernel K = 1 and w+ = p) and kept
 //! frozen, exactly as in section 3.2.
 
+use std::sync::Arc;
+
 use super::DirectionStrategy;
-use crate::affinity::sparsify_weights;
+use crate::affinity::knn::KnnGraph;
+use crate::affinity::{sparsify_from_graph, sparsify_weights};
 use crate::graph::laplacian_sparse;
 use crate::linalg::dense::Mat;
 use crate::linalg::ordering::rcm;
@@ -30,6 +33,10 @@ use crate::objective::{Attractive, Objective};
 pub struct SpectralDirection {
     /// kappa sparsity level (None = no sparsification)
     kappa: Option<usize>,
+    /// prebuilt neighbor graph shared with the affinity stage: when
+    /// set, dense-W⁺ kappa picks scan O(k) graph neighbors per row
+    /// instead of O(N) columns (see `EmbeddingJob::from_data`)
+    graph: Option<Arc<KnnGraph>>,
     chol: Option<SparseChol>,
     /// RCM permutation (new -> old) applied before factorization
     perm: Vec<usize>,
@@ -47,14 +54,28 @@ pub struct SpectralDirection {
 
 impl SpectralDirection {
     pub fn new(kappa: Option<usize>) -> Self {
-        SpectralDirection { kappa, chol: None, perm: Vec::new(), comp: Vec::new(), comp_scale: Vec::new(), setup_seconds: 0.0, factor_nnz: 0 }
+        SpectralDirection { kappa, graph: None, chol: None, perm: Vec::new(), comp: Vec::new(), comp_scale: Vec::new(), setup_seconds: 0.0, factor_nnz: 0 }
+    }
+
+    /// Reuse a neighbor graph built by the affinity stage for the kappa
+    /// sparsification pattern (avoids recomputing neighborhoods).
+    pub fn with_graph(mut self, graph: Arc<KnnGraph>) -> Self {
+        self.graph = Some(graph);
+        self
     }
 
     /// Build `4 L+ + mu I` from the objective's attractive weights;
     /// returns the system and the component labels of the graph.
     fn build_system(&self, obj: &dyn Objective) -> (SpMat, Vec<usize>) {
         let wp_sparse: SpMat = match (obj.attractive(), self.kappa) {
-            (Attractive::Dense(w), Some(k)) if k + 1 < w.rows => sparsify_weights(w, k),
+            // graph reuse needs matching size AND enough neighbors per
+            // row to honor kappa; otherwise fall back to the full scan
+            (Attractive::Dense(w), Some(k)) if k + 1 < w.rows => match &self.graph {
+                Some(g) if g.neighbors.len() == w.rows && g.k >= k => {
+                    sparsify_from_graph(w, g, k)
+                }
+                _ => sparsify_weights(w, k),
+            },
             (Attractive::Dense(w), _) => SpMat::from_dense(w, 0.0),
             (Attractive::Sparse(s), _) => s.clone(), // already a kNN graph
         };
@@ -292,6 +313,28 @@ mod tests {
         for w in res.trace.windows(2) {
             assert!(w[1].e <= w[0].e + 1e-10);
         }
+    }
+
+    #[test]
+    fn shared_graph_direction_matches_full_scan() {
+        // a full (k = N-1) shared graph imposes no restriction, so the
+        // graph-reuse path must reproduce the O(N)-scan direction
+        let mut rng = Rng::new(8);
+        let n = 24;
+        let y = Mat::from_fn(n, 5, |_, _| rng.normal());
+        let p = crate::affinity::sne_affinities(&y, 6.0);
+        let obj = NativeObjective::with_affinities(Method::Ee, Attractive::Dense(p), 10.0, 2);
+        let x = Mat::from_fn(n, 2, |_, _| 0.1 * rng.normal());
+        let g = std::sync::Arc::new(crate::affinity::knn(&y, n - 1));
+        let mut a = SpectralDirection::new(Some(5));
+        let mut b = SpectralDirection::new(Some(5)).with_graph(g);
+        a.prepare(&obj, &x).unwrap();
+        b.prepare(&obj, &x).unwrap();
+        let (_, grad) = obj.eval(&x);
+        let pa = a.direction(&obj, &x, &grad, 0);
+        let pb = b.direction(&obj, &x, &grad, 0);
+        assert!(pa.max_abs_diff(&pb) < 1e-12);
+        assert!(dot(&pb.data, &grad.data) < 0.0);
     }
 
     #[test]

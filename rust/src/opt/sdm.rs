@@ -14,8 +14,11 @@
 //!   s-SNE : lam q_nm                        (K2 = 1 part of eq. 2)
 //!   t-SNE : 2 lam q_nm K^2                  (K2 = 2 K^2 part of eq. 2)
 
+use std::sync::Arc;
+
 use super::DirectionStrategy;
-use crate::affinity::sparsify_weights;
+use crate::affinity::knn::KnnGraph;
+use crate::affinity::{sparsify_from_graph, sparsify_weights};
 use crate::graph::laplacian_sparse;
 use crate::linalg::cg as lincg;
 use crate::linalg::dense::Mat;
@@ -25,6 +28,9 @@ use crate::objective::{Attractive, Method, Objective};
 
 pub struct SdMinus {
     kappa: Option<usize>,
+    /// optional neighbor graph shared with the affinity stage (see
+    /// `SpectralDirection::with_graph`)
+    graph: Option<Arc<KnnGraph>>,
     /// 4 L+ (+ mu I), built once
     base: Option<SpMat>,
     /// previous direction per dimension (CG warm start)
@@ -38,7 +44,14 @@ pub struct SdMinus {
 
 impl SdMinus {
     pub fn new(kappa: Option<usize>) -> Self {
-        SdMinus { kappa, base: None, warm: None, cg_tol: 0.1, cg_max_iter: 50, inner_iters: 0 }
+        SdMinus { kappa, graph: None, base: None, warm: None, cg_tol: 0.1, cg_max_iter: 50, inner_iters: 0 }
+    }
+
+    /// Reuse a neighbor graph built by the affinity stage for the kappa
+    /// sparsification pattern.
+    pub fn with_graph(mut self, graph: Arc<KnnGraph>) -> Self {
+        self.graph = Some(graph);
+        self
     }
 
     /// Dense same-dimension weight matrix c_nm at the current X, plus
@@ -101,7 +114,14 @@ impl DirectionStrategy for SdMinus {
     fn prepare(&mut self, obj: &dyn Objective, _x0: &Mat) -> anyhow::Result<()> {
         // base = 4 L+ + mu I (same construction as SD)
         let wp_sparse: SpMat = match (obj.attractive(), self.kappa) {
-            (Attractive::Dense(w), Some(k)) if k + 1 < w.rows => sparsify_weights(w, k),
+            // see SpectralDirection::build_system: reuse only when the
+            // graph is the right size and deep enough for kappa
+            (Attractive::Dense(w), Some(k)) if k + 1 < w.rows => match &self.graph {
+                Some(g) if g.neighbors.len() == w.rows && g.k >= k => {
+                    sparsify_from_graph(w, g, k)
+                }
+                _ => sparsify_weights(w, k),
+            },
             (Attractive::Dense(w), _) => SpMat::from_dense(w, 0.0),
             (Attractive::Sparse(sp), _) => sp.clone(),
         };

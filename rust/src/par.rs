@@ -23,52 +23,68 @@ pub fn num_threads() -> usize {
     })
 }
 
-/// Parallel map over `0..n`, preserving order. Falls back to serial for
-/// small `n` (thread spawn ~10us each; pairwise rows cost far more).
-pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
+/// Below this `n` the work runs serially: thread spawn costs ~10us
+/// each, and every call site's per-index work (pairwise rows, tree
+/// traversals) only amortizes that beyond a few dozen indices.
+pub const SERIAL_CUTOFF: usize = 32;
+
+/// Shared chunking plan: `None` means run serially (too little work or
+/// a single worker); `Some(ranges)` holds one contiguous `(start, end)`
+/// range per worker, covering `0..n` in order.
+fn chunk_plan(n: usize) -> Option<Vec<(usize, usize)>> {
     let threads = num_threads().min(n.max(1));
-    if threads <= 1 || n < 32 {
-        return (0..n).map(f).collect();
+    if threads <= 1 || n < SERIAL_CUTOFF {
+        return None;
     }
     let chunk = n.div_ceil(threads);
+    let mut ranges = Vec::with_capacity(threads);
+    let mut start = 0;
+    while start < n {
+        let end = (start + chunk).min(n);
+        ranges.push((start, end));
+        start = end;
+    }
+    Some(ranges)
+}
+
+/// Parallel map over `0..n`, preserving order. Falls back to serial for
+/// small `n` (see [`SERIAL_CUTOFF`]).
+pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
+    let Some(ranges) = chunk_plan(n) else {
+        return (0..n).map(f).collect();
+    };
     let mut out: Vec<Option<T>> = Vec::with_capacity(n);
     out.resize_with(n, || None);
     let fref = &f;
     std::thread::scope(|s| {
         let mut rest = out.as_mut_slice();
-        let mut start = 0;
-        while start < n {
-            let len = chunk.min(n - start);
-            let (head, tail) = rest.split_at_mut(len);
+        let mut consumed = 0;
+        for &(start, end) in &ranges {
+            let (head, tail) = rest.split_at_mut(end - consumed);
             rest = tail;
-            let base = start;
+            consumed = end;
             s.spawn(move || {
                 for (off, slot) in head.iter_mut().enumerate() {
-                    *slot = Some(fref(base + off));
+                    *slot = Some(fref(start + off));
                 }
             });
-            start += len;
         }
     });
     out.into_iter().map(|v| v.expect("worker filled every slot")).collect()
 }
 
-/// Parallel sum of `f(i)` over `0..n`.
+/// Parallel sum of `f(i)` over `0..n`. Same chunking (and the same
+/// serial cutoff) as [`par_map`].
 pub fn par_sum<F: Fn(usize) -> f64 + Sync>(n: usize, f: F) -> f64 {
-    let threads = num_threads().min(n.max(1));
-    if threads <= 1 || n < 32 {
+    let Some(ranges) = chunk_plan(n) else {
         return (0..n).map(f).sum();
-    }
-    let chunk = n.div_ceil(threads);
+    };
     let fref = &f;
     let partials: Vec<f64> = std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        let mut start = 0;
-        while start < n {
-            let end = (start + chunk).min(n);
-            handles.push(s.spawn(move || (start..end).map(fref).sum::<f64>()));
-            start = end;
-        }
+        let handles: Vec<_> = ranges
+            .iter()
+            .map(|&(start, end)| s.spawn(move || (start..end).map(fref).sum::<f64>()))
+            .collect();
         handles.into_iter().map(|h| h.join().expect("par_sum worker panicked")).collect()
     });
     partials.into_iter().sum()
@@ -101,5 +117,16 @@ mod tests {
     #[test]
     fn thread_count_positive() {
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn serial_cutoff_boundary() {
+        // correct on both sides of the shared serial/parallel switch
+        for n in [SERIAL_CUTOFF - 1, SERIAL_CUTOFF, SERIAL_CUTOFF + 1, 5 * SERIAL_CUTOFF] {
+            let expect: Vec<usize> = (0..n).map(|i| 3 * i).collect();
+            assert_eq!(par_map(n, |i| 3 * i), expect);
+            let es: f64 = (0..n).map(|i| i as f64).sum();
+            assert!((par_sum(n, |i| i as f64) - es).abs() < 1e-9);
+        }
     }
 }

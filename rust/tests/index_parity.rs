@@ -1,0 +1,112 @@
+//! Cross-index parity: the HNSW backend against the exact reference.
+//!
+//! * recall ≥ 0.9 at k = 10 on a 2000-point swiss roll (the
+//!   acceptance bound; the default knobs land well above it);
+//! * entropic affinities built over exact vs HNSW neighborhoods agree
+//!   in their per-point perplexities within tolerance — approximate
+//!   neighbors perturb *which* tail entries a row keeps, not the
+//!   calibrated scale;
+//! * the full large-N pipeline shape — HNSW affinities + Barnes–Hut
+//!   engine + spectral direction — descends end to end and matches the
+//!   exact pipeline's embedding quality.
+
+use nle::affinity::{row_perplexity, sne_affinities_sparse_with};
+use nle::index::{graph_recall, IndexSpec, knn_graph};
+use nle::prelude::*;
+
+fn swiss(n: usize) -> Mat {
+    nle::data::synth::swiss_roll(n, 3, 0.05, 42).y
+}
+
+#[test]
+fn hnsw_recall_on_swiss_roll() {
+    let y = swiss(2000);
+    let exact = knn_graph(&y, 10, IndexSpec::Exact);
+    let hnsw = knn_graph(&y, 10, IndexSpec::hnsw_default());
+    let r = graph_recall(&exact, &hnsw);
+    assert!(r >= 0.9, "recall {r} < 0.9 at k = 10 on 2000-pt swiss roll");
+}
+
+#[test]
+fn auto_spec_flips_to_hnsw_at_threshold() {
+    use nle::index::AUTO_HNSW_MIN_N;
+    let y = swiss(AUTO_HNSW_MIN_N);
+    assert_eq!(IndexSpec::Auto.build(&y).name(), "hnsw");
+    let small = swiss(64);
+    assert_eq!(IndexSpec::Auto.build(&small).name(), "exact");
+}
+
+#[test]
+fn entropic_perplexity_parity_exact_vs_hnsw() {
+    let n = 1000;
+    let y = swiss(n);
+    let (perp, k) = (8.0, 24);
+    let pe = sne_affinities_sparse_with(&y, perp, k, IndexSpec::Exact).to_dense();
+    let ph = sne_affinities_sparse_with(&y, perp, k, IndexSpec::hnsw_default()).to_dense();
+    // totals agree exactly by construction (both sum to 1)
+    let se: f64 = pe.data.iter().sum();
+    let sh: f64 = ph.data.iter().sum();
+    assert!((se - 1.0).abs() < 1e-10 && (sh - 1.0).abs() < 1e-10);
+    // per-point effective perplexities track each other
+    let mut max_rel = 0.0f64;
+    for i in 0..n {
+        let a = row_perplexity(&pe, i);
+        let b = row_perplexity(&ph, i);
+        max_rel = max_rel.max((a - b).abs() / a);
+    }
+    assert!(max_rel < 0.25, "worst per-row perplexity deviation {max_rel}");
+    // and the mean deviation is far tighter
+    let mean_rel: f64 = (0..n)
+        .map(|i| {
+            let a = row_perplexity(&pe, i);
+            (row_perplexity(&ph, i) - a).abs() / a
+        })
+        .sum::<f64>()
+        / n as f64;
+    assert!(mean_rel < 0.05, "mean per-row perplexity deviation {mean_rel}");
+}
+
+#[test]
+fn end_to_end_sd_on_bh_with_hnsw_affinities() {
+    // the full approximate pipeline at a test-friendly N: HNSW
+    // neighbor search -> entropic affinities -> Barnes-Hut engine ->
+    // spectral direction with a sparse Cholesky
+    let n = 1500;
+    let y = swiss(n);
+    let p_hnsw = sne_affinities_sparse_with(&y, 12.0, 36, IndexSpec::hnsw_default());
+    let p_exact = sne_affinities_sparse_with(&y, 12.0, 36, IndexSpec::Exact);
+
+    let run = |p: nle::linalg::sparse::SpMat| {
+        let obj = NativeObjective::with_engine(
+            Method::Ee,
+            Attractive::Sparse(p),
+            100.0,
+            2,
+            EngineSpec::BarnesHut { theta: 0.5 },
+        );
+        let x0 = nle::init::random_init(n, 2, 1e-4, 0);
+        let mut sd = SpectralDirection::new(Some(7));
+        minimize(&obj, &mut sd, &x0, &OptOptions { max_iters: 30, ..Default::default() })
+    };
+    let rh = run(p_hnsw);
+    let re = run(p_exact);
+
+    // descends monotonically and substantially
+    assert!(rh.e.is_finite());
+    let e0 = rh.trace.first().unwrap().e;
+    assert!(rh.e < e0, "no descent: {e0} -> {}", rh.e);
+    for w in rh.trace.windows(2) {
+        assert!(w[1].e <= w[0].e + 1e-10);
+    }
+    // embedding quality on par with the exact pipeline: neighborhood
+    // preservation within a few points of each other
+    let q_h = nle::metrics::quality::knn_recall(&y, &rh.x, 10);
+    let q_e = nle::metrics::quality::knn_recall(&y, &re.x, 10);
+    assert!(
+        q_h > q_e - 0.05,
+        "hnsw-pipeline quality {q_h} far below exact-pipeline {q_e}"
+    );
+    // and the final energies are in the same regime
+    let rel = (rh.e - re.e).abs() / re.e.abs().max(1e-300);
+    assert!(rel < 0.05, "final energy gap {rel} (hnsw {} vs exact {})", rh.e, re.e);
+}
