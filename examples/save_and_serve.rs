@@ -1,0 +1,69 @@
+//! Train → save → load → serve: the full model lifecycle.
+//!
+//! Trains a small elastic-embedding model on a swiss roll, persists it
+//! as a versioned binary artifact, loads it back in (bitwise-identical
+//! embedding), and places a batch of held-out points with the
+//! out-of-sample transformer — no retraining, no index rebuild.
+//!
+//!     cargo run --release --example save_and_serve
+
+use nle::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // 1. train: data → job → (result, servable model) in one call
+    let data = nle::data::synth::swiss_roll(1000, 3, 0.05, 42);
+    let mut job = nle::coordinator::EmbeddingJob::from_data(
+        "swiss",
+        &data.y,
+        Method::Ee,
+        100.0,
+        12.0,
+        15,
+        IndexSpec::Auto,
+    );
+    job.opts.max_iters = 200;
+    let t0 = std::time::Instant::now();
+    let (res, model) = job.run_model()?;
+    println!(
+        "trained N = {} in {:.2}s (E = {:.4e}, {} iters, {} index)",
+        model.n(),
+        t0.elapsed().as_secs_f64(),
+        res.e,
+        res.iters,
+        model.index_name()
+    );
+
+    // 2. persist + reload: the artifact round-trips bitwise
+    let path = std::path::Path::new("results/swiss.nlem");
+    model.save(path)?;
+    let loaded = EmbeddingModel::load(path)?;
+    assert_eq!(loaded.x, model.x, "embedding must round-trip bitwise");
+    println!(
+        "saved + reloaded {} ({} bytes)",
+        path.display(),
+        std::fs::metadata(path)?.len()
+    );
+
+    // 3. serve: place 200 held-out swiss-roll points against the
+    //    frozen embedding (parallel across points; NLE_THREADS knob)
+    let held_out = nle::data::synth::swiss_roll(200, 3, 0.05, 7);
+    let transformer = loaded.transformer();
+    let t0 = std::time::Instant::now();
+    let placed = transformer.transform(&held_out.y);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "transformed {} held-out points in {:.3}s ({:.0} points/sec, {} threads)",
+        placed.rows,
+        dt,
+        placed.rows as f64 / dt.max(1e-12),
+        nle::par::num_threads()
+    );
+
+    nle::data::loader::save_embedding_csv(
+        std::path::Path::new("results/save_and_serve_oos.csv"),
+        &placed,
+        &held_out.labels,
+    )?;
+    println!("out-of-sample embedding written to results/save_and_serve_oos.csv");
+    Ok(())
+}

@@ -1,0 +1,20 @@
+//! Out-of-sample transform bench: per-point placement cost and batch
+//! throughput on a frozen model, across batch sizes.
+//!
+//! Delegates to the `serve` harness (bench_harness/serve.rs) so there
+//! is exactly one implementation of the serving protocol (workload,
+//! timing, CSV/JSON schema); this target just picks bench-sized sweeps.
+//! Full sweeps + CSV output: `cargo run --release -- serve`.
+
+use nle::bench_harness::serve::{run, ServeConfig};
+
+fn main() {
+    run(&ServeConfig {
+        n_train: 8192,
+        batches: vec![1, 64, 1024, 4096],
+        csv_name: "serve_bench.csv".to_string(),
+        json_name: Some("BENCH_serve_bench.json".to_string()),
+        ..Default::default()
+    })
+    .expect("serve harness failed");
+}

@@ -19,7 +19,6 @@ use crate::linalg::vecops::sqdist;
 /// and the precision found.
 struct Calibrated {
     p: Vec<f64>,
-    #[allow(dead_code)] // diagnostic: reported by tests
     beta: f64,
 }
 
@@ -66,6 +65,22 @@ fn calibrate(d2: &[f64], perplexity: f64, tol: f64, max_iter: usize) -> Calibrat
         }
     }
     Calibrated { p, beta }
+}
+
+/// Calibrate a single conditional distribution over arbitrary candidate
+/// squared distances: returns `(p, beta)` with `p` the perplexity-`k`
+/// probabilities over the candidates (same order) and `beta` the
+/// Gaussian precision found. This is the per-row primitive behind every
+/// `sne_affinities*` entry point, exposed so the out-of-sample
+/// transform ([`crate::model::transform`]) can weight a *new* point's
+/// neighbors with exactly the calibration the training affinities used.
+pub fn calibrate_row(d2: &[f64], perplexity: f64) -> (Vec<f64>, f64) {
+    assert!(!d2.is_empty(), "no candidates to calibrate over");
+    assert!(perplexity > 0.0, "perplexity must be positive");
+    // a target above the candidate count is unreachable (H <= ln k);
+    // clamp instead of diverging the bisection
+    let cal = calibrate(d2, perplexity.min(d2.len() as f64), 1e-6, 100);
+    (cal.p, cal.beta)
 }
 
 /// Dense symmetric SNE affinities: `N x N` matrix P with zero diagonal,
@@ -238,6 +253,25 @@ mod tests {
         let a = sne_affinities_from_graph(&g, 5.0);
         let b = sne_affinities_sparse(&y, 5.0, 10);
         assert!(a.to_dense().max_abs_diff(&b.to_dense()) < 1e-15);
+    }
+
+    #[test]
+    fn calibrate_row_matches_internal_calibration() {
+        let y = random_data(50, 4, 9);
+        let i = 3;
+        let d2: Vec<f64> = (0..50)
+            .filter(|&j| j != i)
+            .map(|j| sqdist(y.row(i), y.row(j)))
+            .collect();
+        let (p, beta) = calibrate_row(&d2, 12.0);
+        assert!(beta > 0.0);
+        let s: f64 = p.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        let h: f64 = p.iter().filter(|&&v| v > 0.0).map(|&v| -v * v.ln()).sum();
+        assert!((h.exp() - 12.0).abs() < 1e-3, "perplexity {}", h.exp());
+        // a perplexity above the candidate count is clamped, not a panic
+        let (p2, _) = calibrate_row(&d2[..5], 10.0);
+        assert_eq!(p2.len(), 5);
     }
 
     #[test]

@@ -7,8 +7,8 @@ pub mod knn;
 pub mod sparsify;
 
 pub use entropic::{
-    row_perplexity, sne_affinities, sne_affinities_from_graph, sne_affinities_sparse,
-    sne_affinities_sparse_with,
+    calibrate_row, row_perplexity, sne_affinities, sne_affinities_from_graph,
+    sne_affinities_sparse, sne_affinities_sparse_with,
 };
 pub use knn::{knn, knn_with, KnnGraph};
 pub use sparsify::{sparsify_from_graph, sparsify_weights};

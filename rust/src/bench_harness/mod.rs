@@ -13,5 +13,6 @@ pub mod fig3;
 pub mod fig4;
 pub mod rates;
 pub mod scalability;
+pub mod serve;
 
 pub use common::{coil_setup, mnist_setup, CoilEnv};

@@ -1,0 +1,203 @@
+//! Out-of-sample serving throughput harness (the `serve` CLI command):
+//! train once, then measure batch-transform throughput (points/sec)
+//! across batch sizes on the frozen model — the serving workload of the
+//! ROADMAP's "heavy traffic" north star.
+//!
+//! The transform is embarrassingly parallel across query points
+//! ([`crate::par`]), so the interesting axes are batch size (per-batch
+//! fan-out amortization) and worker count. Thread count is fixed per
+//! process (`NLE_THREADS` is read once), so this harness records the
+//! active count as a CSV column; CI runs the harness under different
+//! `NLE_THREADS` values to produce the thread sweep.
+//!
+//! Output: `results/serve.csv` (one row per batch size) plus
+//! `results/BENCH_serve.json`, a machine-readable summary the CI
+//! perf-smoke job uploads as a build artifact — the start of a
+//! per-commit performance trajectory.
+
+use std::io::Write;
+use std::time::Instant;
+
+use super::common::results_dir;
+use crate::coordinator::EmbeddingJob;
+use crate::index::IndexSpec;
+use crate::model::TransformOptions;
+use crate::objective::Method;
+
+pub struct ServeConfig {
+    /// Training-set size (the frozen model's N).
+    pub n_train: usize,
+    /// Batch sizes to sweep.
+    pub batches: Vec<usize>,
+    pub method: Method,
+    pub lambda: f64,
+    pub perplexity: f64,
+    /// Neighbors per point (training graph and per-query candidates).
+    pub k: usize,
+    pub index: IndexSpec,
+    /// SD iterations for the one-time model build.
+    pub train_iters: usize,
+    /// Per-point descent steps of the transform.
+    pub steps: usize,
+    /// Barnes–Hut θ for the frozen-background repulsion.
+    pub theta: f64,
+    /// Timing repetitions per batch size (best is reported).
+    pub reps: usize,
+    pub csv_name: String,
+    /// Machine-readable summary (None to skip).
+    pub json_name: Option<String>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            n_train: 4096,
+            batches: vec![1, 16, 256, 1024],
+            method: Method::Ee,
+            lambda: 100.0,
+            perplexity: 8.0,
+            k: 10,
+            index: IndexSpec::Auto,
+            train_iters: 30,
+            steps: 15,
+            theta: crate::objective::engine::DEFAULT_THETA,
+            reps: 3,
+            csv_name: "serve.csv".to_string(),
+            json_name: Some("BENCH_serve.json".to_string()),
+        }
+    }
+}
+
+pub fn run(cfg: &ServeConfig) -> anyhow::Result<()> {
+    anyhow::ensure!(!cfg.batches.is_empty(), "no batch sizes to sweep");
+    let threads = crate::par::num_threads();
+    let dir = results_dir();
+
+    // one-time training: data → job → servable model
+    let data = crate::data::synth::swiss_roll(cfg.n_train, 3, 0.05, 42);
+    let t0 = Instant::now();
+    let mut job = EmbeddingJob::from_data(
+        "serve-train",
+        &data.y,
+        cfg.method,
+        cfg.lambda,
+        cfg.perplexity,
+        cfg.k,
+        cfg.index,
+    );
+    job.opts.max_iters = cfg.train_iters;
+    let (_res, model) = job.run_model()?;
+    let train_s = t0.elapsed().as_secs_f64();
+
+    // transformer construction: the entire per-process serving setup
+    // (index view + embedding tree + frozen partition sum)
+    let t0 = Instant::now();
+    let transformer = model.transformer_with(TransformOptions {
+        steps: cfg.steps,
+        theta: cfg.theta,
+        k: None,
+    });
+    let setup_s = t0.elapsed().as_secs_f64();
+
+    println!(
+        "serve: N = {} ({} index), {} threads, train {train_s:.2}s, setup {setup_s:.4}s",
+        model.n(),
+        model.index_name(),
+        threads
+    );
+    println!(
+        "  {:>7} {:>12} {:>14} {:>10}",
+        "batch", "best (s)", "points/sec", "per-pt(ms)"
+    );
+
+    let path = dir.join(&cfg.csv_name);
+    let mut file = std::fs::File::create(&path)?;
+    writeln!(
+        file,
+        "n_train,index,threads,steps,theta,batch,transform_s,pts_per_s"
+    )?;
+
+    let mut summary: Vec<(usize, f64)> = Vec::new();
+    // held-out queries: a different seed than training
+    let pool_n = cfg.batches.iter().copied().max().unwrap_or(1);
+    let pool = crate::data::synth::swiss_roll(pool_n, 3, 0.05, 777);
+    for &b in &cfg.batches {
+        let b = b.clamp(1, pool_n);
+        let queries = crate::linalg::dense::Mat::from_fn(b, 3, |i, j| pool.y.at(i, j));
+        let mut best = f64::INFINITY;
+        for _ in 0..cfg.reps.max(1) {
+            let t0 = Instant::now();
+            let out = transformer.transform(&queries);
+            let dt = t0.elapsed().as_secs_f64();
+            assert_eq!(out.rows, b);
+            best = best.min(dt);
+        }
+        let pps = b as f64 / best.max(1e-12);
+        writeln!(
+            file,
+            "{},{},{threads},{},{},{b},{best:.6e},{pps:.3}",
+            cfg.n_train,
+            model.index_name(),
+            cfg.steps,
+            cfg.theta
+        )?;
+        println!("  {b:>7} {best:>12.5} {pps:>14.1} {:>10.3}", 1e3 * best / b as f64);
+        summary.push((b, pps));
+    }
+    println!("serve: wrote {}", path.display());
+
+    if let Some(json_name) = &cfg.json_name {
+        let jpath = dir.join(json_name);
+        let rows: Vec<String> = summary
+            .iter()
+            .map(|&(b, pps)| format!("    {{\"batch\": {b}, \"pts_per_s\": {pps:.3}}}"))
+            .collect();
+        let json = format!(
+            "{{\n  \"bench\": \"serve\",\n  \"n_train\": {},\n  \"index\": \"{}\",\n  \
+             \"threads\": {threads},\n  \"steps\": {},\n  \"theta\": {},\n  \
+             \"train_s\": {train_s:.4},\n  \"setup_s\": {setup_s:.6},\n  \
+             \"results\": [\n{}\n  ]\n}}\n",
+            cfg.n_train,
+            model.index_name(),
+            cfg.steps,
+            cfg.theta,
+            rows.join(",\n")
+        );
+        std::fs::write(&jpath, json)?;
+        println!("serve: wrote {}", jpath.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny smoke run: completes, writes both outputs, throughput sane.
+    #[test]
+    fn smoke_small() {
+        let cfg = ServeConfig {
+            n_train: 220,
+            batches: vec![4, 16],
+            k: 8,
+            perplexity: 5.0,
+            train_iters: 5,
+            steps: 5,
+            reps: 1,
+            csv_name: "serve_smoke.csv".to_string(),
+            json_name: Some("BENCH_serve_smoke.json".to_string()),
+            ..Default::default()
+        };
+        run(&cfg).unwrap();
+        let text = std::fs::read_to_string(results_dir().join("serve_smoke.csv")).unwrap();
+        assert_eq!(text.lines().count(), 3, "header + one row per batch");
+        for row in text.lines().skip(1) {
+            let pps: f64 = row.split(',').next_back().unwrap().parse().unwrap();
+            assert!(pps.is_finite() && pps > 0.0, "throughput {pps}");
+        }
+        let json =
+            std::fs::read_to_string(results_dir().join("BENCH_serve_smoke.json")).unwrap();
+        assert!(json.contains("\"bench\": \"serve\""));
+        assert!(json.contains("\"results\""));
+    }
+}

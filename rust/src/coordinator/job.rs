@@ -4,8 +4,9 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::affinity::KnnGraph;
-use crate::index::IndexSpec;
+use crate::index::{knn_graph_from, HnswGraph, HnswIndex, IndexSpec};
 use crate::linalg::dense::Mat;
+use crate::model::EmbeddingModel;
 use crate::objective::engine::EngineSpec;
 use crate::objective::native::NativeObjective;
 use crate::objective::xla::XlaObjective;
@@ -59,6 +60,16 @@ pub struct EmbeddingJob {
     /// kNN graph built once by the affinity stage and shared with the
     /// spectral direction's kappa sparsification (None = recompute)
     pub graph: Option<Arc<KnnGraph>>,
+    /// training points kept by [`EmbeddingJob::from_data`] so
+    /// [`EmbeddingJob::run_model`] can persist a servable artifact
+    /// (None for jobs built from precomputed weights)
+    pub data: Option<Arc<Mat>>,
+    /// effective perplexity the affinities were calibrated at (set by
+    /// `from_data`; recorded into the model artifact)
+    pub perplexity: Option<f64>,
+    /// HNSW adjacency built by the affinity stage — kept so the model
+    /// artifact ships the *trained* index instead of rebuilding one
+    pub hnsw: Option<Arc<HnswGraph>>,
     pub init: InitSpec,
     pub opts: OptOptions,
     pub backend: Backend,
@@ -85,6 +96,9 @@ impl EmbeddingJob {
             engine: EngineSpec::Auto,
             index: IndexSpec::Auto,
             graph: None,
+            data: None,
+            perplexity: None,
+            hnsw: None,
             init: InitSpec::default(),
             opts: OptOptions { time_budget: budget, ..Default::default() },
             backend: Backend::Native,
@@ -117,8 +131,20 @@ impl EmbeddingJob {
     ) -> Self {
         let n = y.rows;
         let k = k.min(n.saturating_sub(1)).max(1);
-        let graph = Arc::new(crate::affinity::knn_with(y, k, index));
-        let p = crate::affinity::sne_affinities_from_graph(&graph, perplexity.min(k as f64));
+        // build the neighbor index exactly once; when it is an HNSW,
+        // keep its adjacency so `run_model` can persist the *trained*
+        // index into the artifact instead of paying a rebuild
+        let (graph, hnsw) = match index.resolve(n) {
+            IndexSpec::Hnsw { m, ef_construction, ef_search } => {
+                let built = HnswIndex::build(y, m, ef_construction, ef_search);
+                let graph = knn_graph_from(&built, k);
+                (graph, Some(Arc::new(built.into_graph())))
+            }
+            _ => (crate::index::knn_graph(y, k, IndexSpec::Exact), None),
+        };
+        let graph = Arc::new(graph);
+        let eff_perplexity = perplexity.min(k as f64);
+        let p = crate::affinity::sne_affinities_from_graph(&graph, eff_perplexity);
         EmbeddingJob {
             name: name.into(),
             method,
@@ -130,6 +156,9 @@ impl EmbeddingJob {
             engine: EngineSpec::Auto,
             index,
             graph: Some(graph),
+            data: Some(Arc::new(y.clone())),
+            perplexity: Some(eff_perplexity),
+            hnsw,
             init: InitSpec::default(),
             opts: OptOptions::default(),
             backend: Backend::Native,
@@ -174,7 +203,42 @@ impl EmbeddingJob {
             stop: res.stop,
             trace: res.trace,
             x: res.x,
+            // hand the affinity stage's structures to the caller instead
+            // of discarding them: serving must not rebuild what training
+            // already paid for
+            graph: self.graph.clone(),
+            hnsw: self.hnsw.clone(),
         })
+    }
+
+    /// Execute and bundle the outcome into a servable
+    /// [`EmbeddingModel`]: the final embedding, the affinity
+    /// calibration, and the HNSW index the preprocessing stage already
+    /// built (no rebuild). Requires a job constructed by
+    /// [`EmbeddingJob::from_data`] — jobs built from precomputed
+    /// weights have no training points to persist.
+    pub fn run_model(&self) -> anyhow::Result<(JobResult, EmbeddingModel)> {
+        let data = self.data.clone().ok_or_else(|| {
+            anyhow::anyhow!(
+                "job {:?} has no training data — build it with EmbeddingJob::from_data",
+                self.name
+            )
+        })?;
+        let k = self.graph.as_ref().map(|g| g.k).unwrap_or(1);
+        let perplexity = self.perplexity.unwrap_or(k as f64);
+        let res = self.run()?;
+        // Arc handoff: the model shares the training matrix and HNSW
+        // adjacency with the job — no copy of either
+        let model = EmbeddingModel::new(
+            self.method,
+            self.lambda,
+            perplexity,
+            k,
+            data,
+            res.x.clone(),
+            self.hnsw.clone(),
+        )?;
+        Ok((res, model))
     }
 }
 
@@ -188,6 +252,12 @@ pub struct JobResult {
     pub stop: StopReason,
     pub trace: Vec<IterStats>,
     pub x: Mat,
+    /// kNN graph the affinity stage built (shared, not recomputed) —
+    /// callers that serve or post-process the embedding reuse it
+    pub graph: Option<Arc<KnnGraph>>,
+    /// HNSW adjacency from the affinity stage, when that index backend
+    /// ran — the piece a model artifact persists without a rebuild
+    pub hnsw: Option<Arc<HnswGraph>>,
 }
 
 #[cfg(test)]
@@ -249,6 +319,55 @@ mod tests {
         let res = job.run().unwrap();
         assert!(res.e.is_finite());
         assert_eq!(res.x.rows, 120);
+    }
+
+    #[test]
+    fn run_model_emits_servable_artifact() {
+        let data = crate::data::synth::swiss_roll(150, 3, 0.05, 11);
+        let mut job =
+            EmbeddingJob::from_data("m", &data.y, Method::Ee, 10.0, 8.0, 10, IndexSpec::Exact);
+        job.opts.max_iters = 15;
+        let (res, model) = job.run_model().unwrap();
+        assert_eq!(res.x, model.x);
+        assert_eq!(model.n(), 150);
+        assert_eq!(model.k, 10);
+        assert!(res.graph.is_some());
+        // exact index → no hnsw payload in the artifact
+        assert!(model.hnsw.is_none());
+        // transform works straight off the fresh model
+        let placed = model.transformer().transform_point(data.y.row(0));
+        assert_eq!(placed.len(), 2);
+        assert!(placed.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn run_model_requires_training_data() {
+        let p = Mat::zeros(6, 6);
+        let job = EmbeddingJob::native(
+            "nodata",
+            Method::Ee,
+            1.0,
+            Arc::new(Attractive::Dense(p)),
+            "sd",
+            None,
+        );
+        assert!(job.run_model().is_err());
+    }
+
+    #[test]
+    fn from_data_hnsw_keeps_trained_index() {
+        let data = crate::data::synth::swiss_roll(200, 3, 0.05, 4);
+        let spec = IndexSpec::Hnsw { m: 8, ef_construction: 60, ef_search: 40 };
+        let mut job = EmbeddingJob::from_data("h", &data.y, Method::Ee, 10.0, 6.0, 8, spec);
+        job.opts.max_iters = 5;
+        let hnsw = job.hnsw.clone().expect("hnsw spec must keep its adjacency");
+        // the kept adjacency matches a fresh deterministic build
+        let fresh = crate::index::HnswIndex::build(&data.y, 8, 60, 40);
+        assert_eq!(&*hnsw, fresh.graph());
+        let (res, model) = job.run_model().unwrap();
+        assert!(res.hnsw.is_some());
+        assert_eq!(model.hnsw.as_deref(), Some(&*hnsw));
+        assert_eq!(model.index_name(), "hnsw");
     }
 
     #[test]

@@ -18,6 +18,14 @@
 //! deterministically seeded: index quality must not vary run to run
 //! (experiment reproducibility is part of the deliverable, as with
 //! `data::rng`).
+//!
+//! The structure is split in two for the serving layer
+//! ([`crate::model`]): [`HnswGraph`] is the plain-old-data part
+//! (adjacency, entry point, knobs) that the model codec persists, while
+//! [`HnswIndex`] (built over a borrowed point matrix) and [`HnswRef`]
+//! (a view that re-attaches a persisted graph to its point matrix)
+//! answer queries. A saved model therefore never rebuilds its index:
+//! load re-attaches the stored adjacency to the stored training points.
 
 use std::cell::RefCell;
 use std::cmp::Reverse;
@@ -98,22 +106,213 @@ thread_local! {
     static VISITED: RefCell<Visited> = RefCell::new(Visited::default());
 }
 
-/// The built index. Borrows the point matrix for its lifetime (like
-/// [`crate::spatial::NTree`]); queries are `&self` and thread-safe;
-/// construction is sequential (insertion order is part of the
-/// deterministic result).
+/// The plain-old-data part of an HNSW index: everything except the
+/// points themselves. This is what the model codec serializes — on load
+/// it is re-attached to the stored training matrix through [`HnswRef`]
+/// with zero rebuild cost.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HnswGraph {
+    /// Out-degree bound at layers > 0.
+    pub m: usize,
+    /// Out-degree bound at layer 0 (2M by construction).
+    pub m0: usize,
+    /// Construction beam width (recorded for provenance).
+    pub ef_construction: usize,
+    /// Default query beam width.
+    pub ef_search: usize,
+    /// Adjacency lists per node per layer: `neighbors[node][layer]`
+    /// exists for `layer <= level(node)`.
+    pub neighbors: Vec<Vec<Vec<u32>>>,
+    /// Entry point: a node of maximal level.
+    pub entry: usize,
+    /// Level of the entry point.
+    pub max_level: usize,
+}
+
+impl HnswGraph {
+    /// Number of indexed points.
+    pub fn len(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.neighbors.is_empty()
+    }
+
+    /// Structural validation against the point matrix the graph claims
+    /// to index — the load-time guard of the model codec (a truncated or
+    /// mismatched file must fail loudly, not answer garbage queries).
+    pub fn validate(&self, points: &Mat) -> anyhow::Result<()> {
+        let n = self.neighbors.len();
+        anyhow::ensure!(
+            n == points.rows,
+            "hnsw graph indexes {n} points but the matrix has {} rows",
+            points.rows
+        );
+        anyhow::ensure!(self.m >= 2 && self.m0 >= self.m, "degenerate degree bounds");
+        if n == 0 {
+            return Ok(());
+        }
+        anyhow::ensure!(self.entry < n, "entry point {} out of bounds", self.entry);
+        anyhow::ensure!(
+            self.neighbors[self.entry].len() == self.max_level + 1,
+            "entry point level does not match max_level"
+        );
+        for (i, layers) in self.neighbors.iter().enumerate() {
+            anyhow::ensure!(
+                !layers.is_empty() && layers.len() <= self.max_level + 1,
+                "node {i} participates in {} layers (max_level {})",
+                layers.len(),
+                self.max_level
+            );
+            for (layer, nb) in layers.iter().enumerate() {
+                for &t in nb {
+                    anyhow::ensure!((t as usize) < n, "node {i} links to out-of-bounds {t}");
+                    // an edge at layer L to a node absent from layer L
+                    // would panic (index out of bounds) mid-search —
+                    // exactly what this load-time guard must prevent
+                    anyhow::ensure!(
+                        self.neighbors[t as usize].len() > layer,
+                        "node {i} links to {t} at layer {layer}, \
+                         which {t} does not participate in"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Pure greedy walk at one layer: follow the best edge until no
+/// neighbor improves on the current node.
+fn greedy_closest(points: &Mat, g: &HnswGraph, q: &[f64], start: usize, layer: usize) -> usize {
+    let mut cur = start;
+    let mut curd = sqdist(q, points.row(cur));
+    loop {
+        let mut improved = false;
+        for &t in &g.neighbors[cur][layer] {
+            let d = sqdist(q, points.row(t as usize));
+            if d < curd {
+                cur = t as usize;
+                curd = d;
+                improved = true;
+            }
+        }
+        if !improved {
+            return cur;
+        }
+    }
+}
+
+/// Best-first beam search at one layer (paper alg. 2): returns up to
+/// `ef` nodes as `(d², id)` in increasing distance.
+fn search_layer(
+    points: &Mat,
+    g: &HnswGraph,
+    q: &[f64],
+    entries: &[usize],
+    ef: usize,
+    layer: usize,
+    visited: &mut Visited,
+) -> Vec<(f64, u32)> {
+    visited.begin(g.neighbors.len());
+    // frontier: min-heap on distance; results: max-heap bounded to ef
+    let mut frontier: BinaryHeap<Reverse<(D, u32)>> = BinaryHeap::new();
+    let mut results: BinaryHeap<(D, u32)> = BinaryHeap::new();
+    for &e in entries {
+        if !visited.insert(e) {
+            continue;
+        }
+        let d = sqdist(q, points.row(e));
+        frontier.push(Reverse((D(d), e as u32)));
+        results.push((D(d), e as u32));
+    }
+    while results.len() > ef {
+        results.pop();
+    }
+    while let Some(&Reverse((D(dc), c))) = frontier.peek() {
+        let worst = results.peek().map(|&(D(d), _)| d).unwrap_or(f64::INFINITY);
+        if dc > worst && results.len() >= ef {
+            break;
+        }
+        frontier.pop();
+        for &t in &g.neighbors[c as usize][layer] {
+            let t = t as usize;
+            if !visited.insert(t) {
+                continue;
+            }
+            let d = sqdist(q, points.row(t));
+            let worst = results.peek().map(|&(D(w), _)| w).unwrap_or(f64::INFINITY);
+            if results.len() < ef || d < worst {
+                frontier.push(Reverse((D(d), t as u32)));
+                results.push((D(d), t as u32));
+                if results.len() > ef {
+                    results.pop();
+                }
+            }
+        }
+    }
+    let mut out: Vec<(f64, u32)> = results.into_iter().map(|(D(d), t)| (d, t)).collect();
+    out.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+    out
+}
+
+/// The paper's neighbor-selection heuristic (alg. 4 with
+/// keepPrunedConnections): from candidates in increasing distance to
+/// the query (the `f64` of each pair), keep those closer to the query
+/// than to any already-kept candidate, then backfill with the nearest
+/// rejects up to `cap`.
+fn select_diverse(points: &Mat, cand: &[(f64, u32)], cap: usize) -> Vec<u32> {
+    if cand.len() <= cap {
+        return cand.iter().map(|&(_, t)| t).collect();
+    }
+    let mut kept: Vec<(f64, u32)> = Vec::with_capacity(cap);
+    let mut pruned: Vec<(f64, u32)> = Vec::new();
+    for &(d, t) in cand {
+        if kept.len() >= cap {
+            break;
+        }
+        let tp = points.row(t as usize);
+        let dominated = kept.iter().any(|&(_, s)| sqdist(tp, points.row(s as usize)) < d);
+        if dominated {
+            pruned.push((d, t));
+        } else {
+            kept.push((d, t));
+        }
+    }
+    let mut backfill = pruned.into_iter();
+    while kept.len() < cap {
+        match backfill.next() {
+            Some(x) => kept.push(x),
+            None => break,
+        }
+    }
+    kept.into_iter().map(|(_, t)| t).collect()
+}
+
+/// Descend to layer 1 greedily, then beam-search layer 0 using the
+/// calling thread's reusable visited scratch.
+fn search(points: &Mat, g: &HnswGraph, q: &[f64], ef: usize) -> Vec<(f64, u32)> {
+    if g.neighbors.is_empty() {
+        return Vec::new();
+    }
+    let mut ep = g.entry;
+    for layer in (1..=g.max_level).rev() {
+        ep = greedy_closest(points, g, q, ep, layer);
+    }
+    VISITED.with(|v| {
+        let mut v = v.borrow_mut();
+        search_layer(points, g, q, &[ep], ef, 0, &mut v)
+    })
+}
+
+/// A built index: a graph plus the borrowed point matrix it was built
+/// over (like [`crate::spatial::NTree`]); queries are `&self` and
+/// thread-safe; construction is sequential (insertion order is part of
+/// the deterministic result).
 pub struct HnswIndex<'a> {
     points: &'a Mat,
-    m: usize,
-    m0: usize,
-    ef_construction: usize,
-    ef_search: usize,
-    /// adjacency lists per node per layer: `neighbors[node][layer]`
-    /// exists for `layer <= level(node)`
-    neighbors: Vec<Vec<Vec<u32>>>,
-    /// entry point: a node of maximal level
-    entry: usize,
-    max_level: usize,
+    graph: HnswGraph,
 }
 
 impl<'a> HnswIndex<'a> {
@@ -125,13 +324,15 @@ impl<'a> HnswIndex<'a> {
         let m = m.max(2);
         let mut idx = HnswIndex {
             points: y,
-            m,
-            m0: 2 * m,
-            ef_construction: ef_construction.max(m),
-            ef_search: ef_search.max(1),
-            neighbors: Vec::with_capacity(y.rows),
-            entry: 0,
-            max_level: 0,
+            graph: HnswGraph {
+                m,
+                m0: 2 * m,
+                ef_construction: ef_construction.max(m),
+                ef_search: ef_search.max(1),
+                neighbors: Vec::with_capacity(y.rows),
+                entry: 0,
+                max_level: 0,
+            },
         };
         let level_mult = 1.0 / (m as f64).ln();
         let mut rng = Rng::new(0x9E37_79B9_7F4A_7C15);
@@ -144,179 +345,125 @@ impl<'a> HnswIndex<'a> {
         idx
     }
 
+    /// Re-attach a persisted graph to its point matrix (the load path
+    /// of [`crate::model`]): no rebuild, just structural validation.
+    pub fn from_graph(points: &'a Mat, graph: HnswGraph) -> anyhow::Result<Self> {
+        graph.validate(points)?;
+        Ok(HnswIndex { points, graph })
+    }
+
+    /// The serializable part of the index.
+    pub fn graph(&self) -> &HnswGraph {
+        &self.graph
+    }
+
+    /// Take the serializable part (what [`crate::coordinator`] keeps on
+    /// the job so the model can persist it without a rebuild).
+    pub fn into_graph(self) -> HnswGraph {
+        self.graph
+    }
+
+    /// Borrowed view with the same query semantics.
+    pub fn as_view(&self) -> HnswRef<'_> {
+        HnswRef { points: self.points, graph: &self.graph }
+    }
+
     fn insert(&mut self, i: usize, level: usize, visited: &mut Visited) {
-        self.neighbors.push(vec![Vec::new(); level + 1]);
-        debug_assert_eq!(self.neighbors.len(), i + 1);
+        let g = &mut self.graph;
+        g.neighbors.push(vec![Vec::new(); level + 1]);
+        debug_assert_eq!(g.neighbors.len(), i + 1);
         if i == 0 {
-            self.entry = 0;
-            self.max_level = level;
+            g.entry = 0;
+            g.max_level = level;
             return;
         }
         // the slice borrows the 'a matrix, not self, so the adjacency
         // mutations below can proceed while q is alive
         let q: &[f64] = self.points.row(i);
-        let top = self.max_level;
-        let mut ep = self.entry;
+        let top = g.max_level;
+        let mut ep = g.entry;
         // greedy descent through the layers above the new node's level
         for layer in (level + 1..=top).rev() {
-            ep = self.greedy_closest(q, ep, layer);
+            ep = greedy_closest(self.points, g, q, ep, layer);
         }
         // beam-search + connect at the layers the node participates in
         let mut eps = vec![ep];
         for layer in (0..=level.min(top)).rev() {
-            let found = self.search_layer(q, &eps, self.ef_construction, layer, visited);
-            let cap = if layer == 0 { self.m0 } else { self.m };
-            let selected = self.select_diverse(&found, cap);
+            let found =
+                search_layer(self.points, g, q, &eps, g.ef_construction, layer, visited);
+            let cap = if layer == 0 { g.m0 } else { g.m };
+            let selected = select_diverse(self.points, &found, cap);
             for &s in &selected {
-                self.neighbors[s as usize][layer].push(i as u32);
-                if self.neighbors[s as usize][layer].len() > cap {
-                    self.shrink(s as usize, layer, cap);
+                g.neighbors[s as usize][layer].push(i as u32);
+                if g.neighbors[s as usize][layer].len() > cap {
+                    shrink(self.points, g, s as usize, layer, cap);
                 }
             }
-            self.neighbors[i][layer] = selected;
+            g.neighbors[i][layer] = selected;
             // next (lower) layer starts from everything this one found
             eps.clear();
             eps.extend(found.iter().map(|&(_, t)| t as usize));
         }
         if level > top {
-            self.max_level = level;
-            self.entry = i;
+            g.max_level = level;
+            g.entry = i;
         }
     }
+}
 
-    /// Re-apply the diversity bound to an over-full adjacency list.
-    fn shrink(&mut self, node: usize, layer: usize, cap: usize) {
-        let here = self.points.row(node);
-        let mut cand: Vec<(f64, u32)> = self.neighbors[node][layer]
-            .iter()
-            .map(|&t| (sqdist(here, self.points.row(t as usize)), t))
-            .collect();
-        cand.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
-        let kept = self.select_diverse(&cand, cap);
-        self.neighbors[node][layer] = kept;
+/// Re-apply the diversity bound to an over-full adjacency list.
+fn shrink(points: &Mat, g: &mut HnswGraph, node: usize, layer: usize, cap: usize) {
+    let here = points.row(node);
+    let mut cand: Vec<(f64, u32)> = g.neighbors[node][layer]
+        .iter()
+        .map(|&t| (sqdist(here, points.row(t as usize)), t))
+        .collect();
+    cand.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+    let kept = select_diverse(points, &cand, cap);
+    g.neighbors[node][layer] = kept;
+}
+
+/// Borrowed HNSW view: a persisted [`HnswGraph`] re-attached to the
+/// point matrix it indexes. This is how a loaded [`crate::model`]
+/// serves queries without ever rebuilding the index.
+pub struct HnswRef<'a> {
+    points: &'a Mat,
+    graph: &'a HnswGraph,
+}
+
+impl<'a> HnswRef<'a> {
+    /// Wrap without re-validating (callers that just validated or built
+    /// the graph); use [`HnswIndex::from_graph`] on untrusted input.
+    pub fn new(points: &'a Mat, graph: &'a HnswGraph) -> Self {
+        debug_assert_eq!(points.rows, graph.neighbors.len());
+        HnswRef { points, graph }
+    }
+}
+
+impl NeighborIndex for HnswRef<'_> {
+    fn name(&self) -> &'static str {
+        "hnsw"
     }
 
-    /// Pure greedy walk at one layer: follow the best edge until no
-    /// neighbor improves on the current node.
-    fn greedy_closest(&self, q: &[f64], start: usize, layer: usize) -> usize {
-        let mut cur = start;
-        let mut curd = sqdist(q, self.points.row(cur));
-        loop {
-            let mut improved = false;
-            for &t in &self.neighbors[cur][layer] {
-                let d = sqdist(q, self.points.row(t as usize));
-                if d < curd {
-                    cur = t as usize;
-                    curd = d;
-                    improved = true;
-                }
-            }
-            if !improved {
-                return cur;
-            }
-        }
+    fn len(&self) -> usize {
+        self.points.rows
     }
 
-    /// Best-first beam search at one layer (paper alg. 2): returns up
-    /// to `ef` nodes as `(d², id)` in increasing distance.
-    fn search_layer(
-        &self,
-        q: &[f64],
-        entries: &[usize],
-        ef: usize,
-        layer: usize,
-        visited: &mut Visited,
-    ) -> Vec<(f64, u32)> {
-        visited.begin(self.neighbors.len());
-        // frontier: min-heap on distance; results: max-heap bounded to ef
-        let mut frontier: BinaryHeap<Reverse<(D, u32)>> = BinaryHeap::new();
-        let mut results: BinaryHeap<(D, u32)> = BinaryHeap::new();
-        for &e in entries {
-            if !visited.insert(e) {
-                continue;
-            }
-            let d = sqdist(q, self.points.row(e));
-            frontier.push(Reverse((D(d), e as u32)));
-            results.push((D(d), e as u32));
-        }
-        while results.len() > ef {
-            results.pop();
-        }
-        while let Some(&Reverse((D(dc), c))) = frontier.peek() {
-            let worst = results.peek().map(|&(D(d), _)| d).unwrap_or(f64::INFINITY);
-            if dc > worst && results.len() >= ef {
-                break;
-            }
-            frontier.pop();
-            for &t in &self.neighbors[c as usize][layer] {
-                let t = t as usize;
-                if !visited.insert(t) {
-                    continue;
-                }
-                let d = sqdist(q, self.points.row(t));
-                let worst = results.peek().map(|&(D(w), _)| w).unwrap_or(f64::INFINITY);
-                if results.len() < ef || d < worst {
-                    frontier.push(Reverse((D(d), t as u32)));
-                    results.push((D(d), t as u32));
-                    if results.len() > ef {
-                        results.pop();
-                    }
-                }
-            }
-        }
-        let mut out: Vec<(f64, u32)> = results.into_iter().map(|(D(d), t)| (d, t)).collect();
-        out.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
-        out
+    fn query(&self, q: &[f64], k: usize) -> Vec<(usize, f64)> {
+        search(self.points, self.graph, q, self.graph.ef_search.max(k))
+            .into_iter()
+            .take(k)
+            .map(|(d, t)| (t as usize, d))
+            .collect()
     }
 
-    /// The paper's neighbor-selection heuristic (alg. 4 with
-    /// keepPrunedConnections): from candidates in increasing distance
-    /// to the query (the `f64` of each pair), keep those closer to the
-    /// query than to any already-kept candidate, then backfill with the
-    /// nearest rejects up to `cap`.
-    fn select_diverse(&self, cand: &[(f64, u32)], cap: usize) -> Vec<u32> {
-        if cand.len() <= cap {
-            return cand.iter().map(|&(_, t)| t).collect();
-        }
-        let mut kept: Vec<(f64, u32)> = Vec::with_capacity(cap);
-        let mut pruned: Vec<(f64, u32)> = Vec::new();
-        for &(d, t) in cand {
-            if kept.len() >= cap {
-                break;
-            }
-            let tp = self.points.row(t as usize);
-            let dominated =
-                kept.iter().any(|&(_, s)| sqdist(tp, self.points.row(s as usize)) < d);
-            if dominated {
-                pruned.push((d, t));
-            } else {
-                kept.push((d, t));
-            }
-        }
-        let mut backfill = pruned.into_iter();
-        while kept.len() < cap {
-            match backfill.next() {
-                Some(x) => kept.push(x),
-                None => break,
-            }
-        }
-        kept.into_iter().map(|(_, t)| t).collect()
-    }
-
-    /// Descend to layer 1 greedily, then beam-search layer 0 using the
-    /// calling thread's reusable visited scratch.
-    fn search(&self, q: &[f64], ef: usize) -> Vec<(f64, u32)> {
-        if self.neighbors.is_empty() {
-            return Vec::new();
-        }
-        let mut ep = self.entry;
-        for layer in (1..=self.max_level).rev() {
-            ep = self.greedy_closest(q, ep, layer);
-        }
-        VISITED.with(|v| {
-            let mut v = v.borrow_mut();
-            self.search_layer(q, &[ep], ef, 0, &mut v)
-        })
+    fn query_point(&self, i: usize, k: usize) -> Vec<(usize, f64)> {
+        search(self.points, self.graph, self.points.row(i), self.graph.ef_search.max(k + 1))
+            .into_iter()
+            .filter(|&(_, t)| t as usize != i)
+            .take(k)
+            .map(|(d, t)| (t as usize, d))
+            .collect()
     }
 }
 
@@ -330,20 +477,11 @@ impl NeighborIndex for HnswIndex<'_> {
     }
 
     fn query(&self, q: &[f64], k: usize) -> Vec<(usize, f64)> {
-        self.search(q, self.ef_search.max(k))
-            .into_iter()
-            .take(k)
-            .map(|(d, t)| (t as usize, d))
-            .collect()
+        self.as_view().query(q, k)
     }
 
     fn query_point(&self, i: usize, k: usize) -> Vec<(usize, f64)> {
-        self.search(self.points.row(i), self.ef_search.max(k + 1))
-            .into_iter()
-            .filter(|&(_, t)| t as usize != i)
-            .take(k)
-            .map(|(d, t)| (t as usize, d))
-            .collect()
+        self.as_view().query_point(i, k)
     }
 }
 
@@ -420,9 +558,9 @@ mod tests {
     fn degree_bounds_hold() {
         let y = gaussian(300, 3, 7);
         let idx = HnswIndex::build(&y, 5, 60, 30);
-        for lists in &idx.neighbors {
+        for lists in &idx.graph().neighbors {
             for (layer, nb) in lists.iter().enumerate() {
-                let cap = if layer == 0 { idx.m0 } else { idx.m };
+                let cap = if layer == 0 { idx.graph().m0 } else { idx.graph().m };
                 assert!(nb.len() <= cap, "layer {layer} degree {}", nb.len());
             }
         }
@@ -439,5 +577,48 @@ mod tests {
             let _ = idx.query_point(i, 6);
         }
         assert_eq!(idx.query_point(3, 6), first);
+    }
+
+    #[test]
+    fn detached_graph_reattaches_identically() {
+        // the persistence seam: build → into_graph → from_graph answers
+        // bit-identical queries (what the model codec round-trip relies on)
+        let y = gaussian(250, 4, 9);
+        let built = HnswIndex::build(&y, 8, 80, 40);
+        let expected: Vec<_> = (0..250).map(|i| built.query_point(i, 7)).collect();
+        let arbitrary = built.query(y.row(13), 5);
+        let graph = built.into_graph();
+        let view = HnswIndex::from_graph(&y, graph).unwrap();
+        for (i, want) in expected.iter().enumerate() {
+            assert_eq!(&view.query_point(i, 7), want);
+        }
+        assert_eq!(view.query(y.row(13), 5), arbitrary);
+    }
+
+    #[test]
+    fn from_graph_rejects_mismatched_points() {
+        let y = gaussian(50, 3, 10);
+        let graph = HnswIndex::build(&y, 4, 30, 20).into_graph();
+        let wrong = gaussian(49, 3, 10);
+        assert!(HnswIndex::from_graph(&wrong, graph.clone()).is_err());
+        // corrupt an id out of bounds
+        let mut bad = graph.clone();
+        if let Some(t) = bad.neighbors[0][0].first_mut() {
+            *t = 1_000;
+        }
+        assert!(HnswIndex::from_graph(&y, bad).is_err());
+        // an upper-layer edge to a node that does not participate in
+        // that layer must be rejected (it would panic mid-search)
+        let mut bad = graph.clone();
+        if bad.max_level >= 1 {
+            if let Some(lonely) = (0..bad.len()).find(|&i| bad.neighbors[i].len() == 1) {
+                let e = bad.entry;
+                let top = bad.neighbors[e].len() - 1;
+                bad.neighbors[e][top].push(lonely as u32);
+                assert!(HnswIndex::from_graph(&y, bad).is_err());
+            }
+        }
+        // intact graph still validates
+        assert!(HnswIndex::from_graph(&y, graph).is_ok());
     }
 }

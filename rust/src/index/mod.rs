@@ -30,7 +30,7 @@ pub mod exact;
 pub mod hnsw;
 
 pub use exact::ExactIndex;
-pub use hnsw::HnswIndex;
+pub use hnsw::{HnswGraph, HnswIndex, HnswRef};
 
 use crate::affinity::knn::KnnGraph;
 use crate::linalg::dense::Mat;
@@ -137,22 +137,28 @@ impl IndexSpec {
         }
     }
 
+    /// Collapse `Auto` to the concrete backend it would pick for an
+    /// `n`-point dataset (callers that need to know which backend runs
+    /// — e.g. the coordinator, which keeps the built HNSW graph for the
+    /// model artifact — resolve first, then build).
+    pub fn resolve(self, n: usize) -> IndexSpec {
+        match self {
+            IndexSpec::Auto if n >= AUTO_HNSW_MIN_N => IndexSpec::hnsw_default(),
+            IndexSpec::Auto => IndexSpec::Exact,
+            other => other,
+        }
+    }
+
     /// Resolve into a built index over `y` (N × D, one point per row).
     /// The index borrows `y` (no copy of the dataset); drop it before
     /// mutating the points.
     pub fn build(self, y: &Mat) -> Box<dyn NeighborIndex + '_> {
-        match self {
+        match self.resolve(y.rows) {
             IndexSpec::Exact => Box::new(ExactIndex::new(y)),
             IndexSpec::Hnsw { m, ef_construction, ef_search } => {
                 Box::new(HnswIndex::build(y, m, ef_construction, ef_search))
             }
-            IndexSpec::Auto => {
-                if y.rows >= AUTO_HNSW_MIN_N {
-                    IndexSpec::hnsw_default().build(y)
-                } else {
-                    Box::new(ExactIndex::new(y))
-                }
-            }
+            IndexSpec::Auto => unreachable!("resolve never returns Auto"),
         }
     }
 }
@@ -162,9 +168,17 @@ impl IndexSpec {
 /// entry point the affinity pipeline uses; `IndexSpec::Exact` reproduces
 /// the historical `affinity::knn` result bit-for-bit.
 pub fn knn_graph(y: &Mat, k: usize, spec: IndexSpec) -> KnnGraph {
-    let n = y.rows;
-    assert!(k < n, "k must be < N");
+    assert!(k < y.rows, "k must be < N");
     let index = spec.build(y);
+    knn_graph_from(index.as_ref(), k)
+}
+
+/// Build the kNN graph from an *already built* index: one `query_point`
+/// per indexed point, in parallel. The seam the coordinator uses so the
+/// index it keeps for the model artifact also produces the training
+/// graph — neighbor search runs exactly once per job.
+pub fn knn_graph_from(index: &dyn NeighborIndex, k: usize) -> KnnGraph {
+    let n = index.len();
     let neighbors = crate::par::par_map(n, |i| index.query_point(i, k));
     KnnGraph { k, neighbors }
 }

@@ -15,8 +15,9 @@
 //!   [`linalg`]), entropic affinities over pluggable neighbor indices
 //!   (exact or HNSW — [`affinity`], [`index`]), datasets ([`data`]),
 //!   quality metrics ([`metrics`]), an embedding-job coordinator
-//!   ([`coordinator`]) and the figure-reproduction harness
-//!   ([`bench_harness`]).
+//!   ([`coordinator`]), a servable model layer — versioned persistence
+//!   plus a parallel out-of-sample transform ([`model`]) — and the
+//!   figure-reproduction harness ([`bench_harness`]).
 //! * **Layer 2 (python/compile/model.py)** — the objectives as jax
 //!   functions, AOT-lowered to HLO text once by `make artifacts`.
 //! * **Layer 1 (python/compile/kernels/pairwise.py)** — the fused
@@ -74,6 +75,7 @@ pub mod index;
 pub mod init;
 pub mod linalg;
 pub mod metrics;
+pub mod model;
 pub mod objective;
 pub mod opt;
 pub mod par;
@@ -82,8 +84,10 @@ pub mod spatial;
 
 /// Convenient re-exports for examples and binaries.
 pub mod prelude {
-    pub use crate::index::{ExactIndex, HnswIndex, IndexSpec, NeighborIndex};
+    pub use crate::coordinator::{EmbeddingJob, JobResult};
+    pub use crate::index::{ExactIndex, HnswGraph, HnswIndex, HnswRef, IndexSpec, NeighborIndex};
     pub use crate::linalg::dense::Mat;
+    pub use crate::model::{EmbeddingModel, TransformOptions, Transformer};
     pub use crate::objective::engine::{
         BarnesHutEngine, EngineSpec, ExactEngine, GradientEngine,
     };

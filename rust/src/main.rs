@@ -2,14 +2,14 @@
 //!
 //! Subcommands map 1:1 to the paper's experiments (fig1..fig4, rates)
 //! plus a general-purpose `embed` runner and `info` for the artifact
-//! registry. See DESIGN.md section 6 for the experiment index.
+//! registry. See DESIGN.md section 7 for the experiment index.
 //!
 //! (Arg parsing is hand-rolled `--key value` matching; the offline build
 //! has no clap — see Cargo.toml.)
 
 use std::time::Duration;
 
-use nle::bench_harness::{ann, fig1, fig2, fig3, fig4, rates, scalability};
+use nle::bench_harness::{ann, fig1, fig2, fig3, fig4, rates, scalability, serve};
 use nle::prelude::*;
 
 const USAGE: &str = "\
@@ -40,6 +40,24 @@ COMMANDS
           affinity-stage wall-clock and recall across N (swiss roll)
           [--sizes 2000,5000,10000,20000] [--k 10] [--perplexity 8]
           [--m 16] [--efc 128] [--efs 100]
+  serve   out-of-sample serving throughput on a frozen model:
+          points/sec across batch sizes -> results/serve.csv +
+          results/BENCH_serve.json (thread count is fixed per process;
+          sweep it by re-running under different NLE_THREADS)
+          [--n 4096] [--batches 1,16,256,1024] [--k 10] [--steps 15]
+          [--theta 0.5] [--train-iters 30] [--reps 3] [--method ee]
+          [--lambda 100] [--perplexity 8] [--index auto]
+  save    train an embedding and persist a servable model artifact
+          (final embedding + affinity calibration + trained HNSW index)
+          [--data swiss|coil|mnist|clusters] [--n 1000] [--seed 1]
+          [--method ee] [--strategy sd] [--lambda 100] [--perplexity 20]
+          [--knn 15] [--index auto] [--max-iters 300]
+          [--out results/model.nlem]
+  transform  place held-out points with a saved model — no retraining,
+          no index rebuild; parallel across points (NLE_THREADS)
+          [--model results/model.nlem] [--data swiss] [--n 1000]
+          [--seed 7] [--steps 15] [--theta 0.5] [--k 0 (0 = model k)]
+          [--out results/oos.csv]
   all     run every experiment at default scale
   embed   one embedding run
           [--data swiss|coil|mnist|clusters] [--n 500] [--method ee]
@@ -102,6 +120,26 @@ fn parse_csv<T: std::str::FromStr>(key: &str, s: &str) -> anyhow::Result<Vec<T>>
         Some(v) if !v.is_empty() => Ok(v),
         _ => anyhow::bail!("bad --{key} value {s:?} (want a comma-separated list)"),
     }
+}
+
+/// Named dataset generator shared by `embed`/`save`/`transform` (the
+/// COIL/MNIST-like generators have fixed internal seeds; `seed` drives
+/// the synthetic manifolds, letting `transform` draw held-out points
+/// disjoint from a model's training draw).
+fn make_dataset(name: &str, n: usize, seed: u64) -> anyhow::Result<nle::data::coil::Dataset> {
+    Ok(match name {
+        "swiss" => nle::data::synth::swiss_roll(n, 3, 0.05, seed),
+        "coil" => nle::data::coil::generate(&nle::data::coil::CoilParams {
+            views: (n / 10).max(4),
+            ..Default::default()
+        }),
+        "mnist" => nle::data::mnist_like::generate(&nle::data::mnist_like::MnistLikeParams {
+            n,
+            ..Default::default()
+        }),
+        "clusters" => nle::data::synth::clusters(n, 5, 20, 15.0, seed),
+        other => anyhow::bail!("unknown dataset {other}"),
+    })
 }
 
 fn main() -> anyhow::Result<()> {
@@ -202,23 +240,18 @@ fn main() -> anyhow::Result<()> {
                 ..Default::default()
             })?;
             ann::run(&ann::AnnConfig { sizes: vec![1000, 2000], ..Default::default() })?;
+            serve::run(&serve::ServeConfig {
+                n_train: 1000,
+                batches: vec![1, 64, 256],
+                train_iters: 10,
+                ..Default::default()
+            })?;
             rates::run(&rates::RatesConfig::default())
         }
         "embed" => {
             let data = args.get_str("data", "swiss");
             let n: usize = args.get("n", 500);
-            let ds = match data.as_str() {
-                "swiss" => nle::data::synth::swiss_roll(n, 3, 0.05, 1),
-                "coil" => nle::data::coil::generate(&nle::data::coil::CoilParams {
-                    views: (n / 10).max(4),
-                    ..Default::default()
-                }),
-                "mnist" => nle::data::mnist_like::generate(
-                    &nle::data::mnist_like::MnistLikeParams { n, ..Default::default() },
-                ),
-                "clusters" => nle::data::synth::clusters(n, 5, 20, 15.0, 1),
-                other => anyhow::bail!("unknown dataset {other}"),
-            };
+            let ds = make_dataset(&data, n, 1)?;
             let n_actual = ds.y.rows;
             let method = Method::parse(&args.get_str("method", "ee"))
                 .ok_or_else(|| anyhow::anyhow!("bad method"))?;
@@ -285,6 +318,117 @@ fn main() -> anyhow::Result<()> {
             }
             nle::data::loader::save_embedding_csv(&path, &res.x, &ds.labels)?;
             println!("embedding written to {}", path.display());
+            Ok(())
+        }
+        "serve" => {
+            let batches: Vec<usize> =
+                parse_csv("batches", &args.get_str("batches", "1,16,256,1024"))?;
+            let method = Method::parse(&args.get_str("method", "ee"))
+                .ok_or_else(|| anyhow::anyhow!("bad method"))?;
+            let index = IndexSpec::parse(&args.get_str("index", "auto"))
+                .ok_or_else(|| anyhow::anyhow!("bad index (auto|exact|hnsw|hnsw:<m>[,..])"))?;
+            serve::run(&serve::ServeConfig {
+                n_train: args.get("n", 4096),
+                batches,
+                method,
+                lambda: args.get("lambda", 100.0),
+                perplexity: args.get("perplexity", 8.0),
+                k: args.get("k", 10),
+                index,
+                train_iters: args.get("train_iters", 30),
+                steps: args.get("steps", 15),
+                theta: args.get("theta", 0.5),
+                reps: args.get("reps", 3),
+                csv_name: args.get_str("csv", "serve.csv"),
+                json_name: Some(args.get_str("json", "BENCH_serve.json")),
+            })
+        }
+        "save" => {
+            let data = args.get_str("data", "swiss");
+            let n: usize = args.get("n", 1000);
+            let ds = make_dataset(&data, n, args.get("seed", 1))?;
+            let n_actual = ds.y.rows;
+            anyhow::ensure!(n_actual >= 3, "dataset has only {n_actual} points");
+            let method = Method::parse(&args.get_str("method", "ee"))
+                .ok_or_else(|| anyhow::anyhow!("bad method"))?;
+            let index = IndexSpec::parse(&args.get_str("index", "auto"))
+                .ok_or_else(|| anyhow::anyhow!("bad index (auto|exact|hnsw|hnsw:<m>[,..])"))?;
+            let knn: usize = args.get("knn", 15);
+            let mut job = nle::coordinator::EmbeddingJob::from_data(
+                format!("save-{data}"),
+                &ds.y,
+                method,
+                args.get("lambda", 100.0),
+                args.get("perplexity", 20.0),
+                knn,
+                index,
+            );
+            job.strategy = args.get_str("strategy", "sd");
+            job.opts.max_iters = args.get("max_iters", 300);
+            let t0 = std::time::Instant::now();
+            let (res, model) = job.run_model()?;
+            println!(
+                "save[{}/{}]: N = {n_actual}, E = {:.6e}, iters = {}, {:.2}s, {} index",
+                method.name(),
+                job.strategy,
+                res.e,
+                res.iters,
+                t0.elapsed().as_secs_f64(),
+                model.index_name()
+            );
+            let out = args.get_str("out", "results/model.nlem");
+            model.save(&out)?;
+            println!(
+                "model written to {out} ({} bytes)",
+                std::fs::metadata(&out)?.len()
+            );
+            Ok(())
+        }
+        "transform" => {
+            let path = args.get_str("model", "results/model.nlem");
+            let model = EmbeddingModel::load(&path)?;
+            println!(
+                "loaded {path}: N = {}, D = {}, d = {}, {} ({} index, perplexity {}, k {})",
+                model.n(),
+                model.ambient_dim(),
+                model.dim(),
+                model.method.name(),
+                model.index_name(),
+                model.perplexity,
+                model.k
+            );
+            let data = args.get_str("data", "swiss");
+            let n: usize = args.get("n", 1000);
+            let ds = make_dataset(&data, n, args.get("seed", 7))?;
+            anyhow::ensure!(
+                ds.y.cols == model.ambient_dim(),
+                "dataset dimension {} does not match the model's training data ({})",
+                ds.y.cols,
+                model.ambient_dim()
+            );
+            let k: usize = args.get("k", 0);
+            let transformer = model.transformer_with(TransformOptions {
+                steps: args.get("steps", 15),
+                theta: args.get("theta", 0.5),
+                k: if k == 0 { None } else { Some(k) },
+            });
+            let t0 = std::time::Instant::now();
+            let placed = transformer.transform(&ds.y);
+            let dt = t0.elapsed().as_secs_f64();
+            println!(
+                "transformed {} points in {dt:.3}s ({:.0} points/sec, {} threads, k = {})",
+                placed.rows,
+                placed.rows as f64 / dt.max(1e-12),
+                nle::par::num_threads(),
+                transformer.k()
+            );
+            let out = args.get_str("out", "results/oos.csv");
+            let outpath = std::path::PathBuf::from(&out);
+            if let Some(parent) = outpath.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            nle::data::loader::save_embedding_csv(&outpath, &placed, &ds.labels)?;
+            println!("out-of-sample embedding written to {out}");
             Ok(())
         }
         "info" => {

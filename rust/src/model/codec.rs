@@ -1,0 +1,383 @@
+//! Versioned binary codec for [`EmbeddingModel`] artifacts — written
+//! from scratch (the workspace is offline: no serde/bincode).
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic   b"NLEM"            4 bytes
+//! version u32                (FORMAT_VERSION; unknown versions rejected)
+//! len     u64                payload byte count
+//! payload [u8; len]          see below
+//! check   u64                FNV-1a 64 over payload
+//! ```
+//!
+//! Payload v1, in order: method (u8), lambda (f64), perplexity (f64),
+//! k (u64), `train_y` matrix, `x` matrix, HNSW flag (u8) and — when
+//! present — the graph (knobs, entry, max_level, then per-node
+//! per-layer u32 adjacency). Matrices are `rows, cols` as u64 followed
+//! by row-major f64 bits, so a load reproduces the embedding
+//! *bitwise* — the round-trip property the model tests pin down.
+//!
+//! Every read is bounds-checked: truncation, bad magic, a flipped bit
+//! (checksum) or a structurally invalid graph all fail with a
+//! descriptive error instead of serving a corrupted model.
+
+use super::{EmbeddingModel, FORMAT_VERSION};
+use crate::index::HnswGraph;
+use crate::linalg::dense::Mat;
+use crate::objective::Method;
+
+const MAGIC: &[u8; 4] = b"NLEM";
+
+/// FNV-1a 64-bit: tiny, dependency-free corruption detection (not a
+/// cryptographic signature — artifacts are trusted local files).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn method_tag(m: Method) -> u8 {
+    match m {
+        Method::Spectral => 0,
+        Method::Ee => 1,
+        Method::Ssne => 2,
+        Method::Tsne => 3,
+    }
+}
+
+fn method_from_tag(t: u8) -> anyhow::Result<Method> {
+    Ok(match t {
+        0 => Method::Spectral,
+        1 => Method::Ee,
+        2 => Method::Ssne,
+        3 => Method::Tsne,
+        other => anyhow::bail!("unknown method tag {other}"),
+    })
+}
+
+// ---- writer ----------------------------------------------------------
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Self {
+        Writer { buf: Vec::new() }
+    }
+
+    fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_mat(&mut self, m: &Mat) {
+        self.put_u64(m.rows as u64);
+        self.put_u64(m.cols as u64);
+        for &v in &m.data {
+            self.put_f64(v);
+        }
+    }
+
+    fn put_hnsw(&mut self, g: &HnswGraph) {
+        self.put_u64(g.m as u64);
+        self.put_u64(g.m0 as u64);
+        self.put_u64(g.ef_construction as u64);
+        self.put_u64(g.ef_search as u64);
+        self.put_u64(g.entry as u64);
+        self.put_u64(g.max_level as u64);
+        self.put_u64(g.neighbors.len() as u64);
+        for layers in &g.neighbors {
+            self.put_u64(layers.len() as u64);
+            for nb in layers {
+                self.put_u64(nb.len() as u64);
+                for &t in nb {
+                    self.buf.extend_from_slice(&t.to_le_bytes());
+                }
+            }
+        }
+    }
+}
+
+// ---- reader ----------------------------------------------------------
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            n <= self.remaining(),
+            "truncated artifact: wanted {n} bytes at offset {}, have {}",
+            self.pos,
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn get_u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn get_u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn get_u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// u64 that must fit a reasonable in-memory size (guards a corrupt
+    /// length from driving a multi-exabyte allocation).
+    fn get_len(&mut self) -> anyhow::Result<usize> {
+        let v = self.get_u64()?;
+        anyhow::ensure!(v <= (1u64 << 40), "implausible length {v} in artifact");
+        Ok(v as usize)
+    }
+
+    fn get_f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Guard a declared element count against the bytes actually left
+    /// (`width` bytes each) *before* allocating — a malformed length
+    /// must produce a descriptive error, not a multi-TB allocation.
+    fn check_count(&self, count: usize, width: usize, what: &str) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            count <= self.remaining() / width,
+            "truncated artifact: {what} declares {count} elements but only {} bytes remain",
+            self.remaining()
+        );
+        Ok(())
+    }
+
+    fn get_mat(&mut self) -> anyhow::Result<Mat> {
+        let rows = self.get_len()?;
+        let cols = self.get_len()?;
+        let count = rows
+            .checked_mul(cols)
+            .ok_or_else(|| anyhow::anyhow!("matrix shape {rows}x{cols} overflows"))?;
+        self.check_count(count, 8, "matrix")?;
+        let mut data = Vec::with_capacity(count);
+        for _ in 0..count {
+            data.push(self.get_f64()?);
+        }
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+
+    fn get_hnsw(&mut self) -> anyhow::Result<HnswGraph> {
+        let m = self.get_len()?;
+        let m0 = self.get_len()?;
+        let ef_construction = self.get_len()?;
+        let ef_search = self.get_len()?;
+        let entry = self.get_len()?;
+        let max_level = self.get_len()?;
+        let n = self.get_len()?;
+        // every node contributes at least a u64 level count
+        self.check_count(n, 8, "hnsw node table")?;
+        let mut neighbors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let levels = self.get_len()?;
+            self.check_count(levels, 8, "hnsw layer table")?;
+            let mut layers = Vec::with_capacity(levels);
+            for _ in 0..levels {
+                let deg = self.get_len()?;
+                self.check_count(deg, 4, "hnsw adjacency")?;
+                let mut nb = Vec::with_capacity(deg);
+                for _ in 0..deg {
+                    nb.push(u32::from_le_bytes(self.take(4)?.try_into().unwrap()));
+                }
+                layers.push(nb);
+            }
+            neighbors.push(layers);
+        }
+        Ok(HnswGraph { m, m0, ef_construction, ef_search, neighbors, entry, max_level })
+    }
+}
+
+// ---- entry points ----------------------------------------------------
+
+/// Serialize a model to the v1 container.
+pub fn encode(model: &EmbeddingModel) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u8(method_tag(model.method));
+    w.put_f64(model.lambda);
+    w.put_f64(model.perplexity);
+    w.put_u64(model.k as u64);
+    w.put_mat(&model.train_y);
+    w.put_mat(&model.x);
+    match &model.hnsw {
+        Some(g) => {
+            w.put_u8(1);
+            w.put_hnsw(g);
+        }
+        None => w.put_u8(0),
+    }
+    let payload = w.buf;
+    let mut out = Vec::with_capacity(payload.len() + 24);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+    out
+}
+
+/// Parse and validate a v1 container.
+pub fn decode(bytes: &[u8]) -> anyhow::Result<EmbeddingModel> {
+    let mut r = Reader::new(bytes);
+    let magic = r.take(4)?;
+    anyhow::ensure!(magic == MAGIC, "not an nle model artifact (bad magic)");
+    let version = r.get_u32()?;
+    anyhow::ensure!(
+        version == FORMAT_VERSION,
+        "unsupported artifact version {version} (this build reads {FORMAT_VERSION})"
+    );
+    let len = r.get_len()?;
+    let payload = r.take(len)?;
+    let check = r.get_u64()?;
+    anyhow::ensure!(
+        r.pos == bytes.len(),
+        "trailing garbage after artifact ({} extra bytes)",
+        bytes.len() - r.pos
+    );
+    anyhow::ensure!(check == fnv1a(payload), "artifact checksum mismatch (corrupted file)");
+
+    let mut p = Reader::new(payload);
+    let method = method_from_tag(p.get_u8()?)?;
+    let lambda = p.get_f64()?;
+    let perplexity = p.get_f64()?;
+    let k = p.get_len()?;
+    let train_y = p.get_mat()?;
+    let x = p.get_mat()?;
+    let hnsw = match p.get_u8()? {
+        0 => None,
+        1 => Some(p.get_hnsw()?),
+        other => anyhow::bail!("bad hnsw flag {other}"),
+    };
+    anyhow::ensure!(p.pos == payload.len(), "payload has trailing bytes");
+    // EmbeddingModel::new re-validates everything structural (shapes,
+    // parameter ranges, graph ids in bounds)
+    EmbeddingModel::new(
+        method,
+        lambda,
+        perplexity,
+        k,
+        std::sync::Arc::new(train_y),
+        x,
+        hnsw.map(std::sync::Arc::new),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::index::HnswIndex;
+
+    fn model(with_hnsw: bool) -> EmbeddingModel {
+        let mut rng = Rng::new(17);
+        let y = Mat::from_fn(60, 5, |_, _| rng.normal());
+        let x = Mat::from_fn(60, 2, |_, _| rng.normal());
+        let hnsw =
+            with_hnsw.then(|| std::sync::Arc::new(HnswIndex::build(&y, 5, 40, 30).into_graph()));
+        EmbeddingModel::new(Method::Tsne, 1.0, 7.0, 8, std::sync::Arc::new(y), x, hnsw).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_bitwise_equal() {
+        for with_hnsw in [false, true] {
+            let m = model(with_hnsw);
+            let bytes = encode(&m);
+            let back = decode(&bytes).unwrap();
+            // PartialEq on Mat compares the raw f64 buffers — bitwise
+            // for every value the codec writes (to_le_bytes roundtrip)
+            assert_eq!(m, back);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_version() {
+        let bytes = encode(&model(false));
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(decode(&bad).is_err());
+        let mut bad = bytes.clone();
+        bad[4] = 0xFF; // absurd version
+        assert!(decode(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation_and_corruption() {
+        let bytes = encode(&model(true));
+        // truncation at several depths
+        for cut in [3, 10, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decode(&bytes[..cut]).is_err(), "cut at {cut} must fail");
+        }
+        // a single flipped payload byte trips the checksum
+        let mut bad = bytes.clone();
+        let mid = 16 + (bytes.len() - 24) / 2;
+        bad[mid] ^= 0x40;
+        assert!(decode(&bad).is_err());
+        // trailing garbage is rejected too
+        let mut bad = bytes.clone();
+        bad.push(0);
+        assert!(decode(&bad).is_err());
+    }
+
+    #[test]
+    fn implausible_lengths_error_instead_of_allocating() {
+        // a declared matrix far larger than the payload must yield a
+        // descriptive error *before* any allocation is attempted
+        let m = model(false);
+        let mut bytes = encode(&m);
+        // train_y rows sits after method(1)+lambda(8)+perplexity(8)+k(8)
+        let rows_off = 16 + 25;
+        bytes[rows_off..rows_off + 8].copy_from_slice(&(1u64 << 38).to_le_bytes());
+        let payload_end = bytes.len() - 8;
+        let check = fnv1a(&bytes[16..payload_end]);
+        let at = bytes.len() - 8;
+        bytes[at..].copy_from_slice(&check.to_le_bytes());
+        let err = decode(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("truncated artifact"), "{err}");
+    }
+
+    #[test]
+    fn nan_and_infinity_parameters_rejected_on_load() {
+        let m = model(false);
+        let mut bytes = encode(&m);
+        // lambda sits right after magic+version+len+method tag
+        let lambda_off = 4 + 4 + 8 + 1;
+        bytes[lambda_off..lambda_off + 8].copy_from_slice(&f64::NAN.to_le_bytes());
+        // fix the checksum so only the semantic validation can object
+        let payload_start = 16;
+        let payload_end = bytes.len() - 8;
+        let check = fnv1a(&bytes[payload_start..payload_end]);
+        let at = bytes.len() - 8;
+        bytes[at..].copy_from_slice(&check.to_le_bytes());
+        assert!(decode(&bytes).is_err());
+    }
+}

@@ -1,0 +1,237 @@
+//! Servable embedding models: persistence + out-of-sample transform.
+//!
+//! Training (the coordinator, [`crate::coordinator`]) is a batch job:
+//! affinities, iterations, done. Everything learned used to evaporate
+//! with the process — every query implied retraining. This module turns
+//! a finished run into a *servable artifact*:
+//!
+//! * [`EmbeddingModel`] bundles the final embedding `X`, the training
+//!   points `Y`, the affinity calibration (method, λ, perplexity, k)
+//!   and the trained HNSW adjacency ([`crate::index::HnswGraph`]) —
+//!   everything the out-of-sample path needs, nothing it would have to
+//!   recompute. Save/load goes through a small versioned binary codec
+//!   ([`codec`]; no external dependencies — the workspace is offline).
+//! * [`Transformer`] ([`transform`]) places *new* points against the
+//!   frozen training embedding: kNN among training data through the
+//!   persisted index, attractive weights from the stored entropic
+//!   calibration ([`crate::affinity::calibrate_row`]), then a few
+//!   monotone diagonal-Hessian steps on the per-point objective
+//!   `E(x) = E⁺(x) + λ E⁻(x)` — the paper's generic formulation
+//!   restricted to one free row, the out-of-sample route of the SNE
+//!   survey literature (Ghojogh & Ghodsi, arXiv:2009.10301) with the
+//!   tree-approximated repulsion of Barnes-Hut-SNE (arXiv:1301.3342).
+//!   Queries are embarrassingly parallel ([`crate::par`]), so batch
+//!   throughput scales with cores (`NLE_THREADS`).
+//!
+//! Format stability: [`FORMAT_VERSION`] is written into every artifact;
+//! loaders reject unknown versions and corrupted payloads (checksummed)
+//! instead of serving garbage. See DESIGN.md section 5.
+
+pub mod codec;
+pub mod transform;
+
+pub use transform::{TransformOptions, Transformer};
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::index::{ExactIndex, HnswGraph, HnswRef, NeighborIndex};
+use crate::linalg::dense::Mat;
+use crate::objective::Method;
+
+/// On-disk format version (bumped on any incompatible layout change;
+/// loaders refuse newer versions rather than misparse them).
+pub const FORMAT_VERSION: u32 = 1;
+
+/// A trained, servable embedding model: the frozen training embedding
+/// plus everything needed to place new points into it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EmbeddingModel {
+    /// Embedding method the run used (decides kernel + repulsion form).
+    pub method: Method,
+    /// Repulsion trade-off λ of the training objective.
+    pub lambda: f64,
+    /// Effective perplexity the training affinities were calibrated at
+    /// (already clamped to k by the affinity stage).
+    pub perplexity: f64,
+    /// Neighbors per point in the training kNN graph; the default
+    /// candidate count for out-of-sample queries.
+    pub k: usize,
+    /// Training points, `N × D` ambient — the index queries run here.
+    /// Shared (`Arc`) with the job that produced the model, so the
+    /// handoff never duplicates the largest buffer in the system.
+    pub train_y: Arc<Mat>,
+    /// Frozen final embedding, `N × d`.
+    pub x: Mat,
+    /// Persisted HNSW adjacency over `train_y`; `None` means the exact
+    /// O(N·D) scan serves queries (small models). Shared with the job
+    /// for the same reason as `train_y`.
+    pub hnsw: Option<Arc<HnswGraph>>,
+}
+
+impl EmbeddingModel {
+    /// Assemble and validate a model from its parts.
+    pub fn new(
+        method: Method,
+        lambda: f64,
+        perplexity: f64,
+        k: usize,
+        train_y: Arc<Mat>,
+        x: Mat,
+        hnsw: Option<Arc<HnswGraph>>,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(train_y.rows >= 2, "a model needs at least 2 training points");
+        anyhow::ensure!(
+            x.rows == train_y.rows,
+            "embedding has {} rows but training data has {}",
+            x.rows,
+            train_y.rows
+        );
+        anyhow::ensure!(x.cols >= 1, "embedding dimension must be >= 1");
+        anyhow::ensure!(
+            k >= 1 && k < train_y.rows,
+            "k = {k} out of range for N = {}",
+            train_y.rows
+        );
+        anyhow::ensure!(
+            lambda.is_finite() && lambda >= 0.0 && perplexity.is_finite() && perplexity > 0.0,
+            "bad affinity parameters (lambda {lambda}, perplexity {perplexity})"
+        );
+        if let Some(g) = &hnsw {
+            g.validate(&train_y)?;
+        }
+        Ok(EmbeddingModel { method, lambda, perplexity, k, train_y, x, hnsw })
+    }
+
+    /// Number of training points.
+    pub fn n(&self) -> usize {
+        self.train_y.rows
+    }
+
+    /// Embedding dimension d.
+    pub fn dim(&self) -> usize {
+        self.x.cols
+    }
+
+    /// Ambient (input) dimension D.
+    pub fn ambient_dim(&self) -> usize {
+        self.train_y.cols
+    }
+
+    /// Name of the neighbor backend queries will go through.
+    pub fn index_name(&self) -> &'static str {
+        if self.hnsw.is_some() {
+            "hnsw"
+        } else {
+            "exact"
+        }
+    }
+
+    /// The neighbor index over the training points: the persisted HNSW
+    /// graph re-attached with zero rebuild cost, or the exact scan.
+    pub fn index(&self) -> Box<dyn NeighborIndex + '_> {
+        match &self.hnsw {
+            Some(g) => Box::new(HnswRef::new(&self.train_y, g)),
+            None => Box::new(ExactIndex::new(&self.train_y)),
+        }
+    }
+
+    /// An out-of-sample transformer with default options. Build once,
+    /// transform many batches: construction pays the (cheap) one-time
+    /// costs — index view, embedding tree, frozen partition sum.
+    pub fn transformer(&self) -> Transformer<'_> {
+        Transformer::new(self, TransformOptions::default())
+    }
+
+    /// An out-of-sample transformer with explicit options.
+    pub fn transformer_with(&self, opts: TransformOptions) -> Transformer<'_> {
+        Transformer::new(self, opts)
+    }
+
+    /// Serialize to the versioned binary format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        codec::encode(self)
+    }
+
+    /// Deserialize; fails on bad magic, unknown version, checksum
+    /// mismatch, truncation, or structurally invalid contents.
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Self> {
+        codec::decode(bytes)
+    }
+
+    /// Write the artifact to disk (creating parent directories).
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_bytes())?;
+        Ok(())
+    }
+
+    /// Load an artifact from disk.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let bytes = std::fs::read(path.as_ref())?;
+        Self::from_bytes(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::index::HnswIndex;
+
+    fn tiny_model(n: usize, with_hnsw: bool) -> EmbeddingModel {
+        let mut rng = Rng::new(5);
+        let y = Mat::from_fn(n, 4, |_, _| rng.normal());
+        let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let hnsw = with_hnsw.then(|| Arc::new(HnswIndex::build(&y, 4, 30, 20).into_graph()));
+        EmbeddingModel::new(Method::Ee, 10.0, 5.0, 6, Arc::new(y), x, hnsw).unwrap()
+    }
+
+    #[test]
+    fn new_validates_shapes() {
+        let m = tiny_model(30, true);
+        assert_eq!(m.n(), 30);
+        assert_eq!(m.dim(), 2);
+        assert_eq!(m.ambient_dim(), 4);
+        assert_eq!(m.index_name(), "hnsw");
+        // mismatched embedding rows
+        let bad = EmbeddingModel::new(
+            Method::Ee,
+            10.0,
+            5.0,
+            6,
+            m.train_y.clone(),
+            Mat::zeros(29, 2),
+            None,
+        );
+        assert!(bad.is_err());
+        // k out of range
+        let bad = EmbeddingModel::new(
+            Method::Ee,
+            10.0,
+            5.0,
+            30,
+            m.train_y.clone(),
+            m.x.clone(),
+            None,
+        );
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn index_backends_answer_queries() {
+        for with_hnsw in [false, true] {
+            let m = tiny_model(40, with_hnsw);
+            let idx = m.index();
+            assert_eq!(idx.len(), 40);
+            let nb = idx.query(m.train_y.row(7), 3);
+            assert_eq!(nb.len(), 3);
+            assert_eq!(nb[0].0, 7); // the stored point itself
+        }
+    }
+}

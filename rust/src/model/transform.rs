@@ -1,0 +1,490 @@
+//! Out-of-sample transform: place new points into a frozen embedding.
+//!
+//! Conceptually the new point `q` is appended to the training set as
+//! one extra row of the paper's objective `E(X) = E⁺(X) + λ E⁻(X)`
+//! with every training row held fixed, and only the new row minimized:
+//!
+//! * **Attraction** — the persisted neighbor index yields q's kNN among
+//!   the training points; the stored entropic calibration
+//!   ([`crate::affinity::calibrate_row`]) turns their distances into a
+//!   conditional distribution `p_{j|q}`, scaled by `1/N` to match the
+//!   training affinities' row mass (the symmetrized training P sums to
+//!   1 over all ordered pairs, so each row carries ≈ 1/N). Then
+//!   `E⁺(x) = Σ_j w_j ψ(‖x − X_j‖²)` with ψ the method kernel
+//!   (quadratic for the Gaussian-kernel methods, log(1+u) for t-SNE).
+//! * **Repulsion** — evaluated against the frozen embedding exactly the
+//!   way the Barnes–Hut engine evaluates it in-sample, via θ-criterion
+//!   traversal from the query's position ([`NTree::traverse_at`]):
+//!   EE adds `2 λ c F(x)` (both ordered pairs involving q, Gaussian
+//!   field F); the normalized models add `λ ln(Z₀ + 2 F(x))` where `Z₀`
+//!   is the frozen training partition sum — a new point perturbs Z by
+//!   exactly its own two rows. d > 3 embeddings fall back to the exact
+//!   O(N) sweep per evaluation (no tree).
+//!
+//! The minimizer is a handful of monotone diagonal-Hessian steps: the
+//! attractive curvature `2 Σ_j w_j ψ'` is the psd partial Hessian (the
+//! paper's recipe, one row at a time), the step is safeguarded by
+//! backtracking on the full energy, and the start point is the
+//! w-weighted mean of the neighbors' embeddings (the attraction-only
+//! minimizer for Gaussian kernels).
+//!
+//! Each query point is independent — [`Transformer::transform`] fans a
+//! batch out through [`crate::par::par_map`], so throughput scales with
+//! cores (`NLE_THREADS`); the `serve` harness measures it.
+
+use super::EmbeddingModel;
+use crate::index::NeighborIndex;
+use crate::linalg::dense::Mat;
+use crate::linalg::vecops::sqdist;
+use crate::objective::engine::DEFAULT_THETA;
+use crate::objective::Method;
+use crate::spatial::{NTree, Visit};
+
+/// Knobs for the out-of-sample minimization.
+#[derive(Clone, Copy, Debug)]
+pub struct TransformOptions {
+    /// Diagonal-Hessian descent steps per point (each safeguarded by
+    /// backtracking; the placement problem is tiny, so a handful
+    /// suffices).
+    pub steps: usize,
+    /// Barnes–Hut accuracy for the frozen-background repulsion (same
+    /// meaning as the training engine's θ; 0 forces exact sums).
+    pub theta: f64,
+    /// Neighbors per query; `None` uses the model's training k.
+    pub k: Option<usize>,
+}
+
+impl Default for TransformOptions {
+    fn default() -> Self {
+        TransformOptions { steps: 15, theta: DEFAULT_THETA, k: None }
+    }
+}
+
+/// EE's uniform repulsive weight. Training jobs build their objective
+/// through `NativeObjective::with_engine`, which fixes W⁻ = Uniform(1);
+/// the per-point objective mirrors that.
+const EE_WM: f64 = 1.0;
+
+/// A reusable out-of-sample transformer over a frozen model: holds the
+/// neighbor-index view, the embedding-space tree and the frozen
+/// partition sum, so per-batch work is queries only — no retraining,
+/// no re-factorization, no index rebuild.
+pub struct Transformer<'a> {
+    model: &'a EmbeddingModel,
+    index: Box<dyn NeighborIndex + 'a>,
+    /// Tree over the frozen embedding (d ≤ 3; `None` = exact sweeps).
+    tree: Option<NTree<'a>>,
+    /// Frozen training partition sum Z₀ (normalized methods; 0 for
+    /// EE/spectral, which need none).
+    z0: f64,
+    opts: TransformOptions,
+    k: usize,
+}
+
+impl<'a> Transformer<'a> {
+    pub fn new(model: &'a EmbeddingModel, opts: TransformOptions) -> Self {
+        let index = model.index();
+        let dim = model.dim();
+        let tree = (1..=3).contains(&dim).then(|| NTree::build(&model.x));
+        let k = opts.k.unwrap_or(model.k).clamp(1, model.n() - 1);
+        let mut t = Transformer { model, index, tree, z0: 0.0, opts, k };
+        t.z0 = match model.method {
+            Method::Ssne | Method::Tsne => t.frozen_partition_sum(),
+            Method::Spectral | Method::Ee => 0.0,
+        };
+        t
+    }
+
+    /// The model this transformer serves.
+    pub fn model(&self) -> &EmbeddingModel {
+        self.model
+    }
+
+    /// Effective neighbor count per query.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Frozen training partition sum (diagnostics; 0 unless normalized).
+    pub fn z0(&self) -> f64 {
+        self.z0
+    }
+
+    /// Z₀ = Σ_{n≠m} k(‖x_n − x_m‖²) over the frozen embedding — the
+    /// same per-row field sum the Barnes–Hut engine reduces in-sample,
+    /// computed once at transformer construction.
+    fn frozen_partition_sum(&self) -> f64 {
+        let x = &self.model.x;
+        let n = x.rows;
+        let student = self.model.method == Method::Tsne;
+        match &self.tree {
+            Some(tree) => crate::par::par_sum(n, |row| {
+                let mut field = 0.0;
+                tree.traverse(row, self.opts.theta, |v| match v {
+                    Visit::Cell { count, d2, .. } => field += count * kernel(student, d2).0,
+                    Visit::Point { d2, .. } => field += kernel(student, d2).0,
+                });
+                field
+            }),
+            None => crate::par::par_sum(n, |row| {
+                let xr = x.row(row);
+                let mut field = 0.0;
+                for m in 0..n {
+                    if m != row {
+                        field += kernel(student, sqdist(xr, x.row(m))).0;
+                    }
+                }
+                field
+            }),
+        }
+    }
+
+    /// Gaussian/Student field and force at an arbitrary embedding-space
+    /// position against the frozen embedding: `field = Σ_m k(d²)`,
+    /// `force = Σ_m k'(d²)-weighted (x − X_m)` (k for Gaussian, K² for
+    /// Student). θ-tree when available, exact sweep otherwise.
+    fn repulsion_at(&self, xq: &[f64], force: Option<&mut [f64]>) -> f64 {
+        let x = &self.model.x;
+        let d = x.cols;
+        let student = self.model.method == Method::Tsne;
+        let mut field = 0.0;
+        match (&self.tree, force) {
+            (Some(tree), Some(force)) => {
+                tree.traverse_at(xq, self.opts.theta, |v| match v {
+                    Visit::Cell { com, count, d2 } => {
+                        let (kf, kg) = kernel(student, d2);
+                        field += count * kf;
+                        for j in 0..d {
+                            force[j] += count * kg * (xq[j] - com[j]);
+                        }
+                    }
+                    Visit::Point { m, d2 } => {
+                        let (kf, kg) = kernel(student, d2);
+                        field += kf;
+                        let xm = x.row(m);
+                        for j in 0..d {
+                            force[j] += kg * (xq[j] - xm[j]);
+                        }
+                    }
+                });
+            }
+            (Some(tree), None) => {
+                tree.traverse_at(xq, self.opts.theta, |v| match v {
+                    Visit::Cell { count, d2, .. } => field += count * kernel(student, d2).0,
+                    Visit::Point { d2, .. } => field += kernel(student, d2).0,
+                });
+            }
+            (None, mut force) => {
+                for m in 0..x.rows {
+                    let xm = x.row(m);
+                    let d2 = sqdist(xq, xm);
+                    let (kf, kg) = kernel(student, d2);
+                    field += kf;
+                    if let Some(force) = force.as_deref_mut() {
+                        for j in 0..d {
+                            force[j] += kg * (xq[j] - xm[j]);
+                        }
+                    }
+                }
+            }
+        }
+        field
+    }
+
+    /// Energy, gradient and the psd diagonal curvature at `xq`.
+    fn eval(&self, xq: &[f64], neighbors: &[(usize, f64)], g: &mut [f64]) -> (f64, f64) {
+        let x = &self.model.x;
+        let d = x.cols;
+        let method = self.model.method;
+        let lambda = self.model.lambda;
+        g.iter_mut().for_each(|v| *v = 0.0);
+        let mut e_attr = 0.0;
+        let mut curv = 0.0;
+        for &(j, w) in neighbors {
+            let xj = x.row(j);
+            let d2 = sqdist(xq, xj);
+            let (psi, dpsi) = if method == Method::Tsne {
+                let kk = 1.0 / (1.0 + d2);
+                ((1.0 + d2).ln(), kk)
+            } else {
+                (d2, 1.0)
+            };
+            e_attr += w * psi;
+            curv += 2.0 * w * dpsi;
+            for i in 0..d {
+                g[i] += 2.0 * w * dpsi * (xq[i] - xj[i]);
+            }
+        }
+        let e = match method {
+            Method::Spectral => e_attr,
+            Method::Ee => {
+                let mut force = vec![0.0; d];
+                let f = self.repulsion_at(xq, Some(&mut force));
+                for i in 0..d {
+                    g[i] -= 4.0 * lambda * EE_WM * force[i];
+                }
+                e_attr + 2.0 * lambda * EE_WM * f
+            }
+            Method::Ssne | Method::Tsne => {
+                let mut force = vec![0.0; d];
+                let f = self.repulsion_at(xq, Some(&mut force));
+                let z = self.z0 + 2.0 * f;
+                for i in 0..d {
+                    g[i] -= 4.0 * lambda * force[i] / z;
+                }
+                e_attr + lambda * z.ln()
+            }
+        };
+        (e, curv)
+    }
+
+    /// Place one new ambient-space point into the frozen embedding.
+    pub fn transform_point(&self, q: &[f64]) -> Vec<f64> {
+        assert_eq!(
+            q.len(),
+            self.model.ambient_dim(),
+            "query dimension does not match the training data"
+        );
+        let x = &self.model.x;
+        let d = x.cols;
+        // 1. kNN among training points through the persisted index
+        let hits = self.index.query(q, self.k);
+        debug_assert!(!hits.is_empty());
+        // 2. attractive weights from the stored entropic calibration,
+        //    scaled to the training rows' mass (see module docs)
+        let d2s: Vec<f64> = hits.iter().map(|&(_, d2)| d2).collect();
+        let (p, _beta) = crate::affinity::calibrate_row(&d2s, self.perplexity());
+        let inv_n = 1.0 / self.model.n() as f64;
+        let neighbors: Vec<(usize, f64)> =
+            hits.iter().zip(&p).map(|(&(j, _), &pj)| (j, pj * inv_n)).collect();
+        // 3. start at the attraction-only minimizer: the weighted mean
+        //    of the neighbors' embedding positions
+        let wsum: f64 = neighbors.iter().map(|&(_, w)| w).sum();
+        let mut xq = vec![0.0; d];
+        for &(j, w) in &neighbors {
+            let xj = x.row(j);
+            for i in 0..d {
+                xq[i] += w * xj[i];
+            }
+        }
+        if wsum > 0.0 {
+            for v in xq.iter_mut() {
+                *v /= wsum;
+            }
+        }
+        // 4. monotone diagonal-Hessian descent with backtracking. One
+        //    traversal yields energy, gradient and curvature together
+        //    (`eval`), so an accepted trial doubles as the next step's
+        //    evaluation point — no position is ever traversed twice.
+        let mut g = vec![0.0; d];
+        let mut g_trial = vec![0.0; d];
+        let mut trial = vec![0.0; d];
+        let (mut e, mut curv) = self.eval(&xq, &neighbors, &mut g);
+        for _ in 0..self.opts.steps {
+            let gnorm2: f64 = g.iter().map(|v| v * v).sum();
+            if gnorm2 <= 1e-24 {
+                break;
+            }
+            // psd attractive curvature; floored so a pathological row
+            // (all-zero weights) cannot divide by zero
+            let h = curv.max(1e-300);
+            let mut alpha = 1.0;
+            let mut accepted = false;
+            for _ in 0..30 {
+                for i in 0..d {
+                    trial[i] = xq[i] - alpha * g[i] / h;
+                }
+                let (e_t, curv_t) = self.eval(&trial, &neighbors, &mut g_trial);
+                if e_t < e {
+                    xq.copy_from_slice(&trial);
+                    std::mem::swap(&mut g, &mut g_trial);
+                    e = e_t;
+                    curv = curv_t;
+                    accepted = true;
+                    break;
+                }
+                alpha *= 0.5;
+            }
+            if !accepted {
+                break; // stationary to machine precision
+            }
+        }
+        xq
+    }
+
+    /// Place a batch (`B × D`, one query per row) — embarrassingly
+    /// parallel over rows. Returns the `B × d` embedding coordinates.
+    pub fn transform(&self, queries: &Mat) -> Mat {
+        assert_eq!(
+            queries.cols,
+            self.model.ambient_dim(),
+            "query dimension does not match the training data"
+        );
+        let d = self.model.dim();
+        let rows = crate::par::par_map(queries.rows, |i| self.transform_point(queries.row(i)));
+        let mut out = Mat::zeros(queries.rows, d);
+        for (i, r) in rows.into_iter().enumerate() {
+            out.row_mut(i).copy_from_slice(&r);
+        }
+        out
+    }
+
+    fn perplexity(&self) -> f64 {
+        self.model.perplexity.min(self.k as f64)
+    }
+}
+
+/// Kernel value and force weight at squared distance `d2`: Gaussian
+/// `(e^{-d²}, e^{-d²})` or Student `(K, K²)` with `K = 1/(1+d²)` — the
+/// same pairs the Barnes–Hut engine accumulates in-sample.
+#[inline]
+fn kernel(student: bool, d2: f64) -> (f64, f64) {
+    if student {
+        let k = 1.0 / (1.0 + d2);
+        (k, k * k)
+    } else {
+        let e = (-d2).exp();
+        (e, e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::index::HnswIndex;
+
+    /// A deliberately structured model: training points on a 2-D grid
+    /// embedded at their own (scaled) coordinates, so geometric
+    /// expectations are easy to state.
+    fn grid_model(method: Method, lambda: f64) -> EmbeddingModel {
+        let n_side = 8;
+        let n = n_side * n_side;
+        let y = Mat::from_fn(n, 3, |i, j| match j {
+            0 => (i % n_side) as f64,
+            1 => (i / n_side) as f64,
+            _ => 0.0,
+        });
+        let x = Mat::from_fn(n, 2, |i, j| {
+            if j == 0 {
+                (i % n_side) as f64 * 0.5
+            } else {
+                (i / n_side) as f64 * 0.5
+            }
+        });
+        EmbeddingModel::new(method, lambda, 4.0, 6, std::sync::Arc::new(y), x, None).unwrap()
+    }
+
+    #[test]
+    fn interior_query_lands_inside_its_neighborhood() {
+        for method in [Method::Spectral, Method::Ee, Method::Ssne, Method::Tsne] {
+            let m = grid_model(method, 0.5);
+            let t = m.transformer();
+            // ambient point between grid nodes (3,3),(4,3),(3,4),(4,4)
+            let q = [3.5, 3.5, 0.0];
+            let p = t.transform_point(&q);
+            // must land within the cell spanned by those nodes in the
+            // embedding (0.5-scaled), with slack for repulsion
+            assert!(
+                p[0] > 1.2 && p[0] < 2.3 && p[1] > 1.2 && p[1] < 2.3,
+                "{}: placed at {p:?}",
+                method.name()
+            );
+        }
+    }
+
+    #[test]
+    fn batch_matches_single_point_path() {
+        let m = grid_model(Method::Ee, 1.0);
+        let t = m.transformer();
+        let queries = Mat::from_fn(40, 3, |i, j| match j {
+            0 => (i % 7) as f64 + 0.3,
+            1 => (i / 7) as f64 + 0.6,
+            _ => 0.0,
+        });
+        let batch = t.transform(&queries);
+        for i in [0usize, 13, 39] {
+            let single = t.transform_point(queries.row(i));
+            assert_eq!(batch.row(i), single.as_slice(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn transform_is_deterministic() {
+        let m = grid_model(Method::Tsne, 1.0);
+        let t = m.transformer();
+        let q = [2.2, 5.1, 0.0];
+        assert_eq!(t.transform_point(&q), t.transform_point(&q));
+    }
+
+    #[test]
+    fn descent_is_monotone_in_energy() {
+        // the final position must not have higher energy than the init
+        // (the weighted neighbor mean) — backtracking guarantees it
+        let m = grid_model(Method::Ee, 5.0);
+        let t = m.transformer();
+        let q = [3.5, 3.5, 0.0];
+        let hits = t.index.query(&q, t.k);
+        let d2s: Vec<f64> = hits.iter().map(|&(_, d2)| d2).collect();
+        let (p, _) = crate::affinity::calibrate_row(&d2s, t.perplexity());
+        let inv_n = 1.0 / m.n() as f64;
+        let nb: Vec<(usize, f64)> =
+            hits.iter().zip(&p).map(|(&(j, _), &pj)| (j, pj * inv_n)).collect();
+        let wsum: f64 = nb.iter().map(|&(_, w)| w).sum();
+        let mut init = vec![0.0; 2];
+        for &(j, w) in &nb {
+            for i in 0..2 {
+                init[i] += w * m.x.row(j)[i] / wsum;
+            }
+        }
+        let placed = t.transform_point(&q);
+        let mut g = vec![0.0; 2];
+        let (e_placed, _) = t.eval(&placed, &nb, &mut g);
+        let (e_init, _) = t.eval(&init, &nb, &mut g);
+        assert!(e_placed <= e_init + 1e-12);
+    }
+
+    #[test]
+    fn hnsw_and_exact_backends_agree_on_easy_queries() {
+        // well-separated data: approximate kNN = exact kNN, so the two
+        // backends must place queries identically
+        let mut rng = Rng::new(23);
+        let n = 120;
+        let y = Mat::from_fn(n, 3, |i, j| {
+            let c = if i < n / 2 { 0.0 } else { 40.0 };
+            c + rng.normal() + j as f64 * 0.01
+        });
+        let x = Mat::from_fn(n, 2, |i, _| {
+            let c = if i < n / 2 { -3.0 } else { 3.0 };
+            c + 0.1 * rng.normal()
+        });
+        let hnsw = std::sync::Arc::new(HnswIndex::build(&y, 8, 80, 60).into_graph());
+        let y = std::sync::Arc::new(y);
+        let exact_m =
+            EmbeddingModel::new(Method::Ee, 1.0, 4.0, 6, y.clone(), x.clone(), None).unwrap();
+        let hnsw_m = EmbeddingModel::new(Method::Ee, 1.0, 4.0, 6, y, x, Some(hnsw)).unwrap();
+        let (te, th) = (exact_m.transformer(), hnsw_m.transformer());
+        let mut rng2 = Rng::new(7);
+        for _ in 0..10 {
+            let base = if rng2.uniform() < 0.5 { 0.0 } else { 40.0 };
+            let q: Vec<f64> = (0..3).map(|_| base + rng2.normal()).collect();
+            let (a, b) = (te.transform_point(&q), th.transform_point(&q));
+            let d2 = sqdist(&a, &b);
+            assert!(d2 < 1e-18, "backends disagree: {a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn theta_zero_matches_exact_repulsion() {
+        let m = grid_model(Method::Ssne, 2.0);
+        let coarse = m.transformer_with(TransformOptions { theta: 0.5, ..Default::default() });
+        let exact = m.transformer_with(TransformOptions { theta: 0.0, ..Default::default() });
+        let q = [4.4, 2.3, 0.0];
+        let (a, b) = (coarse.transform_point(&q), exact.transform_point(&q));
+        // coarse θ is an approximation of the same objective: close, not
+        // identical
+        assert!(sqdist(&a, &b) < 1e-4, "{a:?} vs {b:?}");
+        // and z0 agrees to BH accuracy
+        assert!((coarse.z0() - exact.z0()).abs() / exact.z0() < 2e-2);
+    }
+}

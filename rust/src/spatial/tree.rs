@@ -205,11 +205,33 @@ impl<'a> NTree<'a> {
     /// Note: a cell *containing* the query can only be accepted when
     /// `θ ≥ 1/√d` (the com is at most `side·√d/2` away), so for the
     /// customary θ ≤ 0.5 the query never contributes to its own field.
-    pub fn traverse<F: FnMut(Visit<'_>)>(&self, query: usize, theta: f64, mut visit: F) {
+    pub fn traverse<F: FnMut(Visit<'_>)>(&self, query: usize, theta: f64, visit: F) {
+        if self.nodes.is_empty() {
+            return; // row(query) on an empty matrix would panic
+        }
+        self.traverse_impl(self.x.row(query), Some(query), theta, visit);
+    }
+
+    /// θ-traversal for an *arbitrary* query position that is not one of
+    /// the indexed points — the out-of-sample path: a new point's
+    /// repulsion against a frozen training embedding
+    /// ([`crate::model::transform`]). Every indexed point contributes
+    /// (no self-exclusion); otherwise identical to [`NTree::traverse`].
+    pub fn traverse_at<F: FnMut(Visit<'_>)>(&self, xq: &[f64], theta: f64, visit: F) {
+        assert_eq!(xq.len(), self.dim, "query dimension mismatch");
+        self.traverse_impl(xq, None, theta, visit);
+    }
+
+    fn traverse_impl<F: FnMut(Visit<'_>)>(
+        &self,
+        xq: &[f64],
+        exclude: Option<usize>,
+        theta: f64,
+        mut visit: F,
+    ) {
         if self.nodes.is_empty() {
             return;
         }
-        let xq = self.x.row(query);
         let theta2 = theta * theta;
         let mut stack: Vec<u32> = Vec::with_capacity(64);
         stack.push(0);
@@ -226,7 +248,7 @@ impl<'a> NTree<'a> {
             } else if node.first_child == NO_CHILD {
                 for &pi in &self.order[node.start as usize..node.end as usize] {
                     let m = pi as usize;
-                    if m == query {
+                    if exclude == Some(m) {
                         continue;
                     }
                     visit(Visit::Point { m, d2: sqdist(xq, self.x.row(m)) });
@@ -345,11 +367,42 @@ mod tests {
         assert!(tree.node_count() < 10_000);
     }
 
+    /// An arbitrary (out-of-sample) query visits every indexed point at
+    /// θ = 0 and its θ > 0 field converges to the exact one.
+    #[test]
+    fn traverse_at_arbitrary_query() {
+        let x = cloud(300, 2, 21);
+        let tree = NTree::build(&x);
+        let q = [0.3, -1.2];
+        let mut seen = vec![false; 300];
+        tree.traverse_at(&q, 0.0, |v| match v {
+            Visit::Point { m, d2 } => {
+                assert!(!seen[m]);
+                seen[m] = true;
+                assert!((d2 - crate::linalg::vecops::sqdist(&q, x.row(m))).abs() < 1e-12);
+            }
+            Visit::Cell { .. } => panic!("theta = 0 must never accept a cell"),
+        });
+        assert!(seen.iter().all(|&s| s), "every indexed point contributes");
+        let exact: f64 = (0..300)
+            .map(|m| (-crate::linalg::vecops::sqdist(&q, x.row(m))).exp())
+            .sum();
+        let mut field = 0.0;
+        tree.traverse_at(&q, 0.3, |v| match v {
+            Visit::Cell { count, d2, .. } => field += count * (-d2).exp(),
+            Visit::Point { d2, .. } => field += (-d2).exp(),
+        });
+        assert!((field - exact).abs() / exact.max(1e-300) < 1e-2);
+    }
+
     #[test]
     fn empty_and_singleton() {
         let x0 = Mat::zeros(0, 2);
         let t0 = NTree::build(&x0);
         assert_eq!(t0.node_count(), 0);
+        // traversals of an empty tree are silent no-ops, not panics
+        t0.traverse(0, 0.5, |_| panic!("nothing to visit"));
+        t0.traverse_at(&[0.0, 0.0], 0.5, |_| panic!("nothing to visit"));
         let x1 = Mat::from_vec(1, 2, vec![3.0, 4.0]);
         let t1 = NTree::build(&x1);
         t1.traverse(0, 0.5, |_| panic!("no other points to visit"));

@@ -1,0 +1,204 @@
+//! Model persistence + out-of-sample serving: the acceptance suite.
+//!
+//! * round-trip: save → load reproduces the embedding *bitwise*, the
+//!   persisted HNSW index answers identical queries, and a transform on
+//!   the loaded model matches the in-memory model exactly;
+//! * serving isolation: a 1k-point held-out batch completes straight
+//!   off a loaded artifact — no retraining, no re-factorization, no
+//!   index rebuild (the artifact ships the trained adjacency);
+//! * quality: held-out swiss-roll points land where the frozen
+//!   embedding keeps their ambient neighborhoods. Embeddings are
+//!   rotation/translation-invariant, so "close to where full retraining
+//!   places them" is pinned via the invariant that survives
+//!   reparametrization: ambient-vs-embedding neighborhood agreement,
+//!   calibrated against the training points' own agreement.
+
+use nle::index::{ExactIndex, NeighborIndex};
+use nle::prelude::*;
+
+fn trained_model(
+    n: usize,
+    iters: usize,
+    spec: IndexSpec,
+) -> (nle::data::coil::Dataset, EmbeddingModel) {
+    let data = nle::data::synth::swiss_roll(n, 3, 0.05, 42);
+    let mut job = nle::coordinator::EmbeddingJob::from_data(
+        "roundtrip",
+        &data.y,
+        Method::Ee,
+        100.0,
+        10.0,
+        12,
+        spec,
+    );
+    job.opts.max_iters = iters;
+    let (_res, model) = job.run_model().expect("training failed");
+    (data, model)
+}
+
+fn tmp_path(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("nle_model_{}_{name}", std::process::id()))
+}
+
+#[test]
+fn save_load_roundtrip_bitwise_and_query_identical() {
+    let spec = IndexSpec::Hnsw { m: 8, ef_construction: 80, ef_search: 60 };
+    let (data, model) = trained_model(400, 30, spec);
+    let path = tmp_path("roundtrip.nlem");
+    model.save(&path).unwrap();
+    let loaded = EmbeddingModel::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    // bitwise-equal contents: Mat's PartialEq compares raw f64 buffers
+    assert_eq!(model, loaded);
+    assert_eq!(model.x.data, loaded.x.data, "embedding must round-trip bitwise");
+
+    // the persisted index answers exactly the queries the original does
+    let (a, b) = (model.index(), loaded.index());
+    assert_eq!(a.name(), "hnsw");
+    assert_eq!(b.name(), "hnsw");
+    for i in [0usize, 57, 211, 399] {
+        assert_eq!(a.query_point(i, 10), b.query_point(i, 10), "point {i}");
+    }
+    let q = data.y.row(123);
+    assert_eq!(a.query(q, 8), b.query(q, 8));
+}
+
+#[test]
+fn transform_identical_after_roundtrip() {
+    let (_data, model) = trained_model(300, 25, IndexSpec::hnsw_default());
+    let bytes = model.to_bytes();
+    let loaded = EmbeddingModel::from_bytes(&bytes).unwrap();
+    let held_out = nle::data::synth::swiss_roll(64, 3, 0.05, 7);
+    let a = model.transformer().transform(&held_out.y);
+    let b = loaded.transformer().transform(&held_out.y);
+    // identical inputs + bitwise-identical model → bitwise-identical
+    // placements (the transform is deterministic)
+    assert_eq!(a, b);
+}
+
+#[test]
+fn serving_a_1k_batch_never_touches_the_training_pipeline() {
+    // acceptance criterion: transform on a 1k held-out batch completes
+    // off the loaded artifact alone. The artifact carries the trained
+    // index (hnsw payload present), the transformer queries it through
+    // a borrowed view (no rebuild — see HnswRef), and nothing here
+    // re-runs affinities, factorizations, or training iterations.
+    let (_data, model) = trained_model(1200, 20, IndexSpec::hnsw_default());
+    let loaded = EmbeddingModel::from_bytes(&model.to_bytes()).unwrap();
+    assert!(loaded.hnsw.is_some(), "artifact must ship the trained index");
+    let held_out = nle::data::synth::swiss_roll(1000, 3, 0.05, 9);
+    let transformer = loaded.transformer();
+    let placed = transformer.transform(&held_out.y);
+    assert_eq!(placed.rows, 1000);
+    assert_eq!(placed.cols, loaded.dim());
+    assert!(placed.data.iter().all(|v| v.is_finite()));
+    // placements live inside (a modest dilation of) the frozen
+    // embedding's bounding box — not at infinity, not collapsed
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in &loaded.x.data {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let pad = 0.5 * (hi - lo).max(1e-12);
+    assert!(
+        placed.data.iter().all(|&v| v > lo - pad && v < hi + pad),
+        "out-of-sample placements escaped the embedding's extent"
+    );
+}
+
+#[test]
+fn truncated_or_tampered_files_fail_to_load() {
+    let (_data, model) = trained_model(120, 5, IndexSpec::Exact);
+    let path = tmp_path("corrupt.nlem");
+    model.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    // truncation
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(EmbeddingModel::load(&path).is_err(), "truncated file must fail");
+    // bit flip in the payload
+    let mut bad = bytes.clone();
+    let mid = bad.len() / 2;
+    bad[mid] ^= 0x01;
+    std::fs::write(&path, &bad).unwrap();
+    assert!(EmbeddingModel::load(&path).is_err(), "tampered file must fail");
+    // pristine bytes still load
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(EmbeddingModel::load(&path).is_ok());
+    std::fs::remove_file(&path).ok();
+}
+
+/// Mean fraction of ambient-space kNN (among training points) that are
+/// also embedding-space kNN (among training points), for each query —
+/// the neighborhood-agreement score used to judge OOS placement quality
+/// against the training embedding's own quality.
+fn placement_agreement(
+    train_y: &Mat,
+    train_x: &Mat,
+    queries_y: &Mat,
+    queries_x: &Mat,
+    k: usize,
+) -> f64 {
+    let iy = ExactIndex::new(train_y);
+    let ix = ExactIndex::new(train_x);
+    let n = queries_y.rows;
+    let mut total = 0.0;
+    for i in 0..n {
+        let truth: std::collections::HashSet<usize> =
+            iy.query(queries_y.row(i), k).into_iter().map(|(j, _)| j).collect();
+        let hits = ix
+            .query(queries_x.row(i), k)
+            .into_iter()
+            .filter(|&(j, _)| truth.contains(&j))
+            .count();
+        total += hits as f64 / k as f64;
+    }
+    total / n as f64
+}
+
+#[test]
+fn held_out_points_land_where_retraining_would_put_them() {
+    let (data, model) = trained_model(600, 120, IndexSpec::Exact);
+    let held_out = nle::data::synth::swiss_roll(100, 3, 0.05, 7);
+    let placed = model.transformer().transform(&held_out.y);
+
+    let k = 10;
+    // how well the *training* embedding preserves neighborhoods — the
+    // ceiling any out-of-sample placement can be judged against
+    let r_train = placement_agreement(&data.y, &model.x, &data.y, &model.x, k);
+    // the same score for the held-out placements
+    let r_oos = placement_agreement(&data.y, &model.x, &held_out.y, &placed, k);
+    assert!(
+        r_oos >= 0.5 * r_train,
+        "held-out agreement {r_oos:.3} fell below half the training agreement {r_train:.3}"
+    );
+    assert!(r_oos > 0.15, "held-out agreement {r_oos:.3} is degenerate");
+
+    // and each placement sits near its ambient neighbors' embeddings:
+    // within a small multiple of the neighborhood's own embedding radius
+    let iy = ExactIndex::new(&data.y);
+    let mut ok = 0;
+    for i in 0..held_out.y.rows {
+        let nb = iy.query(held_out.y.row(i), k);
+        let d = model.dim();
+        let mut centroid = vec![0.0; d];
+        for &(j, _) in &nb {
+            for c in 0..d {
+                centroid[c] += model.x.at(j, c) / k as f64;
+            }
+        }
+        let radius = nb
+            .iter()
+            .map(|&(j, _)| nle::linalg::vecops::sqdist(&centroid, model.x.row(j)))
+            .fold(0.0f64, f64::max)
+            .sqrt();
+        let dist = nle::linalg::vecops::sqdist(&centroid, placed.row(i)).sqrt();
+        if dist <= 4.0 * radius.max(1e-9) {
+            ok += 1;
+        }
+    }
+    assert!(
+        ok >= 85,
+        "only {ok}/100 held-out points landed within 4 radii of their neighborhood"
+    );
+}
