@@ -11,7 +11,10 @@ use crate::objective::engine::EngineSpec;
 use crate::objective::native::NativeObjective;
 use crate::objective::xla::XlaObjective;
 use crate::objective::{Attractive, Method, Objective};
-use crate::opt::{minimize, IterStats, OptOptions, StopReason};
+use crate::opt::{
+    CheckpointMeta, CheckpointPayload, IterStats, Minimizer, OptOptions, StepOutcome,
+    StopReason, TrainCheckpoint,
+};
 use crate::runtime::ArtifactRegistry;
 
 /// Which objective backend evaluates E and its gradient.
@@ -70,9 +73,27 @@ pub struct EmbeddingJob {
     /// HNSW adjacency built by the affinity stage — kept so the model
     /// artifact ships the *trained* index instead of rebuilding one
     pub hnsw: Option<Arc<HnswGraph>>,
+    /// explicit starting embedding (warm starts); `None` = random init
+    /// from [`EmbeddingJob::init`]
+    pub init_x: Option<Arc<Mat>>,
     pub init: InitSpec,
     pub opts: OptOptions,
     pub backend: Backend,
+}
+
+/// Controls for [`EmbeddingJob::run_resumable`]: where to resume from,
+/// when/where to checkpoint, and the per-iteration observer the runner
+/// uses to stream progress. `Default` is a plain uninstrumented run.
+#[derive(Default)]
+pub struct RunControl<'a> {
+    /// continue a previously checkpointed run (meta must match the job)
+    pub resume: Option<TrainCheckpoint>,
+    /// write a checkpoint every K accepted iterations (None = never)
+    pub checkpoint_every: Option<usize>,
+    /// checkpoint destination, overwritten in place (write-then-rename)
+    pub checkpoint_path: Option<std::path::PathBuf>,
+    /// called after every accepted iteration
+    pub on_iter: Option<&'a mut dyn FnMut(&IterStats)>,
 }
 
 impl EmbeddingJob {
@@ -99,6 +120,7 @@ impl EmbeddingJob {
             data: None,
             perplexity: None,
             hnsw: None,
+            init_x: None,
             init: InitSpec::default(),
             opts: OptOptions { time_budget: budget, ..Default::default() },
             backend: Backend::Native,
@@ -159,10 +181,50 @@ impl EmbeddingJob {
             data: Some(Arc::new(y.clone())),
             perplexity: Some(eff_perplexity),
             hnsw,
+            init_x: None,
             init: InitSpec::default(),
             opts: OptOptions::default(),
             backend: Backend::Native,
         }
+    }
+
+    /// Incremental retraining: extend a trained [`EmbeddingModel`] with
+    /// `new_y` points. The combined training set is the model's points
+    /// followed by the new ones; the job's starting embedding keeps the
+    /// trained coordinates for the old points and places the new ones
+    /// with the out-of-sample [`crate::model::Transformer`] — so full
+    /// training *resumes* from a near-optimal configuration instead of
+    /// restarting from random noise. Method, λ, perplexity, k and the
+    /// embedding dimension are inherited from the model; the kNN graph
+    /// and affinities are rebuilt over the combined data (the new
+    /// points change old points' neighborhoods too).
+    pub fn warm_start(
+        name: impl Into<String>,
+        model: &EmbeddingModel,
+        new_y: &Mat,
+        index: IndexSpec,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(new_y.rows >= 1, "warm start needs at least one new point");
+        anyhow::ensure!(
+            new_y.cols == model.ambient_dim(),
+            "new points have dimension {} but the model was trained on {}",
+            new_y.cols,
+            model.ambient_dim()
+        );
+        let placed = model.transformer().transform(new_y);
+        let combined = model.train_y.vstack(new_y);
+        let mut job = EmbeddingJob::from_data(
+            name,
+            &combined,
+            model.method,
+            model.lambda,
+            model.perplexity,
+            model.k,
+            index,
+        );
+        job.dim = model.dim();
+        job.init_x = Some(Arc::new(model.x.vstack(&placed)));
+        Ok(job)
     }
 
     /// Build the objective for this job.
@@ -186,14 +248,116 @@ impl EmbeddingJob {
         })
     }
 
+    /// The identity record checkpoints of this job carry, and the one
+    /// resumes are validated against.
+    pub fn checkpoint_meta(&self) -> CheckpointMeta {
+        CheckpointMeta {
+            name: self.name.clone(),
+            strategy: self.strategy.clone(),
+            kappa: self.kappa,
+            method: self.method,
+            lambda: self.lambda,
+            dim: self.dim,
+            n: self.weights.n(),
+            // exact vs Barnes–Hut (and native vs XLA) gradients differ
+            // numerically; a resume must replay the same path
+            engine: format!("{:?}", self.engine),
+            backend: match &self.backend {
+                Backend::Native => "native".to_string(),
+                Backend::Xla(_) => "xla".to_string(),
+            },
+            weights_fp: crate::model::codec::weights_fingerprint(&self.weights),
+        }
+    }
+
     /// Execute synchronously on the current thread.
     pub fn run(&self) -> anyhow::Result<JobResult> {
+        self.run_resumable(RunControl::default())
+    }
+
+    /// Execute on the resumable stepper: optionally continue from a
+    /// checkpoint, write checkpoints as the run progresses, and stream
+    /// per-iteration stats through `ctl.on_iter`. A strategy-setup
+    /// failure (e.g. an SD factorization) is returned as an error — the
+    /// runner turns it into [`super::runner::JobEvent::Failed`] — and a
+    /// resumed run continues bitwise-identically to the uninterrupted
+    /// one (the objective rebuild is deterministic; the checkpoint
+    /// refuses jobs whose weights/strategy/λ differ).
+    pub fn run_resumable(&self, ctl: RunControl<'_>) -> anyhow::Result<JobResult> {
+        let RunControl { resume, checkpoint_every, checkpoint_path, mut on_iter } = ctl;
         let obj = self.build_objective()?;
-        let x0 = crate::init::random_init(obj.n(), self.dim, self.init.scale, self.init.seed);
         let mut strategy =
             crate::opt::strategy_by_name_with(&self.strategy, self.kappa, self.graph.clone())
                 .ok_or_else(|| anyhow::anyhow!("unknown strategy {:?}", self.strategy))?;
-        let res = minimize(obj.as_ref(), strategy.as_mut(), &x0, &self.opts);
+        // the meta embeds an O(nnz) fingerprint of the weights — only
+        // pay for it when a checkpoint will actually be read or written
+        // (plain `run()` must stay as cheap as the pre-stepper loop)
+        let need_meta = resume.is_some() || checkpoint_every.unwrap_or(0) > 0;
+        let meta = need_meta.then(|| self.checkpoint_meta());
+        let mut mm = match resume {
+            Some(ck) => {
+                ck.meta.ensure_matches(meta.as_ref().unwrap())?;
+                let CheckpointPayload::Minimize { state, strategy_state } = ck.payload else {
+                    anyhow::bail!(
+                        "checkpoint for job {:?} holds a homotopy run; resume it through \
+                         opt::homotopy::homotopy_resumable",
+                        self.name
+                    )
+                };
+                let strat = strategy.as_mut();
+                Minimizer::resume(obj.as_ref(), strat, state, &strategy_state, &self.opts)?
+            }
+            None => {
+                let x0 = match &self.init_x {
+                    Some(x) => {
+                        anyhow::ensure!(
+                            x.rows == obj.n() && x.cols == self.dim,
+                            "init_x is {}x{} but the job is {}x{}",
+                            x.rows,
+                            x.cols,
+                            obj.n(),
+                            self.dim
+                        );
+                        (**x).clone()
+                    }
+                    None => crate::init::random_init(
+                        obj.n(),
+                        self.dim,
+                        self.init.scale,
+                        self.init.seed,
+                    ),
+                };
+                Minimizer::new(obj.as_ref(), strategy.as_mut(), &x0, &self.opts)?
+            }
+        };
+        let every = checkpoint_every.unwrap_or(0);
+        if every > 0 {
+            anyhow::ensure!(
+                checkpoint_path.is_some(),
+                "checkpoint_every is set but checkpoint_path is not"
+            );
+        }
+        loop {
+            match mm.step(obj.as_ref()) {
+                StepOutcome::Done(_) => break,
+                StepOutcome::Stepped(stats) => {
+                    if let Some(cb) = on_iter.as_deref_mut() {
+                        cb(&stats);
+                    }
+                    if every > 0 && stats.iter % every == 0 {
+                        TrainCheckpoint {
+                            meta: meta.clone().unwrap(),
+                            payload: CheckpointPayload::Minimize {
+                                state: mm.state(),
+                                strategy_state: mm.strategy_state(),
+                            },
+                        }
+                        .save(checkpoint_path.as_ref().unwrap())?;
+                    }
+                }
+            }
+        }
+        let res = mm.into_result();
         Ok(JobResult {
             name: self.name.clone(),
             strategy: self.strategy.clone(),
@@ -368,6 +532,146 @@ mod tests {
         assert!(res.hnsw.is_some());
         assert_eq!(model.hnsw.as_deref(), Some(&*hnsw));
         assert_eq!(model.index_name(), "hnsw");
+    }
+
+    fn dense_job(max_iters: usize) -> EmbeddingJob {
+        let n = 18;
+        let mut rng = Rng::new(21);
+        let y = Mat::from_fn(n, 3, |_, _| rng.normal());
+        let p = crate::affinity::sne_affinities(&y, 5.0);
+        let mut job = EmbeddingJob::native(
+            "ckpt",
+            Method::Ee,
+            10.0,
+            Arc::new(Attractive::Dense(p)),
+            "fp",
+            None,
+        );
+        job.opts.max_iters = max_iters;
+        // keep the run from stopping early so the checkpoint iteration
+        // is always reached
+        job.opts.rel_tol = 1e-14;
+        job.opts.grad_tol = 1e-12;
+        job
+    }
+
+    #[test]
+    fn run_resumable_checkpoints_and_resumes_identically() {
+        let path = std::env::temp_dir().join("nle_job_ckpt_test.nlec");
+        let job = dense_job(30);
+        // interrupted run: 12 iterations, checkpoints at 5 and 10
+        let mut partial = job.clone();
+        partial.opts.max_iters = 12;
+        partial
+            .run_resumable(RunControl {
+                checkpoint_every: Some(5),
+                checkpoint_path: Some(path.clone()),
+                ..Default::default()
+            })
+            .unwrap();
+        let ck = TrainCheckpoint::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        // resume to the full budget vs the run that was never stopped
+        let resumed = job
+            .run_resumable(RunControl { resume: Some(ck), ..Default::default() })
+            .unwrap();
+        let full = job.run().unwrap();
+        assert_eq!(resumed.iters, full.iters);
+        assert_eq!(resumed.stop, full.stop);
+        for (a, b) in resumed.x.data.iter().zip(&full.x.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in resumed.trace.iter().zip(&full.trace) {
+            assert_eq!(a.e.to_bits(), b.e.to_bits(), "trace diverged at iter {}", a.iter);
+            assert_eq!(a.nfev, b.nfev);
+        }
+    }
+
+    #[test]
+    fn resume_rejects_a_mismatched_job() {
+        let path = std::env::temp_dir().join("nle_job_ckpt_mismatch.nlec");
+        let job = dense_job(12);
+        job.run_resumable(RunControl {
+            checkpoint_every: Some(5),
+            checkpoint_path: Some(path.clone()),
+            ..Default::default()
+        })
+        .unwrap();
+        let ck = TrainCheckpoint::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let mut other = dense_job(12);
+        other.lambda = 11.0; // different objective
+        let err = other.run_resumable(RunControl { resume: Some(ck), ..Default::default() });
+        assert!(err.is_err());
+        assert!(format!("{}", err.unwrap_err()).contains("lambda"));
+    }
+
+    #[test]
+    fn run_resumable_streams_every_iteration() {
+        let job = dense_job(8);
+        let mut iters = Vec::new();
+        let mut cb = |st: &crate::opt::IterStats| iters.push(st.iter);
+        let res = job
+            .run_resumable(RunControl { on_iter: Some(&mut cb), ..Default::default() })
+            .unwrap();
+        assert_eq!(iters.len(), res.iters);
+        assert!(iters.windows(2).all(|w| w[1] == w[0] + 1));
+    }
+
+    #[test]
+    fn warm_start_extends_a_trained_model() {
+        let data = crate::data::synth::swiss_roll(140, 3, 0.05, 11);
+        let mut job =
+            EmbeddingJob::from_data("w0", &data.y, Method::Ee, 10.0, 8.0, 10, IndexSpec::Exact);
+        job.opts.max_iters = 40;
+        let (_res, model) = job.run_model().unwrap();
+        let fresh = crate::data::synth::swiss_roll(20, 3, 0.05, 99);
+        let mut j2 =
+            EmbeddingJob::warm_start("warm", &model, &fresh.y, IndexSpec::Exact).unwrap();
+        let x0 = j2.init_x.clone().expect("warm start must set init_x");
+        assert_eq!(x0.rows, 160);
+        assert_eq!(x0.cols, model.dim());
+        // old points start exactly at their trained coordinates; new
+        // points were placed by the out-of-sample transformer
+        for i in 0..140 {
+            for j in 0..model.dim() {
+                assert_eq!(x0.at(i, j).to_bits(), model.x.at(i, j).to_bits());
+            }
+        }
+        assert!(x0.data.iter().all(|v| v.is_finite()));
+        // inherited calibration
+        assert_eq!(j2.method, model.method);
+        assert_eq!(j2.lambda, model.lambda);
+        j2.opts.max_iters = 15;
+        let (res2, model2) = j2.run_model().unwrap();
+        assert_eq!(model2.n(), 160);
+        assert!(res2.e.is_finite());
+        // warm-started training begins from the near-optimal
+        // configuration, not from random noise: its *starting* energy
+        // beats a cold start's (tiny random X maximizes the repulsion)
+        let mut cold = j2.clone();
+        cold.init_x = None;
+        cold.opts.max_iters = 15;
+        let cold_res = cold.run().unwrap();
+        assert!(
+            res2.trace[0].e < cold_res.trace[0].e,
+            "warm start {} should begin below cold start {}",
+            res2.trace[0].e,
+            cold_res.trace[0].e
+        );
+    }
+
+    #[test]
+    fn warm_start_rejects_mismatched_dimensions() {
+        let data = crate::data::synth::swiss_roll(60, 3, 0.05, 5);
+        let mut job =
+            EmbeddingJob::from_data("w1", &data.y, Method::Ee, 10.0, 6.0, 8, IndexSpec::Exact);
+        job.opts.max_iters = 10;
+        let (_r, model) = job.run_model().unwrap();
+        let bad = Mat::zeros(4, 5); // wrong ambient dimension
+        assert!(EmbeddingJob::warm_start("bad", &model, &bad, IndexSpec::Exact).is_err());
+        let empty = Mat::zeros(0, 3);
+        assert!(EmbeddingJob::warm_start("bad", &model, &empty, IndexSpec::Exact).is_err());
     }
 
     #[test]

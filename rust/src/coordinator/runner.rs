@@ -5,19 +5,71 @@
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
-use super::job::{EmbeddingJob, JobResult};
+use super::job::{EmbeddingJob, JobResult, RunControl};
+use crate::opt::IterStats;
 
 /// Progress events streamed while a batch runs.
 #[derive(Debug)]
 pub enum JobEvent {
     Started { name: String },
+    /// Per-iteration training progress (throttled to at most one event
+    /// per [`PROGRESS_MIN_INTERVAL`] per job, first iteration always
+    /// reported) — the live telemetry a long run used to withhold until
+    /// it finished.
+    Progress { name: String, iter: usize, e: f64, grad_inf: f64, time_s: f64 },
     Finished { name: String, e: f64, iters: usize, time_s: f64 },
     Failed { name: String, error: String },
 }
 
+/// Minimum spacing between [`JobEvent::Progress`] events per job: tight
+/// enough for live dashboards, loose enough that a microsecond-per-step
+/// run cannot flood the channel.
+pub const PROGRESS_MIN_INTERVAL: Duration = Duration::from_millis(250);
+
+/// Rate limiter for per-iteration progress: the first call always
+/// passes (every job reports at least one Progress event), later calls
+/// pass at most once per `min_interval`.
+pub struct ProgressThrottle {
+    min_interval: Duration,
+    last: Option<Instant>,
+}
+
+impl ProgressThrottle {
+    pub fn new(min_interval: Duration) -> Self {
+        ProgressThrottle { min_interval, last: None }
+    }
+
+    pub fn ready(&mut self) -> bool {
+        let now = Instant::now();
+        match self.last {
+            Some(t) if now.duration_since(t) < self.min_interval => false,
+            _ => {
+                self.last = Some(now);
+                true
+            }
+        }
+    }
+}
+
+/// Human-readable panic payload: `panic!("...")` carries a `&str` or a
+/// formatted `String`; anything else is reported as opaque. Keeping the
+/// payload in the error message is the difference between
+/// "job X panicked" and an actionable report.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Run a batch of jobs with at most `parallelism` concurrent workers.
-/// Results come back in submission order.
+/// Results come back in submission order. When an event channel is
+/// attached, per-iteration [`JobEvent::Progress`] is streamed too.
 ///
 /// Timing-sensitive batches should pass `parallelism = 1` (see module
 /// docs); embarrassingly parallel sweeps can use more.
@@ -46,8 +98,32 @@ pub fn run_batch(
                     let _ = tx.send(JobEvent::Started { name: job.name.clone() });
                 }
                 let name = job.name.clone();
-                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job.run()))
-                    .unwrap_or_else(|_| Err(anyhow::anyhow!("job {name} panicked")));
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    match &events {
+                        Some(tx) => {
+                            let mut throttle = ProgressThrottle::new(PROGRESS_MIN_INTERVAL);
+                            let mut on_iter = |st: &IterStats| {
+                                if throttle.ready() {
+                                    let _ = tx.send(JobEvent::Progress {
+                                        name: name.clone(),
+                                        iter: st.iter,
+                                        e: st.e,
+                                        grad_inf: st.grad_inf,
+                                        time_s: st.time_s,
+                                    });
+                                }
+                            };
+                            job.run_resumable(RunControl {
+                                on_iter: Some(&mut on_iter),
+                                ..Default::default()
+                            })
+                        }
+                        None => job.run(),
+                    }
+                }))
+                .unwrap_or_else(|payload| {
+                    Err(anyhow::anyhow!("job {name} panicked: {}", panic_message(payload)))
+                });
                 if let Some(tx) = &events {
                     let _ = tx.send(match &res {
                         Ok(r) => JobEvent::Finished {
@@ -131,15 +207,27 @@ mod tests {
         assert_eq!(results.len(), 2);
         let mut started = 0;
         let mut finished = 0;
+        let mut progress = 0;
+        let mut progress_names = std::collections::HashSet::new();
         while let Ok(ev) = rx.try_recv() {
             match ev {
                 JobEvent::Started { .. } => started += 1,
+                JobEvent::Progress { name, iter, e, .. } => {
+                    assert!(iter >= 1);
+                    assert!(e.is_finite());
+                    progress_names.insert(name);
+                    progress += 1;
+                }
                 JobEvent::Finished { .. } => finished += 1,
                 JobEvent::Failed { name, error } => panic!("{name} failed: {error}"),
             }
         }
         assert_eq!(started, 2);
         assert_eq!(finished, 2);
+        // the throttle always passes the first iteration, so every job
+        // streams at least one Progress event
+        assert!(progress >= 2, "only {progress} progress events");
+        assert_eq!(progress_names.len(), 2);
     }
 
     #[test]
@@ -158,5 +246,43 @@ mod tests {
         let results = run_batch_sync(js, 1);
         assert!(results[0].is_ok());
         assert!(results[1].is_err());
+    }
+
+    #[test]
+    fn failed_strategy_setup_fails_the_job_not_the_process() {
+        // an all-zero attractive matrix makes FP's prepare error out
+        // (zero degrees): the batch must surface Failed, not die
+        let mut js = jobs(2);
+        js[1].weights = Arc::new(Attractive::Dense(Mat::zeros(14, 14)));
+        js[1].strategy = "fp".into();
+        let (tx, rx) = mpsc::channel();
+        let results = run_batch(js, 1, Some(tx));
+        assert!(results[0].is_ok());
+        assert!(results[1].is_err());
+        let failed: Vec<String> = rx
+            .try_iter()
+            .filter_map(|ev| match ev {
+                JobEvent::Failed { name, .. } => Some(name),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(failed, vec!["job1".to_string()]);
+    }
+
+    #[test]
+    fn panic_messages_preserve_the_payload() {
+        assert_eq!(panic_message(Box::new("boom")), "boom");
+        assert_eq!(panic_message(Box::new(String::from("formatted boom"))), "formatted boom");
+        assert_eq!(panic_message(Box::new(42usize)), "non-string panic payload");
+    }
+
+    #[test]
+    fn throttle_always_passes_first_call() {
+        let mut t = ProgressThrottle::new(Duration::from_secs(3600));
+        assert!(t.ready());
+        assert!(!t.ready());
+        let mut t = ProgressThrottle::new(Duration::ZERO);
+        assert!(t.ready());
+        assert!(t.ready());
     }
 }

@@ -84,7 +84,7 @@ pub mod spatial;
 
 /// Convenient re-exports for examples and binaries.
 pub mod prelude {
-    pub use crate::coordinator::{EmbeddingJob, JobResult};
+    pub use crate::coordinator::{EmbeddingJob, JobResult, ProgressThrottle, RunControl};
     pub use crate::index::{ExactIndex, HnswGraph, HnswIndex, HnswRef, IndexSpec, NeighborIndex};
     pub use crate::linalg::dense::Mat;
     pub use crate::model::{EmbeddingModel, TransformOptions, Transformer};
@@ -95,6 +95,10 @@ pub mod prelude {
     pub use crate::objective::xla::XlaObjective;
     pub use crate::objective::{Attractive, Method, Objective, Repulsive};
     pub use crate::opt::sd::SpectralDirection;
-    pub use crate::opt::{minimize, DirectionStrategy, OptOptions, OptResult, StopReason};
+    pub use crate::opt::{
+        minimize, try_minimize, CheckpointMeta, CheckpointPayload, DirectionStrategy,
+        IterStats, Minimizer, MinimizerState, OptOptions, OptResult, StepOutcome, StopReason,
+        TrainCheckpoint,
+    };
     pub use crate::runtime::ArtifactRegistry;
 }

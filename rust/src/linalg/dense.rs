@@ -44,6 +44,20 @@ impl Mat {
         Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
     }
 
+    /// Stack `below` under `self` (column counts must match) — the
+    /// warm-start path concatenates old and new training points/rows.
+    pub fn vstack(&self, below: &Mat) -> Mat {
+        assert_eq!(
+            self.cols, below.cols,
+            "vstack column mismatch: {} vs {}",
+            self.cols, below.cols
+        );
+        let mut data = Vec::with_capacity(self.data.len() + below.data.len());
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&below.data);
+        Mat::from_vec(self.rows + below.rows, self.cols, data)
+    }
+
     #[inline]
     pub fn at(&self, i: usize, j: usize) -> f64 {
         self.data[i * self.cols + j]

@@ -2,7 +2,7 @@
 //!
 //! Subcommands map 1:1 to the paper's experiments (fig1..fig4, rates)
 //! plus a general-purpose `embed` runner and `info` for the artifact
-//! registry. See DESIGN.md section 7 for the experiment index.
+//! registry. See DESIGN.md section 8 for the experiment index.
 //!
 //! (Arg parsing is hand-rolled `--key value` matching; the offline build
 //! has no clap — see Cargo.toml.)
@@ -58,13 +58,23 @@ COMMANDS
           [--model results/model.nlem] [--data swiss] [--n 1000]
           [--seed 7] [--steps 15] [--theta 0.5] [--k 0 (0 = model k)]
           [--out results/oos.csv]
+  retrain incremental retraining: extend a saved model with new points
+          (old points keep their trained coordinates, new points are
+          placed by the out-of-sample transformer, then full training
+          resumes on the combined set) and persist the updated model
+          [--model results/model.nlem] [--data swiss] [--n-new 200]
+          [--seed 9] [--strategy sd] [--index auto] [--max-iters 200]
+          [--out results/model_retrained.nlem]
   all     run every experiment at default scale
-  embed   one embedding run
+  embed   one embedding run — checkpointable, resumable, streamable
           [--data swiss|coil|mnist|clusters] [--n 500] [--method ee]
           [--strategy sd] [--lambda 100] [--perplexity 20]
           [--max-iters 500] [--backend native|xla]
           [--engine auto|exact|bh|bh:<theta>] [--knn 0 (0 = dense W+)]
           [--index auto|exact|hnsw|hnsw:<m>[,<efc>[,<efs>]]]
+          [--checkpoint-every 0 (iterations; 0 = never)]
+          [--checkpoint-path results/embed.nlec]
+          [--resume <path.nlec>] [--progress]
           [--out results/embedding.csv]
   info    list available AOT artifacts [--artifacts artifacts]
 
@@ -72,6 +82,14 @@ Neighbor indices (--index): 'auto' uses exact brute force below 4096
 points and HNSW above (same threshold as the Barnes-Hut engine), so
 large-N runs are O(N log N) end to end. 'hnsw:<m>[,<efc>[,<efs>]]'
 sets the out-degree bound and the construction/search beam widths.
+
+Checkpoint/resume: --checkpoint-every K overwrites --checkpoint-path
+with an NLEC record every K iterations; a killed run restarts with
+--resume <path> plus the SAME data/method/strategy flags (the record
+refuses a mismatched run) and continues bitwise-identically to the
+run that was never interrupted. --max-iters counts total iterations
+including those before the checkpoint. --progress streams throttled
+per-iteration telemetry.
 ";
 
 /// Tiny `--key value` parser: returns a lookup map; bare flags get "true".
@@ -281,33 +299,67 @@ fn main() -> anyhow::Result<()> {
                     nle::affinity::sne_affinities(&ds.y, perplexity.min(n_actual as f64 / 3.0)),
                 )
             };
-            let obj: Box<dyn Objective> = match backend.as_str() {
-                "native" => {
-                    let native = NativeObjective::with_engine(method, wp, lambda, 2, engine);
-                    println!("embed: native backend, {} engine", native.engine_name());
-                    Box::new(native)
-                }
-                "xla" => {
-                    let reg = std::sync::Arc::new(ArtifactRegistry::open("artifacts")?);
-                    Box::new(XlaObjective::new(reg, method, wp, lambda, 2)?)
-                }
+            // one canonical checkpoint protocol: embed is an
+            // EmbeddingJob driven through run_resumable, so the CLI and
+            // batch callers share the same meta construction, lazy
+            // weights fingerprint, resume validation and checkpoint
+            // cadence (the job's InitSpec default reproduces the
+            // historical random_init(n, 2, 1e-4, 0) start exactly)
+            let mut job = nle::coordinator::EmbeddingJob::native(
+                format!("embed-{data}"),
+                method,
+                lambda,
+                std::sync::Arc::new(wp),
+                &strategy,
+                None,
+            );
+            job.engine = engine;
+            job.backend = match backend.as_str() {
+                "native" => nle::coordinator::Backend::Native,
+                "xla" => nle::coordinator::Backend::Xla(std::sync::Arc::new(
+                    ArtifactRegistry::open("artifacts")?,
+                )),
                 other => anyhow::bail!("unknown backend {other}"),
             };
-            let x0 = nle::init::random_init(n_actual, 2, 1e-4, 0);
-            let mut strat = nle::opt::strategy_by_name(&strategy, None)
-                .ok_or_else(|| anyhow::anyhow!("unknown strategy {strategy}"))?;
+            job.opts.max_iters = args.get("max_iters", 500);
+            println!("embed: {backend} backend, {engine:?} engine spec");
+            let ckpt_every: usize = args.get("checkpoint_every", 0);
+            let ckpt_path = args.get_str("checkpoint_path", "results/embed.nlec");
+            let resume = match args.0.get("resume") {
+                Some(path) => {
+                    let ck = TrainCheckpoint::load(path)?;
+                    if let CheckpointPayload::Minimize { state, .. } = &ck.payload {
+                        println!(
+                            "resuming {} from {path} at iteration {} (E = {:.6e})",
+                            ck.meta.name, state.k, state.e
+                        );
+                    }
+                    Some(ck) // run_resumable validates meta + payload kind
+                }
+                None => None,
+            };
+            let progress = args.0.contains_key("progress");
+            let mut throttle = ProgressThrottle::new(nle::coordinator::PROGRESS_MIN_INTERVAL);
+            let mut on_iter = |st: &IterStats| {
+                if progress && throttle.ready() {
+                    println!(
+                        "  iter {:>5}  E = {:.6e}  |g|inf = {:.3e}  alpha = {:.3e}  {:.2}s",
+                        st.iter, st.e, st.grad_inf, st.alpha, st.time_s
+                    );
+                }
+            };
             let t0 = std::time::Instant::now();
-            let res = minimize(
-                obj.as_ref(),
-                strat.as_mut(),
-                &x0,
-                &OptOptions { max_iters: args.get("max_iters", 500), ..Default::default() },
-            );
+            let res = job.run_resumable(RunControl {
+                resume,
+                checkpoint_every: (ckpt_every > 0).then_some(ckpt_every),
+                checkpoint_path: (ckpt_every > 0).then(|| std::path::PathBuf::from(&ckpt_path)),
+                on_iter: Some(&mut on_iter),
+            })?;
             println!(
-                "embed[{}/{strategy}/{backend}]: N = {n_actual}, E = {:.6e}, iters = {}, {:.2}s, stop = {:?}",
+                "embed[{}/{strategy}/{backend}]: N = {n_actual}, E = {:.12e}, iters = {}, {:.2}s, stop = {:?}",
                 method.name(),
                 res.e,
-                res.iters(),
+                res.iters,
                 t0.elapsed().as_secs_f64(),
                 res.stop
             );
@@ -429,6 +481,57 @@ fn main() -> anyhow::Result<()> {
             }
             nle::data::loader::save_embedding_csv(&outpath, &placed, &ds.labels)?;
             println!("out-of-sample embedding written to {out}");
+            Ok(())
+        }
+        "retrain" => {
+            let path = args.get_str("model", "results/model.nlem");
+            let model = EmbeddingModel::load(&path)?;
+            println!(
+                "loaded {path}: N = {}, D = {}, {} (perplexity {}, k {})",
+                model.n(),
+                model.ambient_dim(),
+                model.method.name(),
+                model.perplexity,
+                model.k
+            );
+            let data = args.get_str("data", "swiss");
+            let n_new: usize = args.get("n_new", 200);
+            let ds = make_dataset(&data, n_new, args.get("seed", 9))?;
+            anyhow::ensure!(
+                ds.y.cols == model.ambient_dim(),
+                "new data dimension {} does not match the model's training data ({})",
+                ds.y.cols,
+                model.ambient_dim()
+            );
+            let index = IndexSpec::parse(&args.get_str("index", "auto"))
+                .ok_or_else(|| anyhow::anyhow!("bad index (auto|exact|hnsw|hnsw:<m>[,..])"))?;
+            let t0 = std::time::Instant::now();
+            // warm start: trained points keep their coordinates, new
+            // points enter via the out-of-sample transformer, then full
+            // training resumes over the combined set
+            let name = format!("retrain-{data}");
+            let mut job = nle::coordinator::EmbeddingJob::warm_start(name, &model, &ds.y, index)?;
+            job.strategy = args.get_str("strategy", "sd");
+            job.opts.max_iters = args.get("max_iters", 200);
+            let placed_s = t0.elapsed().as_secs_f64();
+            let (res, new_model) = job.run_model()?;
+            println!(
+                "retrain[{}/{}]: {} -> {} points ({:.2}s placement), E = {:.6e}, iters = {}, {:.2}s total",
+                model.method.name(),
+                job.strategy,
+                model.n(),
+                new_model.n(),
+                placed_s,
+                res.e,
+                res.iters,
+                t0.elapsed().as_secs_f64()
+            );
+            let out = args.get_str("out", "results/model_retrained.nlem");
+            new_model.save(&out)?;
+            println!(
+                "updated model written to {out} ({} bytes)",
+                std::fs::metadata(&out)?.len()
+            );
             Ok(())
         }
         "info" => {

@@ -1,43 +1,89 @@
-//! Versioned binary codec for [`EmbeddingModel`] artifacts — written
-//! from scratch (the workspace is offline: no serde/bincode).
+//! Versioned binary codecs for training artifacts — written from
+//! scratch (the workspace is offline: no serde/bincode). Two record
+//! types share one container format:
 //!
-//! Layout (all integers little-endian):
+//! * `NLEM` — a servable [`EmbeddingModel`] ([`encode`]/[`decode`]);
+//! * `NLEC` — a resumable [`TrainCheckpoint`]
+//!   ([`encode_checkpoint`]/[`decode_checkpoint`]): run identity
+//!   ([`crate::opt::CheckpointMeta`]) plus the optimizer snapshot —
+//!   either a plain [`crate::opt::MinimizerState`] or an in-flight
+//!   [`crate::opt::homotopy::HomotopyState`].
+//!
+//! Container layout (all integers little-endian):
 //!
 //! ```text
-//! magic   b"NLEM"            4 bytes
-//! version u32                (FORMAT_VERSION; unknown versions rejected)
+//! magic   b"NLEM" | b"NLEC"  4 bytes
+//! version u32                (per-record version; unknown rejected)
 //! len     u64                payload byte count
-//! payload [u8; len]          see below
+//! payload [u8; len]          record-specific
 //! check   u64                FNV-1a 64 over payload
 //! ```
 //!
-//! Payload v1, in order: method (u8), lambda (f64), perplexity (f64),
-//! k (u64), `train_y` matrix, `x` matrix, HNSW flag (u8) and — when
-//! present — the graph (knobs, entry, max_level, then per-node
+//! Model payload v1, in order: method (u8), lambda (f64), perplexity
+//! (f64), k (u64), `train_y` matrix, `x` matrix, HNSW flag (u8) and —
+//! when present — the graph (knobs, entry, max_level, then per-node
 //! per-layer u32 adjacency). Matrices are `rows, cols` as u64 followed
 //! by row-major f64 bits, so a load reproduces the embedding
-//! *bitwise* — the round-trip property the model tests pin down.
+//! *bitwise* — the round-trip property the model tests pin down. The
+//! checkpoint payload reuses the same primitives (bitwise f64s
+//! throughout — resumed runs must continue bit-for-bit).
 //!
 //! Every read is bounds-checked: truncation, bad magic, a flipped bit
 //! (checksum) or a structurally invalid graph all fail with a
-//! descriptive error instead of serving a corrupted model.
+//! descriptive error instead of serving a corrupted model or resuming
+//! a corrupted run.
 
 use super::{EmbeddingModel, FORMAT_VERSION};
 use crate::index::HnswGraph;
 use crate::linalg::dense::Mat;
-use crate::objective::Method;
+use crate::objective::{Attractive, Method};
+use crate::opt::homotopy::{HomotopyStage, HomotopyState};
+use crate::opt::{
+    CheckpointMeta, CheckpointPayload, IterStats, MinimizerState, StopReason, TrainCheckpoint,
+};
 
 const MAGIC: &[u8; 4] = b"NLEM";
+const CKPT_MAGIC: &[u8; 4] = b"NLEC";
+
+/// On-disk version of the `NLEC` checkpoint record (independent of the
+/// model's [`FORMAT_VERSION`]).
+pub const CHECKPOINT_VERSION: u32 = 1;
 
 /// FNV-1a 64-bit: tiny, dependency-free corruption detection (not a
 /// cryptographic signature — artifacts are trusted local files).
 fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    let mut h = Fnv1a::new();
+    h.update(bytes);
+    h.finish()
+}
+
+/// Incremental FNV-1a accumulator — lets [`weights_fingerprint`] hash
+/// large weight matrices without materializing a serialized copy.
+struct Fnv1a(u64);
+
+impl Fnv1a {
+    fn new() -> Self {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
     }
-    h
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn update_u64(&mut self, v: u64) {
+        self.update(&v.to_le_bytes());
+    }
+
+    fn update_f64(&mut self, v: f64) {
+        self.update(&v.to_le_bytes());
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
 }
 
 fn method_tag(m: Method) -> u8 {
@@ -57,6 +103,61 @@ fn method_from_tag(t: u8) -> anyhow::Result<Method> {
         3 => Method::Tsne,
         other => anyhow::bail!("unknown method tag {other}"),
     })
+}
+
+fn stop_tag(s: &StopReason) -> u8 {
+    match s {
+        StopReason::GradTol => 0,
+        StopReason::RelTol => 1,
+        StopReason::MaxIters => 2,
+        StopReason::TimeBudget => 3,
+        StopReason::LineSearchFailed => 4,
+    }
+}
+
+fn stop_from_tag(t: u8) -> anyhow::Result<StopReason> {
+    Ok(match t {
+        0 => StopReason::GradTol,
+        1 => StopReason::RelTol,
+        2 => StopReason::MaxIters,
+        3 => StopReason::TimeBudget,
+        4 => StopReason::LineSearchFailed,
+        other => anyhow::bail!("unknown stop-reason tag {other}"),
+    })
+}
+
+/// FNV-1a fingerprint of the attractive weights: the cheap identity
+/// check that stops a checkpoint from being resumed against different
+/// affinities (same N, different data — the failure mode a shape check
+/// cannot catch). Hashes structure and value bits, so Dense and Sparse
+/// weights with equal entries still fingerprint differently.
+pub fn weights_fingerprint(w: &Attractive) -> u64 {
+    let mut h = Fnv1a::new();
+    match w {
+        Attractive::Dense(m) => {
+            h.update(&[0]);
+            h.update_u64(m.rows as u64);
+            h.update_u64(m.cols as u64);
+            for &v in &m.data {
+                h.update_f64(v);
+            }
+        }
+        Attractive::Sparse(s) => {
+            h.update(&[1]);
+            h.update_u64(s.rows as u64);
+            h.update_u64(s.cols as u64);
+            for &p in &s.colptr {
+                h.update_u64(p as u64);
+            }
+            for &r in &s.rowind {
+                h.update_u64(r as u64);
+            }
+            for &v in &s.values {
+                h.update_f64(v);
+            }
+        }
+    }
+    h.finish()
 }
 
 // ---- writer ----------------------------------------------------------
@@ -88,6 +189,49 @@ impl Writer {
         for &v in &m.data {
             self.put_f64(v);
         }
+    }
+
+    fn put_str(&mut self, s: &str) {
+        self.put_u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn put_bytes(&mut self, b: &[u8]) {
+        self.put_u64(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+
+    fn put_iter_stats(&mut self, s: &IterStats) {
+        self.put_u64(s.iter as u64);
+        self.put_f64(s.time_s);
+        self.put_f64(s.e);
+        self.put_f64(s.grad_inf);
+        self.put_f64(s.alpha);
+        self.put_u64(s.nfev as u64);
+    }
+
+    fn put_minimizer_state(&mut self, s: &MinimizerState) {
+        self.put_mat(&s.x);
+        self.put_mat(&s.g);
+        self.put_f64(s.e);
+        self.put_u64(s.k as u64);
+        self.put_f64(s.prev_alpha);
+        self.put_u64(s.flat_iters as u64);
+        self.put_u64(s.nfev as u64);
+        self.put_f64(s.elapsed_s);
+        self.put_u64(s.trace.len() as u64);
+        for t in &s.trace {
+            self.put_iter_stats(t);
+        }
+    }
+
+    fn put_homotopy_stage(&mut self, s: &HomotopyStage) {
+        self.put_f64(s.lambda);
+        self.put_u64(s.iters as u64);
+        self.put_f64(s.time_s);
+        self.put_f64(s.e);
+        self.put_u64(s.nfev as u64);
+        self.put_u8(stop_tag(&s.stop));
     }
 
     fn put_hnsw(&mut self, g: &HnswGraph) {
@@ -188,6 +332,65 @@ impl<'a> Reader<'a> {
         Ok(Mat::from_vec(rows, cols, data))
     }
 
+    fn get_str(&mut self) -> anyhow::Result<String> {
+        let n = self.get_len()?;
+        self.check_count(n, 1, "string")?;
+        Ok(std::str::from_utf8(self.take(n)?)
+            .map_err(|_| anyhow::anyhow!("invalid utf-8 string in artifact"))?
+            .to_string())
+    }
+
+    fn get_bytes(&mut self) -> anyhow::Result<Vec<u8>> {
+        let n = self.get_len()?;
+        self.check_count(n, 1, "byte blob")?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn get_iter_stats(&mut self) -> anyhow::Result<IterStats> {
+        Ok(IterStats {
+            iter: self.get_len()?,
+            time_s: self.get_f64()?,
+            e: self.get_f64()?,
+            grad_inf: self.get_f64()?,
+            alpha: self.get_f64()?,
+            nfev: self.get_len()?,
+        })
+    }
+
+    fn get_minimizer_state(&mut self) -> anyhow::Result<MinimizerState> {
+        let x = self.get_mat()?;
+        let g = self.get_mat()?;
+        let e = self.get_f64()?;
+        let k = self.get_len()?;
+        let prev_alpha = self.get_f64()?;
+        let flat_iters = self.get_len()?;
+        let nfev = self.get_len()?;
+        let elapsed_s = self.get_f64()?;
+        let count = self.get_len()?;
+        // each trace entry is 2 u64 + 4 f64 = 48 bytes (see put_iter_stats)
+        self.check_count(count, 48, "iteration trace")?;
+        let mut trace = Vec::with_capacity(count);
+        for _ in 0..count {
+            trace.push(self.get_iter_stats()?);
+        }
+        let st = MinimizerState { x, g, e, k, prev_alpha, flat_iters, nfev, elapsed_s, trace };
+        // internal consistency (shape agreement, trace aligned with k);
+        // resume paths re-validate against the actual problem size
+        st.validate(st.x.rows, st.x.cols)?;
+        Ok(st)
+    }
+
+    fn get_homotopy_stage(&mut self) -> anyhow::Result<HomotopyStage> {
+        Ok(HomotopyStage {
+            lambda: self.get_f64()?,
+            iters: self.get_len()?,
+            time_s: self.get_f64()?,
+            e: self.get_f64()?,
+            nfev: self.get_len()?,
+            stop: stop_from_tag(self.get_u8()?)?,
+        })
+    }
+
     fn get_hnsw(&mut self) -> anyhow::Result<HnswGraph> {
         let m = self.get_len()?;
         let m0 = self.get_len()?;
@@ -218,9 +421,50 @@ impl<'a> Reader<'a> {
     }
 }
 
+// ---- container frame -------------------------------------------------
+
+/// Wrap a payload in the shared magic/version/length/checksum frame.
+fn frame(magic: &[u8; 4], version: u32, payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len() + 24);
+    out.extend_from_slice(magic);
+    out.extend_from_slice(&version.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+    out
+}
+
+/// Validate the frame and hand back the payload slice: magic, version,
+/// declared length, checksum and absence of trailing bytes all checked.
+fn unframe<'a>(
+    bytes: &'a [u8],
+    magic: &[u8; 4],
+    version: u32,
+    what: &str,
+) -> anyhow::Result<&'a [u8]> {
+    let mut r = Reader::new(bytes);
+    let m = r.take(4)?;
+    anyhow::ensure!(m == magic, "not an nle {what} artifact (bad magic)");
+    let v = r.get_u32()?;
+    anyhow::ensure!(
+        v == version,
+        "unsupported {what} artifact version {v} (this build reads {version})"
+    );
+    let len = r.get_len()?;
+    let payload = r.take(len)?;
+    let check = r.get_u64()?;
+    anyhow::ensure!(
+        r.pos == bytes.len(),
+        "trailing garbage after artifact ({} extra bytes)",
+        bytes.len() - r.pos
+    );
+    anyhow::ensure!(check == fnv1a(payload), "artifact checksum mismatch (corrupted file)");
+    Ok(payload)
+}
+
 // ---- entry points ----------------------------------------------------
 
-/// Serialize a model to the v1 container.
+/// Serialize a model to the v1 `NLEM` container.
 pub fn encode(model: &EmbeddingModel) -> Vec<u8> {
     let mut w = Writer::new();
     w.put_u8(method_tag(model.method));
@@ -236,36 +480,12 @@ pub fn encode(model: &EmbeddingModel) -> Vec<u8> {
         }
         None => w.put_u8(0),
     }
-    let payload = w.buf;
-    let mut out = Vec::with_capacity(payload.len() + 24);
-    out.extend_from_slice(MAGIC);
-    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
-    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
-    out.extend_from_slice(&payload);
-    out.extend_from_slice(&fnv1a(&payload).to_le_bytes());
-    out
+    frame(MAGIC, FORMAT_VERSION, w.buf)
 }
 
-/// Parse and validate a v1 container.
+/// Parse and validate a v1 `NLEM` container.
 pub fn decode(bytes: &[u8]) -> anyhow::Result<EmbeddingModel> {
-    let mut r = Reader::new(bytes);
-    let magic = r.take(4)?;
-    anyhow::ensure!(magic == MAGIC, "not an nle model artifact (bad magic)");
-    let version = r.get_u32()?;
-    anyhow::ensure!(
-        version == FORMAT_VERSION,
-        "unsupported artifact version {version} (this build reads {FORMAT_VERSION})"
-    );
-    let len = r.get_len()?;
-    let payload = r.take(len)?;
-    let check = r.get_u64()?;
-    anyhow::ensure!(
-        r.pos == bytes.len(),
-        "trailing garbage after artifact ({} extra bytes)",
-        bytes.len() - r.pos
-    );
-    anyhow::ensure!(check == fnv1a(payload), "artifact checksum mismatch (corrupted file)");
-
+    let payload = unframe(bytes, MAGIC, FORMAT_VERSION, "model")?;
     let mut p = Reader::new(payload);
     let method = method_from_tag(p.get_u8()?)?;
     let lambda = p.get_f64()?;
@@ -290,6 +510,128 @@ pub fn decode(bytes: &[u8]) -> anyhow::Result<EmbeddingModel> {
         x,
         hnsw.map(std::sync::Arc::new),
     )
+}
+
+/// Serialize a training checkpoint to the v1 `NLEC` container.
+pub fn encode_checkpoint(ck: &TrainCheckpoint) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_str(&ck.meta.name);
+    w.put_str(&ck.meta.strategy);
+    match ck.meta.kappa {
+        Some(k) => {
+            w.put_u8(1);
+            w.put_u64(k as u64);
+        }
+        None => w.put_u8(0),
+    }
+    w.put_u8(method_tag(ck.meta.method));
+    w.put_f64(ck.meta.lambda);
+    w.put_u64(ck.meta.dim as u64);
+    w.put_u64(ck.meta.n as u64);
+    w.put_str(&ck.meta.engine);
+    w.put_str(&ck.meta.backend);
+    w.put_u64(ck.meta.weights_fp);
+    match &ck.payload {
+        CheckpointPayload::Minimize { state, strategy_state } => {
+            w.put_u8(0);
+            w.put_minimizer_state(state);
+            w.put_bytes(strategy_state);
+        }
+        CheckpointPayload::Homotopy(h) => {
+            w.put_u8(1);
+            w.put_u64(h.stage as u64);
+            w.put_u64(h.stages.len() as u64);
+            for s in &h.stages {
+                w.put_homotopy_stage(s);
+            }
+            w.put_f64(h.elapsed_s);
+            w.put_minimizer_state(&h.inner);
+            w.put_bytes(&h.strategy_state);
+        }
+    }
+    frame(CKPT_MAGIC, CHECKPOINT_VERSION, w.buf)
+}
+
+/// Parse and validate a v1 `NLEC` container. Structural checks run
+/// here (shapes, trace alignment, finite scalars); resume paths
+/// additionally match [`CheckpointMeta`] against the job and validate
+/// the state against the actual problem size.
+pub fn decode_checkpoint(bytes: &[u8]) -> anyhow::Result<TrainCheckpoint> {
+    let payload = unframe(bytes, CKPT_MAGIC, CHECKPOINT_VERSION, "checkpoint")?;
+    let mut p = Reader::new(payload);
+    let name = p.get_str()?;
+    let strategy = p.get_str()?;
+    let kappa = match p.get_u8()? {
+        0 => None,
+        1 => Some(p.get_len()?),
+        other => anyhow::bail!("bad kappa flag {other}"),
+    };
+    let method = method_from_tag(p.get_u8()?)?;
+    let lambda = p.get_f64()?;
+    let dim = p.get_len()?;
+    let n = p.get_len()?;
+    let engine = p.get_str()?;
+    let backend = p.get_str()?;
+    let weights_fp = p.get_u64()?;
+    let meta = CheckpointMeta {
+        name,
+        strategy,
+        kappa,
+        method,
+        lambda,
+        dim,
+        n,
+        engine,
+        backend,
+        weights_fp,
+    };
+    let payload = match p.get_u8()? {
+        0 => {
+            let state = p.get_minimizer_state()?;
+            let strategy_state = p.get_bytes()?;
+            CheckpointPayload::Minimize { state, strategy_state }
+        }
+        1 => {
+            let stage = p.get_len()?;
+            let count = p.get_len()?;
+            // a stage record is 3 f64 + 2 u64 + 1 u8 = 41 bytes
+            p.check_count(count, 41, "homotopy stage table")?;
+            let mut stages = Vec::with_capacity(count);
+            for _ in 0..count {
+                stages.push(p.get_homotopy_stage()?);
+            }
+            let elapsed_s = p.get_f64()?;
+            let inner = p.get_minimizer_state()?;
+            let strategy_state = p.get_bytes()?;
+            anyhow::ensure!(
+                stages.len() == stage,
+                "homotopy checkpoint at stage {stage} carries {} completed records",
+                stages.len()
+            );
+            // a negative/NaN path clock would panic later in
+            // Duration::from_secs_f64 — error here instead
+            anyhow::ensure!(
+                elapsed_s.is_finite() && elapsed_s >= 0.0,
+                "homotopy checkpoint elapsed time {elapsed_s} out of range"
+            );
+            CheckpointPayload::Homotopy(HomotopyState {
+                stage,
+                stages,
+                inner,
+                strategy_state,
+                elapsed_s,
+            })
+        }
+        other => anyhow::bail!("unknown checkpoint payload kind {other}"),
+    };
+    anyhow::ensure!(p.pos == p.buf.len(), "payload has trailing bytes");
+    // the snapshot must describe the problem the meta claims
+    let inner = match &payload {
+        CheckpointPayload::Minimize { state, .. } => state,
+        CheckpointPayload::Homotopy(h) => &h.inner,
+    };
+    inner.validate(meta.n, meta.dim)?;
+    Ok(TrainCheckpoint { meta, payload })
 }
 
 #[cfg(test)]
@@ -363,6 +705,164 @@ mod tests {
         bytes[at..].copy_from_slice(&check.to_le_bytes());
         let err = decode(&bytes).unwrap_err();
         assert!(format!("{err}").contains("truncated artifact"), "{err}");
+    }
+
+    fn ckpt_state(k: usize) -> MinimizerState {
+        let mut rng = Rng::new(31);
+        let x = Mat::from_fn(12, 2, |_, _| rng.normal());
+        let g = Mat::from_fn(12, 2, |_, _| rng.normal());
+        let trace = (0..=k)
+            .map(|i| IterStats {
+                iter: i,
+                time_s: 0.01 * i as f64,
+                e: 10.0 - i as f64,
+                grad_inf: 1.0 / (i + 1) as f64,
+                alpha: if i == 0 { 0.0 } else { 0.5 },
+                nfev: i + 1,
+            })
+            .collect();
+        MinimizerState {
+            x,
+            g,
+            e: 10.0 - k as f64,
+            k,
+            prev_alpha: 0.5,
+            flat_iters: 1,
+            nfev: k + 1,
+            elapsed_s: 0.25,
+            trace,
+        }
+    }
+
+    fn ckpt(kind_homotopy: bool) -> TrainCheckpoint {
+        let meta = CheckpointMeta {
+            name: "test-run".into(),
+            strategy: "lbfgs".into(),
+            kappa: Some(7),
+            method: Method::Ee,
+            lambda: 42.5,
+            dim: 2,
+            n: 12,
+            engine: "Auto".into(),
+            backend: "native".into(),
+            weights_fp: 0xdead_beef_cafe_f00d,
+        };
+        let payload = if kind_homotopy {
+            CheckpointPayload::Homotopy(HomotopyState {
+                stage: 2,
+                stages: vec![
+                    HomotopyStage {
+                        lambda: 0.1,
+                        iters: 5,
+                        time_s: 0.1,
+                        e: 3.0,
+                        nfev: 8,
+                        stop: StopReason::RelTol,
+                    },
+                    HomotopyStage {
+                        lambda: 0.5,
+                        iters: 4,
+                        time_s: 0.2,
+                        e: 2.5,
+                        nfev: 14,
+                        stop: StopReason::MaxIters,
+                    },
+                ],
+                inner: ckpt_state(3),
+                strategy_state: vec![1, 2, 3, 4],
+                elapsed_s: 0.75,
+            })
+        } else {
+            CheckpointPayload::Minimize {
+                state: ckpt_state(4),
+                strategy_state: vec![9, 9, 9],
+            }
+        };
+        TrainCheckpoint { meta, payload }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_bitwise() {
+        for homotopy in [false, true] {
+            let ck = ckpt(homotopy);
+            let bytes = encode_checkpoint(&ck);
+            let back = decode_checkpoint(&bytes).unwrap();
+            assert_eq!(back.meta.name, ck.meta.name);
+            assert_eq!(back.meta.strategy, ck.meta.strategy);
+            assert_eq!(back.meta.kappa, ck.meta.kappa);
+            assert_eq!(back.meta.method, ck.meta.method);
+            assert_eq!(back.meta.lambda.to_bits(), ck.meta.lambda.to_bits());
+            assert_eq!(back.meta.engine, ck.meta.engine);
+            assert_eq!(back.meta.backend, ck.meta.backend);
+            assert_eq!(back.meta.weights_fp, ck.meta.weights_fp);
+            match (&back.payload, &ck.payload) {
+                (
+                    CheckpointPayload::Minimize { state: a, strategy_state: sa },
+                    CheckpointPayload::Minimize { state: b, strategy_state: sb },
+                ) => {
+                    assert_eq!(sa, sb);
+                    assert_eq!(a.x, b.x); // Mat PartialEq = raw f64 buffers
+                    assert_eq!(a.g, b.g);
+                    assert_eq!(a.k, b.k);
+                    assert_eq!(a.prev_alpha.to_bits(), b.prev_alpha.to_bits());
+                    assert_eq!(a.trace.len(), b.trace.len());
+                }
+                (CheckpointPayload::Homotopy(a), CheckpointPayload::Homotopy(b)) => {
+                    assert_eq!(a.stage, b.stage);
+                    assert_eq!(a.stages.len(), b.stages.len());
+                    assert_eq!(a.stages[1].stop, b.stages[1].stop);
+                    assert_eq!(a.strategy_state, b.strategy_state);
+                    assert_eq!(a.inner.x, b.inner.x);
+                    assert_eq!(a.elapsed_s.to_bits(), b.elapsed_s.to_bits());
+                }
+                _ => panic!("payload kind changed in roundtrip"),
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_rejects_corruption_truncation_and_wrong_magic() {
+        let bytes = encode_checkpoint(&ckpt(false));
+        // model and checkpoint containers are not interchangeable
+        assert!(decode(&bytes).is_err());
+        assert!(decode_checkpoint(&encode(&model(false))).is_err());
+        // truncation at several depths
+        for cut in [0, 3, 10, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decode_checkpoint(&bytes[..cut]).is_err(), "cut at {cut} must fail");
+        }
+        // a single flipped payload byte trips the checksum
+        let mut bad = bytes.clone();
+        let mid = 16 + (bytes.len() - 24) / 2;
+        bad[mid] ^= 0x04;
+        assert!(decode_checkpoint(&bad).is_err());
+        // unknown version
+        let mut bad = bytes.clone();
+        bad[4] = 0xEE;
+        assert!(decode_checkpoint(&bad).is_err());
+        // trailing garbage
+        let mut bad = bytes.clone();
+        bad.push(0);
+        assert!(decode_checkpoint(&bad).is_err());
+    }
+
+    #[test]
+    fn weights_fingerprint_separates_structure_and_values() {
+        let mut rng = Rng::new(3);
+        let mut w = Mat::from_fn(8, 8, |_, _| rng.uniform());
+        for i in 0..8 {
+            *w.at_mut(i, i) = 0.0;
+        }
+        let dense = Attractive::Dense(w.clone());
+        let fp1 = weights_fingerprint(&dense);
+        assert_eq!(fp1, weights_fingerprint(&dense), "fingerprint must be deterministic");
+        // perturbing a single entry changes the fingerprint
+        let mut w2 = w.clone();
+        let bumped = w2.at(0, 1) * 1.5 + 0.125;
+        *w2.at_mut(0, 1) = bumped;
+        assert_ne!(fp1, weights_fingerprint(&Attractive::Dense(w2)));
+        // representation matters too: same entries, sparse container
+        let sparse = Attractive::Sparse(crate::linalg::sparse::SpMat::from_dense(&w, 0.0));
+        assert_ne!(fp1, weights_fingerprint(&sparse));
     }
 
     #[test]

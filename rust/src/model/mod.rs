@@ -26,6 +26,12 @@
 //! Format stability: [`FORMAT_VERSION`] is written into every artifact;
 //! loaders reject unknown versions and corrupted payloads (checksummed)
 //! instead of serving garbage. See DESIGN.md section 5.
+//!
+//! The same container machinery also carries *training checkpoints*
+//! (`NLEC` records, [`codec::encode_checkpoint`]): a
+//! [`crate::opt::TrainCheckpoint`] snapshots an in-flight run —
+//! optimizer state, strategy memory, per-iteration trace — so a killed
+//! job resumes bitwise-identically. See DESIGN.md section 6.
 
 pub mod codec;
 pub mod transform;

@@ -3,7 +3,7 @@
 //! problems"), paired with the strong-Wolfe line search since CG needs
 //! curvature control and steps beyond 1.
 
-use super::DirectionStrategy;
+use super::{DirectionStrategy, StateReader, StateWriter};
 use crate::linalg::dense::Mat;
 use crate::linalg::vecops::{dot, nrm2};
 use crate::objective::Objective;
@@ -81,6 +81,23 @@ impl DirectionStrategy for NonlinearCg {
 
     fn natural_step(&self) -> bool {
         false
+    }
+
+    // PR+ needs g_{k-1} and p_{k-1} across a checkpoint boundary,
+    // otherwise the first resumed direction silently restarts (beta = 0)
+    // and the continuation diverges from the uninterrupted run.
+    fn save_state(&self) -> Vec<u8> {
+        let mut w = StateWriter::new();
+        w.put_opt_mat(&self.prev_g);
+        w.put_opt_mat(&self.prev_p);
+        w.into_bytes()
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = StateReader::new(bytes);
+        self.prev_g = r.get_opt_mat()?;
+        self.prev_p = r.get_opt_mat()?;
+        r.finish()
     }
 }
 

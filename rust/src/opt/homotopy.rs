@@ -6,10 +6,19 @@
 //! The spectral direction's factor does not depend on lambda, so SD
 //! prepares **once** for the whole path — a structural advantage the
 //! fig. 3 totals expose.
+//!
+//! There is no iteration loop in this module: each lambda stage is a
+//! [`Minimizer`] driven to completion, warm-started from the previous
+//! stage's state (same iterate, same strategy memory, no re-`prepare`).
+//! That also makes the whole path checkpointable — [`HomotopyState`]
+//! pins the stage index plus the in-flight stepper snapshot, and
+//! [`homotopy_resumable`] continues a path bitwise-identically from it.
 
 use std::time::Duration;
 
-use super::{minimize, DirectionStrategy, OptOptions, OptResult, StopReason};
+use super::{
+    DirectionStrategy, IterStats, Minimizer, MinimizerState, OptOptions, StopReason,
+};
 use crate::linalg::dense::Mat;
 use crate::objective::Objective;
 
@@ -41,6 +50,54 @@ impl HomotopyResult {
     }
 }
 
+/// Serializable snapshot of an in-flight homotopy path: which lambda
+/// stage is running, the completed stage records, and the stage's
+/// stepper state (stage-local trace included). Together with the
+/// lambda schedule — which the resuming caller must pass identically —
+/// this pins the whole computation.
+#[derive(Clone, Debug)]
+pub struct HomotopyState {
+    /// index into the lambda schedule of the stage in flight
+    pub stage: usize,
+    /// records of the stages already completed
+    pub stages: Vec<HomotopyStage>,
+    /// the in-flight stage's optimizer snapshot
+    pub inner: MinimizerState,
+    /// the strategy's evolving state (L-BFGS memory etc.)
+    pub strategy_state: Vec<u8>,
+    /// wall clock spent on the whole path so far (total-budget
+    /// accounting across process boundaries)
+    pub elapsed_s: f64,
+}
+
+/// What the per-iteration observer of [`homotopy_resumable`] sees:
+/// enough to stream progress (stage, lambda, stats) and to snapshot a
+/// resumable [`HomotopyState`] on demand.
+pub struct HomotopyProgress<'a, 'b> {
+    pub stage: usize,
+    pub lambda: f64,
+    /// accepted iterations accumulated across all stages
+    pub global_iter: usize,
+    pub stats: &'a IterStats,
+    /// wall clock for the whole path, checkpointed sessions included
+    pub elapsed_s: f64,
+    minim: &'a Minimizer<'b>,
+    stages_done: &'a [HomotopyStage],
+}
+
+impl HomotopyProgress<'_, '_> {
+    /// Snapshot a checkpointable state of the whole path.
+    pub fn state(&self) -> HomotopyState {
+        HomotopyState {
+            stage: self.stage,
+            stages: self.stages_done.to_vec(),
+            inner: self.minim.state(),
+            strategy_state: self.minim.strategy_state(),
+            elapsed_s: self.elapsed_s,
+        }
+    }
+}
+
 /// Log-spaced lambda schedule (paper: 50 values from 1e-4 to 1e2).
 pub fn log_lambda_schedule(lo: f64, hi: f64, steps: usize) -> Vec<f64> {
     assert!(lo > 0.0 && hi > lo && steps >= 2);
@@ -52,7 +109,9 @@ pub fn log_lambda_schedule(lo: f64, hi: f64, steps: usize) -> Vec<f64> {
 
 /// Run the homotopy: minimize at each lambda, warm-starting from the
 /// previous stage's minimizer. `per_stage` controls the inner loops
-/// (paper: rel_tol 1e-6, max 1e4 iterations).
+/// (paper: rel_tol 1e-6, max 1e4 iterations). Thin wrapper over
+/// [`homotopy_resumable`] for callers without checkpoint/progress
+/// needs (fig. 3 harness).
 pub fn homotopy<O: Objective>(
     obj: &mut O,
     strategy: &mut dyn DirectionStrategy,
@@ -61,27 +120,117 @@ pub fn homotopy<O: Objective>(
     per_stage: &OptOptions,
     total_budget: Option<Duration>,
 ) -> HomotopyResult {
-    let start = std::time::Instant::now();
-    let mut x = x0.clone();
-    let mut stages = Vec::with_capacity(lambdas.len());
-    // SD's factor is lambda-independent: prepare once up front
-    obj.set_lambda(lambdas[0]);
-    strategy.prepare(obj, &x).expect("strategy preparation failed");
+    homotopy_resumable(obj, strategy, x0, lambdas, per_stage, total_budget, None, None)
+        .expect("strategy preparation failed")
+}
 
-    for &lam in lambdas {
+/// The resumable homotopy driver. `resume` continues a path from a
+/// [`HomotopyState`] (the caller must pass the same objective weights,
+/// strategy construction and lambda schedule as the original run —
+/// deterministic objectives then make the continuation bitwise
+/// identical to the uninterrupted path). `on_iter` fires after every
+/// accepted iteration of every stage.
+#[allow(clippy::too_many_arguments)]
+pub fn homotopy_resumable<O: Objective>(
+    obj: &mut O,
+    strategy: &mut dyn DirectionStrategy,
+    x0: &Mat,
+    lambdas: &[f64],
+    per_stage: &OptOptions,
+    total_budget: Option<Duration>,
+    resume: Option<HomotopyState>,
+    mut on_iter: Option<&mut dyn FnMut(&HomotopyProgress<'_, '_>)>,
+) -> anyhow::Result<HomotopyResult> {
+    anyhow::ensure!(!lambdas.is_empty(), "homotopy needs at least one lambda");
+    let start = std::time::Instant::now();
+    // pending = the in-flight stage's snapshot (consumed by the first
+    // loop pass); fresh runs prepare once up front — SD's factor is
+    // lambda-independent, so the whole path shares it
+    let (mut stages, start_stage, mut pending, base_elapsed) = match resume {
+        Some(st) => {
+            anyhow::ensure!(
+                st.stage < lambdas.len() && st.stages.len() == st.stage,
+                "checkpoint stage {} inconsistent with {} completed records / {} lambdas",
+                st.stage,
+                st.stages.len(),
+                lambdas.len()
+            );
+            // guard API-constructed states too: a negative/NaN path
+            // clock would panic in Duration::from_secs_f64 below
+            anyhow::ensure!(
+                st.elapsed_s.is_finite() && st.elapsed_s >= 0.0,
+                "homotopy state elapsed time {} out of range",
+                st.elapsed_s
+            );
+            st.inner.validate(obj.n(), obj.dim())?;
+            obj.set_lambda(lambdas[st.stage]);
+            strategy.prepare(obj, &st.inner.x)?;
+            strategy.restore_state(&st.strategy_state)?;
+            (st.stages, st.stage, Some(st.inner), st.elapsed_s)
+        }
+        None => {
+            obj.set_lambda(lambdas[0]);
+            strategy.prepare(obj, x0)?;
+            (Vec::with_capacity(lambdas.len()), 0usize, None, 0.0)
+        }
+    };
+    let mut x = match &pending {
+        Some(s) => s.x.clone(),
+        None => x0.clone(),
+    };
+    let mut global_iter_base: usize = stages.iter().map(|s: &HomotopyStage| s.iters).sum();
+
+    for (si, &lam) in lambdas.iter().enumerate().skip(start_stage) {
         obj.set_lambda(lam);
         let mut opts = per_stage.clone();
         if let Some(budget) = total_budget {
-            let left = budget.saturating_sub(start.elapsed());
+            let spent = Duration::from_secs_f64(base_elapsed) + start.elapsed();
+            let left = budget.saturating_sub(spent);
             if left.is_zero() {
                 break;
             }
+            // a resumed in-flight stage measures its elapsed time from
+            // the stage's *original* start (Minimizer::adopt restores
+            // it), so the path-budget clamp must be expressed in the
+            // same coordinate: stage-elapsed may run to already-spent
+            // plus what is left of the path — otherwise the already
+            // spent seconds would be double-counted and the stage cut
+            // short (or skipped outright) relative to the uninterrupted
+            // run
+            let stage_spent = pending.as_ref().map(|s| s.elapsed_s).unwrap_or(0.0);
+            let stage_left = left + Duration::from_secs_f64(stage_spent);
             opts.time_budget = Some(match opts.time_budget {
-                Some(t) => t.min(left),
-                None => left,
+                Some(t) => t.min(stage_left),
+                None => stage_left,
             });
         }
-        let res: OptResult = minimize_without_prepare(obj, strategy, &x, &opts);
+        // reborrow per stage: each stage's Minimizer releases the
+        // strategy when it is consumed by `into_result`
+        let mut mm = match pending.take() {
+            Some(state) => Minimizer::adopt(&mut *strategy, state, &opts),
+            None => Minimizer::new_prepared(&*obj, &mut *strategy, &x, &opts),
+        };
+        match on_iter.as_deref_mut() {
+            Some(cb) => {
+                let stages_done = &stages;
+                mm.run_with(&*obj, &mut |m, st| {
+                    cb(&HomotopyProgress {
+                        stage: si,
+                        lambda: lam,
+                        global_iter: global_iter_base + st.iter,
+                        stats: st,
+                        elapsed_s: base_elapsed + start.elapsed().as_secs_f64(),
+                        minim: m,
+                        stages_done,
+                    });
+                });
+            }
+            None => {
+                mm.run(&*obj);
+            }
+        }
+        let res = mm.into_result();
+        global_iter_base += res.iters();
         stages.push(HomotopyStage {
             lambda: lam,
             iters: res.iters(),
@@ -92,41 +241,7 @@ pub fn homotopy<O: Objective>(
         });
         x = res.x;
     }
-    HomotopyResult { x, stages }
-}
-
-/// `minimize` but skipping `strategy.prepare` (already done for the whole
-/// path). Implemented by wrapping the strategy in a prepare-suppressing
-/// adapter.
-fn minimize_without_prepare(
-    obj: &dyn Objective,
-    strategy: &mut dyn DirectionStrategy,
-    x0: &Mat,
-    opts: &OptOptions,
-) -> OptResult {
-    struct NoPrep<'a>(&'a mut dyn DirectionStrategy);
-    impl<'a> DirectionStrategy for NoPrep<'a> {
-        fn name(&self) -> &'static str {
-            self.0.name()
-        }
-        fn prepare(&mut self, _obj: &dyn Objective, _x0: &Mat) -> anyhow::Result<()> {
-            Ok(()) // suppressed
-        }
-        fn direction(&mut self, obj: &dyn Objective, x: &Mat, g: &Mat, k: usize) -> Mat {
-            self.0.direction(obj, x, g, k)
-        }
-        fn notify_accept(&mut self, x_new: &Mat, g_new: &Mat, alpha: f64) {
-            self.0.notify_accept(x_new, g_new, alpha)
-        }
-        fn natural_step(&self) -> bool {
-            self.0.natural_step()
-        }
-        fn wants_wolfe(&self) -> bool {
-            self.0.wants_wolfe()
-        }
-    }
-    let mut np = NoPrep(strategy);
-    minimize(obj, &mut np, x0, opts)
+    Ok(HomotopyResult { x, stages })
 }
 
 #[cfg(test)]
@@ -195,5 +310,41 @@ mod tests {
             Some(Duration::from_millis(200)),
         );
         assert!(res.stages.len() <= 50);
+    }
+
+    #[test]
+    fn observer_sees_monotone_global_iterations() {
+        let n = 14;
+        let mut rng = Rng::new(12);
+        let y = Mat::from_fn(n, 3, |_, _| rng.normal());
+        let p = crate::affinity::sne_affinities(&y, 4.0);
+        let mut obj =
+            NativeObjective::with_affinities(Method::Ee, Attractive::Dense(p), 1.0, 2);
+        let x0 = Mat::from_fn(n, 2, |_, _| 1e-3 * rng.normal());
+        let lambdas = log_lambda_schedule(1e-3, 5.0, 4);
+        let mut sd = crate::opt::sd::SpectralDirection::new(None);
+        let opts = OptOptions { max_iters: 50, rel_tol: 1e-7, ..Default::default() };
+        let mut seen: Vec<(usize, usize)> = Vec::new();
+        let mut cb = |p: &HomotopyProgress<'_, '_>| {
+            seen.push((p.stage, p.global_iter));
+            // a state snapshot is available at every iteration
+            let st = p.state();
+            assert_eq!(st.stage, p.stage);
+            assert_eq!(st.stages.len(), p.stage);
+        };
+        let res = homotopy_resumable(
+            &mut obj,
+            &mut sd,
+            &x0,
+            &lambdas,
+            &opts,
+            None,
+            None,
+            Some(&mut cb),
+        )
+        .unwrap();
+        assert_eq!(seen.len(), res.total_iters());
+        assert!(seen.windows(2).all(|w| w[1].1 == w[0].1 + 1), "global iters not contiguous");
+        assert!(seen.windows(2).all(|w| w[1].0 >= w[0].0), "stages regressed");
     }
 }

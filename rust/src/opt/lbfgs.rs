@@ -8,7 +8,7 @@
 
 use std::collections::VecDeque;
 
-use super::DirectionStrategy;
+use super::{DirectionStrategy, StateReader, StateWriter};
 use crate::linalg::dense::Mat;
 use crate::linalg::vecops::{axpy, dot};
 use crate::objective::Objective;
@@ -84,6 +84,46 @@ impl DirectionStrategy for Lbfgs {
                 self.pairs.push_back((s, y, 1.0 / ys));
             }
         }
+    }
+
+    // The inverse-Hessian estimate *is* the (s, y, 1/y·s) memory: lose
+    // it across a checkpoint and the resumed run re-enters the "initial
+    // period of many iterations" the paper holds against L-BFGS. `prev`
+    // is intra-iteration scratch (set by `direction`, consumed by
+    // `notify_accept`) and is always None at checkpoint boundaries.
+    fn save_state(&self) -> Vec<u8> {
+        let mut w = StateWriter::new();
+        w.put_u64(self.pairs.len() as u64);
+        for (s, y, rho) in &self.pairs {
+            w.put_slice_f64(s);
+            w.put_slice_f64(y);
+            w.put_f64(*rho);
+        }
+        w.into_bytes()
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = StateReader::new(bytes);
+        // each pair is at least two length prefixes + rho = 24 bytes
+        let count = r.get_count(24, "l-bfgs pair table")?;
+        anyhow::ensure!(
+            count <= self.m,
+            "checkpoint carries {count} l-bfgs pairs but the memory is {}",
+            self.m
+        );
+        self.pairs.clear();
+        self.prev = None;
+        for _ in 0..count {
+            let s = r.get_slice_f64()?;
+            let y = r.get_slice_f64()?;
+            let rho = r.get_f64()?;
+            anyhow::ensure!(
+                s.len() == y.len() && rho.is_finite(),
+                "inconsistent l-bfgs pair in checkpoint"
+            );
+            self.pairs.push_back((s, y, rho));
+        }
+        r.finish()
     }
 }
 

@@ -14,6 +14,14 @@
 //! | L-BFGS   | rank-2m inverse-Hessian estimate    | [`lbfgs`] |
 //! | SD       | 4 L+ (x) I + mu I, cached Cholesky  | [`sd`] |
 //! | SD-      | 4 L+ + 8 lam Lxx_(i=j), inexact CG  | [`sdm`] |
+//!
+//! The training core is the [`Minimizer`] state machine: one call to
+//! [`Minimizer::step`] performs exactly one accepted iteration, and the
+//! whole optimizer state (`x`, `g`, `e`, counters, trace) is an
+//! inspectable, serializable value ([`MinimizerState`]) — which is what
+//! makes checkpoint/resume, streaming progress, and homotopy warm
+//! restarts possible without duplicating the loop. [`minimize`] survives
+//! as a thin run-to-completion driver over it.
 
 pub mod cg;
 pub mod diagh;
@@ -29,7 +37,7 @@ use std::time::{Duration, Instant};
 
 use crate::linalg::dense::Mat;
 use crate::linalg::vecops;
-use crate::objective::Objective;
+use crate::objective::{Method, Objective};
 
 /// Per-iteration record (the learning curves of figs. 1 and 4).
 #[derive(Clone, Debug)]
@@ -104,6 +112,174 @@ impl Default for OptOptions {
     }
 }
 
+// ---- strategy state serialization helpers ---------------------------
+
+/// Byte writer for [`DirectionStrategy::save_state`]: little-endian,
+/// length-prefixed, matching the model codec's conventions. Strategies
+/// serialize only *evolving* iteration state here (L-BFGS memory, CG's
+/// previous direction, SD⁻'s warm start); caches that are deterministic
+/// functions of the objective (SD's Cholesky factor, FP's degrees) are
+/// rebuilt by `prepare` on restore and must not be written.
+///
+/// Deliberate twin: `model/codec.rs` keeps a *private* writer/reader
+/// with the same primitives for the artifact containers. This pair is
+/// the public, strategy-facing half — out-of-crate
+/// [`DirectionStrategy`] implementors need it — and the two are kept
+/// separate so the on-disk container internals stay private; a format
+/// convention change must be applied to both.
+#[derive(Default)]
+pub struct StateWriter {
+    buf: Vec<u8>,
+}
+
+impl StateWriter {
+    pub fn new() -> Self {
+        StateWriter { buf: Vec::new() }
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed f64 slice (bitwise round-trip).
+    pub fn put_slice_f64(&mut self, s: &[f64]) {
+        self.put_u64(s.len() as u64);
+        for &v in s {
+            self.put_f64(v);
+        }
+    }
+
+    pub fn put_mat(&mut self, m: &Mat) {
+        self.put_u64(m.rows as u64);
+        self.put_u64(m.cols as u64);
+        for &v in &m.data {
+            self.put_f64(v);
+        }
+    }
+
+    pub fn put_opt_mat(&mut self, m: &Option<Mat>) {
+        match m {
+            Some(m) => {
+                self.put_u8(1);
+                self.put_mat(m);
+            }
+            None => self.put_u8(0),
+        }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked reader for [`DirectionStrategy::restore_state`].
+/// Every length is validated against the bytes actually remaining, so a
+/// corrupted (but checksum-valid) state errors descriptively instead of
+/// attempting an absurd allocation.
+pub struct StateReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> StateReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        StateReader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            n <= self.remaining(),
+            "truncated strategy state: wanted {n} bytes at offset {}, have {}",
+            self.pos,
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A declared element count, guarded against the bytes remaining
+    /// (`width` bytes per element).
+    pub fn get_count(&mut self, width: usize, what: &str) -> anyhow::Result<usize> {
+        let v = self.get_u64()?;
+        anyhow::ensure!(
+            v as usize <= self.remaining() / width.max(1),
+            "truncated strategy state: {what} declares {v} elements but only {} bytes remain",
+            self.remaining()
+        );
+        Ok(v as usize)
+    }
+
+    pub fn get_slice_f64(&mut self) -> anyhow::Result<Vec<f64>> {
+        let n = self.get_count(8, "f64 slice")?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_f64()?);
+        }
+        Ok(out)
+    }
+
+    pub fn get_mat(&mut self) -> anyhow::Result<Mat> {
+        let rows = self.get_u64()? as usize;
+        let cols = self.get_u64()? as usize;
+        let count = rows
+            .checked_mul(cols)
+            .ok_or_else(|| anyhow::anyhow!("matrix shape {rows}x{cols} overflows"))?;
+        anyhow::ensure!(
+            count <= self.remaining() / 8,
+            "truncated strategy state: matrix {rows}x{cols} but only {} bytes remain",
+            self.remaining()
+        );
+        let mut data = Vec::with_capacity(count);
+        for _ in 0..count {
+            data.push(self.get_f64()?);
+        }
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+
+    pub fn get_opt_mat(&mut self) -> anyhow::Result<Option<Mat>> {
+        Ok(match self.get_u8()? {
+            0 => None,
+            1 => Some(self.get_mat()?),
+            other => anyhow::bail!("bad option flag {other} in strategy state"),
+        })
+    }
+
+    /// All bytes must be consumed.
+    pub fn finish(self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.pos == self.buf.len(),
+            "trailing bytes in strategy state ({} unread)",
+            self.remaining()
+        );
+        Ok(())
+    }
+}
+
 /// A search-direction strategy (one row of the paper's comparison).
 pub trait DirectionStrategy: Send {
     fn name(&self) -> &'static str;
@@ -133,52 +309,327 @@ pub trait DirectionStrategy: Send {
     fn wants_wolfe(&self) -> bool {
         false
     }
+
+    /// Serialize the *evolving* iteration state for a checkpoint —
+    /// L-BFGS's (s, y, ρ) memory, CG's previous gradient/direction,
+    /// SD⁻'s warm start. Caches that `prepare` rebuilds deterministically
+    /// from the objective (SD's Cholesky factor, frozen at X0 semantics
+    /// included, since `build_system` never reads X) must NOT be written:
+    /// restore runs `prepare` first, then `restore_state`. Checkpoints
+    /// are only taken between accepted iterations, so intra-iteration
+    /// scratch (e.g. L-BFGS's pending `(x, g)` pair) is always empty.
+    /// Stateless strategies (GD, FP, DiagH, SD) keep the default.
+    fn save_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore what [`DirectionStrategy::save_state`] wrote. Called
+    /// after `prepare` on a freshly constructed strategy.
+    fn restore_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            bytes.is_empty(),
+            "strategy {} is stateless but the checkpoint carries {} state bytes",
+            self.name(),
+            bytes.len()
+        );
+        Ok(())
+    }
 }
 
-/// Run the optimizer loop: directions from `strategy`, steps from the
-/// line search, stats per iteration.
-pub fn minimize(
-    obj: &dyn Objective,
-    strategy: &mut dyn DirectionStrategy,
-    x0: &Mat,
-    opts: &OptOptions,
-) -> OptResult {
-    let start = Instant::now();
-    let mut x = x0.clone();
-    strategy.prepare(obj, &x).expect("strategy preparation failed");
-    let (mut e, mut g) = obj.eval(&x);
-    let mut nfev = 1usize;
-    let mut trace = vec![IterStats {
-        iter: 0,
-        time_s: start.elapsed().as_secs_f64(),
-        e,
-        grad_inf: vecops::nrm_inf(&g.data),
-        alpha: 0.0,
-        nfev,
-    }];
-    let mut prev_alpha = 1.0f64;
-    let mut stop = StopReason::MaxIters;
-    let mut flat_iters = 0usize;
+/// Outcome of one [`Minimizer::step`] call.
+#[derive(Clone, Debug)]
+pub enum StepOutcome {
+    /// One iteration was accepted; its stats (already appended to the
+    /// trace).
+    Stepped(IterStats),
+    /// The run is over — no iterate was produced by this call, and every
+    /// further call returns the same reason.
+    Done(StopReason),
+}
 
-    for k in 0..opts.max_iters {
-        if vecops::nrm_inf(&g.data) < opts.grad_tol {
-            stop = StopReason::GradTol;
-            break;
+/// Serializable snapshot of a [`Minimizer`] between iterations — the
+/// payload of a training checkpoint. `trace` is the full per-iteration
+/// history so a resumed run reports the same learning curve as an
+/// uninterrupted one; `elapsed_s` carries the wall clock across process
+/// boundaries for time budgets and trace timestamps.
+#[derive(Clone, Debug)]
+pub struct MinimizerState {
+    pub x: Mat,
+    pub g: Mat,
+    pub e: f64,
+    /// accepted iterations so far
+    pub k: usize,
+    pub prev_alpha: f64,
+    pub flat_iters: usize,
+    pub nfev: usize,
+    pub elapsed_s: f64,
+    pub trace: Vec<IterStats>,
+}
+
+impl MinimizerState {
+    /// Structural sanity against the problem the state will drive:
+    /// `n x d` shapes, trace aligned with the iteration counter, finite
+    /// scalars. Called by every resume path before adopting the state.
+    pub fn validate(&self, n: usize, d: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.x.rows == n && self.x.cols == d,
+            "checkpoint embedding is {}x{} but the problem is {}x{}",
+            self.x.rows,
+            self.x.cols,
+            n,
+            d
+        );
+        anyhow::ensure!(
+            self.g.rows == self.x.rows && self.g.cols == self.x.cols,
+            "checkpoint gradient shape {}x{} does not match the embedding",
+            self.g.rows,
+            self.g.cols
+        );
+        anyhow::ensure!(
+            self.trace.len() == self.k + 1,
+            "checkpoint trace has {} entries for iteration {}",
+            self.trace.len(),
+            self.k
+        );
+        anyhow::ensure!(
+            self.e.is_finite() && self.prev_alpha.is_finite() && self.prev_alpha > 0.0,
+            "checkpoint scalars out of range (e = {}, prev_alpha = {})",
+            self.e,
+            self.prev_alpha
+        );
+        anyhow::ensure!(
+            self.elapsed_s.is_finite() && self.elapsed_s >= 0.0,
+            "checkpoint elapsed time {} out of range",
+            self.elapsed_s
+        );
+        Ok(())
+    }
+}
+
+/// The resumable training core: owns the optimizer state and performs
+/// exactly one accepted iteration per [`Minimizer::step`] call. The
+/// objective is passed *into* each call (not stored) so drivers like
+/// homotopy can mutate it (`set_lambda`) between stages; pass the same
+/// objective for the whole run.
+///
+/// Lifecycle: [`Minimizer::new`] (prepares the strategy and evaluates
+/// the start point), `step` until [`StepOutcome::Done`], then
+/// [`Minimizer::into_result`]. [`Minimizer::state`] +
+/// [`Minimizer::strategy_state`] snapshot everything between steps;
+/// [`Minimizer::resume`] reconstructs the exact point of interruption —
+/// deterministic objectives make the continuation bitwise identical to
+/// the run that was never stopped.
+pub struct Minimizer<'s> {
+    strategy: &'s mut dyn DirectionStrategy,
+    opts: OptOptions,
+    x: Mat,
+    g: Mat,
+    e: f64,
+    k: usize,
+    prev_alpha: f64,
+    flat_iters: usize,
+    nfev: usize,
+    trace: Vec<IterStats>,
+    /// wall clock inherited from checkpointed sessions
+    base_time_s: f64,
+    start: Instant,
+    stop: Option<StopReason>,
+}
+
+impl<'s> Minimizer<'s> {
+    /// Fresh run: prepare the strategy at `x0` (SD factorizes here — a
+    /// failure is propagated, not a panic) and evaluate the start point.
+    pub fn new(
+        obj: &dyn Objective,
+        strategy: &'s mut dyn DirectionStrategy,
+        x0: &Mat,
+        opts: &OptOptions,
+    ) -> anyhow::Result<Self> {
+        // the clock starts before `prepare`, as the old loop's did: the
+        // setup cost is part of iteration 0's timestamp
+        let start = Instant::now();
+        strategy.prepare(obj, x0)?;
+        Ok(Self::fresh(obj, strategy, x0, opts, start))
+    }
+
+    /// Fresh run over an *already prepared* strategy — the homotopy
+    /// path, where SD's λ-independent factor is prepared once for the
+    /// whole λ schedule.
+    pub fn new_prepared(
+        obj: &dyn Objective,
+        strategy: &'s mut dyn DirectionStrategy,
+        x0: &Mat,
+        opts: &OptOptions,
+    ) -> Self {
+        Self::fresh(obj, strategy, x0, opts, Instant::now())
+    }
+
+    fn fresh(
+        obj: &dyn Objective,
+        strategy: &'s mut dyn DirectionStrategy,
+        x0: &Mat,
+        opts: &OptOptions,
+        start: Instant,
+    ) -> Self {
+        let x = x0.clone();
+        let (e, g) = obj.eval(&x);
+        let nfev = 1usize;
+        let trace = vec![IterStats {
+            iter: 0,
+            time_s: start.elapsed().as_secs_f64(),
+            e,
+            grad_inf: vecops::nrm_inf(&g.data),
+            alpha: 0.0,
+            nfev,
+        }];
+        Minimizer {
+            strategy,
+            opts: opts.clone(),
+            x,
+            g,
+            e,
+            k: 0,
+            prev_alpha: 1.0,
+            flat_iters: 0,
+            nfev,
+            trace,
+            base_time_s: 0.0,
+            start,
+            stop: None,
         }
-        if let Some(budget) = opts.time_budget {
-            if start.elapsed() >= budget {
-                stop = StopReason::TimeBudget;
-                break;
+    }
+
+    /// Resume from a checkpointed state: rebuild the strategy's
+    /// deterministic caches (`prepare`), restore its evolving state,
+    /// then adopt the snapshot. No objective evaluation happens — the
+    /// checkpointed `e`/`g` are trusted bitwise.
+    pub fn resume(
+        obj: &dyn Objective,
+        strategy: &'s mut dyn DirectionStrategy,
+        state: MinimizerState,
+        strategy_state: &[u8],
+        opts: &OptOptions,
+    ) -> anyhow::Result<Self> {
+        state.validate(obj.n(), obj.dim())?;
+        strategy.prepare(obj, &state.x)?;
+        strategy.restore_state(strategy_state)?;
+        Ok(Self::adopt(strategy, state, opts))
+    }
+
+    /// Adopt a snapshot without touching the strategy — for drivers
+    /// that manage `prepare`/`restore_state` themselves (homotopy).
+    pub fn adopt(
+        strategy: &'s mut dyn DirectionStrategy,
+        state: MinimizerState,
+        opts: &OptOptions,
+    ) -> Self {
+        Minimizer {
+            strategy,
+            opts: opts.clone(),
+            x: state.x,
+            g: state.g,
+            e: state.e,
+            k: state.k,
+            prev_alpha: state.prev_alpha,
+            flat_iters: state.flat_iters,
+            nfev: state.nfev,
+            trace: state.trace,
+            base_time_s: state.elapsed_s,
+            start: Instant::now(),
+            stop: None,
+        }
+    }
+
+    /// Current iterate.
+    pub fn x(&self) -> &Mat {
+        &self.x
+    }
+
+    /// Current energy.
+    pub fn e(&self) -> f64 {
+        self.e
+    }
+
+    /// Accepted iterations so far.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Full per-iteration trace (entry 0 is the start point).
+    pub fn trace(&self) -> &[IterStats] {
+        &self.trace
+    }
+
+    /// Stop reason, once the run is over.
+    pub fn stop_reason(&self) -> Option<&StopReason> {
+        self.stop.as_ref()
+    }
+
+    /// Wall clock including checkpointed sessions.
+    pub fn elapsed_s(&self) -> f64 {
+        self.base_time_s + self.start.elapsed().as_secs_f64()
+    }
+
+    /// Snapshot the optimizer state (pair with
+    /// [`Minimizer::strategy_state`] for a complete checkpoint).
+    pub fn state(&self) -> MinimizerState {
+        MinimizerState {
+            x: self.x.clone(),
+            g: self.g.clone(),
+            e: self.e,
+            k: self.k,
+            prev_alpha: self.prev_alpha,
+            flat_iters: self.flat_iters,
+            nfev: self.nfev,
+            elapsed_s: self.elapsed_s(),
+            trace: self.trace.clone(),
+        }
+    }
+
+    /// Snapshot the strategy's evolving state.
+    pub fn strategy_state(&self) -> Vec<u8> {
+        self.strategy.save_state()
+    }
+
+    /// Perform one accepted iteration (direction → line search →
+    /// accept → stats), or report why the run is over. Stop checks run
+    /// in the same order as the historical loop, so the state machine
+    /// reproduces `minimize`'s traces exactly.
+    pub fn step(&mut self, obj: &dyn Objective) -> StepOutcome {
+        if let Some(stop) = &self.stop {
+            return StepOutcome::Done(stop.clone());
+        }
+        // rel-tol patience is checked *after* the triggering iterate was
+        // recorded (deferred from the previous step), exactly like the
+        // old loop's post-push break; the `.max(1)` preserves its
+        // semantics at patience 0 (at least one sub-tol iteration)
+        if self.flat_iters >= self.opts.rel_tol_patience.max(1) {
+            return self.finish_with(StopReason::RelTol);
+        }
+        if self.k >= self.opts.max_iters {
+            return self.finish_with(StopReason::MaxIters);
+        }
+        if vecops::nrm_inf(&self.g.data) < self.opts.grad_tol {
+            return self.finish_with(StopReason::GradTol);
+        }
+        if let Some(budget) = self.opts.time_budget {
+            if self.elapsed_s() >= budget.as_secs_f64() {
+                return self.finish_with(StopReason::TimeBudget);
             }
         }
 
-        let mut p = strategy.direction(obj, &x, &g, k);
-        let mut gtp = vecops::dot(&g.data, &p.data);
-        let gn = vecops::nrm2(&g.data);
+        let k = self.k;
+        let mut p = self.strategy.direction(obj, &self.x, &self.g, k);
+        let mut gtp = vecops::dot(&self.g.data, &p.data);
+        let gn = vecops::nrm2(&self.g.data);
         let pn = vecops::nrm2(&p.data);
         if !(gtp < -1e-12 * gn * pn) {
             // not a descent direction (numerical trouble): steepest descent
-            p = Mat::from_vec(g.rows, g.cols, g.data.iter().map(|v| -v).collect());
+            p = Mat::from_vec(
+                self.g.rows,
+                self.g.cols,
+                self.g.data.iter().map(|v| -v).collect(),
+            );
             gtp = -gn * gn;
         }
 
@@ -191,76 +642,290 @@ pub fn minimize(
         // at most one extra backtrack and restores the step sizes the
         // paper reports (~0.1-1 for SD).
         let alpha0 = if k == 0 {
-            if strategy.natural_step() {
+            if self.strategy.natural_step() {
                 1.0
             } else {
                 // scale so the first GD trial moves O(1) distance
                 (1.0 / vecops::nrm_inf(&p.data).max(1e-12)).min(1.0)
             }
-        } else if opts.adaptive_step {
-            let cap = if strategy.natural_step() { 1.0 } else { f64::INFINITY };
-            (2.0 * prev_alpha).min(cap)
+        } else if self.opts.adaptive_step {
+            let cap = if self.strategy.natural_step() { 1.0 } else { f64::INFINITY };
+            (2.0 * self.prev_alpha).min(cap)
         } else {
             1.0
         };
 
-        let (alpha, e_new, g_new, used) = if strategy.wants_wolfe() {
-            let r = linesearch::strong_wolfe(obj, &x, &p, e, gtp, alpha0, opts.c1, 0.4, opts.ls_max_evals);
+        let (alpha, e_new, g_new, used) = if self.strategy.wants_wolfe() {
+            let r = linesearch::strong_wolfe(
+                obj,
+                &self.x,
+                &p,
+                self.e,
+                gtp,
+                alpha0,
+                self.opts.c1,
+                0.4,
+                self.opts.ls_max_evals,
+            );
             if !r.success {
-                stop = StopReason::LineSearchFailed;
-                break;
+                self.nfev += r.nfev;
+                return self.finish_with(StopReason::LineSearchFailed);
             }
             (r.alpha, r.e_new, r.g_new, r.nfev)
         } else {
-            let r = linesearch::backtracking(obj, &x, &p, e, gtp, alpha0, opts.c1, opts.ls_max_evals);
+            let r = linesearch::backtracking(
+                obj,
+                &self.x,
+                &p,
+                self.e,
+                gtp,
+                alpha0,
+                self.opts.c1,
+                self.opts.ls_max_evals,
+            );
             if !r.success {
-                stop = StopReason::LineSearchFailed;
-                break;
+                self.nfev += r.nfev;
+                return self.finish_with(StopReason::LineSearchFailed);
             }
             (r.alpha, r.e_new, None, r.nfev)
         };
-        nfev += used;
+        self.nfev += used;
 
         // accept
-        let mut x_new = Mat::zeros(x.rows, x.cols);
-        vecops::step(&x.data, alpha, &p.data, &mut x_new.data);
+        let mut x_new = Mat::zeros(self.x.rows, self.x.cols);
+        vecops::step(&self.x.data, alpha, &p.data, &mut x_new.data);
         let g_new = match g_new {
             Some(g) => g,
             None => {
-                nfev += 1;
+                self.nfev += 1;
                 obj.eval(&x_new).1
             }
         };
-        strategy.notify_accept(&x_new, &g_new, alpha);
+        self.strategy.notify_accept(&x_new, &g_new, alpha);
 
-        let rel = (e - e_new).abs() / e.abs().max(1e-300);
-        x = x_new;
-        g = g_new;
-        let e_prev = e;
-        e = e_new;
-        prev_alpha = alpha;
+        let rel = (self.e - e_new).abs() / self.e.abs().max(1e-300);
+        let e_prev = self.e;
+        self.x = x_new;
+        self.g = g_new;
+        self.e = e_new;
+        self.prev_alpha = alpha;
+        self.k = k + 1;
 
-        trace.push(IterStats {
+        let stats = IterStats {
             iter: k + 1,
-            time_s: start.elapsed().as_secs_f64(),
-            e,
-            grad_inf: vecops::nrm_inf(&g.data),
+            time_s: self.elapsed_s(),
+            e: self.e,
+            grad_inf: vecops::nrm_inf(&self.g.data),
             alpha,
-            nfev,
-        });
+            nfev: self.nfev,
+        };
+        self.trace.push(stats.clone());
 
-        if rel < opts.rel_tol && e_prev.is_finite() {
-            flat_iters += 1;
-            if flat_iters >= opts.rel_tol_patience {
-                stop = StopReason::RelTol;
-                break;
-            }
+        if rel < self.opts.rel_tol && e_prev.is_finite() {
+            self.flat_iters += 1;
         } else {
-            flat_iters = 0;
+            self.flat_iters = 0;
+        }
+        StepOutcome::Stepped(stats)
+    }
+
+    fn finish_with(&mut self, stop: StopReason) -> StepOutcome {
+        self.stop = Some(stop.clone());
+        StepOutcome::Done(stop)
+    }
+
+    /// Drive to completion.
+    pub fn run(&mut self, obj: &dyn Objective) -> StopReason {
+        loop {
+            if let StepOutcome::Done(stop) = self.step(obj) {
+                return stop;
+            }
         }
     }
 
-    OptResult { x, e, trace, stop }
+    /// Drive to completion, invoking `on_iter` after every accepted
+    /// iteration — the seam that feeds streaming progress and
+    /// checkpoint writers (the callback may snapshot
+    /// [`Minimizer::state`] at any point).
+    pub fn run_with(
+        &mut self,
+        obj: &dyn Objective,
+        on_iter: &mut dyn FnMut(&Minimizer<'_>, &IterStats),
+    ) -> StopReason {
+        loop {
+            match self.step(obj) {
+                StepOutcome::Stepped(stats) => on_iter(self, &stats),
+                StepOutcome::Done(stop) => return stop,
+            }
+        }
+    }
+
+    /// Final outcome (call after the run is done; an unfinished run
+    /// reports [`StopReason::MaxIters`] for backward compatibility).
+    pub fn into_result(self) -> OptResult {
+        OptResult {
+            x: self.x,
+            e: self.e,
+            trace: self.trace,
+            stop: self.stop.unwrap_or(StopReason::MaxIters),
+        }
+    }
+}
+
+/// Run the optimizer loop: directions from `strategy`, steps from the
+/// line search, stats per iteration. Errors (a failed SD factorization)
+/// are propagated so callers with a failure channel — the job runner —
+/// can report them instead of dying.
+pub fn try_minimize(
+    obj: &dyn Objective,
+    strategy: &mut dyn DirectionStrategy,
+    x0: &Mat,
+    opts: &OptOptions,
+) -> anyhow::Result<OptResult> {
+    let mut m = Minimizer::new(obj, strategy, x0, opts)?;
+    m.run(obj);
+    Ok(m.into_result())
+}
+
+/// [`try_minimize`] for callers without an error channel (the figure
+/// harnesses, benches): panics if strategy preparation fails.
+pub fn minimize(
+    obj: &dyn Objective,
+    strategy: &mut dyn DirectionStrategy,
+    x0: &Mat,
+    opts: &OptOptions,
+) -> OptResult {
+    try_minimize(obj, strategy, x0, opts).expect("strategy preparation failed")
+}
+
+// ---- checkpoint records ---------------------------------------------
+
+/// Identifies the training run a checkpoint belongs to. Resume refuses
+/// a checkpoint whose meta does not match the job it is applied to —
+/// the embedding, gradient and strategy caches are only meaningful for
+/// the exact same problem.
+#[derive(Clone, Debug)]
+pub struct CheckpointMeta {
+    /// job / run name (informational, not matched)
+    pub name: String,
+    pub strategy: String,
+    pub kappa: Option<usize>,
+    pub method: Method,
+    pub lambda: f64,
+    pub dim: usize,
+    /// number of points
+    pub n: usize,
+    /// canonical description of the gradient-engine selection (e.g.
+    /// the `EngineSpec` Debug form) — exact and Barnes–Hut gradients
+    /// differ numerically, so a resume on a different engine would
+    /// silently break the bitwise-continuation contract
+    pub engine: String,
+    /// objective backend ("native" / "xla") — same rationale
+    pub backend: String,
+    /// FNV-1a fingerprint of the attractive weights
+    /// ([`crate::model::codec::weights_fingerprint`])
+    pub weights_fp: u64,
+}
+
+impl CheckpointMeta {
+    /// Refuse to resume against a different problem. `name` is
+    /// informational; everything else must match exactly (λ bitwise —
+    /// resumed runs promise bitwise-identical continuations).
+    pub fn ensure_matches(&self, expected: &CheckpointMeta) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.strategy == expected.strategy && self.kappa == expected.kappa,
+            "checkpoint was taken with strategy {:?} (kappa {:?}) but the run uses {:?} (kappa {:?})",
+            self.strategy,
+            self.kappa,
+            expected.strategy,
+            expected.kappa
+        );
+        anyhow::ensure!(
+            self.method == expected.method,
+            "checkpoint method {:?} does not match the run's {:?}",
+            self.method,
+            expected.method
+        );
+        anyhow::ensure!(
+            self.lambda.to_bits() == expected.lambda.to_bits(),
+            "checkpoint lambda {} does not match the run's {}",
+            self.lambda,
+            expected.lambda
+        );
+        anyhow::ensure!(
+            self.dim == expected.dim && self.n == expected.n,
+            "checkpoint problem is {}x{} but the run is {}x{}",
+            self.n,
+            self.dim,
+            expected.n,
+            expected.dim
+        );
+        anyhow::ensure!(
+            self.engine == expected.engine && self.backend == expected.backend,
+            "checkpoint was taken on engine {:?} / backend {:?} but the run uses {:?} / {:?} \
+             (gradient paths differ numerically; resume with the same engine/backend)",
+            self.engine,
+            self.backend,
+            expected.engine,
+            expected.backend
+        );
+        anyhow::ensure!(
+            self.weights_fp == expected.weights_fp,
+            "checkpoint was trained on different affinities (fingerprint mismatch)"
+        );
+        Ok(())
+    }
+}
+
+/// What a checkpoint resumes into.
+#[derive(Clone, Debug)]
+pub enum CheckpointPayload {
+    /// A plain [`minimize`]-style run.
+    Minimize { state: MinimizerState, strategy_state: Vec<u8> },
+    /// A λ-homotopy run ([`homotopy::homotopy_resumable`]).
+    Homotopy(homotopy::HomotopyState),
+}
+
+/// A complete training checkpoint: run identity + optimizer snapshot.
+/// Serialized by [`crate::model::codec`] into the `NLEC` container
+/// (same magic/version/checksum machinery as model artifacts); a
+/// corrupted or mismatched file fails to load instead of silently
+/// corrupting a resumed run.
+#[derive(Clone, Debug)]
+pub struct TrainCheckpoint {
+    pub meta: CheckpointMeta,
+    pub payload: CheckpointPayload,
+}
+
+impl TrainCheckpoint {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        crate::model::codec::encode_checkpoint(self)
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Self> {
+        crate::model::codec::decode_checkpoint(bytes)
+    }
+
+    /// Write the checkpoint to disk (creating parent directories).
+    /// Write-then-rename so a crash mid-write never leaves a truncated
+    /// file where the last good checkpoint used to be.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let tmp = path.with_extension("nlec.tmp");
+        std::fs::write(&tmp, self.to_bytes())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        let bytes = std::fs::read(path.as_ref())?;
+        Self::from_bytes(&bytes)
+    }
 }
 
 /// Remove per-dimension (column) means in place. The embedding energies
@@ -356,3 +1021,154 @@ pub fn strategy_by_name_with(
 
 /// All strategy names in the paper's comparison order.
 pub const ALL_STRATEGIES: &[&str] = &["gd", "fp", "diagh", "cg", "lbfgs", "sd", "sdm"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::objective::native::NativeObjective;
+    use crate::objective::{Attractive, Method};
+
+    fn setup(n: usize, seed: u64) -> (NativeObjective, Mat) {
+        let mut rng = Rng::new(seed);
+        let y = Mat::from_fn(n, 4, |_, _| rng.normal());
+        let p = crate::affinity::sne_affinities(&y, (n as f64 / 4.0).max(2.0));
+        let obj = NativeObjective::with_affinities(Method::Ee, Attractive::Dense(p), 10.0, 2);
+        let x = Mat::from_fn(n, 2, |_, _| 0.1 * rng.normal());
+        (obj, x)
+    }
+
+    #[test]
+    fn stepper_reproduces_minimize_exactly() {
+        // the state machine and the run-to-completion wrapper must be
+        // the same loop: identical trace, identical iterate bits
+        let (obj, x0) = setup(18, 1);
+        let opts = OptOptions { max_iters: 25, ..Default::default() };
+        let mut s1 = sd::SpectralDirection::new(None);
+        let r1 = minimize(&obj, &mut s1, &x0, &opts);
+        let mut s2 = sd::SpectralDirection::new(None);
+        let mut mm = Minimizer::new(&obj, &mut s2, &x0, &opts).unwrap();
+        let mut stepped = 0;
+        loop {
+            match mm.step(&obj) {
+                StepOutcome::Stepped(_) => stepped += 1,
+                StepOutcome::Done(stop) => {
+                    assert_eq!(stop, r1.stop);
+                    break;
+                }
+            }
+        }
+        let r2 = mm.into_result();
+        assert_eq!(stepped, r1.iters());
+        assert_eq!(r1.trace.len(), r2.trace.len());
+        for (a, b) in r1.trace.iter().zip(&r2.trace) {
+            assert_eq!(a.iter, b.iter);
+            assert_eq!(a.e.to_bits(), b.e.to_bits());
+            assert_eq!(a.alpha.to_bits(), b.alpha.to_bits());
+            assert_eq!(a.nfev, b.nfev);
+        }
+        for (a, b) in r1.x.data.iter().zip(&r2.x.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn step_after_done_keeps_reporting_done() {
+        let (obj, x0) = setup(12, 2);
+        let opts = OptOptions { max_iters: 3, ..Default::default() };
+        let mut s = gd::GradientDescent::new();
+        let mut mm = Minimizer::new(&obj, &mut s, &x0, &opts).unwrap();
+        let stop = mm.run(&obj);
+        for _ in 0..3 {
+            match mm.step(&obj) {
+                StepOutcome::Done(s2) => assert_eq!(s2, stop),
+                StepOutcome::Stepped(_) => panic!("stepped after done"),
+            }
+        }
+    }
+
+    #[test]
+    fn run_with_observes_every_iteration() {
+        let (obj, x0) = setup(14, 3);
+        let opts = OptOptions { max_iters: 8, ..Default::default() };
+        let mut s = fp::FixedPoint::new();
+        let mut mm = Minimizer::new(&obj, &mut s, &x0, &opts).unwrap();
+        let mut seen = Vec::new();
+        mm.run_with(&obj, &mut |m, st| {
+            assert_eq!(m.k(), st.iter);
+            seen.push(st.iter);
+        });
+        let res = mm.into_result();
+        assert_eq!(seen.len(), res.iters());
+        assert!(seen.windows(2).all(|w| w[1] == w[0] + 1));
+    }
+
+    #[test]
+    fn try_minimize_propagates_prepare_errors() {
+        struct FailingPrep;
+        impl DirectionStrategy for FailingPrep {
+            fn name(&self) -> &'static str {
+                "failing"
+            }
+            fn prepare(&mut self, _obj: &dyn Objective, _x0: &Mat) -> anyhow::Result<()> {
+                anyhow::bail!("synthetic factorization failure")
+            }
+            fn direction(&mut self, _o: &dyn Objective, _x: &Mat, g: &Mat, _k: usize) -> Mat {
+                g.clone()
+            }
+        }
+        let (obj, x0) = setup(10, 4);
+        let err = try_minimize(&obj, &mut FailingPrep, &x0, &OptOptions::default());
+        assert!(err.is_err());
+        assert!(format!("{}", err.unwrap_err()).contains("synthetic"));
+    }
+
+    #[test]
+    fn state_snapshot_is_internally_consistent() {
+        let (obj, x0) = setup(12, 5);
+        let opts = OptOptions { max_iters: 6, ..Default::default() };
+        let mut s = fp::FixedPoint::new();
+        let mut mm = Minimizer::new(&obj, &mut s, &x0, &opts).unwrap();
+        for _ in 0..4 {
+            if let StepOutcome::Done(_) = mm.step(&obj) {
+                break;
+            }
+        }
+        let st = mm.state();
+        st.validate(obj.n(), 2).unwrap();
+        assert_eq!(st.k, mm.k());
+        assert_eq!(st.trace.len(), st.k + 1);
+        // a mismatched problem is rejected
+        assert!(st.validate(obj.n() + 1, 2).is_err());
+    }
+
+    #[test]
+    fn state_writer_reader_roundtrip() {
+        let mut w = StateWriter::new();
+        w.put_u8(7);
+        w.put_u64(1 << 40);
+        w.put_f64(-0.0);
+        w.put_slice_f64(&[1.5, f64::MIN_POSITIVE, -3.25]);
+        w.put_mat(&Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]));
+        w.put_opt_mat(&None);
+        w.put_opt_mat(&Some(Mat::from_vec(1, 3, vec![9.0, 8.0, 7.0])));
+        let bytes = w.into_bytes();
+        let mut r = StateReader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u64().unwrap(), 1 << 40);
+        assert_eq!(r.get_f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.get_slice_f64().unwrap(), vec![1.5, f64::MIN_POSITIVE, -3.25]);
+        assert_eq!(r.get_mat().unwrap().data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.get_opt_mat().unwrap().is_none());
+        assert_eq!(r.get_opt_mat().unwrap().unwrap().data, vec![9.0, 8.0, 7.0]);
+        r.finish().unwrap();
+        // truncation is a descriptive error, not a panic
+        let mut r = StateReader::new(&bytes[..4]);
+        assert!(r.get_u64().is_err());
+        // trailing garbage is rejected
+        let mut extended = bytes.clone();
+        extended.push(0);
+        let r = StateReader::new(&extended);
+        assert!(r.finish().is_err());
+    }
+}

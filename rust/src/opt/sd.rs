@@ -110,6 +110,14 @@ impl SpectralDirection {
     }
 }
 
+// Checkpoint note: SD deliberately keeps the default (empty)
+// `save_state`/`restore_state`. Its entire cache — Cholesky factor, RCM
+// permutation, component labels — is a deterministic function of the
+// objective's attractive weights alone (`build_system` never reads X:
+// for t-SNE the factor is frozen at X = 0, section 3.2), so a resumed
+// run rebuilds it bit-identically by re-running `prepare`. Serializing
+// the factor would only bloat checkpoints and create a second source of
+// truth that could drift from the weights.
 impl DirectionStrategy for SpectralDirection {
     fn name(&self) -> &'static str {
         "sd"

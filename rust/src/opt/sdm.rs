@@ -16,7 +16,7 @@
 
 use std::sync::Arc;
 
-use super::DirectionStrategy;
+use super::{DirectionStrategy, StateReader, StateWriter};
 use crate::affinity::knn::KnnGraph;
 use crate::affinity::{sparsify_from_graph, sparsify_weights};
 use crate::graph::laplacian_sparse;
@@ -208,6 +208,24 @@ impl DirectionStrategy for SdMinus {
         super::center_columns(&mut p);
         self.warm = Some(p.clone());
         p
+    }
+
+    // `base` (4 L+ + mu I) is rebuilt deterministically by `prepare` on
+    // restore; only the CG warm start — which seeds every inexact solve
+    // and therefore shapes every subsequent direction — plus the
+    // diagnostic counter cross the checkpoint boundary.
+    fn save_state(&self) -> Vec<u8> {
+        let mut w = StateWriter::new();
+        w.put_opt_mat(&self.warm);
+        w.put_u64(self.inner_iters as u64);
+        w.into_bytes()
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = StateReader::new(bytes);
+        self.warm = r.get_opt_mat()?;
+        self.inner_iters = r.get_u64()? as usize;
+        r.finish()
     }
 }
 

@@ -1,0 +1,292 @@
+//! Resume-equivalence tests: the PR 4 contract is that a run
+//! interrupted at *any* iteration and resumed from its checkpoint
+//! produces a bitwise-identical final embedding and an identical
+//! per-iteration trace (times excluded — wall clocks are not
+//! reproducible) versus the run that was never interrupted. Checked
+//! for every strategy in `ALL_STRATEGIES`, for the λ-homotopy driver,
+//! and through the full encode→decode cycle of the NLEC record so the
+//! codec itself is inside the loop being verified.
+
+use nle::opt::homotopy::{homotopy_resumable, log_lambda_schedule, HomotopyState};
+use nle::opt::{self, ALL_STRATEGIES};
+use nle::prelude::*;
+
+fn setup(n: usize, seed: u64) -> (NativeObjective, Mat) {
+    let mut rng = nle::data::Rng::new(seed);
+    let y = Mat::from_fn(n, 4, |_, _| rng.normal());
+    let p = nle::affinity::sne_affinities(&y, (n as f64 / 4.0).max(2.0));
+    let obj = NativeObjective::with_affinities(Method::Ee, Attractive::Dense(p), 10.0, 2);
+    let x0 = Mat::from_fn(n, 2, |_, _| 0.1 * rng.normal());
+    (obj, x0)
+}
+
+fn meta_for(obj: &NativeObjective, strategy: &str, n: usize) -> CheckpointMeta {
+    CheckpointMeta {
+        name: format!("test-{strategy}"),
+        strategy: strategy.to_string(),
+        kappa: None,
+        method: obj.method(),
+        lambda: obj.lambda(),
+        dim: 2,
+        n,
+        engine: obj.engine_name().to_string(),
+        backend: "native".to_string(),
+        weights_fp: nle::model::codec::weights_fingerprint(obj.attractive()),
+    }
+}
+
+/// Compare everything but wall-clock times.
+fn assert_traces_identical(a: &[IterStats], b: &[IterStats], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: trace lengths differ");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.iter, y.iter, "{what}");
+        assert_eq!(x.e.to_bits(), y.e.to_bits(), "{what}: E diverged at iter {}", x.iter);
+        assert_eq!(
+            x.grad_inf.to_bits(),
+            y.grad_inf.to_bits(),
+            "{what}: |g| diverged at iter {}",
+            x.iter
+        );
+        assert_eq!(
+            x.alpha.to_bits(),
+            y.alpha.to_bits(),
+            "{what}: alpha diverged at iter {}",
+            x.iter
+        );
+        assert_eq!(x.nfev, y.nfev, "{what}: nfev diverged at iter {}", x.iter);
+    }
+}
+
+fn assert_bitwise_equal(a: &Mat, b: &Mat, what: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shapes differ");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: embedding bit-diverged at entry {i}");
+    }
+}
+
+#[test]
+fn every_strategy_resumes_bitwise_identically() {
+    for &name in ALL_STRATEGIES {
+        let n = 22;
+        let (obj, x0) = setup(n, 3);
+        let opts = OptOptions {
+            max_iters: 30,
+            rel_tol: 1e-13,
+            grad_tol: 1e-12,
+            ..Default::default()
+        };
+        // the run that is never interrupted
+        let mut s_full = opt::strategy_by_name(name, None).unwrap();
+        let full = opt::try_minimize(&obj, s_full.as_mut(), &x0, &opts).unwrap();
+        assert!(full.iters() > 6, "{name}: test needs a run longer than the checkpoint point");
+
+        // the same run, checkpointed after 6 iterations...
+        let mut s_part = opt::strategy_by_name(name, None).unwrap();
+        let mut mm = Minimizer::new(&obj, s_part.as_mut(), &x0, &opts).unwrap();
+        for _ in 0..6 {
+            match mm.step(&obj) {
+                StepOutcome::Stepped(_) => {}
+                StepOutcome::Done(stop) => panic!("{name}: stopped early at {stop:?}"),
+            }
+        }
+        let ck = TrainCheckpoint {
+            meta: meta_for(&obj, name, n),
+            payload: CheckpointPayload::Minimize {
+                state: mm.state(),
+                strategy_state: mm.strategy_state(),
+            },
+        };
+        // ...serialized, deserialized...
+        let bytes = ck.to_bytes();
+        drop(mm);
+        let back = TrainCheckpoint::from_bytes(&bytes).unwrap();
+        back.meta.ensure_matches(&meta_for(&obj, name, n)).unwrap();
+        let CheckpointPayload::Minimize { state, strategy_state } = back.payload else {
+            panic!("{name}: payload kind changed in roundtrip")
+        };
+        // ...and resumed on a freshly constructed strategy
+        let mut s_res = opt::strategy_by_name(name, None).unwrap();
+        let mut mm2 = Minimizer::resume(&obj, s_res.as_mut(), state, &strategy_state, &opts)
+            .unwrap();
+        mm2.run(&obj);
+        let resumed = mm2.into_result();
+
+        assert_eq!(resumed.stop, full.stop, "{name}");
+        assert_bitwise_equal(&resumed.x, &full.x, name);
+        assert_traces_identical(&resumed.trace, &full.trace, name);
+    }
+}
+
+#[test]
+fn homotopy_resumes_bitwise_identically() {
+    // one cache-only strategy (SD: Cholesky rebuilt on restore) and one
+    // with evolving memory crossing both checkpoint AND stage
+    // boundaries (L-BFGS)
+    for &name in &["sd", "lbfgs"] {
+        let n = 18;
+        let mut rng = nle::data::Rng::new(7);
+        let y = Mat::from_fn(n, 4, |_, _| rng.normal());
+        let p = nle::affinity::sne_affinities(&y, 5.0);
+        let x0 = Mat::from_fn(n, 2, |_, _| 1e-3 * rng.normal());
+        let lambdas = log_lambda_schedule(1e-3, 10.0, 6);
+        let opts = OptOptions { max_iters: 40, rel_tol: 1e-9, ..Default::default() };
+        let mk_obj =
+            || NativeObjective::with_affinities(Method::Ee, Attractive::Dense(p.clone()), 1.0, 2);
+
+        let mut obj = mk_obj();
+        let mut s_full = opt::strategy_by_name(name, None).unwrap();
+        let full = homotopy_resumable(
+            &mut obj,
+            s_full.as_mut(),
+            &x0,
+            &lambdas,
+            &opts,
+            None,
+            None,
+            None,
+        )
+        .unwrap();
+        let total = full.total_iters();
+        assert!(total > 10, "{name}: homotopy too short ({total} iters) to interrupt");
+
+        // capture a mid-path snapshot (global iteration 9 lands inside
+        // some stage > 0 for these schedules), round-trip it through
+        // the NLEC record, then resume from it
+        let mut obj2 = mk_obj();
+        let mut s_cap = opt::strategy_by_name(name, None).unwrap();
+        let mut snap: Option<HomotopyState> = None;
+        let mut cb = |pr: &nle::opt::homotopy::HomotopyProgress<'_, '_>| {
+            if snap.is_none() && pr.global_iter == 9 {
+                snap = Some(pr.state());
+            }
+        };
+        homotopy_resumable(
+            &mut obj2,
+            s_cap.as_mut(),
+            &x0,
+            &lambdas,
+            &opts,
+            None,
+            None,
+            Some(&mut cb),
+        )
+        .unwrap();
+        let snap = snap.expect("snapshot at global iteration 9");
+        let ck = TrainCheckpoint {
+            meta: meta_for(&mk_obj(), name, n),
+            payload: CheckpointPayload::Homotopy(snap),
+        };
+        let back = TrainCheckpoint::from_bytes(&ck.to_bytes()).unwrap();
+        let CheckpointPayload::Homotopy(state) = back.payload else {
+            panic!("{name}: payload kind changed in roundtrip")
+        };
+
+        let mut obj3 = mk_obj();
+        let mut s_res = opt::strategy_by_name(name, None).unwrap();
+        let resumed = homotopy_resumable(
+            &mut obj3,
+            s_res.as_mut(),
+            &x0,
+            &lambdas,
+            &opts,
+            None,
+            Some(state),
+            None,
+        )
+        .unwrap();
+
+        assert_bitwise_equal(&resumed.x, &full.x, name);
+        assert_eq!(resumed.stages.len(), full.stages.len(), "{name}");
+        for (a, b) in resumed.stages.iter().zip(&full.stages) {
+            assert_eq!(a.lambda.to_bits(), b.lambda.to_bits(), "{name}");
+            assert_eq!(a.iters, b.iters, "{name}: stage iteration counts differ");
+            assert_eq!(a.e.to_bits(), b.e.to_bits(), "{name}: stage energies differ");
+            assert_eq!(a.nfev, b.nfev, "{name}: stage nfev differ");
+            assert_eq!(a.stop, b.stop, "{name}");
+        }
+    }
+}
+
+#[test]
+fn checkpoint_corruption_is_rejected() {
+    let n = 16;
+    let (obj, x0) = setup(n, 5);
+    let opts = OptOptions { max_iters: 10, ..Default::default() };
+    let mut s = opt::strategy_by_name("lbfgs", None).unwrap();
+    let mut mm = Minimizer::new(&obj, s.as_mut(), &x0, &opts).unwrap();
+    for _ in 0..4 {
+        let _ = mm.step(&obj);
+    }
+    let ck = TrainCheckpoint {
+        meta: meta_for(&obj, "lbfgs", n),
+        payload: CheckpointPayload::Minimize {
+            state: mm.state(),
+            strategy_state: mm.strategy_state(),
+        },
+    };
+    let bytes = ck.to_bytes();
+    // pristine record loads
+    assert!(TrainCheckpoint::from_bytes(&bytes).is_ok());
+    // bad magic
+    let mut bad = bytes.clone();
+    bad[0] = b'X';
+    assert!(TrainCheckpoint::from_bytes(&bad).is_err());
+    // a model record is not a checkpoint
+    assert!(TrainCheckpoint::from_bytes(b"NLEM\x01\x00\x00\x00").is_err());
+    // unknown version
+    let mut bad = bytes.clone();
+    bad[4] = 0x7F;
+    assert!(TrainCheckpoint::from_bytes(&bad).is_err());
+    // truncation at every framing boundary and mid-payload
+    for cut in [0, 3, 7, 15, bytes.len() / 3, bytes.len() - 1] {
+        assert!(TrainCheckpoint::from_bytes(&bytes[..cut]).is_err(), "cut {cut} must fail");
+    }
+    // every single flipped payload byte is caught by the checksum
+    for off in (16..bytes.len() - 8).step_by(97) {
+        let mut bad = bytes.clone();
+        bad[off] ^= 0x10;
+        assert!(TrainCheckpoint::from_bytes(&bad).is_err(), "flip at {off} must fail");
+    }
+    // trailing garbage
+    let mut bad = bytes.clone();
+    bad.push(1);
+    assert!(TrainCheckpoint::from_bytes(&bad).is_err());
+}
+
+#[test]
+fn resume_refuses_wrong_problem() {
+    let n = 16;
+    let (obj, x0) = setup(n, 6);
+    let opts = OptOptions { max_iters: 10, ..Default::default() };
+    let mut s = opt::strategy_by_name("sd", None).unwrap();
+    let mut mm = Minimizer::new(&obj, s.as_mut(), &x0, &opts).unwrap();
+    for _ in 0..3 {
+        let _ = mm.step(&obj);
+    }
+    let meta = meta_for(&obj, "sd", n);
+    // strategy mismatch
+    let mut other = meta.clone();
+    other.strategy = "gd".into();
+    assert!(meta.ensure_matches(&other).is_err());
+    // lambda mismatch (bitwise)
+    let mut other = meta.clone();
+    other.lambda = meta.lambda + 1e-12;
+    assert!(meta.ensure_matches(&other).is_err());
+    // weights mismatch
+    let mut other = meta.clone();
+    other.weights_fp ^= 1;
+    assert!(meta.ensure_matches(&other).is_err());
+    // engine / backend mismatch (exact vs Barnes–Hut gradients differ
+    // numerically, so a resume across engines must be refused)
+    let mut other = meta.clone();
+    other.engine = "BarnesHut { theta: 0.5 }".into();
+    assert!(meta.ensure_matches(&other).is_err());
+    let mut other = meta.clone();
+    other.backend = "xla".into();
+    assert!(meta.ensure_matches(&other).is_err());
+    // size mismatch is caught by state validation too
+    let state = mm.state();
+    assert!(state.validate(n + 1, 2).is_err());
+    assert!(state.validate(n, 3).is_err());
+    assert!(state.validate(n, 2).is_ok());
+}
