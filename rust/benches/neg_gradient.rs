@@ -1,0 +1,32 @@
+//! Stochastic-gradient engine bench: the negative-sampling estimator's
+//! O(nnz + Nk) per-eval cost vs exact O(N^2 d) and Barnes-Hut
+//! O(N log N + nnz) — the regime where even the tree build dominates
+//! and sampling wins.
+//!
+//! Delegates to the `scal` harness (bench_harness/scalability.rs) so
+//! there is exactly one implementation of the comparison protocol
+//! (workload, warmup, error metric); this target sweeps k per row at a
+//! single Barnes-Hut reference theta for EE and t-SNE. Full sweeps +
+//! CSV/JSON output: `cargo run --release -- scal`.
+
+use nle::bench_harness::scalability::{run, ScalConfig};
+use nle::objective::Method;
+
+fn main() {
+    for method in [Method::Ee, Method::Tsne] {
+        let lambda = if method == Method::Ee { 100.0 } else { 1.0 };
+        run(&ScalConfig {
+            sizes: vec![4_096, 16_384, 65_536],
+            thetas: vec![0.5], // one BH reference point per N
+            neg_ks: vec![16, 64, 256],
+            method,
+            lambda,
+            reps: 3,
+            sd_iters: 0, // engine timing only; the SD demo lives in `scal`
+            csv_name: format!("neg_gradient_{}.csv", method.name()),
+            json_name: Some(format!("BENCH_neg_gradient_{}.json", method.name())),
+            ..Default::default()
+        })
+        .expect("scalability harness failed");
+    }
+}

@@ -1,13 +1,20 @@
 //! Engine scalability figure (the refactor's headline): exact vs
-//! Barnes–Hut wall-clock per (E, ∇E) evaluation and relative gradient
-//! error, swept across N and θ on a kNN-sparse swiss-roll workload —
-//! the large-N regime of paper section 3.2 that the exact O(N²d) engine
-//! cannot reach. Also demonstrates the spectral direction end-to-end on
-//! the Barnes–Hut engine (sparse-Laplacian Cholesky; no N×N dense
-//! matrix is ever materialized).
+//! Barnes–Hut vs negative-sampling wall-clock per (E, ∇E) evaluation
+//! and relative gradient error, swept across N and the engine parameter
+//! (θ for Barnes–Hut, k negatives per row for the sampler) on a
+//! kNN-sparse swiss-roll workload — the large-N regime of paper
+//! section 3.2 that the exact O(N²d) engine cannot reach. Also
+//! demonstrates the spectral direction end-to-end on the Barnes–Hut
+//! engine (sparse-Laplacian Cholesky; no N×N dense matrix is ever
+//! materialized).
 //!
 //! Output: `results/scalability.csv` (long format: one row per
-//! (N, engine, θ)) and a printed summary table.
+//! (N, engine, param)) plus `results/BENCH_scal.json`, a
+//! machine-readable per-gradient-eval wall-clock summary the CI
+//! perf-smoke job uploads as a build artifact. Note the neg rows'
+//! `grad_rel_err` is a *stochastic* deviation from the exact gradient
+//! (it shrinks like 1/√k), not a deterministic approximation error
+//! like the Barnes–Hut rows'.
 
 use std::io::Write;
 use std::time::Instant;
@@ -22,6 +29,12 @@ use crate::opt::{minimize, OptOptions};
 pub struct ScalConfig {
     pub sizes: Vec<usize>,
     pub thetas: Vec<f64>,
+    /// Negatives-per-row sweep for the stochastic engine (empty = skip
+    /// the neg rows entirely).
+    pub neg_ks: Vec<usize>,
+    /// Sampler seed for the neg rows (timing is seed-independent; the
+    /// seed only pins the reported stochastic gradient error).
+    pub neg_seed: u64,
     pub method: Method,
     pub lambda: f64,
     pub perplexity: f64,
@@ -40,6 +53,8 @@ pub struct ScalConfig {
     /// one process (benches/bh_gradient.rs, one per method) pass
     /// distinct names — each `run` truncates its own file.
     pub csv_name: String,
+    /// Machine-readable summary under results/ (None to skip).
+    pub json_name: Option<String>,
 }
 
 impl Default for ScalConfig {
@@ -47,6 +62,8 @@ impl Default for ScalConfig {
         ScalConfig {
             sizes: vec![2_000, 5_000, 10_000, 20_000],
             thetas: vec![0.2, 0.5, 0.8],
+            neg_ks: vec![crate::objective::engine::DEFAULT_NEG_K],
+            neg_seed: crate::objective::engine::DEFAULT_NEG_SEED,
             method: Method::Ee,
             lambda: 100.0,
             perplexity: 20.0,
@@ -55,6 +72,7 @@ impl Default for ScalConfig {
             reps: 3,
             sd_iters: 5,
             csv_name: "scalability.csv".to_string(),
+            json_name: Some("BENCH_scal.json".to_string()),
         }
     }
 }
@@ -69,27 +87,42 @@ fn time_avg(reps: usize, mut f: impl FnMut()) -> f64 {
     t0.elapsed().as_secs_f64() / reps.max(1) as f64
 }
 
+/// One swept configuration, kept for the JSON summary.
+struct Row {
+    n: usize,
+    engine: &'static str,
+    /// engine parameter: θ for bh, k for neg, None for exact.
+    param: Option<f64>,
+    affinity_s: f64,
+    eval_s: f64,
+    speedup: f64,
+    grad_rel_err: f64,
+    energy_rel_err: f64,
+}
+
 pub fn run(cfg: &ScalConfig) -> anyhow::Result<()> {
     let dir = results_dir();
     let path = dir.join(&cfg.csv_name);
     let mut file = std::fs::File::create(&path)?;
     writeln!(
         file,
-        "method,n,engine,theta,affinity_s,eval_s,total_s,speedup,grad_rel_err,energy_rel_err"
+        "method,n,engine,param,affinity_s,eval_s,total_s,speedup,grad_rel_err,energy_rel_err"
     )?;
     println!(
-        "scalability [{}]: sizes {:?}, thetas {:?}, k = {}, index = {}",
+        "scalability [{}]: sizes {:?}, thetas {:?}, neg k {:?}, k = {}, index = {}",
         cfg.method.name(),
         cfg.sizes,
         cfg.thetas,
+        cfg.neg_ks,
         cfg.knn,
         cfg.index.name()
     );
     println!(
         "  {:>7} {:>11} {:>6} {:>12} {:>12} {:>9} {:>13} {:>13}",
-        "N", "engine", "theta", "affinity (s)", "eval (s)", "speedup", "grad relerr", "E relerr"
+        "N", "engine", "param", "affinity (s)", "eval (s)", "speedup", "grad relerr", "E relerr"
     );
 
+    let mut rows: Vec<Row> = Vec::new();
     let n_max = cfg.sizes.iter().max().copied();
     let mut sd_done = false;
     for &n in &cfg.sizes {
@@ -138,6 +171,16 @@ pub fn run(cfg: &ScalConfig) -> anyhow::Result<()> {
             "  {n:>7} {:>11} {:>6} {aff_exact:>12.4} {t_exact:>12.4} {:>9} {:>13} {:>13}",
             "exact", "-", "1.0x", "-", "-"
         );
+        rows.push(Row {
+            n,
+            engine: "exact",
+            param: None,
+            affinity_s: aff_exact,
+            eval_s: t_exact,
+            speedup: 1.0,
+            grad_rel_err: 0.0,
+            energy_rel_err: 0.0,
+        });
 
         for &theta in &cfg.thetas {
             let bh = NativeObjective::with_engine(
@@ -164,6 +207,56 @@ pub fn run(cfg: &ScalConfig) -> anyhow::Result<()> {
                 "  {n:>7} {:>11} {theta:>6.2} {aff_index:>12.4} {t_bh:>12.4} {:>8.1}x {gerr:>13.3e} {eerr:>13.3e}",
                 "barnes-hut", speedup
             );
+            rows.push(Row {
+                n,
+                engine: "bh",
+                param: Some(theta),
+                affinity_s: aff_index,
+                eval_s: t_bh,
+                speedup,
+                grad_rel_err: gerr,
+                energy_rel_err: eerr,
+            });
+        }
+
+        for &neg_k in &cfg.neg_ks {
+            let neg = NativeObjective::with_engine(
+                cfg.method,
+                Attractive::Sparse(p.clone()),
+                cfg.lambda,
+                2,
+                EngineSpec::NegSample { k: neg_k, seed: cfg.neg_seed },
+            );
+            // the first eval fixes the epoch whose draws we report the
+            // stochastic error for; timing reps advance epochs but the
+            // per-eval cost is epoch-independent
+            let (e_neg, g_neg) = neg.eval(&x);
+            let t_neg = time_avg(cfg.reps, || {
+                let _ = neg.eval(&x);
+            });
+            let gerr = g_neg.rel_fro_err(&g_ref);
+            let eerr = (e_neg - e_ref).abs() / e_ref.abs().max(1e-300);
+            let speedup = t_exact / t_neg.max(1e-12);
+            writeln!(
+                file,
+                "{},{n},neg,{neg_k},{aff_index:.6e},{t_neg:.6e},{:.6e},{speedup:.3},{gerr:.6e},{eerr:.6e}",
+                cfg.method.name(),
+                aff_index + t_neg
+            )?;
+            println!(
+                "  {n:>7} {:>11} {neg_k:>6} {aff_index:>12.4} {t_neg:>12.4} {:>8.1}x {gerr:>13.3e} {eerr:>13.3e}",
+                "neg-sample", speedup
+            );
+            rows.push(Row {
+                n,
+                engine: "neg",
+                param: Some(neg_k as f64),
+                affinity_s: aff_index,
+                eval_s: t_neg,
+                speedup,
+                grad_rel_err: gerr,
+                energy_rel_err: eerr,
+            });
         }
 
         // spectral direction end-to-end on the BH engine at the largest
@@ -202,6 +295,37 @@ pub fn run(cfg: &ScalConfig) -> anyhow::Result<()> {
         }
     }
     println!("scalability: wrote {}", path.display());
+
+    if let Some(json_name) = &cfg.json_name {
+        let jpath = dir.join(json_name);
+        let jrows: Vec<String> = rows
+            .iter()
+            .map(|r| {
+                let param =
+                    r.param.map_or_else(|| "null".to_string(), |p| format!("{p}"));
+                format!(
+                    "    {{\"n\": {}, \"engine\": \"{}\", \"param\": {param}, \
+                     \"affinity_s\": {:.6e}, \"eval_s\": {:.6e}, \"speedup\": {:.3}, \
+                     \"grad_rel_err\": {:.6e}, \"energy_rel_err\": {:.6e}}}",
+                    r.n, r.engine, r.affinity_s, r.eval_s, r.speedup, r.grad_rel_err,
+                    r.energy_rel_err
+                )
+            })
+            .collect();
+        let json = format!(
+            "{{\n  \"bench\": \"scal\",\n  \"method\": \"{}\",\n  \"threads\": {},\n  \
+             \"knn\": {},\n  \"index\": \"{}\",\n  \"reps\": {},\n  \
+             \"results\": [\n{}\n  ]\n}}\n",
+            cfg.method.name(),
+            crate::par::num_threads(),
+            cfg.knn,
+            cfg.index.name(),
+            cfg.reps,
+            jrows.join(",\n")
+        );
+        std::fs::write(&jpath, json)?;
+        println!("scalability: wrote {}", jpath.display());
+    }
     Ok(())
 }
 
@@ -209,23 +333,36 @@ pub fn run(cfg: &ScalConfig) -> anyhow::Result<()> {
 mod tests {
     use super::*;
 
-    /// Tiny smoke run: the harness completes and writes the CSV.
+    /// Tiny smoke run: the harness completes and writes the CSV + JSON
+    /// with one row per engine configuration.
     #[test]
     fn smoke_small() {
         let cfg = ScalConfig {
             sizes: vec![150],
             thetas: vec![0.5],
+            neg_ks: vec![8],
             reps: 1,
             sd_iters: 2,
             knn: 12,
             perplexity: 4.0,
+            csv_name: "scalability_smoke.csv".to_string(),
+            json_name: Some("BENCH_scal_smoke.json".to_string()),
             ..Default::default()
         };
         run(&cfg).unwrap();
-        let text = std::fs::read_to_string(results_dir().join("scalability.csv")).unwrap();
-        assert!(text.lines().count() >= 3);
-        assert!(text.contains("barnes-hut") || text.contains(",bh,"));
-        // the affinity-stage column is part of the contract now
-        assert!(text.lines().next().unwrap().contains("affinity_s"));
+        let text =
+            std::fs::read_to_string(results_dir().join("scalability_smoke.csv")).unwrap();
+        assert_eq!(text.lines().count(), 4, "header + exact + bh + neg");
+        assert!(text.contains(",bh,"));
+        assert!(text.contains(",neg,8,"));
+        // the affinity-stage + engine-parameter columns are the contract
+        let header = text.lines().next().unwrap();
+        assert!(header.contains("affinity_s"));
+        assert!(header.contains(",param,"));
+        let json =
+            std::fs::read_to_string(results_dir().join("BENCH_scal_smoke.json")).unwrap();
+        assert!(json.contains("\"bench\": \"scal\""));
+        assert!(json.contains("\"engine\": \"neg\""));
+        assert!(json.contains("\"eval_s\""));
     }
 }

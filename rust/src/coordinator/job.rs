@@ -267,6 +267,12 @@ impl EmbeddingJob {
                 Backend::Xla(_) => "xla".to_string(),
             },
             weights_fp: crate::model::codec::weights_fingerprint(&self.weights),
+            // sampler seed is identity; the epoch recorded here is the
+            // fresh-run value — checkpoint writes stamp the live epoch
+            sampler: match self.engine {
+                EngineSpec::NegSample { seed, .. } => Some((seed, 0)),
+                _ => None,
+            },
         }
     }
 
@@ -297,6 +303,12 @@ impl EmbeddingJob {
         let mut mm = match resume {
             Some(ck) => {
                 ck.meta.ensure_matches(meta.as_ref().unwrap())?;
+                // restore the sampler epoch *before* any evaluation:
+                // the restored self.e belongs to this epoch, and the
+                // next gradient eval must draw the next one
+                if let Some((_, epoch)) = ck.meta.sampler {
+                    obj.set_sampler_epoch(epoch);
+                }
                 let CheckpointPayload::Minimize { state, strategy_state } = ck.payload else {
                     anyhow::bail!(
                         "checkpoint for job {:?} holds a homotopy run; resume it through \
@@ -345,8 +357,14 @@ impl EmbeddingJob {
                         cb(&stats);
                     }
                     if every > 0 && stats.iter % every == 0 {
+                        let mut ck_meta = meta.clone().unwrap();
+                        // stamp the live sampler epoch: a resume must
+                        // continue the sample sequence, not restart it
+                        if let Some(state) = obj.sampler_state() {
+                            ck_meta.sampler = Some(state);
+                        }
                         TrainCheckpoint {
-                            meta: meta.clone().unwrap(),
+                            meta: ck_meta,
                             payload: CheckpointPayload::Minimize {
                                 state: mm.state(),
                                 strategy_state: mm.strategy_state(),

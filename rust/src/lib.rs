@@ -89,7 +89,7 @@ pub mod prelude {
     pub use crate::linalg::dense::Mat;
     pub use crate::model::{EmbeddingModel, TransformOptions, Transformer};
     pub use crate::objective::engine::{
-        BarnesHutEngine, EngineSpec, ExactEngine, GradientEngine,
+        BarnesHutEngine, EngineSpec, ExactEngine, GradientEngine, NegativeSamplingEngine,
     };
     pub use crate::objective::native::NativeObjective;
     pub use crate::objective::xla::XlaObjective;

@@ -30,10 +30,14 @@ COMMANDS
   fig4    large-scale learning curves (EE + t-SNE), sparse SD
           [--n 2000] [--budget 60] [--kappa 7] [--strategies fp,lbfgs,sd,sdm]
   rates   theorem 2.1 rate constants r = ||B^-1 H - I|| [--n 40]
-  scal    gradient-engine scalability: exact vs Barnes-Hut wall-clock
-          and gradient error across N and theta (kNN-sparse swiss roll),
-          plus the affinity-stage wall-clock for both neighbor indices
+  scal    gradient-engine scalability: exact vs Barnes-Hut vs
+          negative-sampling wall-clock and gradient error across N and
+          the engine parameter (kNN-sparse swiss roll), plus the
+          affinity-stage wall-clock for both neighbor indices ->
+          results/scalability.csv + results/BENCH_scal.json
           [--sizes 2000,5000,10000,20000] [--thetas 0.2,0.5,0.8]
+          [--neg 64 (comma list of negatives/row; 'none' skips)]
+          [--neg-seed 0] [--json BENCH_scal.json]
           [--method ee] [--lambda 100] [--knn 60] [--reps 3] [--sd-iters 5]
           [--index auto|exact|hnsw|hnsw:<m>[,<efc>[,<efs>]]]
   ann     neighbor-index comparison: exact vs HNSW graph build +
@@ -70,7 +74,8 @@ COMMANDS
           [--data swiss|coil|mnist|clusters] [--n 500] [--method ee]
           [--strategy sd] [--lambda 100] [--perplexity 20]
           [--max-iters 500] [--backend native|xla]
-          [--engine auto|exact|bh|bh:<theta>] [--knn 0 (0 = dense W+)]
+          [--engine auto|exact|bh|bh:<theta>|neg:<k>[,<seed>]]
+          [--knn 0 (0 = dense W+)]
           [--index auto|exact|hnsw|hnsw:<m>[,<efc>[,<efs>]]]
           [--checkpoint-every 0 (iterations; 0 = never)]
           [--checkpoint-path results/embed.nlec]
@@ -203,6 +208,16 @@ fn main() -> anyhow::Result<()> {
             let sizes: Vec<usize> =
                 parse_csv("sizes", &args.get_str("sizes", "2000,5000,10000,20000"))?;
             let thetas: Vec<f64> = parse_csv("thetas", &args.get_str("thetas", "0.2,0.5,0.8"))?;
+            let neg_raw = args.get_str("neg", "64");
+            let neg_ks: Vec<usize> = if neg_raw == "none" {
+                vec![]
+            } else {
+                parse_csv("neg", &neg_raw)?
+            };
+            anyhow::ensure!(
+                neg_ks.iter().all(|&k| k >= 1),
+                "bad --neg value {neg_raw:?} (every k must be >= 1; 'none' skips)"
+            );
             let method = Method::parse(&args.get_str("method", "ee"))
                 .ok_or_else(|| anyhow::anyhow!("bad method"))?;
             let index = IndexSpec::parse(&args.get_str("index", "auto"))
@@ -210,6 +225,8 @@ fn main() -> anyhow::Result<()> {
             scalability::run(&scalability::ScalConfig {
                 sizes,
                 thetas,
+                neg_ks,
+                neg_seed: args.get("neg_seed", 0),
                 method,
                 lambda: args.get("lambda", 100.0),
                 perplexity: args.get("perplexity", 20.0),
@@ -217,6 +234,7 @@ fn main() -> anyhow::Result<()> {
                 index,
                 reps: args.get("reps", 3),
                 sd_iters: args.get("sd_iters", 5),
+                json_name: Some(args.get_str("json", "BENCH_scal.json")),
                 ..Default::default()
             })
         }
@@ -278,7 +296,9 @@ fn main() -> anyhow::Result<()> {
             let strategy = args.get_str("strategy", "sd");
             let backend = args.get_str("backend", "native");
             let engine = EngineSpec::parse(&args.get_str("engine", "auto"))
-                .ok_or_else(|| anyhow::anyhow!("bad engine (auto|exact|bh|bh:<theta>)"))?;
+                .ok_or_else(|| {
+                    anyhow::anyhow!("bad engine (auto|exact|bh|bh:<theta>|neg:<k>[,<seed>])")
+                })?;
             let index = IndexSpec::parse(&args.get_str("index", "auto"))
                 .ok_or_else(|| anyhow::anyhow!("bad index (auto|exact|hnsw|hnsw:<m>[,..])"))?;
             anyhow::ensure!(n_actual >= 2, "dataset has only {n_actual} points");

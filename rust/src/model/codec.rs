@@ -46,8 +46,9 @@ const MAGIC: &[u8; 4] = b"NLEM";
 const CKPT_MAGIC: &[u8; 4] = b"NLEC";
 
 /// On-disk version of the `NLEC` checkpoint record (independent of the
-/// model's [`FORMAT_VERSION`]).
-pub const CHECKPOINT_VERSION: u32 = 1;
+/// model's [`FORMAT_VERSION`]). v2 added the optional sampler
+/// `(seed, epoch)` record for stochastic (negative-sampling) engines.
+pub const CHECKPOINT_VERSION: u32 = 2;
 
 /// FNV-1a 64-bit: tiny, dependency-free corruption detection (not a
 /// cryptographic signature — artifacts are trusted local files).
@@ -512,7 +513,7 @@ pub fn decode(bytes: &[u8]) -> anyhow::Result<EmbeddingModel> {
     )
 }
 
-/// Serialize a training checkpoint to the v1 `NLEC` container.
+/// Serialize a training checkpoint to the v2 `NLEC` container.
 pub fn encode_checkpoint(ck: &TrainCheckpoint) -> Vec<u8> {
     let mut w = Writer::new();
     w.put_str(&ck.meta.name);
@@ -531,6 +532,14 @@ pub fn encode_checkpoint(ck: &TrainCheckpoint) -> Vec<u8> {
     w.put_str(&ck.meta.engine);
     w.put_str(&ck.meta.backend);
     w.put_u64(ck.meta.weights_fp);
+    match ck.meta.sampler {
+        Some((seed, epoch)) => {
+            w.put_u8(1);
+            w.put_u64(seed);
+            w.put_u64(epoch);
+        }
+        None => w.put_u8(0),
+    }
     match &ck.payload {
         CheckpointPayload::Minimize { state, strategy_state } => {
             w.put_u8(0);
@@ -552,7 +561,7 @@ pub fn encode_checkpoint(ck: &TrainCheckpoint) -> Vec<u8> {
     frame(CKPT_MAGIC, CHECKPOINT_VERSION, w.buf)
 }
 
-/// Parse and validate a v1 `NLEC` container. Structural checks run
+/// Parse and validate a v2 `NLEC` container. Structural checks run
 /// here (shapes, trace alignment, finite scalars); resume paths
 /// additionally match [`CheckpointMeta`] against the job and validate
 /// the state against the actual problem size.
@@ -573,6 +582,11 @@ pub fn decode_checkpoint(bytes: &[u8]) -> anyhow::Result<TrainCheckpoint> {
     let engine = p.get_str()?;
     let backend = p.get_str()?;
     let weights_fp = p.get_u64()?;
+    let sampler = match p.get_u8()? {
+        0 => None,
+        1 => Some((p.get_u64()?, p.get_u64()?)),
+        other => anyhow::bail!("bad sampler flag {other}"),
+    };
     let meta = CheckpointMeta {
         name,
         strategy,
@@ -584,6 +598,7 @@ pub fn decode_checkpoint(bytes: &[u8]) -> anyhow::Result<TrainCheckpoint> {
         engine,
         backend,
         weights_fp,
+        sampler,
     };
     let payload = match p.get_u8()? {
         0 => {
@@ -746,6 +761,8 @@ mod tests {
             engine: "Auto".into(),
             backend: "native".into(),
             weights_fp: 0xdead_beef_cafe_f00d,
+            // homotopy arm exercises Some, minimize arm exercises None
+            sampler: if kind_homotopy { Some((17, 23)) } else { None },
         };
         let payload = if kind_homotopy {
             CheckpointPayload::Homotopy(HomotopyState {
@@ -795,6 +812,7 @@ mod tests {
             assert_eq!(back.meta.engine, ck.meta.engine);
             assert_eq!(back.meta.backend, ck.meta.backend);
             assert_eq!(back.meta.weights_fp, ck.meta.weights_fp);
+            assert_eq!(back.meta.sampler, ck.meta.sampler);
             match (&back.payload, &ck.payload) {
                 (
                     CheckpointPayload::Minimize { state: a, strategy_state: sa },

@@ -29,7 +29,7 @@
 //! [`BarnesHutEngine`] without going through the spec.
 
 use super::{
-    attract_row_stream, collect_rows, EngineContext, EngineSpec, ExactEngine, GradientEngine,
+    attract_row_stream, partition_terms, EngineContext, EngineSpec, ExactEngine, GradientEngine,
 };
 use crate::linalg::dense::Mat;
 use crate::objective::{Method, Repulsive};
@@ -158,62 +158,85 @@ impl GradientEngine for BarnesHutEngine {
         let d = x.cols;
         match ctx.method {
             Method::Spectral => {
-                // attraction only: identical to the exact streaming path
-                let results: Vec<(f64, Vec<f64>)> = crate::par::par_map(n, |row| {
-                    let mut gn = vec![0.0; d];
-                    let e = attract_row_stream(ctx.method, ctx.wp, x, row, Some(&mut gn));
-                    (e, gn)
-                });
-                collect_rows(n, d, results, 0.0)
+                // attraction only: identical to the exact streaming
+                // path; the G row is the accumulation buffer
+                let mut g = Mat::zeros(n, d);
+                let es: Vec<f64> = crate::par::par_rows_with(
+                    n,
+                    d,
+                    &mut g.data,
+                    || (),
+                    |row, gn, _| attract_row_stream(ctx.method, ctx.wp, x, row, Some(gn)),
+                );
+                (es.iter().sum(), g)
             }
             Method::Ee => {
                 let c = Self::uniform_wm(ctx);
                 let lam = ctx.lambda;
                 let tree = NTree::build(x);
-                let results: Vec<(f64, Vec<f64>)> = crate::par::par_map(n, |row| {
-                    let mut gn = vec![0.0; d];
-                    let mut e = attract_row_stream(ctx.method, ctx.wp, x, row, Some(&mut gn));
-                    let mut force = vec![0.0; d];
-                    let field = self.gaussian_row(&tree, x, row, Some(&mut force));
-                    e += lam * c * field;
-                    for j in 0..d {
-                        gn[j] -= 4.0 * lam * c * force[j];
-                    }
-                    (e, gn)
-                });
-                collect_rows(n, d, results, 0.0)
+                // per-worker reusable force buffer; gradient rows are
+                // written in place
+                let mut g = Mat::zeros(n, d);
+                let es: Vec<f64> = crate::par::par_rows_with(
+                    n,
+                    d,
+                    &mut g.data,
+                    || vec![0.0f64; d],
+                    |row, gn, force: &mut Vec<f64>| {
+                        let mut e =
+                            attract_row_stream(ctx.method, ctx.wp, x, row, Some(gn));
+                        force.fill(0.0);
+                        let field = self.gaussian_row(&tree, x, row, Some(force));
+                        e += lam * c * field;
+                        for j in 0..d {
+                            gn[j] -= 4.0 * lam * c * force[j];
+                        }
+                        e
+                    },
+                );
+                (es.iter().sum(), g)
             }
             Method::Ssne | Method::Tsne => {
                 let lam = ctx.lambda;
                 let tree = NTree::build(x);
                 // one traversal per row: attraction energy + gradient,
-                // repulsive field (for Z) + unnormalized force. The
-                // buffer packs [attr grad | raw force] per row.
-                let rows: Vec<(f64, f64, Vec<f64>)> = crate::par::par_map(n, |row| {
-                    let mut buf = vec![0.0; 2 * d];
-                    let (attr_g, force) = buf.split_at_mut(d);
-                    let e_attr = attract_row_stream(ctx.method, ctx.wp, x, row, Some(attr_g));
-                    let field = match ctx.method {
-                        Method::Ssne => self.gaussian_row(&tree, x, row, Some(force)),
-                        Method::Tsne => self.student_row(&tree, x, row, Some(force)),
-                        _ => unreachable!(),
-                    };
-                    (e_attr, field, buf)
-                });
+                // repulsive field (for Z) + unnormalized force. One
+                // preallocated n×2d buffer packs [attr grad | raw
+                // force] per row; the 1/Z scale is applied after the
+                // global reduction.
+                let mut buf = Mat::zeros(n, 2 * d);
+                let parts: Vec<(f64, f64)> = crate::par::par_rows_with(
+                    n,
+                    2 * d,
+                    &mut buf.data,
+                    || (),
+                    |row, b, _| {
+                        let (attr_g, force) = b.split_at_mut(d);
+                        let e_attr =
+                            attract_row_stream(ctx.method, ctx.wp, x, row, Some(attr_g));
+                        let field = match ctx.method {
+                            Method::Ssne => self.gaussian_row(&tree, x, row, Some(force)),
+                            Method::Tsne => self.student_row(&tree, x, row, Some(force)),
+                            _ => unreachable!(),
+                        };
+                        (e_attr, field)
+                    },
+                );
                 let (mut e_attr, mut z) = (0.0, 0.0);
-                for (ea, f, _) in &rows {
+                for (ea, f) in &parts {
                     e_attr += ea;
                     z += f;
                 }
-                let scale = 4.0 * lam / z;
+                let (scale, e_rep) = partition_terms(lam, z);
                 let mut g = Mat::zeros(n, d);
-                for (row, (_, _, buf)) in rows.into_iter().enumerate() {
+                for row in 0..n {
+                    let b = buf.row(row);
                     let gr = g.row_mut(row);
                     for j in 0..d {
-                        gr[j] = buf[j] - scale * buf[d + j];
+                        gr[j] = b[j] - scale * b[d + j];
                     }
                 }
-                (e_attr + lam * z.ln(), g)
+                (e_attr + e_rep, g)
             }
         }
     }
@@ -249,7 +272,7 @@ impl GradientEngine for BarnesHutEngine {
                 });
                 let (e_attr, z) =
                     parts.into_iter().fold((0.0, 0.0), |(ea, zz), (e, f)| (ea + e, zz + f));
-                e_attr + ctx.lambda * z.ln()
+                e_attr + partition_terms(ctx.lambda, z).1
             }
         }
     }

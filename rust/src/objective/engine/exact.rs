@@ -10,7 +10,7 @@
 //! Gradients are the Laplacian forms of the paper (eqs. 2-3) rearranged
 //! per-row: for weights w_nm, `(4 X L)_n = 4 Σ_m w_nm (x_n - x_m)`.
 
-use super::{attract_row_stream, collect_rows, EngineContext, GradientEngine};
+use super::{attract_row_stream, partition_terms, EngineContext, GradientEngine};
 use crate::linalg::dense::Mat;
 use crate::linalg::vecops::sqdist;
 use crate::objective::{Attractive, Method, Repulsive};
@@ -180,22 +180,30 @@ impl GradientEngine for ExactEngine {
         let d = x.cols;
         match ctx.method {
             Method::Spectral => {
-                // attraction only: stream the stored weights, O(nnz)
-                let results: Vec<(f64, Vec<f64>)> = crate::par::par_map(n, |row| {
-                    let mut gn = vec![0.0; d];
-                    let e = attract_row_stream(ctx.method, ctx.wp, x, row, Some(&mut gn));
-                    (e, gn)
-                });
-                collect_rows(n, d, results, 0.0)
+                // attraction only: stream the stored weights, O(nnz).
+                // The gradient row in G doubles as the accumulation
+                // buffer — no per-row allocation, no collect/copy pass.
+                let mut g = Mat::zeros(n, d);
+                let es: Vec<f64> = crate::par::par_rows_with(
+                    n,
+                    d,
+                    &mut g.data,
+                    || (),
+                    |row, gn, _| attract_row_stream(ctx.method, ctx.wp, x, row, Some(gn)),
+                );
+                (es.iter().sum(), g)
             }
             Method::Ee => {
                 // single fused pass: one d² per pair serves both terms
-                let results: Vec<(f64, Vec<f64>)> = crate::par::par_map(n, |row| {
-                    let mut gn = vec![0.0; d];
-                    let e = ee_row_fused(ctx, x, row, Some(&mut gn));
-                    (e, gn)
-                });
-                collect_rows(n, d, results, 0.0)
+                let mut g = Mat::zeros(n, d);
+                let es: Vec<f64> = crate::par::par_rows_with(
+                    n,
+                    d,
+                    &mut g.data,
+                    || (),
+                    |row, gn, _| ee_row_fused(ctx, x, row, Some(gn)),
+                );
+                (es.iter().sum(), g)
             }
             Method::Ssne | Method::Tsne => {
                 // pass 1: attraction energy + partition function together
@@ -203,18 +211,19 @@ impl GradientEngine for ExactEngine {
                     crate::par::par_map(n, |row| norm_row_attr_partition(ctx, x, row));
                 let (e_attr, s) =
                     parts.into_iter().fold((0.0, 0.0), |(ea, ss), (e, p)| (ea + e, ss + p));
-                let inv_s = 1.0 / s;
-                // pass 2: fused gradient
-                let rows: Vec<Vec<f64>> = crate::par::par_map(n, |row| {
-                    let mut gn = vec![0.0; d];
-                    norm_row_grad(ctx, x, row, inv_s, &mut gn);
-                    gn
-                });
+                // z-guard: a fully coincident embedding underflows every
+                // kernel; zero repulsive force beats NaN gradients
+                let inv_s = if s > 0.0 { 1.0 / s } else { 0.0 };
+                // pass 2: fused gradient, straight into G's rows
                 let mut g = Mat::zeros(n, d);
-                for (row, gr) in rows.into_iter().enumerate() {
-                    g.row_mut(row).copy_from_slice(&gr);
-                }
-                (e_attr + ctx.lambda * s.ln(), g)
+                crate::par::par_rows_with(
+                    n,
+                    d,
+                    &mut g.data,
+                    || (),
+                    |row, gn, _| norm_row_grad(ctx, x, row, inv_s, gn),
+                );
+                (e_attr + partition_terms(ctx.lambda, s).1, g)
             }
         }
     }
@@ -232,7 +241,7 @@ impl GradientEngine for ExactEngine {
                     crate::par::par_map(n, |row| norm_row_attr_partition(ctx, x, row));
                 let (e_attr, s) =
                     parts.into_iter().fold((0.0, 0.0), |(ea, ss), (e, p)| (ea + e, ss + p));
-                e_attr + ctx.lambda * s.ln()
+                e_attr + partition_terms(ctx.lambda, s).1
             }
         }
     }

@@ -3,7 +3,7 @@
 //!
 //! The objective layer (weights, method, λ — [`crate::objective`]) is
 //! separated from the *evaluation strategy*: a [`GradientEngine`] maps
-//! `(weights, method, λ, X)` to `(E, ∇E)`. Two engines ship today:
+//! `(weights, method, λ, X)` to `(E, ∇E)`. Three engines ship today:
 //!
 //! * [`exact::ExactEngine`] — the fused O(N²d) row sweeps (one squared
 //!   distance per pair serves both energy terms), the reference
@@ -13,18 +13,25 @@
 //!   weights while the repulsive field (EE's Gaussian field; the
 //!   normalized models' partition sum Z and repulsive forces) is
 //!   approximated by θ-criterion traversal of a quadtree/octree
-//!   ([`crate::spatial`]).
+//!   ([`crate::spatial`]);
+//! * [`negsample::NegativeSamplingEngine`] — O(nnz(W+) + Nk) per
+//!   evaluation: exact attraction, repulsion *estimated* from k
+//!   sampled negatives per row with a counter-keyed RNG
+//!   (thread-count-deterministic, checkpoint-reproducible). Opt-in
+//!   (`--engine neg:k`); Auto keeps selecting Barnes–Hut.
 //!
-//! Future engines (negative sampling, interpolation grids, GPU
-//! backends) plug into the same seam. Selection is explicit
+//! Future engines (interpolation grids, GPU backends) plug into the
+//! same seam. Selection is explicit
 //! ([`NativeObjective::with_engine`](crate::objective::native::NativeObjective::with_engine))
 //! or automatic by problem size ([`EngineSpec::Auto`]).
 
 pub mod barneshut;
 pub mod exact;
+pub mod negsample;
 
 pub use barneshut::BarnesHutEngine;
 pub use exact::ExactEngine;
+pub use negsample::NegativeSamplingEngine;
 
 use super::{Attractive, Method, Repulsive};
 use crate::linalg::dense::Mat;
@@ -51,6 +58,15 @@ pub trait GradientEngine: Send + Sync {
     fn energy(&self, ctx: &EngineContext<'_>, x: &Mat) -> f64 {
         self.eval(ctx, x).0
     }
+    /// Sampler identity and state `(seed, epoch)` for stochastic
+    /// engines — `None` for deterministic ones. Checkpointed so resumed
+    /// runs continue the exact sample sequence.
+    fn sampler_state(&self) -> Option<(u64, u64)> {
+        None
+    }
+    /// Restore the sampler epoch on checkpoint resume (no-op for
+    /// deterministic engines).
+    fn set_sampler_epoch(&self, _epoch: u64) {}
 }
 
 /// Default θ for auto-selected Barnes–Hut (the customary t-SNE value;
@@ -60,6 +76,14 @@ pub const DEFAULT_THETA: f64 = 0.5;
 /// Auto-selection switches to Barnes–Hut at this N (where the O(N²d)
 /// exact sweep starts dominating wall-clock on sparse-W⁺ workloads).
 pub const AUTO_BH_MIN_N: usize = 4096;
+
+/// Default negatives per row for `--engine neg` (the LargeVis-scale
+/// operating point: large enough for stable partition estimates, small
+/// enough to beat a θ = 0.5 tree traversal per row).
+pub const DEFAULT_NEG_K: usize = 64;
+
+/// Default sampler seed for `--engine neg:k` without an explicit seed.
+pub const DEFAULT_NEG_SEED: u64 = 0;
 
 /// Engine selection, resolvable from config/CLI strings.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -73,10 +97,15 @@ pub enum EngineSpec {
     /// Always Barnes–Hut with the given θ (0 = exact semantics at tree
     /// cost; 0.5 is the customary speed/accuracy point).
     BarnesHut { theta: f64 },
+    /// Stochastic negative-sampling repulsion with `k` negatives per
+    /// row and a fixed sampler seed. Opt-in only — Auto never selects
+    /// it, since its gradients are estimates.
+    NegSample { k: usize, seed: u64 },
 }
 
 impl EngineSpec {
-    /// Parse `"auto" | "exact" | "bh" | "barnes-hut" | "bh:<theta>"`.
+    /// Parse `"auto" | "exact" | "bh" | "barnes-hut" | "bh:<theta>" |
+    /// "neg" | "neg:<k>" | "neg:<k>,<seed>"`.
     pub fn parse(s: &str) -> Option<EngineSpec> {
         match s {
             "auto" => Some(EngineSpec::Auto),
@@ -84,11 +113,27 @@ impl EngineSpec {
             "bh" | "barneshut" | "barnes-hut" => {
                 Some(EngineSpec::BarnesHut { theta: DEFAULT_THETA })
             }
-            _ => s
-                .strip_prefix("bh:")
-                .and_then(|t| t.parse::<f64>().ok())
-                .filter(|t| t.is_finite() && *t >= 0.0)
-                .map(|theta| EngineSpec::BarnesHut { theta }),
+            "neg" | "negsample" | "neg-sample" => {
+                Some(EngineSpec::NegSample { k: DEFAULT_NEG_K, seed: DEFAULT_NEG_SEED })
+            }
+            _ => {
+                if let Some(rest) = s.strip_prefix("neg:") {
+                    let (ks, seeds) = match rest.split_once(',') {
+                        Some((a, b)) => (a, Some(b)),
+                        None => (rest, None),
+                    };
+                    let k = ks.parse::<usize>().ok().filter(|&k| k >= 1)?;
+                    let seed = match seeds {
+                        Some(b) => b.parse::<u64>().ok()?,
+                        None => DEFAULT_NEG_SEED,
+                    };
+                    return Some(EngineSpec::NegSample { k, seed });
+                }
+                s.strip_prefix("bh:")
+                    .and_then(|t| t.parse::<f64>().ok())
+                    .filter(|t| t.is_finite() && *t >= 0.0)
+                    .map(|theta| EngineSpec::BarnesHut { theta })
+            }
         }
     }
 
@@ -97,6 +142,7 @@ impl EngineSpec {
             EngineSpec::Auto => "auto",
             EngineSpec::Exact => "exact",
             EngineSpec::BarnesHut { .. } => "bh",
+            EngineSpec::NegSample { .. } => "neg",
         }
     }
 
@@ -112,6 +158,18 @@ impl EngineSpec {
                 // normalized models repel through their partition function
                 Method::Ssne | Method::Tsne => true,
             }
+    }
+
+    /// Can negative sampling serve this configuration? No dimension
+    /// limit (no tree), but Spectral has no repulsion to sample, and EE
+    /// needs a uniform W⁻ (a sampled dense W⁻ would need importance
+    /// weights the engine doesn't carry).
+    pub fn neg_applicable(method: Method, wm: &Repulsive) -> bool {
+        match method {
+            Method::Spectral => false,
+            Method::Ee => matches!(wm, Repulsive::Uniform(_)),
+            Method::Ssne | Method::Tsne => true,
+        }
     }
 
     /// Resolve into a concrete engine for the given weights.
@@ -131,6 +189,10 @@ impl EngineSpec {
                 Box::new(BarnesHutEngine::new(theta))
             }
             EngineSpec::BarnesHut { .. } => Box::new(ExactEngine),
+            EngineSpec::NegSample { k, seed } if Self::neg_applicable(method, wm) => {
+                Box::new(NegativeSamplingEngine::new(k, seed))
+            }
+            EngineSpec::NegSample { .. } => Box::new(ExactEngine),
             EngineSpec::Auto => {
                 // BH pays off when the attraction is sparse (dense W⁺
                 // keeps the evaluation O(N²) regardless) and the
@@ -201,20 +263,14 @@ pub(crate) fn attract_row_stream(
     e
 }
 
-/// Assemble per-row `(energy, gradient-row)` results into `(E, G)`.
-pub(crate) fn collect_rows(
-    n: usize,
-    d: usize,
-    results: Vec<(f64, Vec<f64>)>,
-    e0: f64,
-) -> (f64, Mat) {
-    let mut g = Mat::zeros(n, d);
-    let mut e = e0;
-    for (row, (er, gr)) in results.into_iter().enumerate() {
-        e += er;
-        g.row_mut(row).copy_from_slice(&gr);
-    }
-    (e, g)
+/// Shared z-guard for the normalized models (s-SNE/t-SNE): gradient
+/// scale `4λ/Z` and repulsive energy `λ ln Z`, with Z = 0 (single-point
+/// or fully coincident embeddings, where every kernel underflows)
+/// resolved to zero repulsive force and a finite energy instead of
+/// letting NaN/−∞ propagate through the optimizer.
+pub(crate) fn partition_terms(lambda: f64, z: f64) -> (f64, f64) {
+    let scale = if z > 0.0 { 4.0 * lambda / z } else { 0.0 };
+    (scale, lambda * z.max(f64::MIN_POSITIVE).ln())
 }
 
 #[cfg(test)]
@@ -232,6 +288,18 @@ mod tests {
         assert_eq!(EngineSpec::parse("bh:0.25"), Some(EngineSpec::BarnesHut { theta: 0.25 }));
         assert_eq!(EngineSpec::parse("bh:-1"), None);
         assert_eq!(EngineSpec::parse("nope"), None);
+        assert_eq!(
+            EngineSpec::parse("neg"),
+            Some(EngineSpec::NegSample { k: DEFAULT_NEG_K, seed: DEFAULT_NEG_SEED })
+        );
+        assert_eq!(EngineSpec::parse("neg:32"), Some(EngineSpec::NegSample { k: 32, seed: 0 }));
+        assert_eq!(
+            EngineSpec::parse("neg:16,9"),
+            Some(EngineSpec::NegSample { k: 16, seed: 9 })
+        );
+        assert_eq!(EngineSpec::parse("neg:0"), None, "k = 0 cannot estimate anything");
+        assert_eq!(EngineSpec::parse("neg:x"), None);
+        assert_eq!(EngineSpec::parse("neg:8,"), None);
     }
 
     #[test]
@@ -261,5 +329,15 @@ mod tests {
         // exact at build time, so engine_name() reports what runs
         let e = EngineSpec::BarnesHut { theta: 0.5 }.build(Method::Tsne, &small, &wm, 5);
         assert_eq!(e.name(), "exact");
+        // neg is opt-in only: auto never selects it, but an explicit
+        // request works at any size — and in any dimension (no tree)
+        let e = EngineSpec::NegSample { k: 8, seed: 0 }.build(Method::Tsne, &small, &wm, 5);
+        assert_eq!(e.name(), "neg-sample");
+        // spectral has no repulsion to sample; dense W⁻ can't be
+        // uniformly sampled — both resolve to exact
+        let e = EngineSpec::NegSample { k: 8, seed: 0 }.build(Method::Spectral, &small, &wm, 2);
+        assert_eq!(e.name(), "exact");
+        assert!(!EngineSpec::neg_applicable(Method::Ee, &Repulsive::Dense(Mat::zeros(4, 4))));
+        assert!(EngineSpec::neg_applicable(Method::Ssne, &Repulsive::Dense(Mat::zeros(4, 4))));
     }
 }

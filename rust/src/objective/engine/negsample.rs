@@ -1,0 +1,479 @@
+//! Negative-sampling gradient engine: O(nnz(W⁺) + Nk) per evaluation.
+//!
+//! The attractive term is evaluated *exactly* by streaming the stored
+//! sparse W⁺ (identical to the Barnes–Hut attraction path). The O(N²)
+//! repulsive term is replaced by a Monte-Carlo estimate from `k`
+//! uniformly sampled negatives per row (LargeVis / FUnc-SNE style):
+//! with `m_1..m_k` drawn uniformly from `{0..N}\{n}`,
+//!
+//! * **EE** (uniform W⁻ = c): field `F̂_n = (N−1)/k Σ_t e^{-d²_{n m_t}}`
+//!   and force `(N−1)/k Σ_t e^{-d²}(x_n − x_{m_t})` are *unbiased* for
+//!   the exact field/force, so `E[Ê⁻] = E⁻` and `E[∇̂⁻] = ∇⁻` exactly.
+//! * **s-SNE / t-SNE**: the same scaled sums estimate each row's
+//!   contribution to the partition function, so
+//!   `Ẑ = Σ_n (N−1)/k Σ_t K(d²_{n m_t})` is unbiased for Z (Gaussian
+//!   kernel for s-SNE; Student K = 1/(1+d²) for t-SNE, with force
+//!   kernel K²). The gradient scale 4λ/Ẑ and energy λ ln Ẑ are ratio /
+//!   log transforms of an unbiased estimate — consistent as k grows,
+//!   not exactly unbiased, which is the standard trade (Barnes–Hut is
+//!   deterministically biased instead).
+//!
+//! **Determinism.** Sampling uses a counter-keyed RNG: each row's
+//! stream is derived purely from `(seed, epoch, row)` via
+//! [`row_rng`], so results are bitwise independent of `NLE_THREADS`
+//! and of work chunking. The engine advances an atomic epoch once per
+//! gradient evaluation ([`GradientEngine::eval`]); energy-only calls
+//! ([`GradientEngine::energy`]) *reuse* the current epoch, so every
+//! line-search probe within an iteration scores the same sampled
+//! surrogate objective the gradient was computed from (a coherent
+//! Armijo decrease test — resampling inside the line search would make
+//! sampling noise, which does not vanish as the step shrinks, defeat
+//! the sufficient-decrease condition near convergence). The epoch is
+//! checkpointed through `CheckpointMeta` and restored on resume
+//! ([`GradientEngine::set_sampler_epoch`]), making optimization
+//! trajectories bitwise-reproducible across checkpoint/resume.
+//!
+//! All reductions fold ordered per-row results serially — never
+//! [`crate::par::par_sum`], whose chunk-count-dependent summation order
+//! would break thread-count independence.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::{
+    attract_row_stream, partition_terms, EngineContext, EngineSpec, ExactEngine, GradientEngine,
+};
+use crate::data::Rng;
+use crate::linalg::dense::Mat;
+use crate::linalg::vecops::sqdist;
+use crate::objective::{Method, Repulsive};
+
+/// SplitMix64 finalizer — the bijective avalanche mix keying the
+/// per-(seed, epoch, row) sample streams. Public so determinism tests
+/// can replay a row's exact draw sequence.
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The RNG for one row's negatives at one epoch: a pure function of
+/// `(seed, epoch, row)`, so any worker on any thread layout draws the
+/// identical stream.
+#[inline]
+pub fn row_rng(seed: u64, epoch: u64, row: u64) -> Rng {
+    Rng::new(mix64(
+        seed ^ mix64(epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(row)),
+    ))
+}
+
+/// Draw one negative `m != row` uniformly from `0..n` (caller
+/// guarantees `n >= 2`): sample from `n − 1` values and shift past the
+/// row itself — no rejection loop.
+#[inline]
+fn draw_negative(rng: &mut Rng, n: usize, row: usize) -> usize {
+    let mut m = rng.below(n - 1);
+    if m >= row {
+        m += 1;
+    }
+    m
+}
+
+/// Sampled Gaussian repulsion for one row (EE field, s-SNE partition
+/// contribution): the *unscaled* sample sums `Σ_t e^{-d²}` and
+/// optionally `force += Σ_t e^{-d²}(x_n − x_m)`.
+fn gaussian_row_sampled(
+    x: &Mat,
+    row: usize,
+    k: usize,
+    rng: &mut Rng,
+    force: Option<&mut [f64]>,
+) -> f64 {
+    let n = x.rows;
+    let d = x.cols;
+    let xn = x.row(row);
+    let mut field = 0.0;
+    match force {
+        Some(force) => {
+            for _ in 0..k {
+                let m = draw_negative(rng, n, row);
+                let xm = x.row(m);
+                let kk = (-sqdist(xn, xm)).exp();
+                field += kk;
+                for j in 0..d {
+                    force[j] += kk * (xn[j] - xm[j]);
+                }
+            }
+        }
+        None => {
+            for _ in 0..k {
+                let m = draw_negative(rng, n, row);
+                field += (-sqdist(xn, x.row(m))).exp();
+            }
+        }
+    }
+    field
+}
+
+/// Sampled Student repulsion for one row (t-SNE): field sums K for the
+/// partition estimate, force sums K²(x_n − x_m).
+fn student_row_sampled(
+    x: &Mat,
+    row: usize,
+    k: usize,
+    rng: &mut Rng,
+    force: Option<&mut [f64]>,
+) -> f64 {
+    let n = x.rows;
+    let d = x.cols;
+    let xn = x.row(row);
+    let mut field = 0.0;
+    match force {
+        Some(force) => {
+            for _ in 0..k {
+                let m = draw_negative(rng, n, row);
+                let xm = x.row(m);
+                let kk = 1.0 / (1.0 + sqdist(xn, xm));
+                field += kk;
+                let k2 = kk * kk;
+                for j in 0..d {
+                    force[j] += k2 * (xn[j] - xm[j]);
+                }
+            }
+        }
+        None => {
+            for _ in 0..k {
+                let m = draw_negative(rng, n, row);
+                field += 1.0 / (1.0 + sqdist(xn, x.row(m)));
+            }
+        }
+    }
+    field
+}
+
+/// Uniform repulsive weight (EE is only neg-applicable with uniform W⁻).
+fn uniform_wm(ctx: &EngineContext<'_>) -> f64 {
+    match ctx.wm {
+        Repulsive::Uniform(c) => *c,
+        Repulsive::Dense(_) => unreachable!("checked by neg_applicable"),
+    }
+}
+
+pub struct NegativeSamplingEngine {
+    k: usize,
+    seed: u64,
+    /// Evaluation counter: bumped once per gradient evaluation, read
+    /// (not bumped) by energy-only probes. Checkpointed and restored.
+    epoch: AtomicU64,
+}
+
+impl NegativeSamplingEngine {
+    pub fn new(k: usize, seed: u64) -> Self {
+        assert!(k >= 1, "negative-sample count must be >= 1 (got {k})");
+        NegativeSamplingEngine { k, seed, epoch: AtomicU64::new(0) }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn eval_at(&self, ctx: &EngineContext<'_>, x: &Mat, epoch: u64) -> (f64, Mat) {
+        let n = x.rows;
+        let d = x.cols;
+        let lam = ctx.lambda;
+        let (k, seed) = (self.k, self.seed);
+        let scale_n = if n >= 2 { (n - 1) as f64 / k as f64 } else { 0.0 };
+        match ctx.method {
+            Method::Ee => {
+                let c = uniform_wm(ctx);
+                let mut g = Mat::zeros(n, d);
+                let es: Vec<f64> = crate::par::par_rows_with(
+                    n,
+                    d,
+                    &mut g.data,
+                    || vec![0.0f64; d],
+                    |row, gn, force: &mut Vec<f64>| {
+                        let mut e =
+                            attract_row_stream(ctx.method, ctx.wp, x, row, Some(gn));
+                        if n >= 2 {
+                            force.fill(0.0);
+                            let mut rng = row_rng(seed, epoch, row as u64);
+                            let field =
+                                gaussian_row_sampled(x, row, k, &mut rng, Some(force));
+                            e += lam * c * scale_n * field;
+                            for j in 0..d {
+                                gn[j] -= 4.0 * lam * c * scale_n * force[j];
+                            }
+                        }
+                        e
+                    },
+                );
+                // serial row-order fold: thread-count independent
+                (es.iter().sum(), g)
+            }
+            Method::Ssne | Method::Tsne => {
+                // packed per-row buffer [attr grad | raw sampled force];
+                // the 1/Ẑ normalization is applied after the reduction
+                let mut buf = Mat::zeros(n, 2 * d);
+                let parts: Vec<(f64, f64)> = crate::par::par_rows_with(
+                    n,
+                    2 * d,
+                    &mut buf.data,
+                    || (),
+                    |row, b, _| {
+                        let (attr_g, force) = b.split_at_mut(d);
+                        let e_attr =
+                            attract_row_stream(ctx.method, ctx.wp, x, row, Some(attr_g));
+                        let field = if n >= 2 {
+                            let mut rng = row_rng(seed, epoch, row as u64);
+                            match ctx.method {
+                                Method::Ssne => {
+                                    gaussian_row_sampled(x, row, k, &mut rng, Some(force))
+                                }
+                                Method::Tsne => {
+                                    student_row_sampled(x, row, k, &mut rng, Some(force))
+                                }
+                                _ => unreachable!(),
+                            }
+                        } else {
+                            0.0
+                        };
+                        (e_attr, field)
+                    },
+                );
+                let (mut e_attr, mut zsum) = (0.0, 0.0);
+                for (ea, f) in &parts {
+                    e_attr += ea;
+                    zsum += f;
+                }
+                let z = scale_n * zsum;
+                let (scale, e_rep) = partition_terms(lam, z);
+                let mut g = Mat::zeros(n, d);
+                for row in 0..n {
+                    let b = buf.row(row);
+                    let gr = g.row_mut(row);
+                    for j in 0..d {
+                        gr[j] = b[j] - scale * scale_n * b[d + j];
+                    }
+                }
+                (e_attr + e_rep, g)
+            }
+            Method::Spectral => unreachable!("resolved to exact by neg_applicable"),
+        }
+    }
+
+    fn energy_at(&self, ctx: &EngineContext<'_>, x: &Mat, epoch: u64) -> f64 {
+        let n = x.rows;
+        let lam = ctx.lambda;
+        let (k, seed) = (self.k, self.seed);
+        let scale_n = if n >= 2 { (n - 1) as f64 / k as f64 } else { 0.0 };
+        match ctx.method {
+            Method::Ee => {
+                let c = uniform_wm(ctx);
+                let es: Vec<f64> = crate::par::par_map(n, |row| {
+                    let mut e = attract_row_stream(ctx.method, ctx.wp, x, row, None);
+                    if n >= 2 {
+                        let mut rng = row_rng(seed, epoch, row as u64);
+                        let field = gaussian_row_sampled(x, row, k, &mut rng, None);
+                        e += lam * c * scale_n * field;
+                    }
+                    e
+                });
+                es.iter().sum()
+            }
+            Method::Ssne | Method::Tsne => {
+                let parts: Vec<(f64, f64)> = crate::par::par_map(n, |row| {
+                    let e_attr = attract_row_stream(ctx.method, ctx.wp, x, row, None);
+                    let field = if n >= 2 {
+                        let mut rng = row_rng(seed, epoch, row as u64);
+                        match ctx.method {
+                            Method::Ssne => gaussian_row_sampled(x, row, k, &mut rng, None),
+                            Method::Tsne => student_row_sampled(x, row, k, &mut rng, None),
+                            _ => unreachable!(),
+                        }
+                    } else {
+                        0.0
+                    };
+                    (e_attr, field)
+                });
+                let (mut e_attr, mut zsum) = (0.0, 0.0);
+                for (ea, f) in &parts {
+                    e_attr += ea;
+                    zsum += f;
+                }
+                let z = scale_n * zsum;
+                e_attr + partition_terms(lam, z).1
+            }
+            Method::Spectral => unreachable!("resolved to exact by neg_applicable"),
+        }
+    }
+}
+
+impl GradientEngine for NegativeSamplingEngine {
+    fn name(&self) -> &'static str {
+        "neg-sample"
+    }
+
+    fn eval(&self, ctx: &EngineContext<'_>, x: &Mat) -> (f64, Mat) {
+        if !EngineSpec::neg_applicable(ctx.method, ctx.wm) {
+            return ExactEngine.eval(ctx, x);
+        }
+        // pre-increment: the first gradient evaluation runs at epoch 1
+        // and the counter always holds the epoch last evaluated at
+        let epoch = self.epoch.fetch_add(1, Ordering::Relaxed) + 1;
+        self.eval_at(ctx, x, epoch)
+    }
+
+    fn energy(&self, ctx: &EngineContext<'_>, x: &Mat) -> f64 {
+        if !EngineSpec::neg_applicable(ctx.method, ctx.wm) {
+            return ExactEngine.energy(ctx, x);
+        }
+        // reuse the last gradient evaluation's epoch: line-search probes
+        // score the same sampled surrogate the step direction came from
+        let epoch = self.epoch.load(Ordering::Relaxed);
+        self.energy_at(ctx, x, epoch)
+    }
+
+    fn sampler_state(&self) -> Option<(u64, u64)> {
+        Some((self.seed, self.epoch.load(Ordering::Relaxed)))
+    }
+
+    fn set_sampler_epoch(&self, epoch: u64) {
+        self.epoch.store(epoch, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::sparse::SpMat;
+    use crate::objective::Attractive;
+
+    fn small_setup(n: usize) -> (SpMat, Mat) {
+        let mut rng = Rng::new(11);
+        let y = Mat::from_fn(n, 3, |_, _| rng.normal());
+        let p = crate::affinity::sne_affinities_sparse(&y, (n as f64 / 8.0).max(2.0), n / 3);
+        let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+        (p, x)
+    }
+
+    /// The scaled sample estimators are unbiased for the exact EE
+    /// field/force: averaging over many epochs converges to the exact
+    /// row values.
+    #[test]
+    fn ee_field_estimator_is_unbiased() {
+        let (_, x) = small_setup(60);
+        let n = x.rows;
+        let row = 7;
+        let xn = x.row(row);
+        let exact: f64 = (0..n)
+            .filter(|&m| m != row)
+            .map(|m| (-sqdist(xn, x.row(m))).exp())
+            .sum();
+        let k = 16;
+        let scale = (n - 1) as f64 / k as f64;
+        let epochs = 4000;
+        let mut mean = 0.0;
+        for e in 1..=epochs {
+            let mut rng = row_rng(99, e, row as u64);
+            mean += scale * gaussian_row_sampled(&x, row, k, &mut rng, None);
+        }
+        mean /= epochs as f64;
+        let rel = (mean - exact).abs() / exact;
+        assert!(rel < 0.05, "estimator mean {mean} vs exact {exact} (rel {rel})");
+    }
+
+    /// Row streams are keyed by (seed, epoch, row): same key replays the
+    /// identical draw sequence; changing any component changes it.
+    #[test]
+    fn row_streams_are_counter_keyed() {
+        let draws = |seed, epoch, row| -> Vec<usize> {
+            let mut rng = row_rng(seed, epoch, row);
+            (0..32).map(|_| draw_negative(&mut rng, 100, row as usize)).collect()
+        };
+        assert_eq!(draws(1, 5, 3), draws(1, 5, 3));
+        assert_ne!(draws(1, 5, 3), draws(2, 5, 3));
+        assert_ne!(draws(1, 5, 3), draws(1, 6, 3));
+        assert_ne!(draws(1, 5, 3), draws(1, 5, 4));
+    }
+
+    /// Negatives never hit the row itself and cover all other indices.
+    #[test]
+    fn draw_negative_excludes_self() {
+        let n = 13;
+        for row in [0usize, 6, 12] {
+            let mut rng = row_rng(3, 1, row as u64);
+            let mut seen = vec![false; n];
+            for _ in 0..2000 {
+                let m = draw_negative(&mut rng, n, row);
+                assert_ne!(m, row);
+                seen[m] = true;
+            }
+            let covered = seen.iter().filter(|&&s| s).count();
+            assert_eq!(covered, n - 1, "row {row}: all negatives reachable");
+        }
+    }
+
+    /// eval() advances the epoch; energy() at the same X reproduces the
+    /// eval energy bitwise (same epoch, same samples, same fold).
+    #[test]
+    fn energy_probes_share_the_eval_epoch() {
+        let (p, x) = small_setup(48);
+        let engine = NegativeSamplingEngine::new(8, 42);
+        let wp = Attractive::Sparse(p);
+        let wm = Repulsive::Uniform(1.0);
+        for method in [Method::Ee, Method::Ssne, Method::Tsne] {
+            let ctx = EngineContext { method, wp: &wp, wm: &wm, lambda: 2.0, dim: 2 };
+            let (e1, _) = engine.eval(&ctx, &x);
+            assert_eq!(e1.to_bits(), engine.energy(&ctx, &x).to_bits());
+            assert_eq!(e1.to_bits(), engine.energy(&ctx, &x).to_bits());
+            let (e2, _) = engine.eval(&ctx, &x);
+            assert_ne!(e1.to_bits(), e2.to_bits(), "{}: epochs must differ", method.name());
+        }
+    }
+
+    /// set_sampler_epoch replays: two engines with the same seed produce
+    /// bitwise-identical evaluations when their epochs are aligned.
+    #[test]
+    fn epoch_restore_replays_evaluations() {
+        let (p, x) = small_setup(48);
+        let wp = Attractive::Sparse(p);
+        let wm = Repulsive::Uniform(1.0);
+        let ctx =
+            EngineContext { method: Method::Tsne, wp: &wp, wm: &wm, lambda: 1.0, dim: 2 };
+        let a = NegativeSamplingEngine::new(8, 7);
+        let (ea1, _) = a.eval(&ctx, &x);
+        let (ea2, ga2) = a.eval(&ctx, &x);
+        assert_eq!(a.sampler_state(), Some((7, 2)));
+        let b = NegativeSamplingEngine::new(8, 7);
+        b.set_sampler_epoch(1); // skip epoch 1: next eval runs at 2
+        let (eb2, gb2) = b.eval(&ctx, &x);
+        assert_eq!(ea2.to_bits(), eb2.to_bits());
+        assert_eq!(ga2.max_abs_diff(&gb2), 0.0);
+        assert_ne!(ea1.to_bits(), ea2.to_bits());
+    }
+
+    /// Degenerate sizes: n = 1 has no negatives to draw — repulsion is
+    /// skipped and the result stays finite (z-guard).
+    #[test]
+    fn single_point_is_finite() {
+        let x = Mat::from_vec(1, 2, vec![0.3, -0.4]);
+        let wp = Attractive::Sparse(SpMat::from_triplets(
+            1,
+            1,
+            std::iter::empty::<(usize, usize, f64)>(),
+        ));
+        let wm = Repulsive::Uniform(1.0);
+        let engine = NegativeSamplingEngine::new(4, 0);
+        for method in [Method::Ee, Method::Ssne, Method::Tsne] {
+            let ctx = EngineContext { method, wp: &wp, wm: &wm, lambda: 1.0, dim: 2 };
+            let (e, g) = engine.eval(&ctx, &x);
+            assert!(e.is_finite(), "{}: energy {e}", method.name());
+            assert!(g.row(0).iter().all(|v| v.is_finite()), "{}: gradient", method.name());
+        }
+    }
+}

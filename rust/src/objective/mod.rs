@@ -151,6 +151,16 @@ pub trait Objective: Send + Sync {
     fn grad_accuracy(&self) -> f64 {
         1e-12
     }
+    /// Sampler `(seed, epoch)` when the backing engine is stochastic
+    /// (negative sampling); `None` for deterministic objectives. The
+    /// checkpoint layer persists this so resumed runs draw the exact
+    /// same sample sequence.
+    fn sampler_state(&self) -> Option<(u64, u64)> {
+        None
+    }
+    /// Restore the sampler epoch on checkpoint resume (no-op for
+    /// deterministic objectives).
+    fn set_sampler_epoch(&self, _epoch: u64) {}
 }
 
 #[cfg(test)]

@@ -4,8 +4,10 @@
 //! the data-side weights (W⁺, W⁻, λ, method) and delegates every
 //! energy/gradient evaluation to a pluggable
 //! [`GradientEngine`](crate::objective::engine::GradientEngine) —
-//! the exact O(N²d) row sweeps ([`engine::exact`]) or the
-//! O(N log N + nnz) Barnes–Hut engine ([`engine::barneshut`]). The
+//! the exact O(N²d) row sweeps ([`engine::exact`]), the
+//! O(N log N + nnz) Barnes–Hut engine ([`engine::barneshut`]), or the
+//! stochastic O(nnz + Nk) negative-sampling engine
+//! ([`engine::negsample`]). The
 //! default ([`EngineSpec::Auto`]) picks Barnes–Hut for large
 //! kNN-sparse problems in d ≤ 3 and the exact engine everywhere else,
 //! so small-N behavior is bit-identical to the pre-refactor code.
@@ -69,7 +71,8 @@ impl NativeObjective {
         NativeObjective::new_with_engine(method, p, Repulsive::Uniform(1.0), lambda, dim, spec)
     }
 
-    /// Name of the resolved engine ("exact" / "barnes-hut").
+    /// Name of the resolved engine ("exact" / "barnes-hut" /
+    /// "neg-sample").
     pub fn engine_name(&self) -> &'static str {
         self.engine.name()
     }
@@ -127,6 +130,14 @@ impl Objective for NativeObjective {
 
     fn eval_count(&self) -> usize {
         self.evals.load(Ordering::Relaxed)
+    }
+
+    fn sampler_state(&self) -> Option<(u64, u64)> {
+        self.engine.sampler_state()
+    }
+
+    fn set_sampler_epoch(&self, epoch: u64) {
+        self.engine.set_sampler_epoch(epoch);
     }
 }
 

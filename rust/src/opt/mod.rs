@@ -694,11 +694,21 @@ impl<'s> Minimizer<'s> {
         // accept
         let mut x_new = Mat::zeros(self.x.rows, self.x.cols);
         vecops::step(&self.x.data, alpha, &p.data, &mut x_new.data);
-        let g_new = match g_new {
-            Some(g) => g,
+        let (e_new, g_new) = match g_new {
+            Some(g) => (e_new, g),
             None => {
                 self.nfev += 1;
-                obj.eval(&x_new).1
+                // take the accept evaluation's energy along with its
+                // gradient, not the line search's: a stochastic engine
+                // (negative sampling) advances its sample epoch on every
+                // gradient eval, and `self.e` must be anchored in the
+                // epoch the next iteration's line-search probes score
+                // against — otherwise sampling noise, which does not
+                // shrink with the step size, defeats the Armijo test
+                // near convergence. For deterministic engines this
+                // differs from the line-search energy only by summation
+                // order.
+                obj.eval(&x_new)
             }
         };
         self.strategy.notify_accept(&x_new, &g_new, alpha);
@@ -825,6 +835,12 @@ pub struct CheckpointMeta {
     /// FNV-1a fingerprint of the attractive weights
     /// ([`crate::model::codec::weights_fingerprint`])
     pub weights_fp: u64,
+    /// Stochastic-engine sampler `(seed, epoch)` — `None` for
+    /// deterministic engines. The seed is part of the run's identity
+    /// (matched on resume); the epoch is *state*, stamped at checkpoint
+    /// time and restored into the engine so the resumed run continues
+    /// the exact sample sequence.
+    pub sampler: Option<(u64, u64)>,
 }
 
 impl CheckpointMeta {
@@ -872,6 +888,15 @@ impl CheckpointMeta {
         anyhow::ensure!(
             self.weights_fp == expected.weights_fp,
             "checkpoint was trained on different affinities (fingerprint mismatch)"
+        );
+        // seed is identity (a different seed is a different trajectory);
+        // epoch is state and intentionally not compared — the job's
+        // fresh meta always carries epoch 0
+        anyhow::ensure!(
+            self.sampler.map(|(seed, _)| seed) == expected.sampler.map(|(seed, _)| seed),
+            "checkpoint sampler seed {:?} does not match the run's {:?}",
+            self.sampler.map(|(seed, _)| seed),
+            expected.sampler.map(|(seed, _)| seed)
         );
         Ok(())
     }

@@ -1,11 +1,20 @@
 //! Minimal data-parallel helpers on std::thread::scope.
 //!
-//! The offline build has no rayon (see Cargo.toml); these cover the two
-//! patterns the hot paths need — a parallel indexed map and a parallel
-//! sum — with contiguous chunking (cache-friendly for row-major data).
-//! Thread count defaults to the machine's parallelism, overridable with
-//! `NLE_THREADS` (the figure harnesses set expectations in
-//! EXPERIMENTS.md).
+//! The offline build has no rayon (see Cargo.toml); these cover the
+//! patterns the hot paths need — a parallel indexed map ([`par_map`], a
+//! per-worker-state variant [`par_map_with`], and a row-writing variant
+//! [`par_rows_with`]), a parallel sum ([`par_sum`]), and a parallel run
+//! over owned jobs ([`par_run`]) — with contiguous chunking
+//! (cache-friendly for row-major data). Thread count defaults to the
+//! machine's parallelism, overridable with `NLE_THREADS` (the figure
+//! harnesses set expectations in EXPERIMENTS.md).
+//!
+//! Determinism notes: `par_map`/`par_map_with`/`par_rows_with`/`par_run`
+//! return results in index order, so a caller that folds them serially
+//! gets the same floating-point result for *any* thread count. `par_sum`
+//! reduces per-chunk partials and is therefore only deterministic for a
+//! fixed thread count — engines that promise thread-count-independent
+//! results (negative sampling) must reduce ordered maps instead.
 
 use std::sync::OnceLock;
 
@@ -73,6 +82,125 @@ pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
     out.into_iter().map(|v| v.expect("worker filled every slot")).collect()
 }
 
+/// [`par_map`] with per-worker scratch state: each worker constructs
+/// one `S` via `make_state` and threads it through every index of its
+/// chunk. This is what lets the gradient engines reuse one force/scratch
+/// buffer per worker instead of allocating per row. Order-preserving;
+/// the serial fallback uses a single state.
+pub fn par_map_with<T, S, MS, F>(n: usize, make_state: MS, f: F) -> Vec<T>
+where
+    T: Send,
+    MS: Fn() -> S + Sync,
+    F: Fn(usize, &mut S) -> T + Sync,
+{
+    let Some(ranges) = chunk_plan(n) else {
+        let mut state = make_state();
+        return (0..n).map(|i| f(i, &mut state)).collect();
+    };
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let (fref, mref) = (&f, &make_state);
+    std::thread::scope(|s| {
+        let mut rest = out.as_mut_slice();
+        let mut consumed = 0;
+        for &(start, end) in &ranges {
+            let (head, tail) = rest.split_at_mut(end - consumed);
+            rest = tail;
+            consumed = end;
+            s.spawn(move || {
+                let mut state = mref();
+                for (off, slot) in head.iter_mut().enumerate() {
+                    *slot = Some(fref(start + off, &mut state));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("worker filled every slot")).collect()
+}
+
+/// Parallel per-row computation writing straight into a preallocated
+/// row-major buffer (`out.len() == n * width`), with per-worker scratch
+/// state as in [`par_map_with`]. Each worker owns a contiguous block of
+/// rows (disjoint `split_at_mut` slices), so no row is written twice;
+/// per-row return values come back in row order. This removes both the
+/// per-row gradient allocation and the collect/copy pass from the
+/// engine hot paths: the output row *is* the working buffer.
+pub fn par_rows_with<R, S, MS, F>(
+    n: usize,
+    width: usize,
+    out: &mut [f64],
+    make_state: MS,
+    f: F,
+) -> Vec<R>
+where
+    R: Send,
+    MS: Fn() -> S + Sync,
+    F: Fn(usize, &mut [f64], &mut S) -> R + Sync,
+{
+    assert_eq!(out.len(), n * width, "out buffer must be n*width");
+    assert!(width > 0 || n == 0, "rows must have nonzero width");
+    let Some(ranges) = chunk_plan(n) else {
+        let mut state = make_state();
+        return out
+            .chunks_mut(width.max(1))
+            .take(n)
+            .enumerate()
+            .map(|(i, rowbuf)| f(i, rowbuf, &mut state))
+            .collect();
+    };
+    let (fref, mref) = (&f, &make_state);
+    let chunk_results: Vec<Vec<R>> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(ranges.len());
+        let mut rest = out;
+        let mut consumed = 0;
+        for &(start, end) in &ranges {
+            let (head, tail) = rest.split_at_mut((end - consumed) * width);
+            rest = tail;
+            consumed = end;
+            handles.push(s.spawn(move || {
+                let mut state = mref();
+                let mut local = Vec::with_capacity(end - start);
+                for (off, rowbuf) in head.chunks_mut(width).enumerate() {
+                    local.push(fref(start + off, rowbuf, &mut state));
+                }
+                local
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("par_rows_with worker panicked"))
+            .collect()
+    });
+    let mut results = Vec::with_capacity(n);
+    for mut c in chunk_results {
+        results.append(&mut c);
+    }
+    results
+}
+
+/// Run `f` over a vector of *owned* jobs in parallel (one thread per
+/// job), returning results in job order. Unlike [`par_map`], a job may
+/// carry `&mut` borrows — e.g. disjoint sub-slices carved with
+/// `split_at_mut` — which is what the parallel tree build needs. Serial
+/// fallback for a single worker or fewer than two jobs; callers are
+/// expected to produce O(threads) jobs, not O(n).
+pub fn par_run<J, T, F>(jobs: Vec<J>, f: F) -> Vec<T>
+where
+    J: Send,
+    T: Send,
+    F: Fn(J) -> T + Sync,
+{
+    if num_threads() <= 1 || jobs.len() < 2 {
+        return jobs.into_iter().map(f).collect();
+    }
+    let fref = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> =
+            jobs.into_iter().map(|j| s.spawn(move || fref(j))).collect();
+        handles.into_iter().map(|h| h.join().expect("par_run worker panicked")).collect()
+    })
+}
+
 /// Parallel sum of `f(i)` over `0..n`. Same chunking (and the same
 /// serial cutoff) as [`par_map`].
 pub fn par_sum<F: Fn(usize) -> f64 + Sync>(n: usize, f: F) -> f64 {
@@ -112,6 +240,72 @@ mod tests {
         let serial: f64 = (0..10_000).map(|i| (i as f64).sqrt()).sum();
         let parallel = par_sum(10_000, |i| (i as f64).sqrt());
         assert!((serial - parallel).abs() < 1e-6);
+    }
+
+    #[test]
+    fn par_map_with_threads_state_and_matches_serial() {
+        // state identity doesn't affect results; each worker gets its own
+        let n = 500;
+        let expect: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let got = par_map_with(
+            n,
+            || vec![0.0f64; 4],
+            |i, scratch| {
+                scratch[0] = (i as f64).sin(); // scribble on the state
+                scratch[0]
+            },
+        );
+        assert_eq!(expect, got);
+        assert_eq!(par_map_with(0, || (), |i, _| i), Vec::<usize>::new());
+        assert_eq!(par_map_with(3, || (), |i, _| i * 2), vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn par_rows_with_fills_every_row_once() {
+        for n in [0usize, 3, SERIAL_CUTOFF, 257] {
+            let width = 3;
+            let mut out = vec![-1.0; n * width];
+            let sums = par_rows_with(
+                n,
+                width,
+                &mut out,
+                || 0usize,
+                |i, row, calls| {
+                    *calls += 1;
+                    for (j, v) in row.iter_mut().enumerate() {
+                        *v = (i * width + j) as f64;
+                    }
+                    row.iter().sum::<f64>()
+                },
+            );
+            assert_eq!(sums.len(), n);
+            for i in 0..n {
+                let base = (i * width) as f64;
+                assert_eq!(sums[i], 3.0 * base + 3.0);
+                for j in 0..width {
+                    assert_eq!(out[i * width + j], (i * width + j) as f64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_run_preserves_job_order_and_mut_borrows() {
+        let mut buf: Vec<u64> = vec![0; 100];
+        let (a, b) = buf.split_at_mut(50);
+        let jobs = vec![(0u64, a), (1u64, b)];
+        let res = par_run(jobs, |(tag, seg)| {
+            for (i, v) in seg.iter_mut().enumerate() {
+                *v = tag * 1000 + i as u64;
+            }
+            tag
+        });
+        assert_eq!(res, vec![0, 1]);
+        assert_eq!(buf[0], 0);
+        assert_eq!(buf[49], 49);
+        assert_eq!(buf[50], 1000);
+        assert_eq!(buf[99], 1049);
+        assert_eq!(par_run(Vec::<u8>::new(), |j| j), Vec::<u8>::new());
     }
 
     #[test]

@@ -1,0 +1,244 @@
+//! Stochastic-engine quality, determinism and degenerate-geometry
+//! guarantees:
+//!
+//! * the negative-sampling engine trains embeddings whose k-ary
+//!   neighborhood preservation matches the Barnes–Hut engine's within
+//!   0.05 on the swiss-roll workload (the estimator's noise must not
+//!   cost embedding quality);
+//! * its evaluations are bitwise identical across processes and across
+//!   `NLE_THREADS` settings (counter-keyed per-row RNG + ordered
+//!   reductions) — verified by re-running this test binary under
+//!   different thread counts and comparing gradient fingerprints;
+//! * a checkpointed + resumed stochastic run replays the uninterrupted
+//!   run bitwise (the sampler epoch rides in the checkpoint);
+//! * the `z == 0` partition-sum guard: degenerate geometry (points so
+//!   far apart every pairwise kernel underflows to zero) keeps E and
+//!   ∇E finite on every engine instead of producing 4λ/0 = ∞ · 0 = NaN.
+
+use std::sync::Arc;
+
+use nle::linalg::sparse::SpMat;
+use nle::prelude::*;
+
+/// FNV-1a over the raw f64 bit patterns — a stable order-sensitive
+/// fingerprint for bitwise gradient comparison across processes.
+fn fingerprint(e: f64, g: &Mat) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |bits: u64| {
+        for b in bits.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    mix(e.to_bits());
+    for &v in &g.data {
+        mix(v.to_bits());
+    }
+    h
+}
+
+/// The evaluation whose bitwise fingerprint must not depend on the
+/// worker count: one fresh-engine gradient eval (epoch 1) per method.
+fn neg_fingerprint() -> u64 {
+    let data = nle::data::synth::swiss_roll(300, 3, 0.05, 7);
+    let p = nle::affinity::sne_affinities_sparse(&data.y, 8.0, 16);
+    let x = nle::init::random_init(300, 2, 1.0, 5);
+    let mut h: u64 = 0;
+    for (method, lam) in [(Method::Ee, 100.0), (Method::Ssne, 1.0), (Method::Tsne, 1.0)] {
+        let obj = NativeObjective::with_engine(
+            method,
+            Attractive::Sparse(p.clone()),
+            lam,
+            2,
+            EngineSpec::NegSample { k: 8, seed: 11 },
+        );
+        assert_eq!(obj.engine_name(), "neg-sample");
+        let (e, g) = obj.eval(&x);
+        h = h.rotate_left(17) ^ fingerprint(e, &g);
+    }
+    h
+}
+
+/// Bitwise determinism across thread counts: the parent computes the
+/// fingerprint under the ambient `NLE_THREADS`, then re-executes this
+/// exact test in child processes pinned to 1 and 3 workers (the thread
+/// count is read once per process, so a subprocess is the only way to
+/// vary it) and demands identical bits.
+#[test]
+fn neg_eval_is_bitwise_identical_across_thread_counts() {
+    const CHILD_ENV: &str = "NLE_QP_CHILD";
+    if std::env::var(CHILD_ENV).is_ok() {
+        println!("NEG_FP {:016x}", neg_fingerprint());
+        return;
+    }
+    let here = neg_fingerprint();
+    // same-process re-evaluation from a fresh engine is already bitwise
+    // stable (fresh engine -> same epoch 1 -> same draws)
+    assert_eq!(here, neg_fingerprint());
+    for threads in ["1", "3"] {
+        let out = std::process::Command::new(std::env::current_exe().unwrap())
+            .args(["neg_eval_is_bitwise_identical_across_thread_counts", "--exact", "--nocapture"])
+            .env(CHILD_ENV, "1")
+            .env("NLE_THREADS", threads)
+            .output()
+            .expect("spawning the child test process");
+        assert!(out.status.success(), "child with NLE_THREADS={threads} failed");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        let fp = stdout
+            .lines()
+            .find_map(|l| l.strip_prefix("NEG_FP "))
+            .unwrap_or_else(|| panic!("no fingerprint in child output:\n{stdout}"));
+        let fp = u64::from_str_radix(fp.trim(), 16).unwrap();
+        assert_eq!(
+            fp, here,
+            "NLE_THREADS={threads} changed the stochastic gradient bits"
+        );
+    }
+}
+
+/// Small stochastic job for the checkpoint/resume replay test: sparse
+/// W+, plain gradient descent (backtracking line search — its probes
+/// score the gradient eval's epoch), tolerances tight enough that the
+/// budget is always exhausted.
+fn neg_job(max_iters: usize) -> EmbeddingJob {
+    let data = nle::data::synth::swiss_roll(64, 3, 0.05, 13);
+    let p = nle::affinity::sne_affinities_sparse(&data.y, 5.0, 8);
+    let mut job = EmbeddingJob::native(
+        "neg-ckpt",
+        Method::Ee,
+        10.0,
+        Arc::new(Attractive::Sparse(p)),
+        "gd",
+        None,
+    );
+    job.engine = EngineSpec::NegSample { k: 4, seed: 3 };
+    job.opts.max_iters = max_iters;
+    job.opts.rel_tol = 1e-14;
+    job.opts.grad_tol = 1e-12;
+    job
+}
+
+/// A killed-and-resumed stochastic run must replay the uninterrupted
+/// one bitwise: the checkpoint stamps the live sampler epoch, resume
+/// restores it before the first evaluation, and every subsequent draw
+/// continues the (seed, epoch, row) counter sequence.
+#[test]
+fn neg_checkpoint_resume_replays_bitwise() {
+    let path = std::env::temp_dir().join("nle_neg_ckpt_parity.nlec");
+    let job = neg_job(30);
+    let mut partial = job.clone();
+    partial.opts.max_iters = 12;
+    partial
+        .run_resumable(RunControl {
+            checkpoint_every: Some(5),
+            checkpoint_path: Some(path.clone()),
+            ..Default::default()
+        })
+        .unwrap();
+    let ck = TrainCheckpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    // the checkpoint carries the sampler identity + live epoch
+    let (seed, epoch) = ck.meta.sampler.expect("neg checkpoint must carry sampler state");
+    assert_eq!(seed, 3);
+    assert!(epoch > 0, "live epoch must have been stamped, got {epoch}");
+    let resumed =
+        job.run_resumable(RunControl { resume: Some(ck), ..Default::default() }).unwrap();
+    let full = job.run().unwrap();
+    assert_eq!(resumed.iters, full.iters);
+    assert_eq!(resumed.stop, full.stop);
+    for (a, b) in resumed.x.data.iter().zip(&full.x.data) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    for (a, b) in resumed.trace.iter().zip(&full.trace) {
+        assert_eq!(a.e.to_bits(), b.e.to_bits(), "trace diverged at iter {}", a.iter);
+        assert_eq!(a.nfev, b.nfev);
+    }
+}
+
+/// Resume refuses a different sampler seed (a different seed is a
+/// different objective realization), but accepts any epoch (the epoch
+/// is state, stamped live at checkpoint time).
+#[test]
+fn neg_resume_rejects_a_different_seed() {
+    let path = std::env::temp_dir().join("nle_neg_ckpt_seed.nlec");
+    let job = neg_job(12);
+    job.run_resumable(RunControl {
+        checkpoint_every: Some(5),
+        checkpoint_path: Some(path.clone()),
+        ..Default::default()
+    })
+    .unwrap();
+    let ck = TrainCheckpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let mut other = neg_job(12);
+    other.engine = EngineSpec::NegSample { k: 4, seed: 4 };
+    let err = other.run_resumable(RunControl { resume: Some(ck), ..Default::default() });
+    assert!(err.is_err(), "a different sampler seed must refuse to resume");
+}
+
+/// Train the same swiss roll under Barnes–Hut and under negative
+/// sampling; the k-ary neighborhood preservation of the two embeddings
+/// must agree within 0.05 (the acceptance bound: sampling noise shifts
+/// individual coordinates, not embedding quality).
+#[test]
+fn neg_embedding_quality_matches_barnes_hut() {
+    let n = 600;
+    let data = nle::data::synth::swiss_roll(n, 3, 0.05, 42);
+    let p = nle::affinity::sne_affinities_sparse(&data.y, 20.0, 60);
+    let x0 = nle::init::random_init(n, 2, 1e-4, 0);
+    let opts = OptOptions { max_iters: 60, ..Default::default() };
+    let recall_for = |spec: EngineSpec| {
+        let obj =
+            NativeObjective::with_engine(Method::Ee, Attractive::Sparse(p.clone()), 100.0, 2, spec);
+        let mut sd = SpectralDirection::new(Some(7));
+        let res = minimize(&obj, &mut sd, &x0, &opts);
+        assert!(res.e.is_finite());
+        nle::metrics::knn_recall(&data.y, &res.x, 10)
+    };
+    let r_bh = recall_for(EngineSpec::BarnesHut { theta: 0.5 });
+    let r_neg = recall_for(EngineSpec::NegSample { k: 256, seed: 1 });
+    assert!(r_bh > 0.3, "BH baseline degenerated: recall {r_bh}");
+    assert!(
+        (r_bh - r_neg).abs() <= 0.05,
+        "neighborhood agreement diverged: bh {r_bh} vs neg {r_neg}"
+    );
+}
+
+/// z-guard regression: geometry whose every repulsive kernel underflows
+/// to zero (two points 1e160 apart: d² overflows, exp(−d²) and the
+/// Student kernel both hit exactly 0, so the partition sum z is 0).
+/// The old `scale = 4λ/z` produced ∞, then ∞ · 0 = NaN in the gradient;
+/// the guarded path must stay finite on every engine.
+#[test]
+fn zero_partition_sum_stays_finite_on_every_engine() {
+    let n = 2;
+    // empty W+ so the (infinite-distance) attraction contributes 0
+    let p = SpMat::from_triplets(n, n, std::iter::empty::<(usize, usize, f64)>());
+    let mut x = Mat::zeros(n, 2);
+    x.data[2] = 1e160; // d² = 1e320 -> inf -> kernels underflow to 0
+    for method in [Method::Ssne, Method::Tsne] {
+        for spec in [
+            EngineSpec::Exact,
+            EngineSpec::BarnesHut { theta: 0.5 },
+            EngineSpec::NegSample { k: 2, seed: 0 },
+        ] {
+            let obj = NativeObjective::with_engine(
+                method,
+                Attractive::Sparse(p.clone()),
+                1.0,
+                2,
+                spec,
+            );
+            let (e, g) = obj.eval(&x);
+            assert!(e.is_finite(), "{} {spec:?}: energy {e}", method.name());
+            assert!(
+                g.data.iter().all(|v| v.is_finite()),
+                "{} {spec:?}: non-finite gradient {:?}",
+                method.name(),
+                g.data
+            );
+            let e2 = obj.energy(&x);
+            assert!(e2.is_finite(), "{} {spec:?}: energy() {e2}", method.name());
+        }
+    }
+}

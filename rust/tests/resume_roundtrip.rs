@@ -32,6 +32,7 @@ fn meta_for(obj: &NativeObjective, strategy: &str, n: usize) -> CheckpointMeta {
         engine: obj.engine_name().to_string(),
         backend: "native".to_string(),
         weights_fp: nle::model::codec::weights_fingerprint(obj.attractive()),
+        sampler: obj.sampler_state(),
     }
 }
 
@@ -284,6 +285,16 @@ fn resume_refuses_wrong_problem() {
     let mut other = meta.clone();
     other.backend = "xla".into();
     assert!(meta.ensure_matches(&other).is_err());
+    // sampler seed is identity (different seed = different trajectory);
+    // the epoch is state and must NOT be matched
+    let mut other = meta.clone();
+    other.sampler = Some((1, 0));
+    assert!(meta.ensure_matches(&other).is_err());
+    let mut a = meta.clone();
+    a.sampler = Some((5, 120));
+    let mut b = meta.clone();
+    b.sampler = Some((5, 0));
+    assert!(a.ensure_matches(&b).is_ok());
     // size mismatch is caught by state validation too
     let state = mm.state();
     assert!(state.validate(n + 1, 2).is_err());
