@@ -1,0 +1,31 @@
+//! Spectral warm-start cost: rsvd vs Lanczos vs the random baseline
+//! across N — the init stage must stay a small fraction of a training
+//! run's wall-clock for the warm start to pay for itself.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::*;
+
+use nle::init::{InitSpec, SpectralSolver};
+
+fn main() {
+    header("spectral init (swiss roll, kNN-sparse affinities)");
+    for n in [1000usize, 4000, 8000] {
+        let data = nle::data::synth::swiss_roll(n, 3, 0.05, 42);
+        let p = nle::affinity::sne_affinities_sparse(&data.y, 15.0, 20);
+        for (label, spec) in [
+            ("random", InitSpec::Random),
+            ("lanczos", InitSpec::Spectral { solver: SpectralSolver::Lanczos }),
+            (
+                "rsvd(q=4,p=8)",
+                InitSpec::Spectral { solver: SpectralSolver::default_rsvd() },
+            ),
+        ] {
+            let (m, lo, hi) = time_median(1, 3, || {
+                let x0 = spec.build(&p, 2, 1e-4, 0);
+                assert_eq!(x0.rows, n);
+            });
+            report(&format!("N={n}/{label}"), m, lo, hi, "");
+        }
+    }
+}

@@ -61,7 +61,7 @@ pub fn run(cfg: &Fig2Config) -> anyhow::Result<()> {
                     sname,
                     Some(cfg.budget),
                 );
-                job.init.seed = seed as u64;
+                job.init_seed = seed as u64;
                 job.opts.max_iters = 100_000;
                 job.opts.rel_tol = 1e-12; // budget-limited, not tol-limited
                 jobs.push(job);

@@ -1,0 +1,277 @@
+//! Initialization benchmark harness (the `init` CLI command): measure
+//! what a spectral warm start actually buys at scale — init wall-clock
+//! versus optimizer iterations saved.
+//!
+//! For each requested [`InitSpec`] the harness builds the same
+//! kNN-sparse affinities once, times the init stage in isolation
+//! ([`EmbeddingJob::make_init_x`]), then runs the optimizer from that
+//! start and records the energy trace. Quality is anchored across runs:
+//! with `E₀` the starting energy of the *random* baseline and `E*` the
+//! best final energy any init reached, the quality bar is
+//! `E_thresh = E* + frac·(E₀ − E*)` and "iterations to quality" is the
+//! first iteration whose energy drops to the bar. A spectral start that
+//! begins below the bar legitimately scores 0 — that is the point.
+//!
+//! Output: `results/init.csv` (one row per init) plus
+//! `results/BENCH_init.json`, the machine-readable summary CI uploads.
+//! The headline acceptance numbers live here: at N = 16384 the
+//! spectral-rsvd start should need ≥ 2× fewer iterations to quality
+//! than random, with the init stage ≤ 10% of its total wall-clock.
+
+use std::io::Write;
+use std::time::Instant;
+
+use super::common::results_dir;
+use crate::coordinator::EmbeddingJob;
+use crate::index::IndexSpec;
+use crate::init::{InitSpec, SpectralSolver};
+use crate::objective::{Attractive, Method};
+
+pub struct InitBenchConfig {
+    /// Problem size (swiss-roll points).
+    pub n: usize,
+    /// Inits to compare (resolved per-run; `Auto` is legal).
+    pub inits: Vec<InitSpec>,
+    pub method: Method,
+    pub lambda: f64,
+    pub perplexity: f64,
+    /// Neighbors per point for the sparse attractive graph.
+    pub knn: usize,
+    /// Direction strategy for the optimizer runs.
+    pub strategy: String,
+    /// Iteration cap per run (the trace is what is scored).
+    pub max_iters: usize,
+    /// Quality bar as a fraction of the random baseline's energy drop:
+    /// `E_thresh = E* + frac·(E₀ − E*)`.
+    pub quality_frac: f64,
+    /// Dataset seed (init seeds are fixed at 0 so runs differ only in
+    /// the init strategy).
+    pub seed: u64,
+    pub csv_name: String,
+    /// Machine-readable summary (None to skip).
+    pub json_name: Option<String>,
+}
+
+impl Default for InitBenchConfig {
+    fn default() -> Self {
+        InitBenchConfig {
+            n: 16384,
+            inits: vec![
+                InitSpec::Random,
+                InitSpec::Spectral { solver: SpectralSolver::default_rsvd() },
+            ],
+            method: Method::Ee,
+            lambda: 100.0,
+            perplexity: 20.0,
+            knn: 20,
+            strategy: "sd".to_string(),
+            max_iters: 200,
+            quality_frac: 0.05,
+            seed: 42,
+            csv_name: "init.csv".to_string(),
+            json_name: Some("BENCH_init.json".to_string()),
+        }
+    }
+}
+
+/// One measured init run.
+struct InitRow {
+    name: String,
+    init_s: f64,
+    opt_s: f64,
+    e0: f64,
+    e_final: f64,
+    iters: usize,
+    /// First iteration at or below the quality bar (filled in after
+    /// all runs fix the bar); `None` = never reached it.
+    to_quality: Option<usize>,
+    /// `(iter, e)` pairs for the post-hoc quality scoring.
+    trace: Vec<(usize, f64)>,
+}
+
+pub fn run(cfg: &InitBenchConfig) -> anyhow::Result<()> {
+    anyhow::ensure!(!cfg.inits.is_empty(), "no inits to compare");
+    anyhow::ensure!(
+        cfg.quality_frac > 0.0 && cfg.quality_frac < 1.0,
+        "quality_frac must be in (0, 1)"
+    );
+    let threads = crate::par::num_threads();
+    let dir = results_dir();
+
+    // shared problem: same data, same affinities, same optimizer knobs
+    // for every init — the start is the only thing that varies
+    let data = crate::data::synth::swiss_roll(cfg.n, 3, 0.05, cfg.seed);
+    let n = data.y.rows;
+    let k = cfg.knn.min(n.saturating_sub(1)).max(1);
+    let t0 = Instant::now();
+    let wp = std::sync::Arc::new(Attractive::Sparse(crate::affinity::sne_affinities_sparse_with(
+        &data.y,
+        cfg.perplexity.min(k as f64),
+        k,
+        IndexSpec::Auto,
+    )));
+    let affinity_s = t0.elapsed().as_secs_f64();
+    println!(
+        "init bench: N = {n}, knn = {k}, {} threads, affinities {affinity_s:.2}s",
+        threads
+    );
+
+    let mut rows: Vec<InitRow> = Vec::new();
+    for &spec in &cfg.inits {
+        let name = spec.resolve(n).name();
+        let mut job = EmbeddingJob::native(
+            format!("init-{name}"),
+            cfg.method,
+            cfg.lambda,
+            wp.clone(),
+            &cfg.strategy,
+            None,
+        );
+        job.init = spec;
+        job.opts.max_iters = cfg.max_iters;
+        // time the init stage alone, then hand the result to the run as
+        // an explicit start so the cost is paid (and counted) once
+        let t0 = Instant::now();
+        let x0 = job.make_init_x(n);
+        let init_s = t0.elapsed().as_secs_f64();
+        job.init_x = Some(std::sync::Arc::new(x0));
+        let t0 = Instant::now();
+        let res = job.run()?;
+        let opt_s = t0.elapsed().as_secs_f64();
+        let e0 = res.trace.first().map(|t| t.e).unwrap_or(res.e);
+        let trace: Vec<(usize, f64)> = res.trace.iter().map(|t| (t.iter, t.e)).collect();
+        println!(
+            "  {name:<22} init {init_s:>8.3}s  opt {opt_s:>8.2}s  \
+             E0 = {e0:.6e}  E = {:.6e}  iters = {}",
+            res.e, res.iters
+        );
+        rows.push(InitRow {
+            name,
+            init_s,
+            opt_s,
+            e0,
+            e_final: res.e,
+            iters: res.iters,
+            to_quality: None,
+            trace,
+        });
+    }
+
+    // quality bar: anchored at the random baseline's start (first run
+    // if no random entry) and the best final energy any init reached
+    let e0_base = rows
+        .iter()
+        .find(|r| r.name == "random")
+        .unwrap_or(&rows[0])
+        .e0;
+    let e_best = rows.iter().map(|r| r.e_final).fold(f64::INFINITY, f64::min);
+    let e_thresh = e_best + cfg.quality_frac * (e0_base - e_best);
+    for r in rows.iter_mut() {
+        r.to_quality = r.trace.iter().find(|&&(_, e)| e <= e_thresh).map(|&(it, _)| it);
+    }
+
+    println!(
+        "  quality bar E <= {e_thresh:.6e} ({}% of the baseline drop above E* = {e_best:.6e})",
+        100.0 * cfg.quality_frac
+    );
+    for r in &rows {
+        let frac = r.init_s / (r.init_s + r.opt_s).max(1e-12);
+        match r.to_quality {
+            Some(it) => println!(
+                "  {:<22} {it:>5} iters to quality, init = {:.1}% of wall-clock",
+                r.name,
+                100.0 * frac
+            ),
+            None => println!("  {:<22} never reached the bar in {} iters", r.name, r.iters),
+        }
+    }
+
+    let path = dir.join(&cfg.csv_name);
+    let mut file = std::fs::File::create(&path)?;
+    writeln!(
+        file,
+        "init,n,knn,strategy,threads,init_s,opt_s,init_frac,e0,e_final,iters,iters_to_quality"
+    )?;
+    for r in &rows {
+        let frac = r.init_s / (r.init_s + r.opt_s).max(1e-12);
+        let toq = r.to_quality.map(|v| v as i64).unwrap_or(-1);
+        writeln!(
+            file,
+            "{},{n},{k},{},{threads},{:.6e},{:.6e},{frac:.6},{:.6e},{:.6e},{},{toq}",
+            r.name, cfg.strategy, r.init_s, r.opt_s, r.e0, r.e_final, r.iters
+        )?;
+    }
+    println!("init bench: wrote {}", path.display());
+
+    if let Some(json_name) = &cfg.json_name {
+        let jpath = dir.join(json_name);
+        let jrows: Vec<String> = rows
+            .iter()
+            .map(|r| {
+                let frac = r.init_s / (r.init_s + r.opt_s).max(1e-12);
+                let toq = r
+                    .to_quality
+                    .map(|v| v.to_string())
+                    .unwrap_or_else(|| "null".to_string());
+                format!(
+                    "    {{\"init\": \"{}\", \"init_s\": {:.6}, \"opt_s\": {:.6}, \
+                     \"init_frac\": {frac:.6}, \"e0\": {:.8e}, \"e_final\": {:.8e}, \
+                     \"iters\": {}, \"iters_to_quality\": {toq}}}",
+                    r.name, r.init_s, r.opt_s, r.e0, r.e_final, r.iters
+                )
+            })
+            .collect();
+        let json = format!(
+            "{{\n  \"bench\": \"init\",\n  \"n\": {n},\n  \"knn\": {k},\n  \
+             \"strategy\": \"{}\",\n  \"threads\": {threads},\n  \
+             \"max_iters\": {},\n  \"quality_frac\": {},\n  \
+             \"affinity_s\": {affinity_s:.4},\n  \"e_best\": {e_best:.8e},\n  \
+             \"e_thresh\": {e_thresh:.8e},\n  \"results\": [\n{}\n  ]\n}}\n",
+            cfg.strategy,
+            cfg.max_iters,
+            cfg.quality_frac,
+            jrows.join(",\n")
+        );
+        std::fs::write(&jpath, json)?;
+        println!("init bench: wrote {}", jpath.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny smoke run: completes, writes both outputs, rows sane.
+    #[test]
+    fn smoke_small() {
+        let cfg = InitBenchConfig {
+            n: 240,
+            inits: vec![
+                InitSpec::Random,
+                InitSpec::Spectral { solver: SpectralSolver::default_rsvd() },
+            ],
+            knn: 8,
+            perplexity: 5.0,
+            max_iters: 25,
+            csv_name: "init_smoke.csv".to_string(),
+            json_name: Some("BENCH_init_smoke.json".to_string()),
+            ..Default::default()
+        };
+        run(&cfg).unwrap();
+        let text = std::fs::read_to_string(results_dir().join("init_smoke.csv")).unwrap();
+        assert_eq!(text.lines().count(), 3, "header + one row per init");
+        for row in text.lines().skip(1) {
+            let cols: Vec<&str> = row.split(',').collect();
+            assert_eq!(cols.len(), 12);
+            let init_s: f64 = cols[5].parse().unwrap();
+            let e_final: f64 = cols[9].parse().unwrap();
+            assert!(init_s >= 0.0 && e_final.is_finite());
+        }
+        let json =
+            std::fs::read_to_string(results_dir().join("BENCH_init_smoke.json")).unwrap();
+        assert!(json.contains("\"bench\": \"init\""));
+        assert!(json.contains("\"iters_to_quality\""));
+        assert!(json.contains("\"spectral:rsvd:"));
+    }
+}

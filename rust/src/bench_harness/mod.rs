@@ -11,6 +11,7 @@ pub mod fig1;
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;
+pub mod init;
 pub mod rates;
 pub mod scalability;
 pub mod serve;

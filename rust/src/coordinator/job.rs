@@ -26,19 +26,6 @@ pub enum Backend {
     Xla(Arc<ArtifactRegistry>),
 }
 
-/// Initialization specification.
-#[derive(Clone, Debug)]
-pub struct InitSpec {
-    pub seed: u64,
-    pub scale: f64,
-}
-
-impl Default for InitSpec {
-    fn default() -> Self {
-        InitSpec { seed: 0, scale: 1e-4 }
-    }
-}
-
 /// A complete embedding job: weights + method + optimizer + budget.
 #[derive(Clone)]
 pub struct EmbeddingJob {
@@ -73,10 +60,18 @@ pub struct EmbeddingJob {
     /// HNSW adjacency built by the affinity stage — kept so the model
     /// artifact ships the *trained* index instead of rebuilding one
     pub hnsw: Option<Arc<HnswGraph>>,
-    /// explicit starting embedding (warm starts); `None` = random init
-    /// from [`EmbeddingJob::init`]
+    /// explicit starting embedding (warm starts/retraining); when set
+    /// it supersedes [`EmbeddingJob::init`]
     pub init_x: Option<Arc<Mat>>,
-    pub init: InitSpec,
+    /// initialization strategy (`Auto` = random below the spectral
+    /// threshold, rsvd-spectral warm start above it); the producer of
+    /// the fresh-run starting embedding when `init_x` is `None`
+    pub init: crate::init::InitSpec,
+    /// seed for the init's random draws (random init, rsvd test matrix)
+    pub init_seed: u64,
+    /// coordinate scale of the starting embedding (gaussian std for
+    /// random init; per-column max-abs for spectral)
+    pub init_scale: f64,
     pub opts: OptOptions,
     pub backend: Backend,
 }
@@ -121,7 +116,9 @@ impl EmbeddingJob {
             perplexity: None,
             hnsw: None,
             init_x: None,
-            init: InitSpec::default(),
+            init: crate::init::InitSpec::Auto,
+            init_seed: 0,
+            init_scale: 1e-4,
             opts: OptOptions { time_budget: budget, ..Default::default() },
             backend: Backend::Native,
         }
@@ -182,7 +179,9 @@ impl EmbeddingJob {
             perplexity: Some(eff_perplexity),
             hnsw,
             init_x: None,
-            init: InitSpec::default(),
+            init: crate::init::InitSpec::Auto,
+            init_seed: 0,
+            init_scale: 1e-4,
             opts: OptOptions::default(),
             backend: Backend::Native,
         }
@@ -225,6 +224,42 @@ impl EmbeddingJob {
         job.dim = model.dim();
         job.init_x = Some(Arc::new(model.x.vstack(&placed)));
         Ok(job)
+    }
+
+    /// Produce the fresh-run starting embedding from [`EmbeddingJob::init`]
+    /// (the path taken when no explicit `init_x` and no resume
+    /// checkpoint supersede it). Random stays O(nd); spectral builds the
+    /// normalized-Laplacian warm start from the job's attractive
+    /// weights (sparse W⁺ is used as-is; dense W⁺ is sparsified once).
+    pub fn make_init_x(&self, n: usize) -> Mat {
+        match self.init.resolve(n) {
+            crate::init::InitSpec::Random => {
+                crate::init::random_init(n, self.dim, self.init_scale, self.init_seed)
+            }
+            spec => match &*self.weights {
+                Attractive::Sparse(p) => {
+                    spec.build(p, self.dim, self.init_scale, self.init_seed)
+                }
+                Attractive::Dense(p) => spec.build(
+                    &crate::linalg::sparse::SpMat::from_dense(p, 0.0),
+                    self.dim,
+                    self.init_scale,
+                    self.init_seed,
+                ),
+            },
+        }
+    }
+
+    /// The initialization that actually produces this job's starting
+    /// embedding — the string the saved-model codec records. An explicit
+    /// `init_x` (warm-start retraining) supersedes the init spec; `Auto`
+    /// reports its resolved choice, not `"auto"`.
+    pub fn init_name(&self) -> String {
+        if self.init_x.is_some() {
+            "warm-start".to_string()
+        } else {
+            self.init.resolve(self.weights.n()).name()
+        }
     }
 
     /// Build the objective for this job.
@@ -332,12 +367,7 @@ impl EmbeddingJob {
                         );
                         (**x).clone()
                     }
-                    None => crate::init::random_init(
-                        obj.n(),
-                        self.dim,
-                        self.init.scale,
-                        self.init.seed,
-                    ),
+                    None => self.make_init_x(obj.n()),
                 };
                 Minimizer::new(obj.as_ref(), strategy.as_mut(), &x0, &self.opts)?
             }
@@ -419,7 +449,8 @@ impl EmbeddingJob {
             data,
             res.x.clone(),
             self.hnsw.clone(),
-        )?;
+        )?
+        .with_init(self.init_name());
         Ok((res, model))
     }
 }
@@ -690,6 +721,29 @@ mod tests {
         assert!(EmbeddingJob::warm_start("bad", &model, &bad, IndexSpec::Exact).is_err());
         let empty = Mat::zeros(0, 3);
         assert!(EmbeddingJob::warm_start("bad", &model, &empty, IndexSpec::Exact).is_err());
+    }
+
+    #[test]
+    fn init_spec_produces_x0_and_is_recorded_in_the_model() {
+        let data = crate::data::synth::swiss_roll(80, 3, 0.05, 3);
+        let mut job =
+            EmbeddingJob::from_data("init", &data.y, Method::Ee, 10.0, 6.0, 8, IndexSpec::Exact);
+        // Auto below the spectral threshold resolves to random
+        assert_eq!(job.init_name(), "random");
+        let r = job.make_init_x(80);
+        assert_eq!(r.data, crate::init::random_init(80, 2, 1e-4, 0).data);
+        job.init = crate::init::InitSpec::parse("spectral:lanczos").unwrap();
+        assert_eq!(job.init_name(), "spectral:lanczos");
+        let s = job.make_init_x(80);
+        assert_eq!((s.rows, s.cols), (80, 2));
+        assert!(s.data.iter().all(|v| v.is_finite()));
+        assert_ne!(s.data, r.data);
+        job.opts.max_iters = 5;
+        let (_res, model) = job.run_model().unwrap();
+        assert_eq!(model.init, "spectral:lanczos");
+        // an explicit warm-start embedding supersedes the init spec
+        job.init_x = Some(Arc::new(Mat::zeros(80, 2)));
+        assert_eq!(job.init_name(), "warm-start");
     }
 
     #[test]

@@ -182,7 +182,7 @@ mod tests {
                     "sd",
                     None,
                 );
-                j.init.seed = i as u64;
+                j.init_seed = i as u64;
                 j.opts.max_iters = 30;
                 j
             })

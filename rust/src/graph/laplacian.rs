@@ -50,6 +50,74 @@ pub fn laplacian_sparse(w: &SpMat) -> SpMat {
     SpMat::from_triplets(n, n, trip)
 }
 
+/// Degrees of a sparse symmetric weight matrix, ignoring the diagonal
+/// (self-loops), matching [`laplacian_sparse`]'s convention.
+pub fn degrees_sparse(w: &SpMat) -> Vec<f64> {
+    assert_eq!(w.rows, w.cols);
+    let mut deg = vec![0.0; w.rows];
+    for c in 0..w.cols {
+        for p in w.colptr[c]..w.colptr[c + 1] {
+            let r = w.rowind[p];
+            if r != c {
+                deg[r] += w.values[p];
+            }
+        }
+    }
+    deg
+}
+
+/// Normalized similarity operator `S = D^{-1/2} W D^{-1/2}` from a sparse
+/// symmetric weight matrix (diagonal ignored, as in [`laplacian_sparse`]).
+/// Degree-guarded: an isolated vertex (`d_i = 0`) has no incident
+/// entries, so its scale factor is irrelevant and is taken as 1 — no
+/// 0/0. `S` is symmetric with spectrum in `[-1, 1]`; its leading
+/// eigenvectors are (up to the `D^{-1/2}` back-transform) the Laplacian
+/// eigenmaps coordinates.
+pub fn normalized_similarity_sparse(w: &SpMat) -> SpMat {
+    assert_eq!(w.rows, w.cols);
+    let inv_sqrt: Vec<f64> = degrees_sparse(w)
+        .into_iter()
+        .map(|d| if d > 0.0 { 1.0 / d.sqrt() } else { 1.0 })
+        .collect();
+    let mut trip = Vec::with_capacity(w.nnz());
+    for c in 0..w.cols {
+        for p in w.colptr[c]..w.colptr[c + 1] {
+            let r = w.rowind[p];
+            if r == c {
+                continue;
+            }
+            trip.push((r, c, inv_sqrt[r] * w.values[p] * inv_sqrt[c]));
+        }
+    }
+    SpMat::from_triplets(w.rows, w.cols, trip)
+}
+
+/// Normalized Laplacian `L_sym = D^{-1/2} L D^{-1/2} = I - D^{-1/2} W
+/// D^{-1/2}`, psd with spectrum in `[0, 2]` for symmetric nonnegative
+/// `W`. Degree-guarded: an isolated vertex has a zero Laplacian row
+/// already, so its whole `L_sym` row stays zero (diagonal 0, not 1) —
+/// this keeps the null-space dimension equal to the number of connected
+/// components *including singletons*, which is what the spectral
+/// initializer counts via [`components`] when deciding how many trivial
+/// eigenvectors to skip.
+pub fn normalized_laplacian_sparse(w: &SpMat) -> SpMat {
+    let deg = degrees_sparse(w);
+    let s = normalized_similarity_sparse(w);
+    let n = s.rows;
+    let mut trip = Vec::with_capacity(s.nnz() + n);
+    for c in 0..n {
+        for p in s.colptr[c]..s.colptr[c + 1] {
+            trip.push((s.rowind[p], c, -s.values[p]));
+        }
+    }
+    for (i, d) in deg.into_iter().enumerate() {
+        if d > 0.0 {
+            trip.push((i, i, 1.0));
+        }
+    }
+    SpMat::from_triplets(n, n, trip)
+}
+
 /// Connected components of a symmetric sparse pattern: returns the
 /// component id of every vertex (ids are 0..n_components). The null
 /// space of a graph Laplacian is spanned by the component indicator
@@ -142,6 +210,62 @@ mod tests {
         let ls = laplacian_sparse(&SpMat::from_dense(&w, 0.0));
         let ld = laplacian_dense(&w);
         assert!(ls.to_dense().max_abs_diff(&ld) < 1e-12);
+    }
+
+    #[test]
+    fn normalized_laplacian_matches_dense_formula() {
+        let w = sym_nonneg(10, 6);
+        let ws = SpMat::from_dense(&w, 0.0);
+        let lsym = normalized_laplacian_sparse(&ws);
+        let deg = degrees_dense(&w);
+        let expect = Mat::from_fn(10, 10, |i, j| {
+            if i == j {
+                1.0 // sym_nonneg has zero diagonal
+            } else {
+                -w.at(i, j) / (deg[i] * deg[j]).sqrt()
+            }
+        });
+        assert!(lsym.to_dense().max_abs_diff(&expect) < 1e-12);
+        // psd witness: quadratic forms nonnegative, spectrum within [0, 2]
+        let e = crate::linalg::eig::sym_eig(&lsym.to_dense());
+        assert!(e.values[0] > -1e-10);
+        assert!(*e.values.last().unwrap() < 2.0 + 1e-10);
+        // D^{1/2} 1 spans the (connected) null space
+        assert!(e.values[0].abs() < 1e-10);
+        assert!(e.values[1] > 1e-8);
+    }
+
+    #[test]
+    fn normalized_similarity_is_symmetric_and_scaled() {
+        let w = sym_nonneg(12, 7);
+        let s = normalized_similarity_sparse(&SpMat::from_dense(&w, 0.0));
+        assert!(s.asymmetry() < 1e-12);
+        let deg = degrees_dense(&w);
+        assert!((s.get(2, 5) - w.at(2, 5) / (deg[2] * deg[5]).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn isolated_vertex_is_guarded() {
+        // vertex 2 has no edges: its L_sym row must be identically zero
+        // (no 0/0), and the null space must count it as its own component
+        let n = 4;
+        let w = SpMat::from_triplets(
+            n,
+            n,
+            vec![(0, 1, 1.0), (1, 0, 1.0), (0, 3, 2.0), (3, 0, 2.0)],
+        );
+        let lsym = normalized_laplacian_sparse(&w);
+        for j in 0..n {
+            assert_eq!(lsym.get(2, j), 0.0);
+            assert_eq!(lsym.get(j, 2), 0.0);
+        }
+        assert!(lsym.to_dense().data.iter().all(|v| v.is_finite()));
+        let ncomp = components(&w).iter().max().unwrap() + 1;
+        assert_eq!(ncomp, 2);
+        let e = crate::linalg::eig::sym_eig(&lsym.to_dense());
+        // null dim == component count (the singleton contributes one)
+        assert!(e.values[1].abs() < 1e-10);
+        assert!(e.values[2] > 1e-8);
     }
 
     #[test]

@@ -4,4 +4,7 @@
 
 pub mod laplacian;
 
-pub use laplacian::{components, degrees_dense, laplacian_dense, laplacian_sparse};
+pub use laplacian::{
+    components, degrees_dense, degrees_sparse, laplacian_dense, laplacian_sparse,
+    normalized_laplacian_sparse, normalized_similarity_sparse,
+};

@@ -1,10 +1,126 @@
 //! Embedding initializations: small random (the paper's fig. 2 setup)
-//! and spectral (Laplacian-eigenmaps, the recommended warm start for
-//! nonconvex embeddings).
+//! and spectral (Laplacian eigenmaps), selectable through [`InitSpec`].
+//!
+//! The paper's central observation is that the embedding objective is a
+//! graph-Laplacian quadratic plus a nonlinear repulsion, so the smallest
+//! nontrivial eigenvectors of the normalized kNN-graph Laplacian are an
+//! excellent warm start: the optimizer begins inside the spectral
+//! method's solution instead of a gaussian blob, and the homotopy/
+//! optimizer iteration count drops accordingly. Two eigensolvers back
+//! the same init: full-reorthogonalization Lanczos
+//! ([`crate::linalg::lanczos`]) and the Halko–Tropp randomized solver
+//! ([`crate::linalg::rsvd`]) that stays cheap at fig-4-class N.
+//! [`InitSpec::Auto`] (the default) picks random below
+//! [`AUTO_SPECTRAL_MIN_N`] — where random is free and spectral overhead
+//! is proportionally largest — and rsvd-spectral above it, the same
+//! threshold at which the engine/index layers switch to their scalable
+//! backends.
 
 use crate::data::Rng;
 use crate::linalg::dense::Mat;
+use crate::linalg::rsvd;
 use crate::linalg::sparse::SpMat;
+
+/// `InitSpec::Auto` switches from random to rsvd-spectral at this N,
+/// aligned with the engine and index auto thresholds
+/// ([`crate::objective::engine::AUTO_BH_MIN_N`]): below it every part of
+/// the pipeline runs its exact/small-N backend, above it every part runs
+/// its scalable one.
+pub const AUTO_SPECTRAL_MIN_N: usize = crate::objective::engine::AUTO_BH_MIN_N;
+
+/// Eigensolver backing a spectral initialization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpectralSolver {
+    /// Full-reorthogonalization Lanczos — tight eigenpairs, O(n·m²)
+    /// reorthogonalization cost in the Krylov dimension m.
+    Lanczos,
+    /// Halko–Tropp randomized subspace iteration with `q` power passes
+    /// and oversampling `p` — blocked parallel matvecs, the scalable
+    /// default.
+    Rsvd { q: usize, p: usize },
+}
+
+impl SpectralSolver {
+    /// The rsvd solver at its default operating point.
+    pub fn default_rsvd() -> SpectralSolver {
+        SpectralSolver::Rsvd { q: rsvd::DEFAULT_POWER_ITERS, p: rsvd::DEFAULT_OVERSAMPLE }
+    }
+}
+
+/// Initialization selection, resolvable from config/CLI strings
+/// (`--init auto|random|spectral[:lanczos|rsvd[:q,p]]`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum InitSpec {
+    /// Random below [`AUTO_SPECTRAL_MIN_N`], rsvd-spectral at or above.
+    #[default]
+    Auto,
+    /// Small gaussian blob (the paper's fig. 2 setup).
+    Random,
+    /// Laplacian-eigenmaps warm start with the given eigensolver.
+    Spectral { solver: SpectralSolver },
+}
+
+impl InitSpec {
+    /// Parse `"auto" | "random" | "spectral" | "spectral:lanczos" |
+    /// "spectral:rsvd" | "spectral:rsvd:<q>,<p>"`. Bare `"spectral"`
+    /// means rsvd at its defaults.
+    pub fn parse(s: &str) -> Option<InitSpec> {
+        match s {
+            "auto" => Some(InitSpec::Auto),
+            "random" => Some(InitSpec::Random),
+            "spectral" | "spectral:rsvd" => {
+                Some(InitSpec::Spectral { solver: SpectralSolver::default_rsvd() })
+            }
+            "spectral:lanczos" => {
+                Some(InitSpec::Spectral { solver: SpectralSolver::Lanczos })
+            }
+            _ => {
+                let rest = s.strip_prefix("spectral:rsvd:")?;
+                let (qs, ps) = rest.split_once(',')?;
+                let q = qs.parse::<usize>().ok()?;
+                let p = ps.parse::<usize>().ok()?;
+                Some(InitSpec::Spectral { solver: SpectralSolver::Rsvd { q, p } })
+            }
+        }
+    }
+
+    /// Canonical name, parseable back by [`InitSpec::parse`] — this is
+    /// the string the saved-model codec records.
+    pub fn name(&self) -> String {
+        match self {
+            InitSpec::Auto => "auto".into(),
+            InitSpec::Random => "random".into(),
+            InitSpec::Spectral { solver: SpectralSolver::Lanczos } => "spectral:lanczos".into(),
+            InitSpec::Spectral { solver: SpectralSolver::Rsvd { q, p } } => {
+                format!("spectral:rsvd:{q},{p}")
+            }
+        }
+    }
+
+    /// Resolve `Auto` by problem size; concrete specs pass through.
+    pub fn resolve(self, n: usize) -> InitSpec {
+        match self {
+            InitSpec::Auto => {
+                if n >= AUTO_SPECTRAL_MIN_N {
+                    InitSpec::Spectral { solver: SpectralSolver::default_rsvd() }
+                } else {
+                    InitSpec::Random
+                }
+            }
+            other => other,
+        }
+    }
+
+    /// Produce the `n x d` starting embedding for the attractive weight
+    /// matrix `wp` (square symmetric; only spectral inits look at it).
+    pub fn build(self, wp: &SpMat, d: usize, scale: f64, seed: u64) -> Mat {
+        match self.resolve(wp.rows) {
+            InitSpec::Random => random_init(wp.rows, d, scale, seed),
+            InitSpec::Spectral { solver } => spectral_init_with(wp, d, scale, seed, solver),
+            InitSpec::Auto => unreachable!("resolve() never returns Auto"),
+        }
+    }
+}
 
 /// Small gaussian random initialization ("50 random points X0 (with
 /// small values)", paper section 3.1).
@@ -13,15 +129,74 @@ pub fn random_init(n: usize, d: usize, scale: f64, seed: u64) -> Mat {
     Mat::from_fn(n, d, |_, _| scale * rng.normal())
 }
 
-/// Spectral (Laplacian eigenmaps) initialization: the `d` nontrivial
-/// smallest eigenvectors of the attractive Laplacian, scaled by `scale`.
-/// Uses sparse Lanczos, so it works at fig. 4 sizes.
+/// Spectral (Laplacian eigenmaps) initialization with the default rsvd
+/// solver; see [`spectral_init_with`].
 pub fn spectral_init(wp: &SpMat, d: usize, scale: f64, seed: u64) -> Mat {
-    let lap = crate::graph::laplacian_sparse(wp);
-    let eig = crate::linalg::lanczos::smallest_eigs(&lap, d + 1, None, seed);
+    spectral_init_with(wp, d, scale, seed, SpectralSolver::default_rsvd())
+}
+
+/// Spectral (Laplacian eigenmaps) initialization: the `d` smallest
+/// *nontrivial* eigenvectors of the normalized Laplacian
+/// `L_sym = I - D^{-1/2} W D^{-1/2}`, back-transformed by `D^{-1/2}`
+/// (the eigenmaps coordinates) and rescaled so each coordinate column
+/// has max-abs `scale` (commensurate with [`random_init`]'s spread, so
+/// downstream step sizes see familiar magnitudes).
+///
+/// A graph with `c` connected components — `graph::components`, counting
+/// isolated vertices — has a `c`-dimensional Laplacian null space, so
+/// `d + c` eigenpairs are requested and the first `c` (the per-component
+/// indicator vectors, which carry no geometry) are skipped. If the graph
+/// is so degenerate that fewer than `d` informative eigenvectors exist
+/// (`n < c + d`), the remaining columns are padded with small random
+/// coordinates.
+pub fn spectral_init_with(
+    wp: &SpMat,
+    d: usize,
+    scale: f64,
+    seed: u64,
+    solver: SpectralSolver,
+) -> Mat {
+    assert_eq!(wp.rows, wp.cols, "spectral init needs a square weight matrix");
     let n = wp.rows;
-    // skip the trivial constant eigenvector (eigenvalue ~ 0)
-    Mat::from_fn(n, d, |i, j| scale * eig.vectors.at(i, j + 1))
+    if n == 0 || d == 0 {
+        return Mat::zeros(n, d);
+    }
+    let lsym = crate::graph::normalized_laplacian_sparse(wp);
+    let ncomp = crate::graph::components(wp).iter().copied().max().unwrap_or(0) + 1;
+    let k = (d + ncomp).min(n);
+    let vectors = match solver {
+        SpectralSolver::Lanczos => {
+            crate::linalg::lanczos::smallest_eigs(&lsym, k, None, seed).vectors
+        }
+        SpectralSolver::Rsvd { q, p } => rsvd::smallest_eigs(&lsym, k, q, p, seed).vectors,
+    };
+    let inv_sqrt: Vec<f64> = crate::graph::degrees_sparse(wp)
+        .into_iter()
+        .map(|deg| if deg > 0.0 { 1.0 / deg.sqrt() } else { 1.0 })
+        .collect();
+    // Lanczos can return fewer than k pairs on early breakdown (a
+    // spectrum with few distinct eigenvalues saturates the Krylov
+    // space), so count the columns actually delivered
+    let avail = k.min(vectors.cols).saturating_sub(ncomp);
+    // decorrelated stream for the (rare) degenerate-graph padding
+    let mut pad_rng = Rng::new(seed ^ 0xd1b5_4a32_d192_ed03);
+    let mut x = Mat::zeros(n, d);
+    for j in 0..d {
+        if j < avail {
+            let col: Vec<f64> =
+                (0..n).map(|i| inv_sqrt[i] * vectors.at(i, ncomp + j)).collect();
+            let maxabs = col.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+            let f = if maxabs > 0.0 { scale / maxabs } else { 0.0 };
+            for (i, v) in col.into_iter().enumerate() {
+                *x.at_mut(i, j) = f * v;
+            }
+        } else {
+            for i in 0..n {
+                *x.at_mut(i, j) = scale * pad_rng.normal();
+            }
+        }
+    }
+    x
 }
 
 #[cfg(test)]
@@ -43,11 +218,106 @@ mod tests {
         // points on a line: the Fiedler vector orders them monotonically
         let ds = swiss_roll(60, 3, 0.0, 1);
         let p = sne_affinities_sparse(&ds.y, 8.0, 15);
-        let x = spectral_init(&p, 2, 1.0, 0);
-        assert_eq!(x.rows, 60);
-        assert_eq!(x.cols, 2);
-        // nontrivial: not all equal
-        let first = x.at(0, 0);
-        assert!(x.data.iter().any(|&v| (v - first).abs() > 1e-8));
+        for solver in [SpectralSolver::Lanczos, SpectralSolver::default_rsvd()] {
+            let x = spectral_init_with(&p, 2, 1.0, 0, solver);
+            assert_eq!(x.rows, 60);
+            assert_eq!(x.cols, 2);
+            // nontrivial: not all equal
+            let first = x.at(0, 0);
+            assert!(x.data.iter().any(|&v| (v - first).abs() > 1e-8));
+            // column scale contract: max-abs == scale
+            for j in 0..2 {
+                let m = (0..60).map(|i| x.at(i, j).abs()).fold(0.0f64, f64::max);
+                assert!((m - 1.0).abs() < 1e-12, "column {j} max-abs {m}");
+            }
+        }
+    }
+
+    /// Regression for the disconnected-graph bug: a graph with c = 2
+    /// components has a 2-dimensional Laplacian null space, and the old
+    /// code skipped only *one* trivial eigenvector — so the second null
+    /// vector (constant within each component) became coordinate 0, and
+    /// every point of a component collapsed to a single value. Each
+    /// coordinate must now vary within at least one component (for a
+    /// disconnected graph, each nontrivial eigenvector is supported on
+    /// one component — what must never happen again is a column that is
+    /// constant within *every* component).
+    #[test]
+    fn two_component_graph_gets_informative_coordinates() {
+        // two disjoint 12-paths (unit weights)
+        let n = 24;
+        let mut trip = Vec::new();
+        for base in [0usize, 12] {
+            for i in 0..11 {
+                trip.push((base + i, base + i + 1, 1.0));
+                trip.push((base + i + 1, base + i, 1.0));
+            }
+        }
+        let w = SpMat::from_triplets(n, n, trip);
+        assert_eq!(crate::graph::components(&w).iter().max().unwrap() + 1, 2);
+        let spread_within = |x: &Mat, j: usize, range: std::ops::Range<usize>| {
+            let vals: Vec<f64> = range.map(|i| x.at(i, j)).collect();
+            vals.iter().cloned().fold(f64::MIN, f64::max)
+                - vals.iter().cloned().fold(f64::MAX, f64::min)
+        };
+        for solver in [SpectralSolver::Lanczos, SpectralSolver::Rsvd { q: 20, p: 8 }] {
+            let x = spectral_init_with(&w, 2, 1.0, 0, solver);
+            for j in 0..2 {
+                let s = spread_within(&x, j, 0..12).max(spread_within(&x, j, 12..24));
+                assert!(
+                    s > 1e-6,
+                    "{solver:?}: coordinate {j} constant within every component (spread {s})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parse_name_round_trip() {
+        for s in
+            ["auto", "random", "spectral:lanczos", "spectral:rsvd:4,8", "spectral:rsvd:2,16"]
+        {
+            let spec = InitSpec::parse(s).unwrap();
+            assert_eq!(spec.name(), s);
+            assert_eq!(InitSpec::parse(&spec.name()), Some(spec));
+        }
+        // sugar: bare "spectral" and "spectral:rsvd" mean rsvd defaults
+        assert_eq!(
+            InitSpec::parse("spectral"),
+            Some(InitSpec::Spectral { solver: SpectralSolver::default_rsvd() })
+        );
+        assert_eq!(InitSpec::parse("spectral"), InitSpec::parse("spectral:rsvd"));
+        for bad in ["", "Spectral", "spectral:", "spectral:rsvd:4", "spectral:rsvd:a,b", "rand"]
+        {
+            assert_eq!(InitSpec::parse(bad), None, "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn auto_resolves_by_problem_size() {
+        assert_eq!(InitSpec::Auto.resolve(100), InitSpec::Random);
+        assert_eq!(InitSpec::Auto.resolve(AUTO_SPECTRAL_MIN_N - 1), InitSpec::Random);
+        assert_eq!(
+            InitSpec::Auto.resolve(AUTO_SPECTRAL_MIN_N),
+            InitSpec::Spectral { solver: SpectralSolver::default_rsvd() }
+        );
+        // concrete specs pass through untouched
+        assert_eq!(InitSpec::Random.resolve(1 << 20), InitSpec::Random);
+        let lz = InitSpec::Spectral { solver: SpectralSolver::Lanczos };
+        assert_eq!(lz.resolve(10), lz);
+    }
+
+    #[test]
+    fn build_dispatches_and_pads_degenerate_graphs() {
+        // edgeless graph: every vertex its own component -> all columns
+        // fall back to the random padding, but stay small and finite
+        let w = SpMat::from_triplets(8, 8, std::iter::empty::<(usize, usize, f64)>());
+        let x = InitSpec::parse("spectral:lanczos").unwrap().build(&w, 2, 1e-2, 1);
+        assert_eq!((x.rows, x.cols), (8, 2));
+        assert!(x.data.iter().all(|v| v.is_finite()));
+        assert!(x.data.iter().any(|&v| v != 0.0));
+        // Auto at small n is exactly random_init
+        let r = InitSpec::Auto.build(&w, 2, 1e-2, 7);
+        assert_eq!(r.data, random_init(8, 2, 1e-2, 7).data);
     }
 }

@@ -86,6 +86,7 @@ pub mod spatial;
 pub mod prelude {
     pub use crate::coordinator::{EmbeddingJob, JobResult, ProgressThrottle, RunControl};
     pub use crate::index::{ExactIndex, HnswGraph, HnswIndex, HnswRef, IndexSpec, NeighborIndex};
+    pub use crate::init::{InitSpec, SpectralSolver};
     pub use crate::linalg::dense::Mat;
     pub use crate::model::{EmbeddingModel, TransformOptions, Transformer};
     pub use crate::objective::engine::{

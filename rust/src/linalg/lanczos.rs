@@ -5,6 +5,10 @@
 //! Lanczos with full reorthogonalization on the spectrally shifted
 //! operator `sigma I - L` (sigma >= lambda_max, via Gershgorin), whose
 //! *largest* eigenpairs are L's smallest — no factorization needed.
+//! Matvecs go through [`SpMat::sym_matvec_par`], so the iteration is
+//! multicore yet bitwise deterministic for any `NLE_THREADS`. For very
+//! large N the full reorthogonalization here gets expensive; the
+//! randomized solver in [`super::rsvd`] is the scalable alternative.
 
 use super::dense::Mat;
 use super::sparse::SpMat;
@@ -69,8 +73,9 @@ pub fn smallest_eigs(a: &SpMat, k: usize, m: Option<usize>, seed: u64) -> Lanczo
     q.push(v0);
 
     for j in 0..m {
-        // w = B q_j = sigma q_j - A q_j
-        let aq = a.matvec(&q[j]);
+        // w = B q_j = sigma q_j - A q_j (parallel symmetric gather:
+        // bitwise identical for any NLE_THREADS)
+        let aq = a.sym_matvec_par(&q[j]);
         let mut w: Vec<f64> = (0..n).map(|i| sigma * q[j][i] - aq[i]).collect();
         if j > 0 {
             let b = beta[j - 1];

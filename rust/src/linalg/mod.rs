@@ -12,6 +12,7 @@ pub mod dense;
 pub mod eig;
 pub mod lanczos;
 pub mod ordering;
+pub mod rsvd;
 pub mod sparse;
 pub mod spchol;
 pub mod vecops;

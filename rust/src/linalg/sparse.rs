@@ -108,6 +108,63 @@ impl SpMat {
         y
     }
 
+    /// `y = A x` for *symmetric* `A`, multithreaded and bitwise
+    /// deterministic for any thread count. Because `A = A^T`, row `i`
+    /// of `A` is column `i` read through the CSC arrays, so each output
+    /// entry is an independent serial gather
+    /// `y_i = sum_p values[p] * x[rowind[p]]` over column `i` — a fixed
+    /// summation order that no chunking can perturb (unlike the scatter
+    /// in [`SpMat::matvec`], whose output rows interleave across
+    /// columns). This is the operator the iterative eigensolvers
+    /// ([`super::lanczos`], [`super::rsvd`]) sit on, so all of them get
+    /// multicore from this one kernel. Symmetry is the caller's
+    /// contract; it is asserted only in debug builds (O(nnz log nnz)).
+    pub fn sym_matvec_par(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, self.cols, "sym_matvec_par needs a square matrix");
+        assert_eq!(x.len(), self.cols);
+        debug_assert!(self.asymmetry() < 1e-10, "sym_matvec_par requires symmetric A");
+        crate::par::par_map(self.rows, |i| {
+            let mut acc = 0.0;
+            for p in self.colptr[i]..self.colptr[i + 1] {
+                acc += self.values[p] * x[self.rowind[p]];
+            }
+            acc
+        })
+    }
+
+    /// Block variant of [`SpMat::sym_matvec_par`]: `Y = A X` for
+    /// *symmetric* `A` and a row-major `n x d` RHS. One worker owns each
+    /// contiguous block of output rows ([`crate::par::par_rows_with`]),
+    /// every row is a serial gather, so the result is bitwise identical
+    /// for any `NLE_THREADS`. This is the randomized range finder's hot
+    /// loop (`d` = target rank + oversampling).
+    pub fn sym_matmul_dense_par(&self, x: &Mat) -> Mat {
+        assert_eq!(self.rows, self.cols, "sym_matmul_dense_par needs a square matrix");
+        assert_eq!(x.rows, self.cols);
+        debug_assert!(self.asymmetry() < 1e-10, "sym_matmul_dense_par requires symmetric A");
+        let d = x.cols;
+        let mut y = Mat::zeros(self.rows, d);
+        if d == 0 {
+            return y;
+        }
+        crate::par::par_rows_with(
+            self.rows,
+            d,
+            &mut y.data,
+            || (),
+            |i, yrow, _| {
+                for p in self.colptr[i]..self.colptr[i + 1] {
+                    let v = self.values[p];
+                    let xr = x.row(self.rowind[p]);
+                    for (yj, &xj) in yrow.iter_mut().zip(xr) {
+                        *yj += v * xj;
+                    }
+                }
+            },
+        );
+        y
+    }
+
     /// `Y = A X` for a row-major `cols x d` dense RHS, returns `rows x d`.
     pub fn matmul_dense(&self, x: &Mat) -> Mat {
         assert_eq!(x.rows, self.cols);
@@ -250,6 +307,43 @@ mod tests {
         let y = a.matmul_dense(&x);
         let yd = a.to_dense().matmul(&x);
         assert!(y.max_abs_diff(&yd) < 1e-15);
+    }
+
+    #[test]
+    fn sym_matvec_par_matches_serial() {
+        // large enough to cross the parallel cutoff
+        let n = 300;
+        let mut trip = Vec::new();
+        for i in 0..n {
+            trip.push((i, i, 2.0 + i as f64 * 0.01));
+            if i + 1 < n {
+                trip.push((i, i + 1, -1.0));
+                trip.push((i + 1, i, -1.0));
+            }
+            let j = (i * 7) % n;
+            if j != i {
+                trip.push((i, j, 0.25));
+                trip.push((j, i, 0.25));
+            }
+        }
+        let a = SpMat::from_triplets(n, n, trip);
+        let x: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.37).sin()).collect();
+        let serial = a.matvec(&x);
+        let par = a.sym_matvec_par(&x);
+        for (s, p) in serial.iter().zip(&par) {
+            assert!((s - p).abs() < 1e-12);
+        }
+        let xm = Mat::from_fn(n, 3, |i, j| ((i * 3 + j) as f64 * 0.11).cos());
+        let ys = a.matmul_dense(&xm);
+        let yp = a.sym_matmul_dense_par(&xm);
+        assert!(ys.max_abs_diff(&yp) < 1e-12);
+    }
+
+    #[test]
+    fn sym_matmul_dense_par_zero_width() {
+        let a = example();
+        let y = a.sym_matmul_dense_par(&Mat::zeros(3, 0));
+        assert_eq!((y.rows, y.cols), (3, 0));
     }
 
     #[test]

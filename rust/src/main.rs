@@ -2,7 +2,7 @@
 //!
 //! Subcommands map 1:1 to the paper's experiments (fig1..fig4, rates)
 //! plus a general-purpose `embed` runner and `info` for the artifact
-//! registry. See DESIGN.md section 8 for the experiment index.
+//! registry. See DESIGN.md section 9 for the experiment index.
 //!
 //! (Arg parsing is hand-rolled `--key value` matching; the offline build
 //! has no clap — see Cargo.toml.)
@@ -44,6 +44,13 @@ COMMANDS
           affinity-stage wall-clock and recall across N (swiss roll)
           [--sizes 2000,5000,10000,20000] [--k 10] [--perplexity 8]
           [--m 16] [--efc 128] [--efs 100]
+  init    initialization benchmark: init wall-clock vs optimizer
+          iterations-to-quality for random vs spectral warm starts ->
+          results/init.csv + results/BENCH_init.json
+          [--n 16384] [--inits random,spectral:rsvd] [--knn 20]
+          [--method ee] [--lambda 100] [--perplexity 20]
+          [--strategy sd] [--max-iters 200] [--quality-frac 0.05]
+          [--seed 42] [--json BENCH_init.json]
   serve   out-of-sample serving throughput on a frozen model:
           points/sec across batch sizes -> results/serve.csv +
           results/BENCH_serve.json (thread count is fixed per process;
@@ -55,7 +62,7 @@ COMMANDS
           (final embedding + affinity calibration + trained HNSW index)
           [--data swiss|coil|mnist|clusters] [--n 1000] [--seed 1]
           [--method ee] [--strategy sd] [--lambda 100] [--perplexity 20]
-          [--knn 15] [--index auto] [--max-iters 300]
+          [--knn 15] [--index auto] [--init auto] [--max-iters 300]
           [--out results/model.nlem]
   transform  place held-out points with a saved model — no retraining,
           no index rebuild; parallel across points (NLE_THREADS)
@@ -68,6 +75,7 @@ COMMANDS
           resumes on the combined set) and persist the updated model
           [--model results/model.nlem] [--data swiss] [--n-new 200]
           [--seed 9] [--strategy sd] [--index auto] [--max-iters 200]
+          [--init auto (non-auto discards the warm start and re-inits)]
           [--out results/model_retrained.nlem]
   all     run every experiment at default scale
   embed   one embedding run — checkpointable, resumable, streamable
@@ -75,6 +83,7 @@ COMMANDS
           [--strategy sd] [--lambda 100] [--perplexity 20]
           [--max-iters 500] [--backend native|xla]
           [--engine auto|exact|bh|bh:<theta>|neg:<k>[,<seed>]]
+          [--init auto|random|spectral[:lanczos|rsvd[:<q>,<p>]]]
           [--knn 0 (0 = dense W+)]
           [--index auto|exact|hnsw|hnsw:<m>[,<efc>[,<efs>]]]
           [--checkpoint-every 0 (iterations; 0 = never)]
@@ -87,6 +96,12 @@ Neighbor indices (--index): 'auto' uses exact brute force below 4096
 points and HNSW above (same threshold as the Barnes-Hut engine), so
 large-N runs are O(N log N) end to end. 'hnsw:<m>[,<efc>[,<efs>]]'
 sets the out-degree bound and the construction/search beam widths.
+
+Initialization (--init): 'auto' starts random below 4096 points and
+spectral (randomized-SVD Laplacian eigenmaps over the attractive
+graph) above — the warm start that cuts optimizer iterations at
+scale. 'spectral:rsvd:<q>,<p>' sets the power passes and the
+oversampling; 'spectral:lanczos' uses the exact Krylov solver.
 
 Checkpoint/resume: --checkpoint-every K overwrites --checkpoint-path
 with an NLEC record every K iterations; a killed run restarts with
@@ -323,8 +338,12 @@ fn main() -> anyhow::Result<()> {
             // EmbeddingJob driven through run_resumable, so the CLI and
             // batch callers share the same meta construction, lazy
             // weights fingerprint, resume validation and checkpoint
-            // cadence (the job's InitSpec default reproduces the
-            // historical random_init(n, 2, 1e-4, 0) start exactly)
+            // cadence (--init defaults to Auto: random below 4096
+            // points — the historical random_init(n, 2, 1e-4, 0) start,
+            // bitwise — and rsvd-spectral above)
+            let init = InitSpec::parse(&args.get_str("init", "auto")).ok_or_else(|| {
+                anyhow::anyhow!("bad init (auto|random|spectral[:lanczos|rsvd[:<q>,<p>]])")
+            })?;
             let mut job = nle::coordinator::EmbeddingJob::native(
                 format!("embed-{data}"),
                 method,
@@ -334,6 +353,7 @@ fn main() -> anyhow::Result<()> {
                 None,
             );
             job.engine = engine;
+            job.init = init;
             job.backend = match backend.as_str() {
                 "native" => nle::coordinator::Backend::Native,
                 "xla" => nle::coordinator::Backend::Xla(std::sync::Arc::new(
@@ -392,6 +412,35 @@ fn main() -> anyhow::Result<()> {
             println!("embedding written to {}", path.display());
             Ok(())
         }
+        "init" => {
+            let init_names = args.get_str("inits", "random,spectral:rsvd");
+            let inits: Vec<InitSpec> = init_names
+                .split(',')
+                .map(|s| {
+                    InitSpec::parse(s.trim()).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "bad init {s:?} (auto|random|spectral[:lanczos|rsvd[:<q>,<p>]])"
+                        )
+                    })
+                })
+                .collect::<anyhow::Result<_>>()?;
+            let method = Method::parse(&args.get_str("method", "ee"))
+                .ok_or_else(|| anyhow::anyhow!("bad method"))?;
+            nle::bench_harness::init::run(&nle::bench_harness::init::InitBenchConfig {
+                n: args.get("n", 16384),
+                inits,
+                method,
+                lambda: args.get("lambda", 100.0),
+                perplexity: args.get("perplexity", 20.0),
+                knn: args.get("knn", 20),
+                strategy: args.get_str("strategy", "sd"),
+                max_iters: args.get("max_iters", 200),
+                quality_frac: args.get("quality_frac", 0.05),
+                seed: args.get("seed", 42),
+                json_name: Some(args.get_str("json", "BENCH_init.json")),
+                ..Default::default()
+            })
+        }
         "serve" => {
             let batches: Vec<usize> =
                 parse_csv("batches", &args.get_str("batches", "1,16,256,1024"))?;
@@ -436,17 +485,21 @@ fn main() -> anyhow::Result<()> {
                 index,
             );
             job.strategy = args.get_str("strategy", "sd");
+            job.init = InitSpec::parse(&args.get_str("init", "auto")).ok_or_else(|| {
+                anyhow::anyhow!("bad init (auto|random|spectral[:lanczos|rsvd[:<q>,<p>]])")
+            })?;
             job.opts.max_iters = args.get("max_iters", 300);
             let t0 = std::time::Instant::now();
             let (res, model) = job.run_model()?;
             println!(
-                "save[{}/{}]: N = {n_actual}, E = {:.6e}, iters = {}, {:.2}s, {} index",
+                "save[{}/{}]: N = {n_actual}, E = {:.6e}, iters = {}, {:.2}s, {} index, {} init",
                 method.name(),
                 job.strategy,
                 res.e,
                 res.iters,
                 t0.elapsed().as_secs_f64(),
-                model.index_name()
+                model.index_name(),
+                model.init
             );
             let out = args.get_str("out", "results/model.nlem");
             model.save(&out)?;
@@ -460,14 +513,16 @@ fn main() -> anyhow::Result<()> {
             let path = args.get_str("model", "results/model.nlem");
             let model = EmbeddingModel::load(&path)?;
             println!(
-                "loaded {path}: N = {}, D = {}, d = {}, {} ({} index, perplexity {}, k {})",
+                "loaded {path}: N = {}, D = {}, d = {}, {} ({} index, perplexity {}, k {}, \
+                 {} init)",
                 model.n(),
                 model.ambient_dim(),
                 model.dim(),
                 model.method.name(),
                 model.index_name(),
                 model.perplexity,
-                model.k
+                model.k,
+                model.init
             );
             let data = args.get_str("data", "swiss");
             let n: usize = args.get("n", 1000);
@@ -532,6 +587,17 @@ fn main() -> anyhow::Result<()> {
             let name = format!("retrain-{data}");
             let mut job = nle::coordinator::EmbeddingJob::warm_start(name, &model, &ds.y, index)?;
             job.strategy = args.get_str("strategy", "sd");
+            // an explicit non-auto --init discards the warm start (old
+            // coordinates + transformer placement) and re-initializes
+            // the combined set from scratch with the requested strategy
+            let init = InitSpec::parse(&args.get_str("init", "auto")).ok_or_else(|| {
+                anyhow::anyhow!("bad init (auto|random|spectral[:lanczos|rsvd[:<q>,<p>]])")
+            })?;
+            if init != InitSpec::Auto {
+                job.init_x = None;
+                job.init = init;
+                println!("retrain: --init {} replaces the warm start", init.name());
+            }
             job.opts.max_iters = args.get("max_iters", 200);
             let placed_s = t0.elapsed().as_secs_f64();
             let (res, new_model) = job.run_model()?;

@@ -19,14 +19,16 @@
 //! check   u64                FNV-1a 64 over payload
 //! ```
 //!
-//! Model payload v1, in order: method (u8), lambda (f64), perplexity
+//! Model payload v2, in order: method (u8), lambda (f64), perplexity
 //! (f64), k (u64), `train_y` matrix, `x` matrix, HNSW flag (u8) and —
 //! when present — the graph (knobs, entry, max_level, then per-node
-//! per-layer u32 adjacency). Matrices are `rows, cols` as u64 followed
-//! by row-major f64 bits, so a load reproduces the embedding
-//! *bitwise* — the round-trip property the model tests pin down. The
-//! checkpoint payload reuses the same primitives (bitwise f64s
-//! throughout — resumed runs must continue bit-for-bit).
+//! per-layer u32 adjacency), then the init provenance string (v2
+//! appended it at the *end* so every earlier field keeps its v1
+//! offset). Matrices are `rows, cols` as u64 followed by row-major f64
+//! bits, so a load reproduces the embedding *bitwise* — the round-trip
+//! property the model tests pin down. The checkpoint payload reuses the
+//! same primitives (bitwise f64s throughout — resumed runs must
+//! continue bit-for-bit).
 //!
 //! Every read is bounds-checked: truncation, bad magic, a flipped bit
 //! (checksum) or a structurally invalid graph all fail with a
@@ -465,7 +467,7 @@ fn unframe<'a>(
 
 // ---- entry points ----------------------------------------------------
 
-/// Serialize a model to the v1 `NLEM` container.
+/// Serialize a model to the v2 `NLEM` container.
 pub fn encode(model: &EmbeddingModel) -> Vec<u8> {
     let mut w = Writer::new();
     w.put_u8(method_tag(model.method));
@@ -481,10 +483,11 @@ pub fn encode(model: &EmbeddingModel) -> Vec<u8> {
         }
         None => w.put_u8(0),
     }
+    w.put_str(&model.init);
     frame(MAGIC, FORMAT_VERSION, w.buf)
 }
 
-/// Parse and validate a v1 `NLEM` container.
+/// Parse and validate a v2 `NLEM` container.
 pub fn decode(bytes: &[u8]) -> anyhow::Result<EmbeddingModel> {
     let payload = unframe(bytes, MAGIC, FORMAT_VERSION, "model")?;
     let mut p = Reader::new(payload);
@@ -499,10 +502,11 @@ pub fn decode(bytes: &[u8]) -> anyhow::Result<EmbeddingModel> {
         1 => Some(p.get_hnsw()?),
         other => anyhow::bail!("bad hnsw flag {other}"),
     };
+    let init = p.get_str()?;
     anyhow::ensure!(p.pos == payload.len(), "payload has trailing bytes");
     // EmbeddingModel::new re-validates everything structural (shapes,
     // parameter ranges, graph ids in bounds)
-    EmbeddingModel::new(
+    Ok(EmbeddingModel::new(
         method,
         lambda,
         perplexity,
@@ -510,7 +514,8 @@ pub fn decode(bytes: &[u8]) -> anyhow::Result<EmbeddingModel> {
         std::sync::Arc::new(train_y),
         x,
         hnsw.map(std::sync::Arc::new),
-    )
+    )?
+    .with_init(init))
 }
 
 /// Serialize a training checkpoint to the v2 `NLEC` container.
@@ -672,6 +677,17 @@ mod tests {
             let back = decode(&bytes).unwrap();
             // PartialEq on Mat compares the raw f64 buffers — bitwise
             // for every value the codec writes (to_le_bytes roundtrip)
+            assert_eq!(m, back);
+        }
+    }
+
+    #[test]
+    fn init_provenance_roundtrips() {
+        // default ("random") and an explicit spectral name both survive
+        for init in ["random", "spectral:rsvd:4,8", "warm-start"] {
+            let m = model(false).with_init(init);
+            let back = decode(&encode(&m)).unwrap();
+            assert_eq!(back.init, init);
             assert_eq!(m, back);
         }
     }

@@ -47,7 +47,8 @@ use crate::objective::Method;
 
 /// On-disk format version (bumped on any incompatible layout change;
 /// loaders refuse newer versions rather than misparse them).
-pub const FORMAT_VERSION: u32 = 1;
+/// v2 appended the init provenance string to the model payload.
+pub const FORMAT_VERSION: u32 = 2;
 
 /// A trained, servable embedding model: the frozen training embedding
 /// plus everything needed to place new points into it.
@@ -73,6 +74,12 @@ pub struct EmbeddingModel {
     /// O(N·D) scan serves queries (small models). Shared with the job
     /// for the same reason as `train_y`.
     pub hnsw: Option<Arc<HnswGraph>>,
+    /// Provenance: which initialization produced this artifact's
+    /// training run — an [`crate::init::InitSpec`] name (resolved, never
+    /// `"auto"`) or `"warm-start"` for retrained models. Informational
+    /// (retraining decisions, experiment bookkeeping); defaults to
+    /// `"random"`, the only init that existed before format v2.
+    pub init: String,
 }
 
 impl EmbeddingModel {
@@ -106,7 +113,23 @@ impl EmbeddingModel {
         if let Some(g) = &hnsw {
             g.validate(&train_y)?;
         }
-        Ok(EmbeddingModel { method, lambda, perplexity, k, train_y, x, hnsw })
+        Ok(EmbeddingModel {
+            method,
+            lambda,
+            perplexity,
+            k,
+            train_y,
+            x,
+            hnsw,
+            init: "random".to_string(),
+        })
+    }
+
+    /// Record which initialization produced this model (builder-style;
+    /// [`EmbeddingModel::new`] defaults to `"random"`).
+    pub fn with_init(mut self, init: impl Into<String>) -> Self {
+        self.init = init.into();
+        self
     }
 
     /// Number of training points.

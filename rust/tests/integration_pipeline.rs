@@ -72,7 +72,7 @@ fn fig2_style_batch_under_budget() {
                 s,
                 Some(Duration::from_millis(400)),
             );
-            j.init.seed = seed;
+            j.init_seed = seed;
             j.opts.max_iters = 100_000;
             j.opts.rel_tol = 1e-15;
             jobs.push(j);

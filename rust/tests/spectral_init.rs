@@ -1,0 +1,203 @@
+//! Spectral warm-start pipeline guarantees:
+//!
+//! * eigenpair parity: the randomized solver ([`nle::linalg::rsvd`]),
+//!   the Krylov solver ([`nle::linalg::lanczos`]) and the dense
+//!   reference ([`nle::linalg::eig::sym_eig`]) agree on the bottom
+//!   eigenspace of a real affinity-graph Laplacian — compared as a
+//!   *subspace* (smallest singular value of `V₁ᵀV₂`), never vector by
+//!   vector, so sign flips and degenerate-pair mixing cannot fail it;
+//! * thread determinism: the parallel symmetric matvec keeps rsvd and
+//!   the spectral init bitwise identical across `NLE_THREADS` settings,
+//!   verified by re-executing this test binary in pinned subprocesses;
+//! * end to end: on a 2k swiss roll the spectral start reaches the
+//!   quality bar in fewer optimizer iterations than the random start —
+//!   the reason the pipeline exists.
+
+use std::sync::Arc;
+
+use nle::linalg::sparse::SpMat;
+use nle::prelude::*;
+
+/// kNN-sparse SNE affinity graph of a swiss roll — the exact operator
+/// the production init path feeds to the eigensolvers.
+fn affinity_graph(n: usize, seed: u64) -> SpMat {
+    let data = nle::data::synth::swiss_roll(n, 3, 0.05, seed);
+    nle::affinity::sne_affinities_sparse(&data.y, 10.0, 12)
+}
+
+/// Smallest singular value of `V₁ᵀV₂` for two orthonormal bases: 1 iff
+/// the spanned subspaces coincide, 0 iff some direction is orthogonal.
+fn subspace_agreement(v1: &Mat, v2: &Mat) -> f64 {
+    assert_eq!(v1.rows, v2.rows);
+    assert_eq!(v1.cols, v2.cols);
+    let c = v1.t().matmul(v2);
+    let cc = c.t().matmul(&c);
+    // singular values of C are the square roots of eig(CᵀC)
+    let e = nle::linalg::eig::sym_eig(&cc);
+    e.values[0].max(0.0).sqrt()
+}
+
+/// Orthonormality witness: `‖VᵀV − I‖_max` must be tiny before a
+/// subspace comparison means anything.
+fn orthonormality_defect(v: &Mat) -> f64 {
+    let g = v.t().matmul(v);
+    let mut worst: f64 = 0.0;
+    for i in 0..g.rows {
+        for j in 0..g.cols {
+            let want = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((g.at(i, j) - want).abs());
+        }
+    }
+    worst
+}
+
+/// The three eigensolvers must land on the same bottom eigenspace of
+/// the production operator (the normalized Laplacian of a real affinity
+/// graph). Both iterative solvers are pushed into their *exact* regime
+/// — Lanczos with a full Krylov space (m = n) and rsvd with the
+/// oversampled basis clamped to n columns, where Rayleigh–Ritz is an
+/// exact similarity transform — so the comparison pins the shared
+/// algebra (shift, orthonormalization, Rayleigh–Ritz, back-ordering) to
+/// float precision. A manifold Laplacian has no spectral gap, so the
+/// *approximation* regime is deliberately not asserted here; the rsvd
+/// unit tests pin it on gapped spectra where rates are predictable.
+#[test]
+fn rsvd_lanczos_and_dense_agree_on_the_bottom_eigenspace() {
+    let w = affinity_graph(220, 3);
+    let lsym = nle::graph::normalized_laplacian_sparse(&w);
+    let n = lsym.rows;
+    let k = 5;
+
+    let dense = nle::linalg::eig::sym_eig(&lsym.to_dense());
+    let dense_v = Mat::from_fn(n, k, |i, j| dense.vectors.at(i, j));
+
+    let lan = nle::linalg::lanczos::smallest_eigs(&lsym, k, Some(n), 7);
+    assert_eq!(lan.vectors.cols, k, "Lanczos must find all {k} pairs here");
+    // p > n clamps the basis to n columns -> exact Rayleigh-Ritz
+    let rs = nle::linalg::rsvd::smallest_eigs(&lsym, k, 2, n, 7);
+    assert_eq!(rs.vectors.cols, k);
+
+    for j in 0..k {
+        assert!(
+            (lan.values[j] - dense.values[j]).abs() < 1e-7,
+            "lanczos value {j}: {} vs dense {}",
+            lan.values[j],
+            dense.values[j]
+        );
+        assert!(
+            (rs.values[j] - dense.values[j]).abs() < 1e-7,
+            "rsvd value {j}: {} vs dense {}",
+            rs.values[j],
+            dense.values[j]
+        );
+    }
+    assert!(orthonormality_defect(&lan.vectors) < 1e-8);
+    assert!(orthonormality_defect(&rs.vectors) < 1e-8);
+    let a_ld = subspace_agreement(&lan.vectors, &dense_v);
+    let a_rd = subspace_agreement(&rs.vectors, &dense_v);
+    let a_rl = subspace_agreement(&rs.vectors, &lan.vectors);
+    assert!(a_ld > 1.0 - 1e-4, "lanczos/dense subspace agreement {a_ld}");
+    assert!(a_rd > 1.0 - 1e-4, "rsvd/dense subspace agreement {a_rd}");
+    assert!(a_rl > 1.0 - 1e-4, "rsvd/lanczos subspace agreement {a_rl}");
+}
+
+/// FNV-1a over raw f64 bits — order-sensitive, process-portable.
+fn fingerprint(values: &[f64], vectors: &Mat) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |bits: u64| {
+        for b in bits.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    for &v in values {
+        mix(v.to_bits());
+    }
+    for &v in &vectors.data {
+        mix(v.to_bits());
+    }
+    h
+}
+
+/// The bits whose stability across worker counts is under test: one
+/// rsvd eigendecomposition plus one full spectral init, both driven by
+/// the parallel symmetric matvec.
+fn spectral_fingerprint() -> u64 {
+    let w = affinity_graph(250, 11);
+    let lsym = nle::graph::normalized_laplacian_sparse(&w);
+    let rs = nle::linalg::rsvd::smallest_eigs(&lsym, 4, 4, 8, 5);
+    let x0 = nle::init::spectral_init(&w, 2, 1e-4, 9);
+    fingerprint(&rs.values, &rs.vectors).rotate_left(17) ^ fingerprint(&[], &x0)
+}
+
+/// Bitwise determinism across thread counts: the ordered parallel
+/// matvec must make the randomized pipeline independent of the worker
+/// count (the thread count is read once per process, so pinned
+/// subprocesses are the only way to vary it).
+#[test]
+fn spectral_init_is_bitwise_identical_across_thread_counts() {
+    const CHILD_ENV: &str = "NLE_SI_CHILD";
+    if std::env::var(CHILD_ENV).is_ok() {
+        println!("SI_FP {:016x}", spectral_fingerprint());
+        return;
+    }
+    let here = spectral_fingerprint();
+    assert_eq!(here, spectral_fingerprint(), "same-process rerun must be stable");
+    for threads in ["1", "3"] {
+        let out = std::process::Command::new(std::env::current_exe().unwrap())
+            .args([
+                "spectral_init_is_bitwise_identical_across_thread_counts",
+                "--exact",
+                "--nocapture",
+            ])
+            .env(CHILD_ENV, "1")
+            .env("NLE_THREADS", threads)
+            .output()
+            .expect("spawning the child test process");
+        assert!(out.status.success(), "child with NLE_THREADS={threads} failed");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        let fp = stdout
+            .lines()
+            .find_map(|l| l.strip_prefix("SI_FP "))
+            .unwrap_or_else(|| panic!("no fingerprint in child output:\n{stdout}"));
+        let fp = u64::from_str_radix(fp.trim(), 16).unwrap();
+        assert_eq!(fp, here, "NLE_THREADS={threads} changed the spectral-init bits");
+    }
+}
+
+/// End to end on a 2k swiss roll: with identical affinities, optimizer
+/// and seeds, the spectral start must reach the quality bar (10% of the
+/// random baseline's energy drop above the best final energy) in fewer
+/// optimizer iterations than the random start.
+#[test]
+fn spectral_start_beats_random_in_iterations_on_2k_swiss_roll() {
+    let n = 2000;
+    let data = nle::data::synth::swiss_roll(n, 3, 0.05, 42);
+    let wp = Arc::new(Attractive::Sparse(nle::affinity::sne_affinities_sparse(
+        &data.y, 15.0, 20,
+    )));
+    let run = |init: InitSpec| {
+        let mut job = EmbeddingJob::native("init-e2e", Method::Ee, 100.0, wp.clone(), "sd", None);
+        job.engine = EngineSpec::BarnesHut { theta: 0.5 };
+        job.init = init;
+        job.opts.max_iters = 80;
+        job.run().unwrap()
+    };
+    let rand = run(InitSpec::Random);
+    let spec = run(InitSpec::Spectral { solver: SpectralSolver::default_rsvd() });
+    assert!(rand.e.is_finite() && spec.e.is_finite());
+
+    let e0 = rand.trace.first().unwrap().e;
+    let e_best = rand.e.min(spec.e);
+    let thresh = e_best + 0.10 * (e0 - e_best);
+    let to_quality = |trace: &[IterStats]| {
+        trace.iter().find(|t| t.e <= thresh).map(|t| t.iter).unwrap_or(usize::MAX)
+    };
+    let it_rand = to_quality(&rand.trace);
+    let it_spec = to_quality(&spec.trace);
+    assert!(it_spec < usize::MAX, "spectral run never reached the quality bar");
+    assert!(
+        it_spec < it_rand,
+        "spectral start took {it_spec} iters to quality, random took {it_rand}"
+    );
+}
