@@ -1,0 +1,70 @@
+#!/usr/bin/env bash
+# Daemon smoke: a real two-process deployment drill.
+#
+# 1. train and save a v1 model, then `retrain` it into a v2 artifact
+#    (the thing the hot-swap publishes);
+# 2. start `nle daemon` on v1 as a separate process;
+# 3. drive it with the closed-loop load generator: concurrent clients,
+#    a `swap` control command landing mid-load, p50/p99 recorded
+#    before/during/after -> results/BENCH_serve_daemon.json. The
+#    generator exits nonzero if any request is dropped, any response
+#    errors, any client sees the version go backwards, or the post-swap
+#    phase is not entirely on the swapped version;
+# 4. shut the daemon down over the protocol and require a clean exit.
+#
+# Usage: ci/daemon_smoke.sh   (SKIP_BUILD=1 reuses target/release/nle,
+#                              ADDR=host:port overrides 127.0.0.1:7979)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [ "${SKIP_BUILD:-0}" != 1 ]; then
+  cargo build --release
+fi
+NLE=target/release/nle
+ADDR="${ADDR:-127.0.0.1:7979}"
+HOST="${ADDR%%:*}"
+PORT="${ADDR##*:}"
+mkdir -p results
+
+echo "== train v1 =="
+"$NLE" save --data swiss --n 1500 --knn 12 --max-iters 40 \
+  --out results/daemon_v1.nlem
+
+echo "== retrain v2 (the artifact the mid-load swap publishes) =="
+"$NLE" retrain --model results/daemon_v1.nlem --data swiss --n-new 200 \
+  --seed 9 --max-iters 20 --out results/daemon_v2.nlem
+
+echo "== start daemon on $ADDR =="
+"$NLE" daemon --model results/daemon_v1.nlem --listen "$ADDR" &
+DAEMON_PID=$!
+trap 'kill "$DAEMON_PID" 2>/dev/null || true' EXIT
+
+# readiness: probe the accept loop (the bind happens before the
+# "listening" log line, so a successful connect means it is serving)
+ready=0
+for _ in $(seq 1 150); do
+  if (exec 3<>"/dev/tcp/$HOST/$PORT") 2>/dev/null; then
+    ready=1
+    break
+  fi
+  sleep 0.2
+done
+if [ "$ready" != 1 ]; then
+  echo "daemon did not become ready on $ADDR" >&2
+  exit 1
+fi
+
+echo "== closed-loop load with mid-run hot-swap =="
+# --shutdown-after ends with a protocol `shutdown`, so the daemon
+# process must exit 0 on its own — that is the clean-exit assertion
+"$NLE" daemon-load --addr "$ADDR" --swap results/daemon_v2.nlem \
+  --clients 6 --requests 30 --warmup 8 --shutdown-after
+
+wait "$DAEMON_PID"
+trap - EXIT
+
+test -s results/BENCH_serve_daemon.json
+grep -q '"dropped": 0' results/BENCH_serve_daemon.json
+grep -q '"versions_monotone": true' results/BENCH_serve_daemon.json
+grep -q '"swapped_version": 2' results/BENCH_serve_daemon.json
+echo "daemon smoke OK"

@@ -1,0 +1,71 @@
+#!/usr/bin/env python3
+"""Report-only diff of fresh BENCH_*.json results against the committed
+baselines under results/baselines/.
+
+Prints every numeric field that moved, as a relative delta. Never fails
+the build: CI runners are noisy shared machines, so perf deltas are for
+humans to read in the job log and judge on trend, not a gate. Refresh
+the committed numbers with `ci/perf_smoke.sh --baseline` (see
+results/baselines/README.md).
+"""
+
+import json
+import pathlib
+import sys
+
+
+def numbers(prefix, obj, out):
+    """Flatten every numeric leaf into out, keyed by its JSON path."""
+    if isinstance(obj, dict):
+        for key, val in obj.items():
+            numbers(f"{prefix}.{key}" if prefix else key, val, out)
+    elif isinstance(obj, list):
+        for i, val in enumerate(obj):
+            numbers(f"{prefix}[{i}]", val, out)
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        out[prefix] = float(obj)
+
+
+def main():
+    root = pathlib.Path(__file__).resolve().parent.parent
+    fresh_dir = root / "results"
+    base_dir = fresh_dir / "baselines"
+    baselines = sorted(base_dir.glob("BENCH_*.json")) if base_dir.is_dir() else []
+    if not baselines:
+        print("diff_bench: no committed BENCH_*.json under results/baselines/ — skipping")
+        print("            (capture some with: ci/perf_smoke.sh --baseline)")
+        return 0
+
+    for base in baselines:
+        fresh = fresh_dir / base.name
+        print(f"== {base.name} (fresh vs committed baseline) ==")
+        if not fresh.is_file():
+            print("  no fresh result in this run")
+            continue
+        old, new = {}, {}
+        numbers("", json.loads(base.read_text()), old)
+        numbers("", json.loads(fresh.read_text()), new)
+        moved = 0
+        for key in sorted(old):
+            if key not in new:
+                print(f"  {key}: {old[key]:g} -> (gone)")
+                moved += 1
+            elif new[key] != old[key]:
+                if old[key] != 0:
+                    rel = 100.0 * (new[key] - old[key]) / abs(old[key])
+                    print(f"  {key}: {old[key]:g} -> {new[key]:g} ({rel:+.1f}%)")
+                else:
+                    print(f"  {key}: {old[key]:g} -> {new[key]:g}")
+                moved += 1
+        for key in sorted(set(new) - set(old)):
+            print(f"  {key}: (new) {new[key]:g}")
+            moved += 1
+        if moved == 0:
+            print("  identical")
+
+    print("diff_bench: report only — baselines never gate the build")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,113 @@
+#!/usr/bin/env bash
+# Perf smoke: the per-commit performance trajectory, runnable locally
+# and by the CI perf-smoke job (which uploads results/ as artifacts).
+#
+# Runs the scal / ann / init / serve harnesses plus the
+# checkpoint -> kill -> resume equivalence assertion, writing CSVs and
+# machine-readable BENCH_*.json under results/.
+#
+# Usage: ci/perf_smoke.sh [--full] [--baseline] [--skip-build]
+#   --full       acceptance-scale runs (the EXPERIMENTS.md baseline
+#                settings: scal at N=4096..65536, init at N=16384, ...)
+#                instead of the PR-sized smokes; also FULL=1
+#   --baseline   after the runs, copy every fresh results/BENCH_*.json
+#                into results/baselines/ — commit those to pin the
+#                numbers ci/diff_bench.py reports against
+#   --skip-build reuse an existing target/release/nle
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+FULL="${FULL:-0}"
+BASELINE=0
+SKIP_BUILD=0
+for arg in "$@"; do
+  case "$arg" in
+    --full) FULL=1 ;;
+    --baseline) BASELINE=1 ;;
+    --skip-build) SKIP_BUILD=1 ;;
+    *) echo "unknown argument: $arg" >&2; exit 2 ;;
+  esac
+done
+
+if [ "$SKIP_BUILD" != 1 ]; then
+  cargo build --release
+fi
+NLE=target/release/nle
+mkdir -p results
+
+if [ "$FULL" = 1 ]; then
+  SCAL_SIZES=4096,16384,65536 SCAL_REPS=3 SD_ITERS=5
+  ANN_SIZES=2000,5000,10000,20000
+  INIT_N=16384 INIT_ITERS=200
+  SERVE_N=4096 SERVE_BATCHES=1,16,256,1024 SERVE_ITERS=30 SERVE_REPS=3
+  DL_N=4096 DL_ITERS=30 DL_CLIENTS=8 DL_REQUESTS=40
+else
+  SCAL_SIZES=1024,2048 SCAL_REPS=1 SD_ITERS=2
+  ANN_SIZES=1024,2048
+  INIT_N=2048 INIT_ITERS=60
+  SERVE_N=2048 SERVE_BATCHES=1,64,512 SERVE_ITERS=10 SERVE_REPS=2
+  DL_N=1024 DL_ITERS=10 DL_CLIENTS=6 DL_REQUESTS=25
+fi
+
+# all three gradient engines: exact reference, Barnes-Hut theta = 0.5,
+# negative sampling k = 64 -> results/scalability.csv + BENCH_scal.json
+echo "== scal =="
+"$NLE" scal --sizes "$SCAL_SIZES" --thetas 0.5 --neg 64 \
+  --reps "$SCAL_REPS" --sd-iters "$SD_ITERS"
+
+echo "== ann =="
+"$NLE" ann --sizes "$ANN_SIZES"
+
+# random vs spectral warm start: init wall-clock and
+# iterations-to-quality -> results/init.csv + BENCH_init.json
+echo "== init =="
+"$NLE" init --n "$INIT_N" --inits random,spectral:rsvd,spectral:lanczos \
+  --max-iters "$INIT_ITERS"
+
+echo "== serve =="
+"$NLE" serve --n "$SERVE_N" --batches "$SERVE_BATCHES" \
+  --train-iters "$SERVE_ITERS" --reps "$SERVE_REPS"
+echo "== serve (1 thread) =="
+NLE_THREADS=1 "$NLE" serve --n "$SERVE_N" --batches 64,512 \
+  --train-iters "$SERVE_ITERS" --reps "$SERVE_REPS" \
+  --csv serve_t1.csv --json BENCH_serve_t1.json
+
+# the serving daemon under closed-loop load with a mid-run hot-swap
+# (self-hosted: trains v1, warm-start-retrains v2, swaps it in over the
+# wire) -> results/BENCH_serve_daemon.json; the run itself asserts zero
+# dropped requests and monotone versions
+echo "== daemon-load (self-host) =="
+"$NLE" daemon-load --n "$DL_N" --train-iters "$DL_ITERS" \
+  --clients "$DL_CLIENTS" --requests "$DL_REQUESTS"
+
+# checkpoint -> kill -> resume: run 25 iterations checkpointing every
+# 10 (simulating a preempted job whose last record landed mid-run at
+# iteration 20), resume to the full 60-iteration budget, and require
+# the final energy to match an uninterrupted 60-iteration run digit
+# for digit (the embed printout carries 12 fractional digits) — the
+# CI-sized version of the bitwise resume-equivalence contract in
+# rust/tests/resume_roundtrip.rs
+echo "== checkpoint/resume =="
+"$NLE" embed --data swiss --n 1024 --knn 12 --strategy gd \
+  --max-iters 25 --checkpoint-every 10 --checkpoint-path results/ckpt.nlec \
+  --out results/embed_part.csv | tee /tmp/part.log
+"$NLE" embed --data swiss --n 1024 --knn 12 --strategy gd \
+  --max-iters 60 --resume results/ckpt.nlec \
+  --out results/embed_resumed.csv | tee /tmp/resumed.log
+"$NLE" embed --data swiss --n 1024 --knn 12 --strategy gd \
+  --max-iters 60 \
+  --out results/embed_full.csv | tee /tmp/full.log
+E_RESUMED=$(grep -o 'E = [^,]*' /tmp/resumed.log | tail -n 1)
+E_FULL=$(grep -o 'E = [^,]*' /tmp/full.log | tail -n 1)
+echo "resumed:       $E_RESUMED"
+echo "uninterrupted: $E_FULL"
+test -n "$E_RESUMED"
+[ "$E_RESUMED" = "$E_FULL" ]
+
+if [ "$BASELINE" = 1 ]; then
+  mkdir -p results/baselines
+  cp results/BENCH_*.json results/baselines/
+  echo "baselines refreshed under results/baselines/ — review and commit"
+fi
+
+echo "perf smoke OK"

@@ -1,28 +1,45 @@
-//! Out-of-sample serving throughput harness (the `serve` CLI command):
-//! train once, then measure batch-transform throughput (points/sec)
-//! across batch sizes on the frozen model — the serving workload of the
-//! ROADMAP's "heavy traffic" north star.
+//! Serving harnesses: batch throughput (the `serve` CLI command) and
+//! the closed-loop daemon load generator (`daemon-load`).
 //!
-//! The transform is embarrassingly parallel across query points
-//! ([`crate::par`]), so the interesting axes are batch size (per-batch
-//! fan-out amortization) and worker count. Thread count is fixed per
-//! process (`NLE_THREADS` is read once), so this harness records the
-//! active count as a CSV column; CI runs the harness under different
-//! `NLE_THREADS` values to produce the thread sweep.
+//! **`run`** — train once, then measure batch-transform throughput
+//! (points/sec) across batch sizes on the frozen model. The transform
+//! is embarrassingly parallel across query points ([`crate::par`]), so
+//! the interesting axes are batch size (per-batch fan-out
+//! amortization) and worker count. Thread count is fixed per process
+//! (`NLE_THREADS` is read once), so this harness records the active
+//! count as a CSV column; CI runs the harness under different
+//! `NLE_THREADS` values to produce the thread sweep. Output:
+//! `results/serve.csv` + `results/BENCH_serve.json`.
 //!
-//! Output: `results/serve.csv` (one row per batch size) plus
-//! `results/BENCH_serve.json`, a machine-readable summary the CI
-//! perf-smoke job uploads as a build artifact — the start of a
-//! per-commit performance trajectory.
+//! **`run_daemon_bench`** — the serving *daemon* under fixed offered
+//! load: C closed-loop clients (each waits for its response before
+//! issuing the next request, so offered load = C in-flight requests)
+//! drive the [`crate::serve`] line protocol over real TCP sockets
+//! through three phases — **before** a hot-swap, **during** (a
+//! `swap <path>` control command lands mid-phase under full load), and
+//! **after** — recording per-request latency and the model version
+//! stamped on every response. It asserts the swap contract the daemon
+//! promises: every issued request is answered (zero dropped), no
+//! response is an error, and no client ever observes the version going
+//! backwards. Output: `results/BENCH_serve_daemon.json` with p50/p99/
+//! mean latency and throughput per phase — produced locally and by the
+//! CI daemon-smoke job, which runs the generator against a separately
+//! started `nle daemon` process and swaps in a genuinely `retrain`-ed
+//! artifact.
 
-use std::io::Write;
-use std::time::Instant;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use super::common::results_dir;
 use crate::coordinator::EmbeddingJob;
 use crate::index::IndexSpec;
 use crate::model::TransformOptions;
 use crate::objective::Method;
+use crate::serve::{serve_tcp, Daemon, DaemonConfig, DEFAULT_SLOT};
 
 pub struct ServeConfig {
     /// Training-set size (the frozen model's N).
@@ -169,6 +186,434 @@ pub fn run(cfg: &ServeConfig) -> anyhow::Result<()> {
     Ok(())
 }
 
+// ------------------------------------------------------------------ //
+// Closed-loop daemon load generator (`daemon-load`)
+
+/// Configuration for [`run_daemon_bench`].
+pub struct DaemonBenchConfig {
+    /// Address of an already-running `nle daemon` to measure (None =
+    /// self-host: train a v1, serve it in-process over a real TCP
+    /// socket on an ephemeral port, warm-start-retrain a v2 to swap
+    /// in mid-load).
+    pub addr: Option<String>,
+    /// Artifact the mid-load `swap` control command points at. In
+    /// self-host mode it defaults to the freshly retrained v2 saved
+    /// under `results/`; in external mode None skips the swap (the
+    /// monotonicity and zero-drop assertions still run).
+    pub swap_path: Option<PathBuf>,
+    /// Self-host only: training-set size for v1.
+    pub n_train: usize,
+    /// Self-host only: SD iterations per training run.
+    pub train_iters: usize,
+    /// Per-point descent steps the self-hosted daemon serves with.
+    pub steps: usize,
+    /// Concurrent closed-loop clients — each waits for its response
+    /// before sending the next request, so the offered load is exactly
+    /// this many in-flight requests.
+    pub clients: usize,
+    /// Recorded requests per client per phase.
+    pub requests_per_phase: usize,
+    /// Unrecorded per-client requests before the first phase.
+    pub warmup: usize,
+    /// Socket read timeout; a response slower than this fails the run.
+    pub timeout: Duration,
+    /// Self-host daemon shape (worker threads per slot, coalescing
+    /// bound, admission bound).
+    pub workers: usize,
+    pub max_batch: usize,
+    pub queue_capacity: usize,
+    /// Send `shutdown` to an external daemon when done (self-host
+    /// always stops its own server).
+    pub shutdown_after: bool,
+    pub json_name: Option<String>,
+    pub seed: u64,
+}
+
+impl Default for DaemonBenchConfig {
+    fn default() -> Self {
+        DaemonBenchConfig {
+            addr: None,
+            swap_path: None,
+            n_train: 2048,
+            train_iters: 20,
+            steps: 10,
+            clients: 8,
+            requests_per_phase: 40,
+            warmup: 10,
+            timeout: Duration::from_secs(30),
+            workers: 2,
+            max_batch: 64,
+            queue_capacity: 1024,
+            shutdown_after: false,
+            json_name: Some("BENCH_serve_daemon.json".to_string()),
+            seed: 42,
+        }
+    }
+}
+
+/// Per-phase latency/throughput digest.
+struct PhaseSummary {
+    name: &'static str,
+    n: usize,
+    p50_ms: f64,
+    p99_ms: f64,
+    mean_ms: f64,
+    rps: f64,
+    v_min: u64,
+    v_max: u64,
+}
+
+/// Nearest-rank percentile over an ascending latency slice, in ms.
+fn percentile_ms(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx] * 1e3
+}
+
+/// One client's recorded phase: per-request latency (seconds) and the
+/// model version stamped on each response, in request order.
+type ClientLog = (Vec<f64>, Vec<u64>);
+
+/// One phase of closed-loop load: `clients` threads, each issuing
+/// `per_client` requests back-to-back over its own connection. Every
+/// response must be `ok <version> ...` — an `err`, a timeout, or a
+/// closed connection fails the phase (that is the zero-drop check).
+fn run_clients(
+    addr: &str,
+    clients: usize,
+    per_client: usize,
+    lines: &Arc<Vec<String>>,
+    timeout: Duration,
+    counter: &Arc<AtomicU64>,
+) -> anyhow::Result<Vec<ClientLog>> {
+    let handles: Vec<std::thread::JoinHandle<anyhow::Result<ClientLog>>> = (0..clients)
+        .map(|c| {
+            let addr = addr.to_string();
+            let lines = lines.clone();
+            let counter = counter.clone();
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(&addr)?;
+                stream.set_nodelay(true)?;
+                stream.set_read_timeout(Some(timeout))?;
+                let mut reader = BufReader::new(stream.try_clone()?);
+                let mut writer = &stream;
+                let mut lat = Vec::with_capacity(per_client);
+                let mut vers = Vec::with_capacity(per_client);
+                for i in 0..per_client {
+                    let line = &lines[(c + i * clients) % lines.len()];
+                    let t0 = Instant::now();
+                    writer.write_all(line.as_bytes())?;
+                    writer.write_all(b"\n")?;
+                    writer.flush()?;
+                    let mut resp = String::new();
+                    let n = reader.read_line(&mut resp)?;
+                    anyhow::ensure!(n > 0, "server closed the connection mid-phase");
+                    let dt = t0.elapsed().as_secs_f64();
+                    let mut toks = resp.split_whitespace();
+                    anyhow::ensure!(
+                        toks.next() == Some("ok"),
+                        "client {c} got a non-ok response: {}",
+                        resp.trim_end()
+                    );
+                    let v: u64 = toks
+                        .next()
+                        .and_then(|t| t.parse().ok())
+                        .ok_or_else(|| anyhow::anyhow!("unparsable version in {resp:?}"))?;
+                    lat.push(dt);
+                    vers.push(v);
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok((lat, vers))
+            })
+        })
+        .collect();
+    let mut logs = Vec::with_capacity(clients);
+    for h in handles {
+        logs.push(h.join().map_err(|_| anyhow::anyhow!("client thread panicked"))??);
+    }
+    Ok(logs)
+}
+
+/// One request/response exchange on a fresh control connection.
+fn control_line(addr: &str, line: &str, timeout: Duration) -> anyhow::Result<String> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(timeout))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = &stream;
+    writer.write_all(line.as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    let mut resp = String::new();
+    reader.read_line(&mut resp)?;
+    Ok(resp.trim_end().to_string())
+}
+
+/// Closed-loop load against the serving daemon, with a hot-swap landing
+/// mid-run: phases warmup (unrecorded) → before → during (a controller
+/// thread issues `swap <path>` once a third of the phase's responses
+/// are in) → after. Asserts zero dropped requests, zero error
+/// responses, per-client non-decreasing versions, single-version
+/// before/after phases, and that the post-swap phase answers on the
+/// swapped version. Writes `results/BENCH_serve_daemon.json`.
+pub fn run_daemon_bench(cfg: &DaemonBenchConfig) -> anyhow::Result<()> {
+    anyhow::ensure!(cfg.clients >= 1 && cfg.requests_per_phase >= 1, "empty load");
+    let threads = crate::par::num_threads();
+    let dir = results_dir();
+
+    // Resolve the server: external (measure a daemon started by
+    // `nle daemon`) or self-host (train v1 + retrained v2, serve v1
+    // over a real socket so the wire cost is measured either way).
+    let mut host: Option<(
+        Arc<Daemon>,
+        std::thread::JoinHandle<anyhow::Result<()>>,
+    )> = None;
+    let (addr, swap, mode) = match &cfg.addr {
+        Some(a) => (a.clone(), cfg.swap_path.clone(), "external"),
+        None => {
+            let data = crate::data::synth::swiss_roll(cfg.n_train, 3, 0.05, cfg.seed);
+            let mut job = EmbeddingJob::from_data(
+                "daemon-v1",
+                &data.y,
+                Method::Ee,
+                100.0,
+                8.0,
+                10,
+                IndexSpec::Auto,
+            );
+            job.opts.max_iters = cfg.train_iters;
+            let (_r1, v1) = job.run_model()?;
+            // v2 = warm-start retrain after new points arrive — the
+            // artifact the mid-load swap publishes
+            let extra_n = (cfg.n_train / 8).max(8);
+            let extra =
+                crate::data::synth::swiss_roll(extra_n, 3, 0.05, cfg.seed.wrapping_add(1));
+            let mut job2 =
+                EmbeddingJob::warm_start("daemon-v2", &v1, &extra.y, IndexSpec::Auto)?;
+            job2.opts.max_iters = cfg.train_iters;
+            let (_r2, v2) = job2.run_model()?;
+            let swap_path = cfg
+                .swap_path
+                .clone()
+                .unwrap_or_else(|| dir.join("daemon_swap.nlem"));
+            v2.save(&swap_path)?;
+
+            let daemon = Arc::new(Daemon::start(DaemonConfig {
+                workers: cfg.workers,
+                queue_capacity: cfg.queue_capacity,
+                max_batch: cfg.max_batch,
+                opts: TransformOptions { steps: cfg.steps, ..Default::default() },
+            }));
+            daemon.add_model(DEFAULT_SLOT, Arc::new(v1), "daemon-load v1")?;
+            let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+            let addr = listener.local_addr()?.to_string();
+            let server = {
+                let daemon = daemon.clone();
+                std::thread::spawn(move || serve_tcp(daemon, listener))
+            };
+            host = Some((daemon, server));
+            (addr, Some(swap_path), "self-host")
+        }
+    };
+
+    // pre-rendered request lines over a held-out query pool
+    let pool = crate::data::synth::swiss_roll(256, 3, 0.05, cfg.seed.wrapping_add(7));
+    let lines: Arc<Vec<String>> = Arc::new(
+        (0..pool.y.rows)
+            .map(|i| {
+                use std::fmt::Write as _;
+                let mut l = String::from("t");
+                for j in 0..3 {
+                    let _ = write!(l, " {:?}", pool.y.at(i, j));
+                }
+                l
+            })
+            .collect(),
+    );
+
+    if cfg.warmup > 0 {
+        let counter = Arc::new(AtomicU64::new(0));
+        run_clients(&addr, cfg.clients, cfg.warmup, &lines, cfg.timeout, &counter)?;
+    }
+
+    let per = cfg.requests_per_phase;
+    let expected = (cfg.clients * per) as u64;
+    let mut client_versions: Vec<Vec<u64>> = vec![Vec::new(); cfg.clients];
+    let mut summaries: Vec<PhaseSummary> = Vec::new();
+    let mut swap_ack_ms: Option<f64> = None;
+    let mut swapped_version: Option<u64> = None;
+
+    for name in ["before", "during", "after"] {
+        let counter = Arc::new(AtomicU64::new(0));
+        let controller = if name == "during" {
+            swap.as_ref().map(|path| {
+                let addr = addr.clone();
+                let counter = counter.clone();
+                let path = path.clone();
+                let timeout = cfg.timeout;
+                let trigger = expected / 3;
+                std::thread::spawn(move || -> anyhow::Result<(f64, u64)> {
+                    while counter.load(Ordering::Relaxed) < trigger {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                    let t0 = Instant::now();
+                    let line = format!("swap {}", path.display());
+                    let resp = control_line(&addr, &line, timeout)?;
+                    let ack_ms = 1e3 * t0.elapsed().as_secs_f64();
+                    let mut toks = resp.split_whitespace();
+                    anyhow::ensure!(toks.next() == Some("swapped"), "swap rejected: {resp}");
+                    let _slot = toks.next();
+                    let v: u64 = toks
+                        .next()
+                        .and_then(|t| t.parse().ok())
+                        .ok_or_else(|| anyhow::anyhow!("unparsable swap ack {resp:?}"))?;
+                    Ok((ack_ms, v))
+                })
+            })
+        } else {
+            None
+        };
+        let t0 = Instant::now();
+        let logs = run_clients(&addr, cfg.clients, per, &lines, cfg.timeout, &counter)?;
+        let wall = t0.elapsed().as_secs_f64();
+        if let Some(h) = controller {
+            let (ack, v) =
+                h.join().map_err(|_| anyhow::anyhow!("swap controller panicked"))??;
+            swap_ack_ms = Some(ack);
+            swapped_version = Some(v);
+        }
+
+        let mut lats: Vec<f64> = Vec::with_capacity(expected as usize);
+        let mut v_min = u64::MAX;
+        let mut v_max = 0u64;
+        for (c, (lat, vers)) in logs.iter().enumerate() {
+            lats.extend_from_slice(lat);
+            for &v in vers {
+                v_min = v_min.min(v);
+                v_max = v_max.max(v);
+            }
+            client_versions[c].extend_from_slice(vers);
+        }
+        anyhow::ensure!(
+            lats.len() as u64 == expected,
+            "phase {name}: {} responses for {expected} requests — dropped requests",
+            lats.len()
+        );
+        let mean_ms = 1e3 * lats.iter().sum::<f64>() / lats.len() as f64;
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        summaries.push(PhaseSummary {
+            name,
+            n: lats.len(),
+            p50_ms: percentile_ms(&lats, 0.50),
+            p99_ms: percentile_ms(&lats, 0.99),
+            mean_ms,
+            rps: lats.len() as f64 / wall.max(1e-12),
+            v_min,
+            v_max,
+        });
+    }
+
+    // the swap contract, as observed from the client side
+    for (c, vers) in client_versions.iter().enumerate() {
+        anyhow::ensure!(
+            vers.windows(2).all(|w| w[0] <= w[1]),
+            "client {c} observed the model version going backwards: {vers:?}"
+        );
+    }
+    let (before, after) = (&summaries[0], &summaries[2]);
+    anyhow::ensure!(
+        before.v_min == before.v_max,
+        "pre-swap phase saw versions {}..{}",
+        before.v_min,
+        before.v_max
+    );
+    anyhow::ensure!(
+        after.v_min == after.v_max,
+        "post-swap phase saw versions {}..{}",
+        after.v_min,
+        after.v_max
+    );
+    if let Some(v) = swapped_version {
+        anyhow::ensure!(v > before.v_max, "swap did not advance the version");
+        anyhow::ensure!(
+            after.v_min == v,
+            "post-swap phase answered on version {} instead of the swapped {v}",
+            after.v_min
+        );
+    } else {
+        anyhow::ensure!(
+            after.v_min == before.v_min,
+            "version moved without a swap: {} -> {}",
+            before.v_min,
+            after.v_min
+        );
+    }
+
+    println!(
+        "daemon-load ({mode}): {} clients x {per} req/phase against {addr} \
+         ({threads} threads)",
+        cfg.clients
+    );
+    println!(
+        "  {:>7} {:>6} {:>9} {:>9} {:>9} {:>10} {:>9}",
+        "phase", "n", "p50(ms)", "p99(ms)", "mean(ms)", "req/s", "version"
+    );
+    for s in &summaries {
+        let v = if s.v_min == s.v_max {
+            format!("v{}", s.v_min)
+        } else {
+            format!("v{}-v{}", s.v_min, s.v_max)
+        };
+        println!(
+            "  {:>7} {:>6} {:>9.3} {:>9.3} {:>9.3} {:>10.1} {:>9}",
+            s.name, s.n, s.p50_ms, s.p99_ms, s.mean_ms, s.rps, v
+        );
+    }
+    if let (Some(ack), Some(v)) = (swap_ack_ms, swapped_version) {
+        println!("  hot-swap to v{v} acked in {ack:.3} ms under full load; zero dropped");
+    }
+
+    if let Some(json_name) = &cfg.json_name {
+        let jpath = dir.join(json_name);
+        let rows: Vec<String> = summaries
+            .iter()
+            .map(|s| {
+                format!(
+                    "    {{\"phase\": \"{}\", \"n\": {}, \"p50_ms\": {:.4}, \
+                     \"p99_ms\": {:.4}, \"mean_ms\": {:.4}, \"rps\": {:.2}, \
+                     \"v_min\": {}, \"v_max\": {}}}",
+                    s.name, s.n, s.p50_ms, s.p99_ms, s.mean_ms, s.rps, s.v_min, s.v_max
+                )
+            })
+            .collect();
+        let ack = swap_ack_ms.map_or("null".to_string(), |a| format!("{a:.4}"));
+        let sv = swapped_version.map_or("null".to_string(), |v| v.to_string());
+        let json = format!(
+            "{{\n  \"bench\": \"serve_daemon\",\n  \"mode\": \"{mode}\",\n  \
+             \"clients\": {},\n  \"requests_per_phase\": {per},\n  \
+             \"threads\": {threads},\n  \"swap_ack_ms\": {ack},\n  \
+             \"swapped_version\": {sv},\n  \"dropped\": 0,\n  \
+             \"versions_monotone\": true,\n  \"phases\": [\n{}\n  ]\n}}\n",
+            cfg.clients,
+            rows.join(",\n")
+        );
+        std::fs::write(&jpath, json)?;
+        println!("daemon-load: wrote {}", jpath.display());
+    }
+
+    if host.is_some() || cfg.shutdown_after {
+        let resp = control_line(&addr, "shutdown", cfg.timeout)?;
+        anyhow::ensure!(resp == "stopping", "unexpected shutdown response {resp:?}");
+    }
+    if let Some((daemon, server)) = host.take() {
+        server.join().map_err(|_| anyhow::anyhow!("server thread panicked"))??;
+        daemon.shutdown();
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,5 +644,38 @@ mod tests {
             std::fs::read_to_string(results_dir().join("BENCH_serve_smoke.json")).unwrap();
         assert!(json.contains("\"bench\": \"serve\""));
         assert!(json.contains("\"results\""));
+    }
+
+    /// End-to-end self-host daemon bench: tiny train, real sockets,
+    /// warm-start retrain, mid-load hot-swap; the run's own assertions
+    /// cover zero-drop and monotone versions, this checks the JSON.
+    #[test]
+    fn daemon_bench_self_host_smoke() {
+        let cfg = DaemonBenchConfig {
+            n_train: 220,
+            train_iters: 4,
+            steps: 4,
+            clients: 3,
+            requests_per_phase: 6,
+            warmup: 2,
+            workers: 2,
+            max_batch: 8,
+            swap_path: Some(results_dir().join("daemon_swap_smoke.nlem")),
+            json_name: Some("BENCH_serve_daemon_smoke.json".to_string()),
+            ..Default::default()
+        };
+        run_daemon_bench(&cfg).unwrap();
+        let json = std::fs::read_to_string(
+            results_dir().join("BENCH_serve_daemon_smoke.json"),
+        )
+        .unwrap();
+        assert!(json.contains("\"bench\": \"serve_daemon\""));
+        assert!(json.contains("\"mode\": \"self-host\""));
+        assert!(json.contains("\"dropped\": 0"));
+        assert!(json.contains("\"versions_monotone\": true"));
+        assert!(json.contains("\"swapped_version\": 2"));
+        for phase in ["before", "during", "after"] {
+            assert!(json.contains(&format!("\"phase\": \"{phase}\"")), "{json}");
+        }
     }
 }

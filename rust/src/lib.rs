@@ -16,8 +16,9 @@
 //!   (exact or HNSW — [`affinity`], [`index`]), datasets ([`data`]),
 //!   quality metrics ([`metrics`]), an embedding-job coordinator
 //!   ([`coordinator`]), a servable model layer — versioned persistence
-//!   plus a parallel out-of-sample transform ([`model`]) — and the
-//!   figure-reproduction harness ([`bench_harness`]).
+//!   plus a parallel out-of-sample transform ([`model`]) — a
+//!   concurrent hot-swappable serving daemon over it ([`serve`]), and
+//!   the figure-reproduction harness ([`bench_harness`]).
 //! * **Layer 2 (python/compile/model.py)** — the objectives as jax
 //!   functions, AOT-lowered to HLO text once by `make artifacts`.
 //! * **Layer 1 (python/compile/kernels/pairwise.py)** — the fused
@@ -80,6 +81,7 @@ pub mod objective;
 pub mod opt;
 pub mod par;
 pub mod runtime;
+pub mod serve;
 pub mod spatial;
 
 /// Convenient re-exports for examples and binaries.
@@ -102,4 +104,5 @@ pub mod prelude {
         TrainCheckpoint,
     };
     pub use crate::runtime::ArtifactRegistry;
+    pub use crate::serve::{Daemon, DaemonConfig, DaemonStats, DEFAULT_SLOT};
 }

@@ -1,8 +1,9 @@
 //! `nle` — CLI for the nonlinear-embedding framework.
 //!
 //! Subcommands map 1:1 to the paper's experiments (fig1..fig4, rates)
-//! plus a general-purpose `embed` runner and `info` for the artifact
-//! registry. See DESIGN.md section 9 for the experiment index.
+//! plus a general-purpose `embed` runner, the `daemon` serving front,
+//! and `info` for the artifact registry. See DESIGN.md section 10 for
+//! the experiment index.
 //!
 //! (Arg parsing is hand-rolled `--key value` matching; the offline build
 //! has no clap — see Cargo.toml.)
@@ -77,6 +78,29 @@ COMMANDS
           [--seed 9] [--strategy sd] [--index auto] [--max-iters 200]
           [--init auto (non-auto discards the warm start and re-inits)]
           [--out results/model_retrained.nlem]
+  daemon  long-lived serving daemon over saved models: line protocol
+          (t / t@<slot> / swap / load / stat / ping / quit / shutdown)
+          on TCP or stdio; single-point requests are coalesced into
+          parallel batches; `swap <path>` hot-swaps the served model
+          atomically under live load (in-flight requests finish on the
+          version they started on; versions only move forward)
+          [--model results/model.nlem] [--slot default]
+          [--listen 127.0.0.1:7979] [--stdio] [--workers 2]
+          [--max-batch 64] [--queue-cap 1024] [--steps 15]
+          [--theta 0.5] [--k 0 (0 = model k)]
+  daemon-load  closed-loop load generator for the daemon: C clients
+          measure p50/p99 latency + throughput before/during/after a
+          mid-load hot-swap -> results/BENCH_serve_daemon.json, and
+          assert zero dropped requests, zero errors, and per-client
+          monotone versions. Self-hosts by default (trains v1, serves
+          it, warm-start-retrains a v2, swaps it in over the wire);
+          --addr measures an externally started `nle daemon` instead
+          [--addr host:port] [--swap <path.nlem>] [--n 2048]
+          [--train-iters 20] [--steps 10] [--clients 8]
+          [--requests 40 (per client per phase)] [--warmup 10]
+          [--timeout 30] [--workers 2] [--max-batch 64]
+          [--queue-cap 1024] [--shutdown-after]
+          [--json BENCH_serve_daemon.json] [--seed 42]
   all     run every experiment at default scale
   embed   one embedding run — checkpointable, resumable, streamable
           [--data swiss|coil|mnist|clusters] [--n 500] [--method ee]
@@ -620,6 +644,58 @@ fn main() -> anyhow::Result<()> {
             );
             Ok(())
         }
+        "daemon" => {
+            let path = args.get_str("model", "results/model.nlem");
+            let model = EmbeddingModel::load(&path)?;
+            let k: usize = args.get("k", 0);
+            let workers: usize = args.get("workers", 2);
+            let max_batch: usize = args.get("max_batch", 64);
+            let queue_cap: usize = args.get("queue_cap", 1024);
+            let daemon = std::sync::Arc::new(Daemon::start(DaemonConfig {
+                workers,
+                queue_capacity: queue_cap,
+                max_batch,
+                opts: TransformOptions {
+                    steps: args.get("steps", 15),
+                    theta: args.get("theta", 0.5),
+                    k: if k == 0 { None } else { Some(k) },
+                },
+            }));
+            let slot = args.get_str("slot", DEFAULT_SLOT);
+            daemon.add_model(&slot, std::sync::Arc::new(model), path.as_str())?;
+            eprintln!(
+                "daemon: serving slot {slot:?} from {path} \
+                 ({workers} workers, batch <= {max_batch}, queue {queue_cap})"
+            );
+            if args.0.contains_key("stdio") {
+                nle::serve::serve_stdio(&daemon)?;
+            } else {
+                let listen = args.get_str("listen", "127.0.0.1:7979");
+                let listener = std::net::TcpListener::bind(&listen)?;
+                eprintln!("daemon: listening on {}", listener.local_addr()?);
+                nle::serve::serve_tcp(daemon.clone(), listener)?;
+            }
+            daemon.shutdown();
+            eprintln!("daemon: stopped ({:?})", daemon.stats());
+            Ok(())
+        }
+        "daemon-load" => serve::run_daemon_bench(&serve::DaemonBenchConfig {
+            addr: args.0.get("addr").cloned(),
+            swap_path: args.0.get("swap").map(std::path::PathBuf::from),
+            n_train: args.get("n", 2048),
+            train_iters: args.get("train_iters", 20),
+            steps: args.get("steps", 10),
+            clients: args.get("clients", 8),
+            requests_per_phase: args.get("requests", 40),
+            warmup: args.get("warmup", 10),
+            timeout: Duration::from_secs_f64(args.get("timeout", 30.0)),
+            workers: args.get("workers", 2),
+            max_batch: args.get("max_batch", 64),
+            queue_capacity: args.get("queue_cap", 1024),
+            shutdown_after: args.0.contains_key("shutdown_after"),
+            json_name: Some(args.get_str("json", "BENCH_serve_daemon.json")),
+            seed: args.get("seed", 42),
+        }),
         "info" => {
             let reg = ArtifactRegistry::open(args.get_str("artifacts", "artifacts"))?;
             println!("PJRT platform: {}", reg.client().platform_name());

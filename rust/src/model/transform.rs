@@ -83,13 +83,24 @@ pub struct Transformer<'a> {
 
 impl<'a> Transformer<'a> {
     pub fn new(model: &'a EmbeddingModel, opts: TransformOptions) -> Self {
+        Self::with_z0(model, opts, None)
+    }
+
+    /// Like [`Transformer::new`], but reusing a previously computed
+    /// frozen partition sum `z0` for this exact `(model, theta)` pair.
+    /// The serving daemon caches Z₀ per model version
+    /// ([`crate::serve::VersionedModel`]), so when a worker rebuilds its
+    /// transformer after observing a hot-swap, only the tree build is
+    /// paid again — not the O(N log N) partition-sum traversal. Ignored
+    /// for methods that need no Z₀ (EE, spectral).
+    pub fn with_z0(model: &'a EmbeddingModel, opts: TransformOptions, z0: Option<f64>) -> Self {
         let index = model.index();
         let dim = model.dim();
         let tree = (1..=3).contains(&dim).then(|| NTree::build(&model.x));
         let k = opts.k.unwrap_or(model.k).clamp(1, model.n() - 1);
         let mut t = Transformer { model, index, tree, z0: 0.0, opts, k };
         t.z0 = match model.method {
-            Method::Ssne | Method::Tsne => t.frozen_partition_sum(),
+            Method::Ssne | Method::Tsne => z0.unwrap_or_else(|| t.frozen_partition_sum()),
             Method::Spectral | Method::Ee => 0.0,
         };
         t
@@ -471,6 +482,29 @@ mod tests {
             let (a, b) = (te.transform_point(&q), th.transform_point(&q));
             let d2 = sqdist(&a, &b);
             assert!(d2 < 1e-18, "backends disagree: {a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn precomputed_z0_reproduces_the_fresh_transformer_bitwise() {
+        // the daemon's per-version Z₀ cache must not change results: a
+        // transformer seeded with another transformer's Z₀ places every
+        // query identically (normalized methods actually consume Z₀;
+        // EE ignores the hint by construction)
+        for method in [Method::Ssne, Method::Tsne, Method::Ee] {
+            let m = grid_model(method, 1.5);
+            let fresh = m.transformer();
+            let seeded =
+                Transformer::with_z0(&m, TransformOptions::default(), Some(fresh.z0()));
+            assert_eq!(seeded.z0(), fresh.z0(), "{}", method.name());
+            for q in [[3.5, 3.5, 0.0], [0.2, 6.8, 0.0], [5.1, 1.4, 0.0]] {
+                assert_eq!(
+                    fresh.transform_point(&q),
+                    seeded.transform_point(&q),
+                    "{}: Z₀ reuse changed a placement",
+                    method.name()
+                );
+            }
         }
     }
 

@@ -1,0 +1,472 @@
+//! The long-lived serving daemon: worker pools over hot-swappable
+//! model slots.
+//!
+//! Topology: each named slot ([`crate::serve::ModelSlot`]) gets its own
+//! bounded [`BatchQueue`] and its own pool of worker threads, so slots
+//! serve concurrently and backpressure is per-slot. A worker loop:
+//!
+//! 1. snapshot the slot's current [`VersionedModel`] and build a
+//!    [`crate::model::Transformer`] over it (tree + index view; the
+//!    frozen partition sum comes from the per-version cache, so only
+//!    the first transformer per version pays it);
+//! 2. pop a coalesced batch from the queue;
+//! 3. if the published version moved since the snapshot, *carry the
+//!    batch over*, rebuild on a fresh snapshot, and only then process —
+//!    so every batch runs entirely on one model version, and the
+//!    version a client observes can never go backwards: the processing
+//!    version is read after the request was popped, and version reads
+//!    are monotone across the happens-before chain of
+//!    response → next submit → pop;
+//! 4. transform the whole batch in one parallel call
+//!    ([`crate::par::par_map`] inside `Transformer::transform`) and
+//!    fulfill every request with (version, coordinates).
+//!
+//! Swap-under-load safety falls out of the structure: a swap only
+//! republishes the slot's `Arc` — the queue is untouched, admitted
+//! requests all complete (on the version current when their batch
+//! starts), and the displaced model is freed when the last worker
+//! snapshot drops. Shutdown closes the queues, which drain before the
+//! workers exit — zero dropped requests on the graceful path too.
+
+use std::collections::HashMap;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+
+use super::queue::{BatchQueue, Request, ResponseSlot, TransformOk};
+use super::registry::ModelSlot;
+use crate::linalg::dense::Mat;
+use crate::model::{EmbeddingModel, TransformOptions};
+
+/// Daemon-wide knobs (per-slot pools share them).
+#[derive(Clone, Copy, Debug)]
+pub struct DaemonConfig {
+    /// Worker threads per slot. Each worker processes one batch at a
+    /// time; within a batch, `Transformer::transform` fans out across
+    /// `NLE_THREADS`. More workers overlap batch setup with compute.
+    pub workers: usize,
+    /// Admission bound per slot (backpressure beyond it).
+    pub queue_capacity: usize,
+    /// Most single-point requests one batch coalesces.
+    pub max_batch: usize,
+    /// Transform options every worker serves with (θ, descent steps,
+    /// per-query k).
+    pub opts: TransformOptions,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig {
+            workers: 2,
+            queue_capacity: 1024,
+            max_batch: 64,
+            opts: TransformOptions::default(),
+        }
+    }
+}
+
+/// Monotonic daemon counters (lock-free; snapshot via [`Daemon::stats`]).
+#[derive(Default)]
+struct Counters {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    batches: AtomicU64,
+    batched_points: AtomicU64,
+}
+
+/// Point-in-time view of the daemon counters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DaemonStats {
+    /// Requests admitted into some queue.
+    pub submitted: u64,
+    /// Requests answered with coordinates.
+    pub completed: u64,
+    /// Requests answered with an error.
+    pub failed: u64,
+    /// Batches processed across all slots.
+    pub batches: u64,
+    /// Total points across those batches (mean batch size =
+    /// `batched_points / batches`).
+    pub batched_points: u64,
+}
+
+/// Per-slot description for diagnostics / the `stat` protocol verb.
+#[derive(Clone, Debug)]
+pub struct SlotInfo {
+    pub name: String,
+    pub version: u64,
+    pub source: String,
+    pub n: usize,
+    pub ambient_dim: usize,
+    pub dim: usize,
+    pub queued: usize,
+    pub swaps: u64,
+}
+
+/// One served slot: hot-swap state + its admission queue.
+struct SlotRuntime {
+    slot: ModelSlot,
+    queue: BatchQueue,
+}
+
+/// The serving daemon. Create with [`Daemon::start`], add slots with
+/// [`Daemon::add_model`], submit work with [`Daemon::submit`], swap
+/// with [`Daemon::swap_from_path`], stop with [`Daemon::shutdown`].
+pub struct Daemon {
+    cfg: DaemonConfig,
+    slots: RwLock<HashMap<String, Arc<SlotRuntime>>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    counters: Arc<Counters>,
+    next_id: AtomicU64,
+}
+
+/// The default slot name single-model deployments serve under.
+pub const DEFAULT_SLOT: &str = "default";
+
+impl Daemon {
+    /// A daemon with no slots yet (add them with [`Daemon::add_model`]).
+    pub fn start(cfg: DaemonConfig) -> Self {
+        assert!(cfg.workers >= 1, "a slot needs at least one worker");
+        Daemon {
+            cfg,
+            slots: RwLock::new(HashMap::new()),
+            handles: Mutex::new(Vec::new()),
+            counters: Arc::new(Counters::default()),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Register `model` under `name` (version 1) and spawn its worker
+    /// pool. Fails if the name is already served.
+    pub fn add_model(
+        &self,
+        name: &str,
+        model: Arc<EmbeddingModel>,
+        source: impl Into<String>,
+    ) -> anyhow::Result<()> {
+        let rt = {
+            let mut slots = self.slots.write().unwrap();
+            anyhow::ensure!(
+                !slots.contains_key(name),
+                "slot {name:?} is already being served (use swap to replace its model)"
+            );
+            let rt = Arc::new(SlotRuntime {
+                slot: ModelSlot::new(name, model, source),
+                queue: BatchQueue::new(self.cfg.queue_capacity, self.cfg.max_batch),
+            });
+            slots.insert(name.to_string(), rt.clone());
+            rt
+        };
+        let mut handles = self.handles.lock().unwrap();
+        for _ in 0..self.cfg.workers {
+            let rt = rt.clone();
+            let counters = self.counters.clone();
+            let opts = self.cfg.opts;
+            handles.push(std::thread::spawn(move || worker_loop(rt, opts, counters)));
+        }
+        Ok(())
+    }
+
+    /// Load an artifact (codec-validated) into slot `name`, atomically
+    /// replacing the served model; returns the new version.
+    pub fn swap_from_path(
+        &self,
+        name: &str,
+        path: impl AsRef<std::path::Path>,
+    ) -> anyhow::Result<u64> {
+        self.runtime(name)?.slot.swap_from_path(path)
+    }
+
+    /// Swap an in-memory model into slot `name`; returns the new
+    /// version.
+    pub fn swap_model(
+        &self,
+        name: &str,
+        model: Arc<EmbeddingModel>,
+        source: impl Into<String>,
+    ) -> anyhow::Result<u64> {
+        self.runtime(name)?.slot.swap(model, source)
+    }
+
+    /// Admit one single-point request into slot `name`'s queue
+    /// (blocking while the queue is at capacity — backpressure) and
+    /// return the slot its response will arrive on.
+    pub fn submit(&self, name: &str, query: Vec<f64>) -> anyhow::Result<ResponseSlot> {
+        let rt = self.runtime(name)?;
+        let expect = rt.slot.snapshot().model.ambient_dim();
+        anyhow::ensure!(
+            query.len() == expect,
+            "slot {name:?} serves {expect}-dimensional queries, got {}",
+            query.len()
+        );
+        let reply = ResponseSlot::new();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            query,
+            reply: reply.clone(),
+        };
+        rt.queue
+            .push(req)
+            .map_err(|_| anyhow::anyhow!("slot {name:?} is shutting down"))?;
+        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(reply)
+    }
+
+    /// Convenience: submit + wait.
+    pub fn transform_blocking(
+        &self,
+        name: &str,
+        query: Vec<f64>,
+    ) -> anyhow::Result<TransformOk> {
+        self.submit(name, query)?.wait().map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Names of the served slots.
+    pub fn slot_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.slots.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Published version of slot `name`.
+    pub fn version(&self, name: &str) -> anyhow::Result<u64> {
+        Ok(self.runtime(name)?.slot.version())
+    }
+
+    /// Per-slot diagnostics, sorted by slot name.
+    pub fn slot_infos(&self) -> Vec<SlotInfo> {
+        let slots = self.slots.read().unwrap();
+        let mut infos: Vec<SlotInfo> = slots
+            .values()
+            .map(|rt| {
+                let snap = rt.slot.snapshot();
+                SlotInfo {
+                    name: rt.slot.name().to_string(),
+                    version: snap.version,
+                    source: snap.source.clone(),
+                    n: snap.model.n(),
+                    ambient_dim: snap.model.ambient_dim(),
+                    dim: snap.model.dim(),
+                    queued: rt.queue.len(),
+                    swaps: rt.slot.swap_count(),
+                }
+            })
+            .collect();
+        infos.sort_by(|a, b| a.name.cmp(&b.name));
+        infos
+    }
+
+    /// Snapshot of the daemon counters.
+    pub fn stats(&self) -> DaemonStats {
+        DaemonStats {
+            submitted: self.counters.submitted.load(Ordering::Relaxed),
+            completed: self.counters.completed.load(Ordering::Relaxed),
+            failed: self.counters.failed.load(Ordering::Relaxed),
+            batches: self.counters.batches.load(Ordering::Relaxed),
+            batched_points: self.counters.batched_points.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Graceful shutdown: refuse new work, drain every queue, join the
+    /// workers. Every request admitted before the call gets answered.
+    /// Idempotent.
+    pub fn shutdown(&self) {
+        for rt in self.slots.read().unwrap().values() {
+            rt.queue.close();
+        }
+        let handles = std::mem::take(&mut *self.handles.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    fn runtime(&self, name: &str) -> anyhow::Result<Arc<SlotRuntime>> {
+        self.slots
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("no served model slot named {name:?}"))
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// See the module docs for the version-pinning argument this loop
+/// implements (snapshot → pop → re-check → process).
+fn worker_loop(rt: Arc<SlotRuntime>, opts: TransformOptions, counters: Arc<Counters>) {
+    // a batch popped under a snapshot that turned stale is carried
+    // across the rebuild instead of being processed or dropped
+    let mut pending: Option<Vec<Request>> = None;
+    loop {
+        let snap = rt.slot.snapshot();
+        let transformer = snap.transformer(opts);
+        loop {
+            let batch = match pending.take() {
+                Some(b) => b,
+                None => match rt.queue.pop_batch() {
+                    Some(b) => b,
+                    None => return, // closed and fully drained
+                },
+            };
+            if rt.slot.version() != snap.version {
+                pending = Some(batch);
+                break; // rebuild on the fresh version, then process
+            }
+            let b = batch.len();
+            let d_in = snap.model.ambient_dim();
+            let mut queries = Mat::zeros(b, d_in);
+            for (i, req) in batch.iter().enumerate() {
+                queries.row_mut(i).copy_from_slice(&req.query);
+            }
+            let out = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                transformer.transform(&queries)
+            }));
+            match out {
+                Ok(placed) => {
+                    for (i, req) in batch.iter().enumerate() {
+                        req.reply.fulfill(Ok(TransformOk {
+                            version: snap.version,
+                            coords: placed.row(i).to_vec(),
+                        }));
+                    }
+                    counters.completed.fetch_add(b as u64, Ordering::Relaxed);
+                }
+                Err(payload) => {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "transform panicked".to_string());
+                    for req in &batch {
+                        req.reply.fulfill(Err(format!("transform failed: {msg}")));
+                    }
+                    counters.failed.fetch_add(b as u64, Ordering::Relaxed);
+                }
+            }
+            counters.batches.fetch_add(1, Ordering::Relaxed);
+            counters.batched_points.fetch_add(b as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::Method;
+
+    /// Grid model (ambient 3 → embedding 2) with a scale knob so two
+    /// models produce bitwise-distinguishable placements.
+    fn grid_model(scale: f64) -> Arc<EmbeddingModel> {
+        let n_side = 6;
+        let n = n_side * n_side;
+        let y = Mat::from_fn(n, 3, |i, j| match j {
+            0 => (i % n_side) as f64,
+            1 => (i / n_side) as f64,
+            _ => 0.0,
+        });
+        let x = Mat::from_fn(n, 2, |i, j| {
+            let v = if j == 0 { (i % n_side) as f64 } else { (i / n_side) as f64 };
+            v * scale
+        });
+        Arc::new(
+            EmbeddingModel::new(Method::Ee, 0.5, 4.0, 5, Arc::new(y), x, None).unwrap(),
+        )
+    }
+
+    #[test]
+    fn serves_batches_and_reports_the_version() {
+        let daemon = Daemon::start(DaemonConfig {
+            workers: 2,
+            max_batch: 8,
+            ..Default::default()
+        });
+        daemon.add_model(DEFAULT_SLOT, grid_model(0.5), "initial").unwrap();
+        let expected = {
+            let m = grid_model(0.5);
+            let t = m.transformer();
+            t.transform_point(&[2.5, 2.5, 0.0])
+        };
+        let slots: Vec<ResponseSlot> = (0..20)
+            .map(|_| daemon.submit(DEFAULT_SLOT, vec![2.5, 2.5, 0.0]).unwrap())
+            .collect();
+        for s in slots {
+            let ok = s.wait().unwrap();
+            assert_eq!(ok.version, 1);
+            assert_eq!(ok.coords, expected, "daemon answer must match a direct transform");
+        }
+        let st = daemon.stats();
+        assert_eq!(st.submitted, 20);
+        assert_eq!(st.completed, 20);
+        assert_eq!(st.failed, 0);
+        assert!(st.batches >= 1 && st.batched_points == 20);
+        daemon.shutdown();
+    }
+
+    #[test]
+    fn swap_bumps_version_and_changes_answers() {
+        let daemon = Daemon::start(DaemonConfig { workers: 1, ..Default::default() });
+        daemon.add_model(DEFAULT_SLOT, grid_model(0.5), "v1").unwrap();
+        let before = daemon.transform_blocking(DEFAULT_SLOT, vec![2.5, 2.5, 0.0]).unwrap();
+        assert_eq!(before.version, 1);
+        let v2 = daemon.swap_model(DEFAULT_SLOT, grid_model(1.5), "v2").unwrap();
+        assert_eq!(v2, 2);
+        let after = daemon.transform_blocking(DEFAULT_SLOT, vec![2.5, 2.5, 0.0]).unwrap();
+        assert_eq!(after.version, 2);
+        assert_ne!(before.coords, after.coords, "the swapped model must actually answer");
+        let infos = daemon.slot_infos();
+        assert_eq!(infos.len(), 1);
+        assert_eq!(infos[0].version, 2);
+        assert_eq!(infos[0].swaps, 1);
+    }
+
+    #[test]
+    fn two_slots_serve_concurrently_and_independently() {
+        let daemon = Daemon::start(DaemonConfig { workers: 1, ..Default::default() });
+        daemon.add_model("a", grid_model(0.5), "a1").unwrap();
+        daemon.add_model("b", grid_model(2.0), "b1").unwrap();
+        assert!(daemon.add_model("a", grid_model(1.0), "dup").is_err());
+        let ra = daemon.transform_blocking("a", vec![1.5, 1.5, 0.0]).unwrap();
+        let rb = daemon.transform_blocking("b", vec![1.5, 1.5, 0.0]).unwrap();
+        assert_ne!(ra.coords, rb.coords);
+        daemon.swap_model("b", grid_model(3.0), "b2").unwrap();
+        assert_eq!(daemon.version("a").unwrap(), 1, "swapping b must not touch a");
+        assert_eq!(daemon.version("b").unwrap(), 2);
+        assert_eq!(daemon.slot_names(), vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn submit_validates_dimension_and_slot_name() {
+        let daemon = Daemon::start(DaemonConfig::default());
+        daemon.add_model(DEFAULT_SLOT, grid_model(1.0), "v1").unwrap();
+        assert!(daemon.submit(DEFAULT_SLOT, vec![1.0, 2.0]).is_err(), "wrong dim");
+        assert!(daemon.submit("nope", vec![1.0, 2.0, 3.0]).is_err(), "unknown slot");
+    }
+
+    #[test]
+    fn shutdown_answers_everything_admitted_before_it() {
+        let daemon = Daemon::start(DaemonConfig {
+            workers: 2,
+            max_batch: 4,
+            ..Default::default()
+        });
+        daemon.add_model(DEFAULT_SLOT, grid_model(1.0), "v1").unwrap();
+        let slots: Vec<ResponseSlot> = (0..30)
+            .map(|i| {
+                let q = vec![(i % 5) as f64, (i % 3) as f64, 0.0];
+                daemon.submit(DEFAULT_SLOT, q).unwrap()
+            })
+            .collect();
+        daemon.shutdown(); // drains, then joins
+        for s in slots {
+            assert!(s.wait().is_ok(), "graceful shutdown must answer admitted requests");
+        }
+        assert!(daemon.submit(DEFAULT_SLOT, vec![0.0; 3]).is_err(), "closed after shutdown");
+    }
+}

@@ -1,0 +1,37 @@
+//! Concurrent, hot-swappable serving over [`crate::model`] — the
+//! production daemon of the ROADMAP's "heavy traffic" north star.
+//!
+//! The paper's economics make frequent retraining cheap (the spectral
+//! direction costs little more than a gradient step), so the realistic
+//! deployment shape is *retrain often, serve continuously*: a
+//! long-lived process answers single-point transform queries while
+//! freshly `retrain`-ed artifacts are swapped in under live traffic.
+//! This module is that layer, built from four pieces:
+//!
+//! * [`queue`] — bounded request-coalescing admission queue: clients
+//!   submit single points, workers pop batches (backpressure when
+//!   full, drain-don't-drop on shutdown);
+//! * [`registry`] — versioned hot-swap slots: readers pin an
+//!   `Arc`-snapshot, swaps publish atomically with strictly increasing
+//!   versions, per-version Z₀ cache;
+//! * [`daemon`] — the worker pools tying them together: every batch is
+//!   processed entirely on one model version, responses carry that
+//!   version, and client-observed versions never go backwards;
+//! * [`protocol`] — the line protocol serving it all over TCP or
+//!   stdio (`nle daemon`), including the `swap <path>` control verb.
+//!
+//! The closed-loop load generator measuring this layer (p50/p99 before
+//! / during / after a hot-swap → `results/BENCH_serve_daemon.json`)
+//! lives in [`crate::bench_harness::serve`]; the CI daemon-smoke job
+//! runs it against a real two-process deployment on every PR. See
+//! DESIGN.md section 8.
+
+pub mod daemon;
+pub mod protocol;
+pub mod queue;
+pub mod registry;
+
+pub use daemon::{Daemon, DaemonConfig, DaemonStats, SlotInfo, DEFAULT_SLOT};
+pub use protocol::{parse_command, serve_stdio, serve_tcp, Command, ConnOutcome};
+pub use queue::{BatchQueue, Request, ResponseSlot, TransformOk, TransformResult};
+pub use registry::{ModelSlot, VersionedModel};

@@ -1,0 +1,408 @@
+//! Line protocol of the daemon: one request per line, one response per
+//! line, over any byte stream (TCP socket or stdin/stdout).
+//!
+//! Request grammar (tokens are whitespace-separated; `<f64>` uses Rust
+//! float syntax, responses print floats with the shortest
+//! round-tripping representation):
+//!
+//! ```text
+//! t <f64>*D            transform on slot "default"
+//! t@<slot> <f64>*D     transform on a named slot
+//! swap <path>          hot-swap slot "default" from an artifact
+//! swap@<slot> <path>   hot-swap a named slot
+//! load <slot> <path>   start serving a new slot from an artifact
+//! stat                 one-line counters + per-slot state
+//! ping                 liveness probe
+//! quit                 close this connection
+//! shutdown             stop the whole server (connection closes too)
+//! ```
+//!
+//! Responses: `ok <version> <f64>*d` · `swapped <slot> <version>` ·
+//! `loaded <slot> <version>` · `stat ...` · `pong` · `bye` ·
+//! `stopping` · `err <message>`.
+//!
+//! Each connection is handled synchronously by its own thread: a
+//! transform is admitted into the slot's bounded queue (blocking when
+//! full — backpressure reaches the socket) and the thread waits for the
+//! batched worker response. Concurrency comes from concurrent
+//! connections, which is exactly what lets the queue coalesce
+//! single-point requests into parallel batches.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::daemon::{Daemon, DEFAULT_SLOT};
+
+/// How long a connection waits for its batched response before
+/// reporting `err timeout` (the request itself is not cancelled; a
+/// late response is discarded with the slot).
+pub const RESPONSE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// One parsed request line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Command {
+    Transform { slot: String, query: Vec<f64> },
+    Swap { slot: String, path: String },
+    Load { slot: String, path: String },
+    Stat,
+    Ping,
+    Quit,
+    Shutdown,
+}
+
+/// Parse one request line (see the module docs for the grammar).
+pub fn parse_command(line: &str) -> Result<Command, String> {
+    let line = line.trim();
+    let (verb, rest) = match line.split_once(char::is_whitespace) {
+        Some((v, r)) => (v, r.trim()),
+        None => (line, ""),
+    };
+    let slot_of = |verb: &str, base: &str| -> Result<String, String> {
+        match verb.strip_prefix(base) {
+            Some("") => Ok(DEFAULT_SLOT.to_string()),
+            Some(at) => match at.strip_prefix('@') {
+                Some(name) if !name.is_empty() => Ok(name.to_string()),
+                _ => Err(format!("bad verb {verb:?} (want {base} or {base}@<slot>)")),
+            },
+            None => Err(format!("bad verb {verb:?}")),
+        }
+    };
+    if verb == "t" || verb.starts_with("t@") {
+        let slot = slot_of(verb, "t")?;
+        let query: Vec<f64> = rest
+            .split_whitespace()
+            .map(|tok| tok.parse::<f64>().map_err(|_| format!("bad coordinate {tok:?}")))
+            .collect::<Result<_, _>>()?;
+        if query.is_empty() {
+            return Err("transform needs at least one coordinate".to_string());
+        }
+        return Ok(Command::Transform { slot, query });
+    }
+    if verb == "swap" || verb.starts_with("swap@") {
+        let slot = slot_of(verb, "swap")?;
+        if rest.is_empty() {
+            return Err("swap needs an artifact path".to_string());
+        }
+        return Ok(Command::Swap { slot, path: rest.to_string() });
+    }
+    match verb {
+        "load" => match rest.split_once(char::is_whitespace) {
+            Some((name, path)) if !path.trim().is_empty() => {
+                Ok(Command::Load { slot: name.to_string(), path: path.trim().to_string() })
+            }
+            _ => Err("load needs <slot> <path>".to_string()),
+        },
+        "stat" => Ok(Command::Stat),
+        "ping" => Ok(Command::Ping),
+        "quit" => Ok(Command::Quit),
+        "shutdown" => Ok(Command::Shutdown),
+        other => Err(format!("unknown command {other:?}")),
+    }
+}
+
+/// Why [`handle_connection`] returned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConnOutcome {
+    /// Client sent `quit` or closed the stream.
+    Closed,
+    /// Client sent `shutdown`: the server should stop accepting.
+    ShutdownRequested,
+}
+
+/// Format a float with the shortest representation that round-trips
+/// (Rust's `{:?}` for f64 guarantees read-back equality).
+fn push_f64(out: &mut String, v: f64) {
+    use std::fmt::Write as _;
+    let _ = write!(out, " {v:?}");
+}
+
+fn stat_line(daemon: &Daemon) -> String {
+    let st = daemon.stats();
+    let mean_batch = if st.batches > 0 {
+        st.batched_points as f64 / st.batches as f64
+    } else {
+        0.0
+    };
+    let slots: Vec<String> = daemon
+        .slot_infos()
+        .iter()
+        .map(|s| {
+            format!(
+                "{}:v{}:n{}:D{}:d{}:q{}:s{}",
+                s.name, s.version, s.n, s.ambient_dim, s.dim, s.queued, s.swaps
+            )
+        })
+        .collect();
+    format!(
+        "stat submitted={} completed={} failed={} batches={} mean_batch={:.2} \
+         threads={} slots={}",
+        st.submitted,
+        st.completed,
+        st.failed,
+        st.batches,
+        mean_batch,
+        crate::par::num_threads(),
+        if slots.is_empty() { "-".to_string() } else { slots.join(",") }
+    )
+}
+
+/// Execute one command, returning the response line (without newline)
+/// and whether the connection/server should wind down.
+fn execute(daemon: &Daemon, cmd: Command, timeout: Duration) -> (String, Option<ConnOutcome>) {
+    match cmd {
+        Command::Transform { slot, query } => match daemon.submit(&slot, query) {
+            Ok(reply) => match reply.wait_timeout(timeout) {
+                Some(Ok(ok)) => {
+                    let mut line = format!("ok {}", ok.version);
+                    for &v in &ok.coords {
+                        push_f64(&mut line, v);
+                    }
+                    (line, None)
+                }
+                Some(Err(e)) => (format!("err {}", sanitize(&e)), None),
+                None => ("err timeout waiting for the batched response".to_string(), None),
+            },
+            Err(e) => (format!("err {}", sanitize(&e.to_string())), None),
+        },
+        Command::Swap { slot, path } => match daemon.swap_from_path(&slot, &path) {
+            Ok(v) => (format!("swapped {slot} {v}"), None),
+            Err(e) => (format!("err {}", sanitize(&e.to_string())), None),
+        },
+        Command::Load { slot, path } => {
+            let loaded = crate::model::EmbeddingModel::load(&path)
+                .map_err(|e| anyhow::anyhow!("artifact failed validation: {e}"))
+                .and_then(|m| daemon.add_model(&slot, Arc::new(m), path.as_str()));
+            match loaded {
+                Ok(()) => (format!("loaded {slot} 1"), None),
+                Err(e) => (format!("err {}", sanitize(&e.to_string())), None),
+            }
+        }
+        Command::Stat => (stat_line(daemon), None),
+        Command::Ping => ("pong".to_string(), None),
+        Command::Quit => ("bye".to_string(), Some(ConnOutcome::Closed)),
+        Command::Shutdown => ("stopping".to_string(), Some(ConnOutcome::ShutdownRequested)),
+    }
+}
+
+/// Keep a response line single-line (the protocol is line-framed).
+fn sanitize(msg: &str) -> String {
+    msg.replace(['\n', '\r'], " ")
+}
+
+/// Serve one connection: read request lines, write response lines.
+/// Generic over the byte streams so the stdio and TCP fronts (and the
+/// tests) share one code path.
+pub fn handle_connection<R: BufRead, W: Write>(
+    daemon: &Daemon,
+    reader: R,
+    mut writer: W,
+    timeout: Duration,
+) -> std::io::Result<ConnOutcome> {
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (response, outcome) = match parse_command(&line) {
+            Ok(cmd) => execute(daemon, cmd, timeout),
+            Err(e) => (format!("err {}", sanitize(&e)), None),
+        };
+        writer.write_all(response.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if let Some(outcome) = outcome {
+            return Ok(outcome);
+        }
+    }
+    Ok(ConnOutcome::Closed)
+}
+
+/// Serve the daemon over stdin/stdout (single implicit connection);
+/// returns when the peer sends `quit`/`shutdown` or closes stdin.
+pub fn serve_stdio(daemon: &Daemon) -> std::io::Result<ConnOutcome> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    handle_connection(daemon, stdin.lock(), stdout.lock(), RESPONSE_TIMEOUT)
+}
+
+/// Accept loop: one handler thread per connection. Returns after some
+/// connection issues `shutdown`. Handler threads for still-open
+/// connections are detached — the caller's subsequent
+/// [`Daemon::shutdown`] makes their remaining submissions fail fast
+/// with `err`, and they exit when their client disconnects.
+pub fn serve_tcp(daemon: Arc<Daemon>, listener: TcpListener) -> anyhow::Result<()> {
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = listener.local_addr()?;
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        // the protocol is request/response on small lines: without
+        // NODELAY, Nagle + delayed ACK would add spurious ~40 ms
+        // latency floors that the p50/p99 harness would then measure
+        let _ = stream.set_nodelay(true);
+        let daemon = daemon.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let reader = match stream.try_clone() {
+                Ok(s) => BufReader::new(s),
+                Err(_) => return,
+            };
+            let outcome = handle_connection(&daemon, reader, &stream, RESPONSE_TIMEOUT);
+            if let Ok(ConnOutcome::ShutdownRequested) = outcome {
+                stop.store(true, Ordering::SeqCst);
+                // unblock the accept loop so it observes the flag
+                let _ = TcpStream::connect(addr);
+            }
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::Mat;
+    use crate::model::EmbeddingModel;
+    use crate::objective::Method;
+    use crate::serve::DaemonConfig;
+    use std::io::Cursor;
+
+    fn grid_model(scale: f64) -> Arc<EmbeddingModel> {
+        let n_side = 6;
+        let n = n_side * n_side;
+        let y = Mat::from_fn(n, 3, |i, j| match j {
+            0 => (i % n_side) as f64,
+            1 => (i / n_side) as f64,
+            _ => 0.0,
+        });
+        let x = Mat::from_fn(n, 2, |i, j| {
+            let v = if j == 0 { (i % n_side) as f64 } else { (i / n_side) as f64 };
+            v * scale
+        });
+        Arc::new(
+            EmbeddingModel::new(Method::Ee, 0.5, 4.0, 5, Arc::new(y), x, None).unwrap(),
+        )
+    }
+
+    fn daemon_with_default() -> Daemon {
+        let d = Daemon::start(DaemonConfig { workers: 1, ..Default::default() });
+        d.add_model(DEFAULT_SLOT, grid_model(0.5), "initial").unwrap();
+        d
+    }
+
+    #[test]
+    fn parses_the_full_grammar() {
+        assert_eq!(
+            parse_command("t 1.5 -2e-3 0"),
+            Ok(Command::Transform {
+                slot: "default".to_string(),
+                query: vec![1.5, -2e-3, 0.0]
+            })
+        );
+        assert_eq!(
+            parse_command("t@prod 1 2 3"),
+            Ok(Command::Transform { slot: "prod".to_string(), query: vec![1.0, 2.0, 3.0] })
+        );
+        assert_eq!(
+            parse_command("swap results/model v2.nlem"),
+            Ok(Command::Swap {
+                slot: "default".to_string(),
+                path: "results/model v2.nlem".to_string()
+            })
+        );
+        assert_eq!(
+            parse_command("swap@prod m.nlem"),
+            Ok(Command::Swap { slot: "prod".to_string(), path: "m.nlem".to_string() })
+        );
+        assert_eq!(
+            parse_command("load staging results/m.nlem"),
+            Ok(Command::Load {
+                slot: "staging".to_string(),
+                path: "results/m.nlem".to_string()
+            })
+        );
+        assert_eq!(parse_command("  stat "), Ok(Command::Stat));
+        assert_eq!(parse_command("ping"), Ok(Command::Ping));
+        assert_eq!(parse_command("quit"), Ok(Command::Quit));
+        assert_eq!(parse_command("shutdown"), Ok(Command::Shutdown));
+        for bad in ["", "t", "t 1 x", "t@ 1", "swap", "load a", "frobnicate 3"] {
+            assert!(parse_command(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn responses_round_trip_floats_bitwise() {
+        let daemon = daemon_with_default();
+        let direct = {
+            let m = grid_model(0.5);
+            let t = m.transformer();
+            t.transform_point(&[2.5, 2.5, 0.0])
+        };
+        let mut out = Vec::new();
+        let input = b"ping\nt 2.5 2.5 0.0\nbadverb\nstat\nquit\n".to_vec();
+        let outcome = handle_connection(
+            &daemon,
+            Cursor::new(input),
+            &mut out,
+            Duration::from_secs(10),
+        )
+        .unwrap();
+        assert_eq!(outcome, ConnOutcome::Closed);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5, "{text}");
+        assert_eq!(lines[0], "pong");
+        let mut toks = lines[1].split_whitespace();
+        assert_eq!(toks.next(), Some("ok"));
+        assert_eq!(toks.next(), Some("1"), "version 1");
+        let coords: Vec<f64> = toks.map(|t| t.parse().unwrap()).collect();
+        assert_eq!(coords, direct, "wire format must round-trip the f64s bitwise");
+        assert!(lines[2].starts_with("err "), "{}", lines[2]);
+        assert!(lines[3].starts_with("stat "), "{}", lines[3]);
+        assert!(lines[3].contains("slots=default:v1:n36:D3:d2:"), "{}", lines[3]);
+        assert_eq!(lines[4], "bye");
+    }
+
+    #[test]
+    fn tcp_end_to_end_with_swap_and_shutdown() {
+        let dir = std::env::temp_dir().join("nle_protocol_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let v2_path = dir.join("v2.nlem");
+        grid_model(1.5).save(&v2_path).unwrap();
+
+        let daemon = Arc::new(daemon_with_default());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = {
+            let daemon = daemon.clone();
+            std::thread::spawn(move || serve_tcp(daemon, listener).unwrap())
+        };
+
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut send = |line: &str| {
+            let mut s = &stream;
+            s.write_all(line.as_bytes()).unwrap();
+            s.write_all(b"\n").unwrap();
+            s.flush().unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            resp.trim_end().to_string()
+        };
+        let before = send("t 2.5 2.5 0.0");
+        assert!(before.starts_with("ok 1 "), "{before}");
+        let swapped = send(&format!("swap {}", v2_path.display()));
+        assert_eq!(swapped, "swapped default 2");
+        let after = send("t 2.5 2.5 0.0");
+        assert!(after.starts_with("ok 2 "), "{after}");
+        assert_ne!(before, after);
+        assert_eq!(send("shutdown"), "stopping");
+        server.join().unwrap();
+        daemon.shutdown();
+    }
+}

@@ -1,0 +1,327 @@
+//! Bounded request-coalescing queue: the admission path of the daemon.
+//!
+//! Clients submit *single-point* transform requests; workers pop
+//! *batches*. The queue is the coupling between the two shapes:
+//! [`BatchQueue::push`] blocks while the queue is at capacity (bounded
+//! memory, backpressure all the way to the socket — a slow daemon makes
+//! clients wait instead of accumulating unbounded work), and
+//! [`BatchQueue::pop_batch`] drains up to `max_batch` queued requests in
+//! one wakeup, so concurrent single-point requests coalesce into one
+//! parallel [`crate::model::Transformer::transform`] call that amortizes
+//! the per-batch fan-out.
+//!
+//! Shutdown is *drain*, not *drop*: after [`BatchQueue::close`], pushes
+//! fail but `pop_batch` keeps returning queued work until the queue is
+//! empty and only then reports exhaustion — a graceful shutdown answers
+//! every admitted request (the "zero dropped" contract the stress test
+//! and the CI smoke job assert).
+//!
+//! The response path is a one-shot rendezvous ([`ResponseSlot`]): the
+//! submitter holds one end, the worker fulfills the other. No external
+//! channel crate — the workspace is offline (see Cargo.toml), so this
+//! is Mutex + Condvar, like the rest of [`crate::par`]'s substrate.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Successful outcome of one transform request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TransformOk {
+    /// Model version that produced the coordinates (monotonic per slot;
+    /// the whole batch this request rode in used this one version).
+    pub version: u64,
+    /// Embedding-space coordinates, length = model `d`.
+    pub coords: Vec<f64>,
+}
+
+/// Outcome of one request: coordinates + version, or a serving error.
+pub type TransformResult = Result<TransformOk, String>;
+
+/// One-shot response rendezvous. The submitting side keeps a clone and
+/// [`ResponseSlot::wait`]s; the worker [`ResponseSlot::fulfill`]s it
+/// exactly once (later fulfills are ignored, first writer wins).
+#[derive(Clone)]
+pub struct ResponseSlot(Arc<(Mutex<Option<TransformResult>>, Condvar)>);
+
+impl Default for ResponseSlot {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ResponseSlot {
+    pub fn new() -> Self {
+        ResponseSlot(Arc::new((Mutex::new(None), Condvar::new())))
+    }
+
+    /// Deliver the result (idempotent: the first delivery wins).
+    pub fn fulfill(&self, r: TransformResult) {
+        let (lock, cv) = &*self.0;
+        let mut guard = lock.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(r);
+            cv.notify_all();
+        }
+    }
+
+    /// Block until the result arrives.
+    pub fn wait(&self) -> TransformResult {
+        let (lock, cv) = &*self.0;
+        let mut guard = lock.lock().unwrap();
+        loop {
+            if let Some(r) = guard.take() {
+                return r;
+            }
+            guard = cv.wait(guard).unwrap();
+        }
+    }
+
+    /// Block up to `timeout`; `None` means the result never arrived
+    /// (the slot stays usable — a late fulfill is still observable).
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<TransformResult> {
+        let (lock, cv) = &*self.0;
+        let deadline = std::time::Instant::now() + timeout;
+        let mut guard = lock.lock().unwrap();
+        loop {
+            if let Some(r) = guard.take() {
+                return Some(r);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g, _) = cv.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+        }
+    }
+}
+
+/// One queued transform request.
+pub struct Request {
+    /// Daemon-global request id (diagnostics).
+    pub id: u64,
+    /// Ambient-space query point (validated against the slot's model
+    /// dimension at admission).
+    pub query: Vec<f64>,
+    /// Where the worker delivers the outcome.
+    pub reply: ResponseSlot,
+}
+
+/// Error from a non-blocking push.
+pub enum PushError {
+    /// Queue at capacity — retry later or use the blocking `push`.
+    Full(Request),
+    /// Queue closed — the slot is shutting down.
+    Closed(Request),
+}
+
+struct Inner {
+    q: VecDeque<Request>,
+    closed: bool,
+}
+
+/// Bounded MPMC queue of [`Request`]s with batch-draining consumers.
+pub struct BatchQueue {
+    inner: Mutex<Inner>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+    max_batch: usize,
+}
+
+impl BatchQueue {
+    /// `capacity`: admission bound (backpressure beyond it).
+    /// `max_batch`: most requests a single `pop_batch` coalesces.
+    pub fn new(capacity: usize, max_batch: usize) -> Self {
+        assert!(capacity >= 1, "queue capacity must be >= 1");
+        assert!(max_batch >= 1, "max_batch must be >= 1");
+        BatchQueue {
+            inner: Mutex::new(Inner { q: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+            max_batch,
+        }
+    }
+
+    /// Enqueue, blocking while the queue is at capacity (backpressure).
+    /// Returns the request back if the queue is closed.
+    pub fn push(&self, r: Request) -> Result<(), Request> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.closed {
+                return Err(r);
+            }
+            if inner.q.len() < self.capacity {
+                inner.q.push_back(r);
+                drop(inner);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            inner = self.not_full.wait(inner).unwrap();
+        }
+    }
+
+    /// Enqueue without blocking.
+    pub fn try_push(&self, r: Request) -> Result<(), PushError> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(PushError::Closed(r));
+        }
+        if inner.q.len() >= self.capacity {
+            return Err(PushError::Full(r));
+        }
+        inner.q.push_back(r);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Block until at least one request is queued, then drain up to
+    /// `max_batch` of them (FIFO). After [`BatchQueue::close`], keeps
+    /// returning remaining work until empty; `None` = closed and fully
+    /// drained (the worker's exit signal).
+    pub fn pop_batch(&self) -> Option<Vec<Request>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if !inner.q.is_empty() {
+                let take = inner.q.len().min(self.max_batch);
+                let batch: Vec<Request> = inner.q.drain(..take).collect();
+                drop(inner);
+                // a full queue may be holding several pushers
+                self.not_full.notify_all();
+                return Some(batch);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Close the queue: pushes fail from now on, poppers drain what is
+    /// left and then observe exhaustion. Idempotent.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        drop(inner);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Queued (not yet popped) requests.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The coalescing bound this queue was built with.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn req(id: u64) -> Request {
+        Request { id, query: vec![id as f64], reply: ResponseSlot::new() }
+    }
+
+    #[test]
+    fn coalesces_up_to_max_batch_in_fifo_order() {
+        let q = BatchQueue::new(64, 4);
+        for id in 0..10 {
+            q.push(req(id)).ok().unwrap();
+        }
+        let ids: Vec<Vec<u64>> = (0..3)
+            .map(|_| q.pop_batch().unwrap().iter().map(|r| r.id).collect())
+            .collect();
+        assert_eq!(ids[0], vec![0, 1, 2, 3]);
+        assert_eq!(ids[1], vec![4, 5, 6, 7]);
+        assert_eq!(ids[2], vec![8, 9]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn close_drains_then_exhausts() {
+        let q = BatchQueue::new(8, 3);
+        q.push(req(1)).ok().unwrap();
+        q.push(req(2)).ok().unwrap();
+        q.close();
+        assert!(q.push(req(3)).is_err(), "push after close must fail");
+        assert_eq!(q.pop_batch().unwrap().len(), 2, "queued work drains after close");
+        assert!(q.pop_batch().is_none(), "then the queue reports exhaustion");
+    }
+
+    #[test]
+    fn bounded_push_applies_backpressure_until_a_pop() {
+        let q = Arc::new(BatchQueue::new(2, 2));
+        q.push(req(1)).ok().unwrap();
+        q.push(req(2)).ok().unwrap();
+        match q.try_push(req(3)) {
+            Err(PushError::Full(_)) => {}
+            _ => panic!("queue at capacity must refuse try_push"),
+        }
+        // a blocking pusher parks until a consumer frees space
+        let q2 = q.clone();
+        let unblocked = Arc::new(AtomicUsize::new(0));
+        let u2 = unblocked.clone();
+        let h = std::thread::spawn(move || {
+            q2.push(req(3)).ok().unwrap();
+            u2.store(1, Ordering::SeqCst);
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(unblocked.load(Ordering::SeqCst), 0, "pusher must still be parked");
+        let batch = q.pop_batch().unwrap();
+        assert_eq!(batch.len(), 2);
+        h.join().unwrap();
+        assert_eq!(unblocked.load(Ordering::SeqCst), 1);
+        assert_eq!(q.pop_batch().unwrap()[0].id, 3);
+    }
+
+    #[test]
+    fn pop_batch_blocks_until_work_arrives() {
+        let q = Arc::new(BatchQueue::new(4, 4));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop_batch().map(|b| b[0].id));
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(req(7)).ok().unwrap();
+        assert_eq!(h.join().unwrap(), Some(7));
+    }
+
+    #[test]
+    fn close_wakes_blocked_poppers() {
+        let q = Arc::new(BatchQueue::new(4, 4));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop_batch().is_none());
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap(), "blocked popper must observe exhaustion");
+    }
+
+    #[test]
+    fn response_slot_rendezvous_and_timeout() {
+        let slot = ResponseSlot::new();
+        assert!(slot.wait_timeout(Duration::from_millis(10)).is_none());
+        let s2 = slot.clone();
+        let h = std::thread::spawn(move || {
+            s2.fulfill(Ok(TransformOk { version: 3, coords: vec![1.0, 2.0] }));
+            // second fulfill loses: first writer wins
+            s2.fulfill(Err("late".into()));
+        });
+        let got = slot.wait();
+        h.join().unwrap();
+        assert_eq!(got, Ok(TransformOk { version: 3, coords: vec![1.0, 2.0] }));
+    }
+}

@@ -1,0 +1,241 @@
+//! Versioned, hot-swappable model slots — the daemon's model registry.
+//!
+//! A [`ModelSlot`] is one named serving position holding the *current*
+//! [`VersionedModel`]: an [`Arc<EmbeddingModel>`] stamped with a
+//! monotonically increasing version number. Readers take cheap
+//! [`ModelSlot::snapshot`]s (an `Arc` clone under a read lock); a swap
+//! publishes a new `Arc` under the write lock, so the transition is
+//! atomic — a reader sees entirely the old model or entirely the new
+//! one, never a mixture, and work started on a snapshot finishes on
+//! that snapshot no matter how many swaps land meanwhile (the old model
+//! stays alive until its last in-flight `Arc` drops).
+//!
+//! Version numbers are allocated under the same write lock that
+//! publishes them, so the published sequence is strictly increasing
+//! even under concurrent swaps — the property the stress test and the
+//! CI daemon-smoke job assert through the response stream.
+//!
+//! Swap validation: models arriving from disk already pass the codec's
+//! checksum + structural validation ([`crate::model::codec`]);
+//! [`ModelSlot::swap`] additionally refuses a model whose *ambient*
+//! dimension differs from the one being replaced, because queries
+//! admitted against the old model must stay well-formed against the
+//! new one (that is what makes swap-under-load safe). The embedding
+//! dimension may change — responses carry the version, so consumers
+//! can react.
+
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::model::{EmbeddingModel, TransformOptions, Transformer};
+
+/// An immutable (model, version) pair — what readers snapshot.
+pub struct VersionedModel {
+    /// Slot-monotonic version, starting at 1 for the initial model.
+    pub version: u64,
+    /// Provenance label (file path, "initial", "retrain #3", ...).
+    pub source: String,
+    pub model: Arc<EmbeddingModel>,
+    /// Cached frozen partition sum keyed by θ bits: computed by the
+    /// first transformer built for this version, reused by every
+    /// worker rebuild after a hot-swap (see
+    /// [`Transformer::with_z0`]).
+    z0: OnceLock<(u64, f64)>,
+}
+
+impl VersionedModel {
+    pub fn new(version: u64, source: impl Into<String>, model: Arc<EmbeddingModel>) -> Self {
+        VersionedModel { version, source: source.into(), model, z0: OnceLock::new() }
+    }
+
+    /// Build a transformer over this version, reusing the cached Z₀
+    /// when one exists for the same θ (first caller pays, later
+    /// callers — other workers, post-swap rebuilds — reuse).
+    pub fn transformer(&self, opts: TransformOptions) -> Transformer<'_> {
+        let bits = opts.theta.to_bits();
+        if let Some(&(b, z0)) = self.z0.get() {
+            if b == bits {
+                return Transformer::with_z0(&self.model, opts, Some(z0));
+            }
+            // different θ than the cached one: compute fresh, keep the
+            // existing cache entry (the daemon uses one θ per process)
+            return Transformer::new(&self.model, opts);
+        }
+        let t = Transformer::new(&self.model, opts);
+        let _ = self.z0.set((bits, t.z0()));
+        t
+    }
+}
+
+/// One named, hot-swappable serving slot.
+pub struct ModelSlot {
+    name: String,
+    current: RwLock<Arc<VersionedModel>>,
+    swaps: std::sync::atomic::AtomicU64,
+}
+
+impl ModelSlot {
+    /// Create a slot serving `model` as version 1.
+    pub fn new(
+        name: impl Into<String>,
+        model: Arc<EmbeddingModel>,
+        source: impl Into<String>,
+    ) -> Self {
+        ModelSlot {
+            name: name.into(),
+            current: RwLock::new(Arc::new(VersionedModel::new(1, source, model))),
+            swaps: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The currently published (model, version) — an `Arc` clone, so
+    /// the caller's view is pinned regardless of later swaps.
+    pub fn snapshot(&self) -> Arc<VersionedModel> {
+        self.current.read().unwrap().clone()
+    }
+
+    /// The currently published version number.
+    pub fn version(&self) -> u64 {
+        self.current.read().unwrap().version
+    }
+
+    /// Completed swaps (diagnostics).
+    pub fn swap_count(&self) -> u64 {
+        self.swaps.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Atomically publish `model` as the new current version. Returns
+    /// the version it was published as. Fails (leaving the slot
+    /// untouched) if the new model cannot serve the queries the old
+    /// one admits.
+    pub fn swap(
+        &self,
+        model: Arc<EmbeddingModel>,
+        source: impl Into<String>,
+    ) -> anyhow::Result<u64> {
+        let mut cur = self.current.write().unwrap();
+        anyhow::ensure!(
+            model.ambient_dim() == cur.model.ambient_dim(),
+            "slot {:?}: new model has ambient dimension {} but the served model has {} — \
+             in-flight queries would become malformed",
+            self.name,
+            model.ambient_dim(),
+            cur.model.ambient_dim()
+        );
+        // allocated under the write lock ⇒ published versions are
+        // strictly increasing even under concurrent swappers
+        let version = cur.version + 1;
+        *cur = Arc::new(VersionedModel::new(version, source, model));
+        self.swaps.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(version)
+    }
+
+    /// Load an artifact from disk (codec checksum + structural
+    /// validation happen in [`EmbeddingModel::load`]) and swap it in.
+    pub fn swap_from_path(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<u64> {
+        let path = path.as_ref();
+        let model = EmbeddingModel::load(path)
+            .map_err(|e| anyhow::anyhow!("swap rejected, artifact failed validation: {e}"))?;
+        self.swap(Arc::new(model), path.display().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::linalg::dense::Mat;
+    use crate::objective::Method;
+
+    fn model(seed: u64, n: usize, ambient: usize) -> Arc<EmbeddingModel> {
+        let mut rng = Rng::new(seed);
+        let y = Mat::from_fn(n, ambient, |_, _| rng.normal());
+        let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+        Arc::new(EmbeddingModel::new(Method::Ee, 5.0, 4.0, 4, Arc::new(y), x, None).unwrap())
+    }
+
+    #[test]
+    fn snapshots_pin_the_version_they_took() {
+        let slot = ModelSlot::new("default", model(1, 20, 3), "initial");
+        let before = slot.snapshot();
+        assert_eq!(before.version, 1);
+        let v2 = slot.swap(model(2, 30, 3), "swap").unwrap();
+        assert_eq!(v2, 2);
+        // the old snapshot still serves the old model
+        assert_eq!(before.version, 1);
+        assert_eq!(before.model.n(), 20);
+        assert_eq!(slot.snapshot().version, 2);
+        assert_eq!(slot.snapshot().model.n(), 30);
+        assert_eq!(slot.swap_count(), 1);
+    }
+
+    #[test]
+    fn concurrent_swaps_publish_strictly_increasing_versions() {
+        let slot = Arc::new(ModelSlot::new("default", model(1, 16, 3), "initial"));
+        let writers: Vec<_> = (0..4)
+            .map(|w| {
+                let slot = slot.clone();
+                std::thread::spawn(move || {
+                    (0..8)
+                        .map(|i| slot.swap(model(100 + w * 8 + i, 16, 3), "w").unwrap())
+                        .collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+        let mut all: Vec<u64> = writers.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        // 32 swaps on top of version 1: exactly 2..=33, no duplicates
+        assert_eq!(all, (2..=33).collect::<Vec<u64>>());
+        assert_eq!(slot.version(), 33);
+    }
+
+    #[test]
+    fn swap_rejects_ambient_dimension_change() {
+        let slot = ModelSlot::new("default", model(1, 20, 3), "initial");
+        let err = slot.swap(model(2, 20, 5), "bad").unwrap_err();
+        assert!(err.to_string().contains("ambient dimension"), "{err}");
+        assert_eq!(slot.version(), 1, "failed swap must leave the slot untouched");
+    }
+
+    #[test]
+    fn swap_from_path_rejects_corrupt_artifacts() {
+        let dir = std::env::temp_dir().join("nle_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corrupt.nlem");
+        let m = model(3, 20, 3);
+        let mut bytes = m.to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff; // checksum now fails
+        std::fs::write(&path, &bytes).unwrap();
+        let slot = ModelSlot::new("default", model(1, 20, 3), "initial");
+        let err = slot.swap_from_path(&path).unwrap_err();
+        assert!(err.to_string().contains("failed validation"), "{err}");
+        assert_eq!(slot.version(), 1);
+        // the pristine artifact swaps fine
+        m.save(&path).unwrap();
+        assert_eq!(slot.swap_from_path(&path).unwrap(), 2);
+    }
+
+    #[test]
+    fn versioned_model_caches_z0_across_transformer_rebuilds() {
+        let mut rng = Rng::new(9);
+        let y = Mat::from_fn(40, 3, |_, _| rng.normal());
+        let x = Mat::from_fn(40, 2, |_, _| rng.normal());
+        let m = Arc::new(
+            EmbeddingModel::new(Method::Ssne, 2.0, 4.0, 5, Arc::new(y), x, None).unwrap(),
+        );
+        let vm = VersionedModel::new(1, "t", m);
+        let opts = TransformOptions::default();
+        let t1 = vm.transformer(opts);
+        let z = t1.z0();
+        assert!(z > 0.0);
+        drop(t1);
+        let t2 = vm.transformer(opts); // cache hit: same Z₀ bitwise
+        assert_eq!(t2.z0(), z);
+        let q = vec![0.1, -0.2, 0.3];
+        assert_eq!(t2.transform_point(&q), vm.transformer(opts).transform_point(&q));
+    }
+}

@@ -1,0 +1,203 @@
+//! Hot-swap-under-load stress: reader threads hammer the serving
+//! daemon while a writer swaps the model repeatedly.
+//!
+//! The contract being stressed (see DESIGN.md section 8): every
+//! response is attributable to *exactly one* model version — its
+//! coordinates must equal, bitwise, what a direct `Transformer` over
+//! that version produces for that query (so a batch can never mix two
+//! models: a torn read would produce coordinates no single version
+//! generates); no admitted request is ever lost; and the version any
+//! single reader observes never goes backwards.
+//!
+//! Models are tiny deterministic grids whose embeddings differ only by
+//! a scale factor, so the per-(version, query) reference outputs are
+//! cheap to precompute and bitwise-distinguishable across versions.
+
+use std::sync::Arc;
+
+use nle::linalg::dense::Mat;
+use nle::model::{EmbeddingModel, TransformOptions};
+use nle::objective::Method;
+use nle::serve::{Daemon, DaemonConfig, ResponseSlot, DEFAULT_SLOT};
+
+const N_SIDE: usize = 6;
+const VERSIONS: usize = 8;
+const READERS: usize = 6;
+const REQUESTS_PER_READER: usize = 150;
+
+/// Grid model (ambient 3 → embedding 2); `scale` makes versions
+/// bitwise-distinguishable.
+fn grid_model(scale: f64) -> Arc<EmbeddingModel> {
+    let n = N_SIDE * N_SIDE;
+    let y = Mat::from_fn(n, 3, |i, j| match j {
+        0 => (i % N_SIDE) as f64,
+        1 => (i / N_SIDE) as f64,
+        _ => 0.0,
+    });
+    let x = Mat::from_fn(n, 2, |i, j| {
+        let v = if j == 0 { (i % N_SIDE) as f64 } else { (i / N_SIDE) as f64 };
+        v * scale
+    });
+    Arc::new(EmbeddingModel::new(Method::Ee, 0.5, 4.0, 5, Arc::new(y), x, None).unwrap())
+}
+
+fn version_scale(v: usize) -> f64 {
+    0.5 + 0.25 * v as f64
+}
+
+/// Off-grid queries so placements are nontrivial.
+fn query_pool() -> Vec<Vec<f64>> {
+    (0..8)
+        .map(|q| {
+            let fx = 0.5 + 0.6 * (q % 4) as f64;
+            let fy = 0.7 + 0.9 * (q / 4) as f64;
+            vec![fx, fy, 0.0]
+        })
+        .collect()
+}
+
+/// refs[v - 1][q] = the one output version v may produce for query q,
+/// computed by a direct (daemon-free) transformer with the same
+/// options the daemon serves with.
+fn reference_outputs(opts: TransformOptions, pool: &[Vec<f64>]) -> Vec<Vec<Vec<f64>>> {
+    (1..=VERSIONS)
+        .map(|v| {
+            let model = grid_model(version_scale(v));
+            let t = model.transformer_with(opts);
+            pool.iter().map(|q| t.transform_point(q)).collect()
+        })
+        .collect()
+}
+
+/// Check one response against the reference table: bitwise equality
+/// with its claimed version, and *no* other version produces it.
+fn assert_attributed(refs: &[Vec<Vec<f64>>], q: usize, version: u64, coords: &[f64]) {
+    let v = version as usize;
+    assert!((1..=VERSIONS).contains(&v), "response claims unknown version {v}");
+    assert_eq!(
+        coords,
+        refs[v - 1][q].as_slice(),
+        "response for query {q} does not match version {v} bitwise (torn read?)"
+    );
+    for (other, per_q) in refs.iter().enumerate() {
+        if other + 1 != v {
+            assert_ne!(
+                coords,
+                per_q[q].as_slice(),
+                "query {q}: versions {v} and {} are indistinguishable — bad fixture",
+                other + 1
+            );
+        }
+    }
+}
+
+#[test]
+fn readers_hammer_while_writer_swaps_every_response_attributable() {
+    let opts = TransformOptions::default();
+    let pool = query_pool();
+    let refs = Arc::new(reference_outputs(opts, &pool));
+    let pool = Arc::new(pool);
+
+    let daemon = Arc::new(Daemon::start(DaemonConfig {
+        workers: 3,
+        max_batch: 8,
+        opts,
+        ..Default::default()
+    }));
+    daemon.add_model(DEFAULT_SLOT, grid_model(version_scale(1)), "v1").unwrap();
+
+    // writer: swap through versions 2..=VERSIONS under full read load
+    let writer = {
+        let daemon = daemon.clone();
+        std::thread::spawn(move || {
+            for v in 2..=VERSIONS {
+                std::thread::sleep(std::time::Duration::from_millis(3));
+                let got = daemon
+                    .swap_model(DEFAULT_SLOT, grid_model(version_scale(v)), format!("v{v}"))
+                    .unwrap();
+                assert_eq!(got, v as u64, "swaps must publish strictly increasing versions");
+            }
+        })
+    };
+
+    // readers: closed-loop hammering; each records its version stream
+    let readers: Vec<_> = (0..READERS)
+        .map(|r| {
+            let daemon = daemon.clone();
+            let refs = refs.clone();
+            let pool = pool.clone();
+            std::thread::spawn(move || {
+                let mut versions = Vec::with_capacity(REQUESTS_PER_READER);
+                for i in 0..REQUESTS_PER_READER {
+                    let q = (r + i) % pool.len();
+                    let ok = daemon.transform_blocking(DEFAULT_SLOT, pool[q].clone()).unwrap();
+                    assert_attributed(&refs, q, ok.version, &ok.coords);
+                    versions.push(ok.version);
+                }
+                versions
+            })
+        })
+        .collect();
+
+    let mut total = 0usize;
+    for (r, h) in readers.into_iter().enumerate() {
+        let versions = h.join().expect("reader panicked");
+        total += versions.len();
+        assert!(
+            versions.windows(2).all(|w| w[0] <= w[1]),
+            "reader {r} observed the version going backwards: {versions:?}"
+        );
+    }
+    writer.join().expect("writer panicked");
+    assert_eq!(total, READERS * REQUESTS_PER_READER, "every request must be answered");
+
+    // nothing lost on the daemon's own books either
+    let st = daemon.stats();
+    assert_eq!(st.failed, 0, "no request may fail during swaps");
+    assert_eq!(st.submitted, total as u64);
+    assert_eq!(st.completed, total as u64);
+    assert_eq!(daemon.version(DEFAULT_SLOT).unwrap(), VERSIONS as u64);
+    daemon.shutdown();
+}
+
+/// Requests *queued* when a swap lands: fire a burst without waiting,
+/// swap immediately, then collect. Every response must still be
+/// bitwise-attributable to whichever single version served it, and all
+/// must arrive.
+#[test]
+fn queued_requests_spanning_a_swap_all_answered_on_exactly_one_version() {
+    let opts = TransformOptions::default();
+    let pool = query_pool();
+    let refs = reference_outputs(opts, &pool);
+
+    let daemon = Daemon::start(DaemonConfig {
+        workers: 2,
+        max_batch: 4,
+        opts,
+        ..Default::default()
+    });
+    daemon.add_model(DEFAULT_SLOT, grid_model(version_scale(1)), "v1").unwrap();
+
+    for round in 0..6 {
+        let burst: Vec<(usize, ResponseSlot)> = (0..24)
+            .map(|i| {
+                let q = (round + i) % pool.len();
+                (q, daemon.submit(DEFAULT_SLOT, pool[q].clone()).unwrap())
+            })
+            .collect();
+        // swap while the burst is (partly) still queued
+        let v = daemon
+            .swap_model(
+                DEFAULT_SLOT,
+                grid_model(version_scale(round + 2)),
+                format!("v{}", round + 2),
+            )
+            .unwrap();
+        assert_eq!(v, round as u64 + 2);
+        for (q, slot) in burst {
+            let ok = slot.wait().expect("queued request dropped across a swap");
+            assert_attributed(&refs, q, ok.version, &ok.coords);
+        }
+    }
+    daemon.shutdown();
+}
