@@ -49,10 +49,11 @@ else
   DL_N=1024 DL_ITERS=10 DL_CLIENTS=6 DL_REQUESTS=25
 fi
 
-# all three gradient engines: exact reference, Barnes-Hut theta = 0.5,
-# negative sampling k = 64 -> results/scalability.csv + BENCH_scal.json
+# all four gradient engines: exact reference, Barnes-Hut theta = 0.5,
+# negative sampling k = 64, grid interpolation g = 128
+# -> results/scalability.csv + BENCH_scal.json
 echo "== scal =="
-"$NLE" scal --sizes "$SCAL_SIZES" --thetas 0.5 --neg 64 \
+"$NLE" scal --sizes "$SCAL_SIZES" --thetas 0.5 --neg 64 --grid 128 \
   --reps "$SCAL_REPS" --sd-iters "$SD_ITERS"
 
 echo "== ann =="

@@ -1,0 +1,35 @@
+//! Grid-interpolation engine bench: the deterministic O(nnz + N + G)
+//! per-eval cost vs exact O(N^2 d) and Barnes-Hut O(N log N + nnz) —
+//! the issue's acceptance regime is grid:128 at or below bh:0.5 per
+//! eval by N = 65536, with the interpolation error fixed by (g, p)
+//! instead of decaying stochastically.
+//!
+//! Delegates to the `scal` harness (bench_harness/scalability.rs) so
+//! there is exactly one implementation of the comparison protocol
+//! (workload, warmup, error metric); this target sweeps the bins per
+//! axis g at a single Barnes-Hut reference theta for EE (separable
+//! Gaussian convolution path) and t-SNE (FFT Student path). Full
+//! sweeps + CSV/JSON output: `cargo run --release -- scal`.
+
+use nle::bench_harness::scalability::{run, ScalConfig};
+use nle::objective::Method;
+
+fn main() {
+    for method in [Method::Ee, Method::Tsne] {
+        let lambda = if method == Method::Ee { 100.0 } else { 1.0 };
+        run(&ScalConfig {
+            sizes: vec![4_096, 16_384, 65_536],
+            thetas: vec![0.5], // one BH reference point per N
+            neg_ks: vec![],    // stochastic engine has its own bench target
+            grid_gs: vec![64, 128, 256],
+            method,
+            lambda,
+            reps: 3,
+            sd_iters: 0, // engine timing only; the SD demo lives in `scal`
+            csv_name: format!("grid_gradient_{}.csv", method.name()),
+            json_name: Some(format!("BENCH_grid_gradient_{}.json", method.name())),
+            ..Default::default()
+        })
+        .expect("scalability harness failed");
+    }
+}

@@ -19,6 +19,7 @@ fn main() {
             sizes: vec![4_096, 16_384, 65_536],
             thetas: vec![0.5], // one BH reference point per N
             neg_ks: vec![16, 64, 256],
+            grid_gs: vec![], // deterministic engine has its own bench target
             method,
             lambda,
             reps: 3,

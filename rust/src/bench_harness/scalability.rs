@@ -1,7 +1,8 @@
 //! Engine scalability figure (the refactor's headline): exact vs
-//! Barnes–Hut vs negative-sampling wall-clock per (E, ∇E) evaluation
-//! and relative gradient error, swept across N and the engine parameter
-//! (θ for Barnes–Hut, k negatives per row for the sampler) on a
+//! Barnes–Hut vs negative-sampling vs grid-interpolation wall-clock
+//! per (E, ∇E) evaluation and relative gradient error, swept across N
+//! and the engine parameter (θ for Barnes–Hut, k negatives per row for
+//! the sampler, g grid nodes per axis for the interpolator) on a
 //! kNN-sparse swiss-roll workload — the large-N regime of paper
 //! section 3.2 that the exact O(N²d) engine cannot reach. Also
 //! demonstrates the spectral direction end-to-end on the Barnes–Hut
@@ -14,7 +15,9 @@
 //! perf-smoke job uploads as a build artifact. Note the neg rows'
 //! `grad_rel_err` is a *stochastic* deviation from the exact gradient
 //! (it shrinks like 1/√k), not a deterministic approximation error
-//! like the Barnes–Hut rows'.
+//! like the Barnes–Hut and grid rows' — the grid rows' error is fixed
+//! by (g, order, X) alone, which is why the harness *measures* it
+//! against the exact gradient at every N rather than asserting it.
 
 use std::io::Write;
 use std::time::Instant;
@@ -35,6 +38,11 @@ pub struct ScalConfig {
     /// Sampler seed for the neg rows (timing is seed-independent; the
     /// seed only pins the reported stochastic gradient error).
     pub neg_seed: u64,
+    /// Grid-resolution sweep (bins per axis) for the interpolation
+    /// engine (empty = skip the grid rows entirely).
+    pub grid_gs: Vec<usize>,
+    /// Lagrange degree for the grid rows.
+    pub grid_order: usize,
     pub method: Method,
     pub lambda: f64,
     pub perplexity: f64,
@@ -64,6 +72,8 @@ impl Default for ScalConfig {
             thetas: vec![0.2, 0.5, 0.8],
             neg_ks: vec![crate::objective::engine::DEFAULT_NEG_K],
             neg_seed: crate::objective::engine::DEFAULT_NEG_SEED,
+            grid_gs: vec![crate::objective::engine::DEFAULT_GRID_BINS],
+            grid_order: crate::objective::engine::DEFAULT_GRID_ORDER,
             method: Method::Ee,
             lambda: 100.0,
             perplexity: 20.0,
@@ -91,7 +101,7 @@ fn time_avg(reps: usize, mut f: impl FnMut()) -> f64 {
 struct Row {
     n: usize,
     engine: &'static str,
-    /// engine parameter: θ for bh, k for neg, None for exact.
+    /// engine parameter: θ for bh, k for neg, g for grid, None for exact.
     param: Option<f64>,
     affinity_s: f64,
     eval_s: f64,
@@ -109,11 +119,14 @@ pub fn run(cfg: &ScalConfig) -> anyhow::Result<()> {
         "method,n,engine,param,affinity_s,eval_s,total_s,speedup,grad_rel_err,energy_rel_err"
     )?;
     println!(
-        "scalability [{}]: sizes {:?}, thetas {:?}, neg k {:?}, k = {}, index = {}",
+        "scalability [{}]: sizes {:?}, thetas {:?}, neg k {:?}, grid g {:?} (p = {}), \
+         k = {}, index = {}",
         cfg.method.name(),
         cfg.sizes,
         cfg.thetas,
         cfg.neg_ks,
+        cfg.grid_gs,
+        cfg.grid_order,
         cfg.knn,
         cfg.index.name()
     );
@@ -259,6 +272,53 @@ pub fn run(cfg: &ScalConfig) -> anyhow::Result<()> {
             });
         }
 
+        for &grid_g in &cfg.grid_gs {
+            let grid = NativeObjective::with_engine(
+                cfg.method,
+                Attractive::Sparse(p.clone()),
+                cfg.lambda,
+                2,
+                EngineSpec::GridInterp { bins: grid_g, order: cfg.grid_order },
+            );
+            let (e_grid, g_grid) = grid.eval(&x);
+            // a fresh X every timed call: the engine's per-X eval cache
+            // would otherwise serve the binning pass from the first
+            // eval, and the timing must include the grid build exactly
+            // as an optimization step (new X every iteration) pays it
+            let mut xt = x.clone();
+            let mut tick = 0u64;
+            let t_grid = time_avg(cfg.reps, || {
+                tick += 1;
+                xt.data[0] = x.data[0] + tick as f64 * 1e-9;
+                let _ = grid.eval(&xt);
+            });
+            // deterministic interpolation error vs the exact reference —
+            // measured at every N, not asserted
+            let gerr = g_grid.rel_fro_err(&g_ref);
+            let eerr = (e_grid - e_ref).abs() / e_ref.abs().max(1e-300);
+            let speedup = t_exact / t_grid.max(1e-12);
+            writeln!(
+                file,
+                "{},{n},grid,{grid_g},{aff_index:.6e},{t_grid:.6e},{:.6e},{speedup:.3},{gerr:.6e},{eerr:.6e}",
+                cfg.method.name(),
+                aff_index + t_grid
+            )?;
+            println!(
+                "  {n:>7} {:>11} {grid_g:>6} {aff_index:>12.4} {t_grid:>12.4} {:>8.1}x {gerr:>13.3e} {eerr:>13.3e}",
+                "grid-interp", speedup
+            );
+            rows.push(Row {
+                n,
+                engine: "grid",
+                param: Some(grid_g as f64),
+                affinity_s: aff_index,
+                eval_s: t_grid,
+                speedup,
+                grad_rel_err: gerr,
+                energy_rel_err: eerr,
+            });
+        }
+
         // spectral direction end-to-end on the BH engine at the largest
         // N, reusing this iteration's affinities (recomputing the exact
         // kNN at N = 20k would double the most expensive setup step):
@@ -341,6 +401,7 @@ mod tests {
             sizes: vec![150],
             thetas: vec![0.5],
             neg_ks: vec![8],
+            grid_gs: vec![16],
             reps: 1,
             sd_iters: 2,
             knn: 12,
@@ -352,17 +413,23 @@ mod tests {
         run(&cfg).unwrap();
         let text =
             std::fs::read_to_string(results_dir().join("scalability_smoke.csv")).unwrap();
-        assert_eq!(text.lines().count(), 4, "header + exact + bh + neg");
+        assert_eq!(text.lines().count(), 5, "header + exact + bh + neg + grid");
         assert!(text.contains(",bh,"));
         assert!(text.contains(",neg,8,"));
+        assert!(text.contains(",grid,16,"));
         // the affinity-stage + engine-parameter columns are the contract
         let header = text.lines().next().unwrap();
         assert!(header.contains("affinity_s"));
         assert!(header.contains(",param,"));
+        // the grid row's rel_err columns carry the measured
+        // deterministic interpolation error (finite numbers, not blanks)
+        let grid_line = text.lines().find(|l| l.contains(",grid,")).unwrap();
+        assert_eq!(grid_line.split(',').count(), header.split(',').count());
         let json =
             std::fs::read_to_string(results_dir().join("BENCH_scal_smoke.json")).unwrap();
         assert!(json.contains("\"bench\": \"scal\""));
         assert!(json.contains("\"engine\": \"neg\""));
+        assert!(json.contains("\"engine\": \"grid\""));
         assert!(json.contains("\"eval_s\""));
     }
 }

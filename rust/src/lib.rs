@@ -92,7 +92,8 @@ pub mod prelude {
     pub use crate::linalg::dense::Mat;
     pub use crate::model::{EmbeddingModel, TransformOptions, Transformer};
     pub use crate::objective::engine::{
-        BarnesHutEngine, EngineSpec, ExactEngine, GradientEngine, NegativeSamplingEngine,
+        BarnesHutEngine, EngineSpec, ExactEngine, GradientEngine, GridInterpEngine,
+        NegativeSamplingEngine,
     };
     pub use crate::objective::native::NativeObjective;
     pub use crate::objective::xla::XlaObjective;

@@ -1,0 +1,274 @@
+//! Radix-2 complex FFT, from scratch, for grid-kernel convolutions.
+//!
+//! The grid-interpolation gradient engine (objective/engine/gridinterp)
+//! needs a linear convolution of node charges with a kernel tensor on a
+//! regular d-dimensional lattice. The Gaussian kernel factorizes across
+//! axes and is convolved directly; the Student kernel 1/(1 + r²) does
+//! not, so its grid-to-grid pass goes through the convolution theorem:
+//! zero-pad each axis to a power of two ≥ 2g − 1, forward-transform
+//! kernel and charges, multiply pointwise, invert.
+//!
+//! Everything here is serial and branch-free in the data, so results
+//! are bitwise identical for any `NLE_THREADS` — the determinism
+//! contract the grid engine advertises. Split re/im storage keeps the
+//! hot loops free of struct shuffling.
+
+use std::f64::consts::PI;
+
+/// In-place iterative Cooley–Tukey FFT over split real/imaginary
+/// arrays. `n = re.len()` must be a power of two. `inverse` applies the
+/// conjugate transform and the 1/n normalization, so
+/// `fft(x); ifft(x)` round-trips to the input (to rounding).
+pub fn fft_pow2(re: &mut [f64], im: &mut [f64], inverse: bool) {
+    let n = re.len();
+    assert_eq!(n, im.len(), "re/im length mismatch");
+    assert!(n.is_power_of_two(), "fft length must be a power of two");
+    if n <= 1 {
+        return;
+    }
+    // bit-reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2usize;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let half = len / 2;
+        for start in (0..n).step_by(len) {
+            // running twiddle; the recurrence error over len ≤ 2^20 is
+            // far below the engine's interpolation-error budget
+            let (mut cr, mut ci) = (1.0f64, 0.0f64);
+            for k in 0..half {
+                let a = start + k;
+                let b = a + half;
+                let tr = re[b] * cr - im[b] * ci;
+                let ti = re[b] * ci + im[b] * cr;
+                re[b] = re[a] - tr;
+                im[b] = im[a] - ti;
+                re[a] += tr;
+                im[a] += ti;
+                let nr = cr * wr - ci * wi;
+                ci = cr * wi + ci * wr;
+                cr = nr;
+            }
+        }
+        len <<= 1;
+    }
+    if inverse {
+        let s = 1.0 / n as f64;
+        for v in re.iter_mut() {
+            *v *= s;
+        }
+        for v in im.iter_mut() {
+            *v *= s;
+        }
+    }
+}
+
+/// d-dimensional FFT of a row-major array with power-of-two `dims`.
+///
+/// Implemented as d passes of "transform every contiguous line along
+/// the last axis, then rotate the axes": the rotation is a transpose of
+/// the flattened (rest, last) matrix, so after `dims.len()` passes the
+/// layout and the axis order are back to the original. `dims` is
+/// mutated during the passes but restored on return.
+pub fn fftnd(re: &mut Vec<f64>, im: &mut Vec<f64>, dims: &mut [usize], inverse: bool) {
+    let total: usize = dims.iter().product();
+    assert_eq!(re.len(), total, "re length must match dims product");
+    assert_eq!(im.len(), total, "im length must match dims product");
+    if total == 0 {
+        return;
+    }
+    for _ in 0..dims.len() {
+        let last = *dims.last().expect("dims is non-empty");
+        for (rl, il) in re.chunks_mut(last).zip(im.chunks_mut(last)) {
+            fft_pow2(rl, il, inverse);
+        }
+        rotate_last_axis(re, dims);
+        rotate_last_axis(im, dims);
+        dims.rotate_right(1);
+    }
+}
+
+/// Rotate the last axis to the front: reinterpret the row-major array
+/// of shape `dims` as a (rest, last) matrix and transpose it, giving a
+/// row-major array of shape [last, dims[0], .., dims[d-2]]. The caller
+/// rotates `dims` to match. Applying this `dims.len()` times is the
+/// identity.
+fn rotate_last_axis(data: &mut Vec<f64>, dims: &[usize]) {
+    let last = *dims.last().expect("dims is non-empty");
+    let rest = data.len() / last.max(1);
+    if last <= 1 || rest <= 1 {
+        return;
+    }
+    let mut out = vec![0.0f64; data.len()];
+    for r in 0..rest {
+        for c in 0..last {
+            out[c * rest + r] = data[r * last + c];
+        }
+    }
+    *data = out;
+}
+
+/// Pointwise complex multiply: (ar + i·ai) *= (br + i·bi), elementwise.
+pub fn pointwise_mul(ar: &mut [f64], ai: &mut [f64], br: &[f64], bi: &[f64]) {
+    assert_eq!(ar.len(), ai.len());
+    assert_eq!(ar.len(), br.len());
+    assert_eq!(ar.len(), bi.len());
+    for (((x, y), &u), &v) in ar.iter_mut().zip(ai.iter_mut()).zip(br.iter()).zip(bi.iter()) {
+        let re = *x * u - *y * v;
+        *y = *x * v + *y * u;
+        *x = re;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_dft(re: &[f64], im: &[f64], inverse: bool) -> (Vec<f64>, Vec<f64>) {
+        let n = re.len();
+        let sign = if inverse { 1.0 } else { -1.0 };
+        let mut or = vec![0.0; n];
+        let mut oi = vec![0.0; n];
+        for k in 0..n {
+            for t in 0..n {
+                let ang = sign * 2.0 * PI * (k * t) as f64 / n as f64;
+                or[k] += re[t] * ang.cos() - im[t] * ang.sin();
+                oi[k] += re[t] * ang.sin() + im[t] * ang.cos();
+            }
+        }
+        if inverse {
+            let s = 1.0 / n as f64;
+            for v in or.iter_mut().chain(oi.iter_mut()) {
+                *v *= s;
+            }
+        }
+        (or, oi)
+    }
+
+    fn rngish(seed: u64, n: usize) -> Vec<f64> {
+        // deterministic pseudo-random fill, no external RNG
+        let mut s = seed;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((s >> 33) as f64 / (1u64 << 31) as f64) - 1.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_naive_dft() {
+        for n in [2usize, 4, 8, 16, 32] {
+            let re0 = rngish(7 + n as u64, n);
+            let im0 = rngish(91 + n as u64, n);
+            let (er, ei) = naive_dft(&re0, &im0, false);
+            let (mut re, mut im) = (re0.clone(), im0.clone());
+            fft_pow2(&mut re, &mut im, false);
+            for k in 0..n {
+                assert!((re[k] - er[k]).abs() < 1e-9, "re[{k}] off at n={n}");
+                assert!((im[k] - ei[k]).abs() < 1e-9, "im[{k}] off at n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_identity() {
+        let n = 64;
+        let re0 = rngish(3, n);
+        let im0 = rngish(4, n);
+        let (mut re, mut im) = (re0.clone(), im0.clone());
+        fft_pow2(&mut re, &mut im, false);
+        fft_pow2(&mut re, &mut im, true);
+        for k in 0..n {
+            assert!((re[k] - re0[k]).abs() < 1e-12);
+            assert!((im[k] - im0[k]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn convolution_theorem_1d() {
+        // circular conv of two real signals via FFT == naive O(n^2)
+        let n = 16usize;
+        let a = rngish(11, n);
+        let b = rngish(12, n);
+        let mut naive = vec![0.0f64; n];
+        for i in 0..n {
+            for j in 0..n {
+                naive[i] += a[j] * b[(i + n - j) % n];
+            }
+        }
+        let (mut ar, mut ai) = (a.clone(), vec![0.0; n]);
+        let (mut br, mut bi) = (b.clone(), vec![0.0; n]);
+        fft_pow2(&mut ar, &mut ai, false);
+        fft_pow2(&mut br, &mut bi, false);
+        pointwise_mul(&mut ar, &mut ai, &br, &bi);
+        fft_pow2(&mut ar, &mut ai, true);
+        for i in 0..n {
+            assert!((ar[i] - naive[i]).abs() < 1e-10, "conv[{i}] off");
+            assert!(ai[i].abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn fftnd_matches_per_axis_dft_2d() {
+        // 2-D transform == DFT along rows then along columns
+        let (h, w) = (4usize, 8usize);
+        let re0 = rngish(21, h * w);
+        let im0 = vec![0.0f64; h * w];
+        // reference: transform rows, then columns, with the naive DFT
+        let mut rr = re0.clone();
+        let mut ri = im0.clone();
+        for r in 0..h {
+            let (or, oi) = naive_dft(&rr[r * w..(r + 1) * w], &ri[r * w..(r + 1) * w], false);
+            rr[r * w..(r + 1) * w].copy_from_slice(&or);
+            ri[r * w..(r + 1) * w].copy_from_slice(&oi);
+        }
+        for c in 0..w {
+            let col_r: Vec<f64> = (0..h).map(|r| rr[r * w + c]).collect();
+            let col_i: Vec<f64> = (0..h).map(|r| ri[r * w + c]).collect();
+            let (or, oi) = naive_dft(&col_r, &col_i, false);
+            for r in 0..h {
+                rr[r * w + c] = or[r];
+                ri[r * w + c] = oi[r];
+            }
+        }
+        let (mut re, mut im) = (re0, im0);
+        let mut dims = [h, w];
+        fftnd(&mut re, &mut im, &mut dims, false);
+        assert_eq!(dims, [h, w], "dims restored after the axis rotations");
+        for k in 0..h * w {
+            assert!((re[k] - rr[k]).abs() < 1e-9, "2d re[{k}] off");
+            assert!((im[k] - ri[k]).abs() < 1e-9, "2d im[{k}] off");
+        }
+    }
+
+    #[test]
+    fn fftnd_roundtrip_3d() {
+        let mut dims = [4usize, 2, 8];
+        let total: usize = dims.iter().product();
+        let re0 = rngish(33, total);
+        let im0 = rngish(34, total);
+        let (mut re, mut im) = (re0.clone(), im0.clone());
+        fftnd(&mut re, &mut im, &mut dims, false);
+        fftnd(&mut re, &mut im, &mut dims, true);
+        assert_eq!(dims, [4, 2, 8]);
+        for k in 0..total {
+            assert!((re[k] - re0[k]).abs() < 1e-12);
+            assert!((im[k] - im0[k]).abs() < 1e-12);
+        }
+    }
+}

@@ -3,13 +3,15 @@
 //! Everything the partial-Hessian strategies need, implemented from
 //! scratch: dense/sparse Cholesky (the spectral direction's engine),
 //! linear CG (SD−'s inexact solver), symmetric eigensolvers (spectral
-//! initialization and the theorem 2.1 rate constant), and a
-//! fill-reducing ordering.
+//! initialization and the theorem 2.1 rate constant), a
+//! fill-reducing ordering, and a radix-2 FFT (the grid-interpolation
+//! engine's Student-kernel convolution).
 
 pub mod cg;
 pub mod chol;
 pub mod dense;
 pub mod eig;
+pub mod fft;
 pub mod lanczos;
 pub mod ordering;
 pub mod rsvd;

@@ -11,6 +11,7 @@
 use std::time::Duration;
 
 use nle::bench_harness::{ann, fig1, fig2, fig3, fig4, rates, scalability, serve};
+use nle::objective::engine::{DEFAULT_GRID_ORDER, MAX_GRID_ORDER};
 use nle::prelude::*;
 
 const USAGE: &str = "\
@@ -32,13 +33,16 @@ COMMANDS
           [--n 2000] [--budget 60] [--kappa 7] [--strategies fp,lbfgs,sd,sdm]
   rates   theorem 2.1 rate constants r = ||B^-1 H - I|| [--n 40]
   scal    gradient-engine scalability: exact vs Barnes-Hut vs
-          negative-sampling wall-clock and gradient error across N and
-          the engine parameter (kNN-sparse swiss roll), plus the
-          affinity-stage wall-clock for both neighbor indices ->
+          negative-sampling vs grid-interpolation wall-clock and
+          gradient error across N and the engine parameter (kNN-sparse
+          swiss roll), plus the affinity-stage wall-clock for both
+          neighbor indices ->
           results/scalability.csv + results/BENCH_scal.json
           [--sizes 2000,5000,10000,20000] [--thetas 0.2,0.5,0.8]
           [--neg 64 (comma list of negatives/row; 'none' skips)]
-          [--neg-seed 0] [--json BENCH_scal.json]
+          [--neg-seed 0]
+          [--grid 128 (comma list of bins/axis; 'none' skips)]
+          [--grid-order 3] [--json BENCH_scal.json]
           [--method ee] [--lambda 100] [--knn 60] [--reps 3] [--sd-iters 5]
           [--index auto|exact|hnsw|hnsw:<m>[,<efc>[,<efs>]]]
   ann     neighbor-index comparison: exact vs HNSW graph build +
@@ -106,7 +110,8 @@ COMMANDS
           [--data swiss|coil|mnist|clusters] [--n 500] [--method ee]
           [--strategy sd] [--lambda 100] [--perplexity 20]
           [--max-iters 500] [--backend native|xla]
-          [--engine auto|exact|bh|bh:<theta>|neg:<k>[,<seed>]]
+          [--engine auto|exact|bh|bh:<theta>|neg:<k>[,<seed>]
+                    |grid:<g>[,<p>]]
           [--init auto|random|spectral[:lanczos|rsvd[:<q>,<p>]]]
           [--knn 0 (0 = dense W+)]
           [--index auto|exact|hnsw|hnsw:<m>[,<efc>[,<efs>]]]
@@ -257,6 +262,19 @@ fn main() -> anyhow::Result<()> {
                 neg_ks.iter().all(|&k| k >= 1),
                 "bad --neg value {neg_raw:?} (every k must be >= 1; 'none' skips)"
             );
+            let grid_raw = args.get_str("grid", "128");
+            let grid_gs: Vec<usize> = if grid_raw == "none" {
+                vec![]
+            } else {
+                parse_csv("grid", &grid_raw)?
+            };
+            let grid_order: usize = args.get("grid_order", DEFAULT_GRID_ORDER);
+            anyhow::ensure!(
+                (1..=MAX_GRID_ORDER).contains(&grid_order)
+                    && grid_gs.iter().all(|&g| g >= grid_order + 1),
+                "bad --grid/--grid-order (need order in 1..={MAX_GRID_ORDER}, \
+                 bins >= order+1; 'none' skips)"
+            );
             let method = Method::parse(&args.get_str("method", "ee"))
                 .ok_or_else(|| anyhow::anyhow!("bad method"))?;
             let index = IndexSpec::parse(&args.get_str("index", "auto"))
@@ -266,6 +284,8 @@ fn main() -> anyhow::Result<()> {
                 thetas,
                 neg_ks,
                 neg_seed: args.get("neg_seed", 0),
+                grid_gs,
+                grid_order,
                 method,
                 lambda: args.get("lambda", 100.0),
                 perplexity: args.get("perplexity", 20.0),
@@ -336,7 +356,9 @@ fn main() -> anyhow::Result<()> {
             let backend = args.get_str("backend", "native");
             let engine = EngineSpec::parse(&args.get_str("engine", "auto"))
                 .ok_or_else(|| {
-                    anyhow::anyhow!("bad engine (auto|exact|bh|bh:<theta>|neg:<k>[,<seed>])")
+                    anyhow::anyhow!(
+                        "bad engine (auto|exact|bh|bh:<theta>|neg:<k>[,<seed>]|grid:<g>[,<p>])"
+                    )
                 })?;
             let index = IndexSpec::parse(&args.get_str("index", "auto"))
                 .ok_or_else(|| anyhow::anyhow!("bad index (auto|exact|hnsw|hnsw:<m>[,..])"))?;

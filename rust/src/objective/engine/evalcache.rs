@@ -1,0 +1,152 @@
+//! Fingerprint-keyed single-slot cache for per-X evaluation artifacts.
+//!
+//! The optimizer's backtracking line search probes `energy(x_trial)`
+//! repeatedly and then calls `eval(x_accepted)` at the point it just
+//! accepted, so an engine that builds an expensive per-X structure
+//! (the grid engine's binning + convolution pass, ~all of its work)
+//! would pay for it twice per iteration without a cache. This module
+//! gives engines a shared contract: key the artifact on a fingerprint
+//! of X's exact f64 bit patterns (plus whatever engine parameters
+//! shape the artifact), store the latest build, and rebuild only when
+//! the key changes.
+//!
+//! Capacity is deliberately one slot: a line search walks a sequence
+//! of *distinct* trial points and only ever revisits the most recent
+//! one, so LRU depth 1 captures the whole win with O(1) memory. The
+//! cache is keyed on exact bits — any change to any coordinate misses
+//! — so a hit can never serve stale values, and caching does not
+//! affect bitwise determinism: the cached artifact is the same value
+//! the build would have produced.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::linalg::dense::Mat;
+
+/// FNV-1a 64-bit streaming hasher — tiny, dependency-free, and stable
+/// across platforms. Not cryptographic; collisions across the handful
+/// of distinct X's a line search visits are astronomically unlikely
+/// and at worst cost a wrong-but-finite gradient for one iteration of
+/// a descent method that rechecks energy anyway.
+#[derive(Clone, Copy)]
+pub struct Fnv(u64);
+
+impl Fnv {
+    pub fn new() -> Self {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        let mut h = self.0;
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        self.0 = h;
+    }
+
+    pub fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Fingerprint a matrix by its shape and the exact bit patterns of its
+/// entries. Distinguishes 0.0 from -0.0 and every NaN payload — which
+/// is exactly right for a cache that must only hit on bit-identical X.
+pub fn fingerprint_mat(x: &Mat) -> u64 {
+    let mut h = Fnv::new();
+    h.write_u64(x.rows as u64);
+    h.write_u64(x.cols as u64);
+    for &v in &x.data {
+        h.write_u64(v.to_bits());
+    }
+    h.finish()
+}
+
+/// Single-slot cache mapping a 64-bit key to an `Arc`'d artifact.
+pub struct EvalCache<T> {
+    slot: Mutex<Option<(u64, Arc<T>)>>,
+    builds: AtomicUsize,
+}
+
+impl<T> EvalCache<T> {
+    pub fn new() -> Self {
+        EvalCache { slot: Mutex::new(None), builds: AtomicUsize::new(0) }
+    }
+
+    /// Return the cached artifact for `key`, or run `build`, cache the
+    /// result, and return it. The slot lock is held across `build` so
+    /// concurrent callers at the same X build once; engine evaluations
+    /// are driven by one optimizer thread, so this never contends in
+    /// practice.
+    pub fn get_or_build<F: FnOnce() -> T>(&self, key: u64, build: F) -> Arc<T> {
+        let mut slot = self.slot.lock().expect("eval cache poisoned");
+        if let Some((k, v)) = slot.as_ref() {
+            if *k == key {
+                return Arc::clone(v);
+            }
+        }
+        self.builds.fetch_add(1, Ordering::Relaxed);
+        let v = Arc::new(build());
+        *slot = Some((key, Arc::clone(&v)));
+        v
+    }
+
+    /// Number of misses (actual builds) so far — the observable the
+    /// cache-sharing tests assert on: eval-then-energy at one X must
+    /// leave this at 1.
+    pub fn builds(&self) -> usize {
+        self.builds.load(Ordering::Relaxed)
+    }
+}
+
+impl<T> Default for EvalCache<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_returns_same_arc_without_rebuilding() {
+        let c: EvalCache<Vec<f64>> = EvalCache::new();
+        let a = c.get_or_build(42, || vec![1.0, 2.0]);
+        let b = c.get_or_build(42, || panic!("must not rebuild on a hit"));
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(c.builds(), 1);
+    }
+
+    #[test]
+    fn new_key_evicts_and_rebuilds() {
+        let c: EvalCache<u32> = EvalCache::new();
+        assert_eq!(*c.get_or_build(1, || 10), 10);
+        assert_eq!(*c.get_or_build(2, || 20), 20);
+        // the single slot now holds key 2; key 1 must rebuild
+        assert_eq!(*c.get_or_build(1, || 11), 11);
+        assert_eq!(c.builds(), 3);
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_every_bit_and_to_shape() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut b = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(fingerprint_mat(&a), fingerprint_mat(&b));
+        b.data[3] = 4.0 + f64::EPSILON * 4.0; // one-ulp-ish nudge
+        assert_ne!(fingerprint_mat(&a), fingerprint_mat(&b));
+        let c = Mat::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_ne!(fingerprint_mat(&a), fingerprint_mat(&c));
+        // -0.0 and 0.0 are different bit patterns, so different keys
+        let z0 = Mat::from_vec(1, 1, vec![0.0]);
+        let z1 = Mat::from_vec(1, 1, vec![-0.0]);
+        assert_ne!(fingerprint_mat(&z0), fingerprint_mat(&z1));
+    }
+}

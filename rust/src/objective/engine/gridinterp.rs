@@ -1,0 +1,830 @@
+//! Grid-interpolation gradient engine: O(N + G) per evaluation with
+//! *deterministic* error (FIt-SNE / FUnc-SNE lineage).
+//!
+//! The attractive term streams the stored sparse/dense W⁺ exactly in
+//! O(nnz), as in the Barnes–Hut and negative-sampling engines. The
+//! O(N²) repulsive field is approximated in three passes over a
+//! regular grid of `bins` nodes per axis spanning the embedding's
+//! bounding box (d ∈ {1, 2, 3}):
+//!
+//! 1. **S2G** — each point scatters charges (mass 1 and its d
+//!    coordinate moments) onto the (order+1)^d grid nodes around it,
+//!    weighted by `order`-degree Lagrange basis polynomials;
+//! 2. **G2G** — node charges are convolved with the kernel evaluated
+//!    at node offsets. The Gaussian kernel e^{−r²} (EE, s-SNE)
+//!    factorizes across axes, so this is d successive 1-D
+//!    convolutions; the Student kernel 1/(1+r²) (t-SNE) does not, so
+//!    its convolution goes through the zero-padded FFT
+//!    ([`crate::linalg::fft`]);
+//! 3. **G2P** — per-point field and force values are read back by the
+//!    same Lagrange interpolation, the exact self-term K(0) = 1 is
+//!    subtracted, and the partition sum Z folds serially in row order.
+//!
+//! This approximates `K(x_n, x_m) ≈ Σ_{a,b} L_a(x_n) L_b(x_m)
+//! K(g_a, g_b)`; the error is the Lagrange interpolation error of the
+//! kernel over one grid cell — it shrinks like h^(order+1) in the cell
+//! width h and involves **no randomness and no θ criterion**: two runs
+//! at any `NLE_THREADS` are bitwise identical. Parallel stages only
+//! ever compute independent outputs (per-point windows, per-line
+//! convolutions, per-point gathers) with serial row-order folds; the
+//! S2G scatter is serial in point order because any parallel split
+//! would reorder the additions.
+//!
+//! **Eval cache**: the grid build (everything above — essentially the
+//! whole repulsive computation) is keyed on a fingerprint of X's exact
+//! bit patterns and cached with capacity one
+//! ([`super::evalcache::EvalCache`]), so a backtracking line search's
+//! `energy(x)` followed by the optimizer's `eval(x)` at the accepted
+//! point pays for one binning pass, not two.
+//!
+//! Degenerate bounding boxes (all-identical points, a zero-extent
+//! axis, non-finite coordinates) have no usable cell width; those
+//! evaluations fall back to [`super::ExactEngine`] per call, as do
+//! configurations `grid_applicable` rejects (d > 3, dense W⁻,
+//! Spectral) for direct trait users who bypass
+//! [`super::EngineSpec::build`].
+
+use super::evalcache::{fingerprint_mat, EvalCache, Fnv};
+use super::{
+    attract_row_stream, partition_terms, EngineContext, EngineSpec, ExactEngine, GradientEngine,
+};
+use crate::linalg::dense::Mat;
+use crate::linalg::fft::{fftnd, pointwise_mul};
+use crate::objective::{Method, Repulsive};
+use crate::par::{par_map, par_rows_with};
+
+/// Which kernel family the grid carries. EE and s-SNE share the
+/// Gaussian build (identical field/force artifacts), so a homotopy
+/// across them even shares cache entries.
+#[derive(Clone, Copy, PartialEq)]
+enum Kern {
+    Gauss,
+    Student,
+}
+
+/// Cached per-X artifact: the entire repulsive computation.
+struct GridEval {
+    /// Per-point repulsive field Σ_{m≠n} K(x_n, x_m), self-term removed.
+    field: Vec<f64>,
+    /// Per-point unnormalized force Σ_m K_f(x_n, x_m)(x_n − x_m),
+    /// row-major n×d (K_f = K for Gaussian, K² for Student).
+    force: Vec<f64>,
+    /// Σ_n field_n — the partition sum for the normalized models.
+    z: f64,
+}
+
+enum GridBuild {
+    /// Bounding box unusable (zero-extent axis, non-finite coords):
+    /// this X is served by the exact engine instead.
+    Degenerate,
+    Ready(GridEval),
+}
+
+pub struct GridInterpEngine {
+    bins: usize,
+    order: usize,
+    cache: EvalCache<GridBuild>,
+}
+
+impl GridInterpEngine {
+    pub fn new(bins: usize, order: usize) -> Self {
+        assert!(order >= 1, "interpolation order must be >= 1 (got {order})");
+        assert!(
+            bins >= order + 1,
+            "need bins >= order+1 nodes per axis (got bins={bins}, order={order})"
+        );
+        GridInterpEngine { bins, order, cache: EvalCache::new() }
+    }
+
+    pub fn bins(&self) -> usize {
+        self.bins
+    }
+
+    pub fn order(&self) -> usize {
+        self.order
+    }
+
+    /// Build count of the eval cache — observable for the cache-sharing
+    /// contract tests (eval-then-energy at one X must leave this at 1).
+    pub fn cache_builds(&self) -> usize {
+        self.cache.builds()
+    }
+
+    fn uniform_wm(ctx: &EngineContext<'_>) -> f64 {
+        match ctx.wm {
+            Repulsive::Uniform(c) => *c,
+            Repulsive::Dense(_) => unreachable!("checked by grid_applicable"),
+        }
+    }
+
+    fn kern(method: Method) -> Kern {
+        match method {
+            Method::Ee | Method::Ssne => Kern::Gauss,
+            Method::Tsne => Kern::Student,
+            Method::Spectral => unreachable!("checked by grid_applicable"),
+        }
+    }
+
+    fn key(&self, kern: Kern, x: &Mat) -> u64 {
+        let mut h = Fnv::new();
+        h.write_u64(match kern {
+            Kern::Gauss => 1,
+            Kern::Student => 2,
+        });
+        h.write_u64(self.bins as u64);
+        h.write_u64(self.order as u64);
+        h.write_u64(fingerprint_mat(x));
+        h.finish()
+    }
+
+    /// The three-pass grid build. Everything here depends only on
+    /// (kernel, bins, order, X) — never on λ or the weights — so one
+    /// build serves eval and energy across λ-homotopy steps too.
+    fn build(&self, kern: Kern, x: &Mat) -> GridBuild {
+        let (n, d) = (x.rows, x.cols);
+        let g = self.bins;
+        let p = self.order;
+        let m = p + 1;
+
+        // ---- bounding box; bail to the exact engine when no axis has
+        // a usable positive cell width
+        let mut lo = [f64::INFINITY; 3];
+        let mut hi = [f64::NEG_INFINITY; 3];
+        for row in 0..n {
+            let xr = x.row(row);
+            for k in 0..d {
+                let v = xr[k];
+                if !v.is_finite() {
+                    return GridBuild::Degenerate;
+                }
+                if v < lo[k] {
+                    lo[k] = v;
+                }
+                if v > hi[k] {
+                    hi[k] = v;
+                }
+            }
+        }
+        let mut h = [0.0f64; 3];
+        for k in 0..d {
+            let extent = hi[k] - lo[k];
+            if !extent.is_finite() || extent <= 0.0 {
+                return GridBuild::Degenerate;
+            }
+            h[k] = extent / (g - 1) as f64;
+            if h[k] <= 0.0 {
+                // extent subnormal enough to round the cell width to 0
+                return GridBuild::Degenerate;
+            }
+        }
+
+        // ---- per-point interpolation windows and Lagrange weights
+        // (parallel: disjoint per-point outputs, no accumulation)
+        let wstride = d * m;
+        let mut wts = vec![0.0f64; n * wstride];
+        let bases: Vec<[u32; 3]> = par_rows_with(n, wstride, &mut wts, || (), |row, wrow, _| {
+            let xr = x.row(row);
+            let mut base = [0u32; 3];
+            for k in 0..d {
+                let t = (xr[k] - lo[k]) / h[k]; // in [0, g-1] up to rounding
+                let cell = (t.floor() as isize).clamp(0, (g - 1) as isize);
+                let b0 = (cell - (p as isize - 1) / 2).clamp(0, (g - 1 - p) as isize) as usize;
+                lagrange_row(t - b0 as f64, p, &mut wrow[k * m..(k + 1) * m]);
+                base[k] = b0 as u32;
+            }
+            base
+        });
+
+        // ---- S2G: scatter mass + d coordinate moments. Serial in
+        // point order: a parallel scatter's addition order would depend
+        // on the chunk plan and break thread-count determinism.
+        let gg = g.pow(d as u32);
+        let nf = d + 1;
+        let mut charges = vec![0.0f64; nf * gg];
+        for row in 0..n {
+            let xr = x.row(row);
+            let w = &wts[row * wstride..(row + 1) * wstride];
+            let b = &bases[row];
+            match d {
+                1 => {
+                    let b0 = b[0] as usize;
+                    for a in 0..m {
+                        let wa = w[a];
+                        let idx = b0 + a;
+                        charges[idx] += wa;
+                        charges[gg + idx] += wa * xr[0];
+                    }
+                }
+                2 => {
+                    let (b0, b1) = (b[0] as usize, b[1] as usize);
+                    for a in 0..m {
+                        let wa = w[a];
+                        let ia = (b0 + a) * g + b1;
+                        for bb in 0..m {
+                            let wab = wa * w[m + bb];
+                            let idx = ia + bb;
+                            charges[idx] += wab;
+                            charges[gg + idx] += wab * xr[0];
+                            charges[2 * gg + idx] += wab * xr[1];
+                        }
+                    }
+                }
+                3 => {
+                    let (b0, b1, b2) = (b[0] as usize, b[1] as usize, b[2] as usize);
+                    for a in 0..m {
+                        let wa = w[a];
+                        let ia = (b0 + a) * g + b1;
+                        for bb in 0..m {
+                            let wab = wa * w[m + bb];
+                            let iab = (ia + bb) * g + b2;
+                            for cc in 0..m {
+                                let wabc = wab * w[2 * m + cc];
+                                let idx = iab + cc;
+                                charges[idx] += wabc;
+                                charges[gg + idx] += wabc * xr[0];
+                                charges[2 * gg + idx] += wabc * xr[1];
+                                charges[3 * gg + idx] += wabc * xr[2];
+                            }
+                        }
+                    }
+                }
+                _ => unreachable!("grid_applicable caps d at 3"),
+            }
+        }
+
+        // ---- G2G: kernel convolution at the nodes. Output slot
+        // layout: slot 0 is the field kernel's mass grid (the Z/field
+        // source); the force grids follow — Gaussian forces reuse the
+        // same kernel, Student forces need K².
+        let (out, fmass_slot, mom0_slot) = match kern {
+            Kern::Gauss => {
+                let mut fields = charges;
+                gaussian_convolve(&mut fields, nf, g, d, &h);
+                // [mass∗K, mom_1∗K, .., mom_d∗K]
+                (fields, 0usize, 1usize)
+            }
+            Kern::Student => {
+                // [mass∗K, mass∗K², mom_1∗K², .., mom_d∗K²]
+                (student_convolve(&charges, nf, g, d, &h), 1usize, 2usize)
+            }
+        };
+        let nslots = out.len() / gg.max(1);
+
+        // ---- G2P: gather per-point values (parallel: independent
+        // per-point dot products), then fold Z serially in row order.
+        let mut force = vec![0.0f64; n * d];
+        let field: Vec<f64> =
+            par_rows_with(n, d, &mut force, || vec![0.0f64; nslots], |row, frow, acc| {
+                acc.fill(0.0);
+                let w = &wts[row * wstride..(row + 1) * wstride];
+                let b = &bases[row];
+                match d {
+                    1 => {
+                        let b0 = b[0] as usize;
+                        for a in 0..m {
+                            let wa = w[a];
+                            let idx = b0 + a;
+                            for (sl, av) in acc.iter_mut().enumerate() {
+                                *av += wa * out[sl * gg + idx];
+                            }
+                        }
+                    }
+                    2 => {
+                        let (b0, b1) = (b[0] as usize, b[1] as usize);
+                        for a in 0..m {
+                            let wa = w[a];
+                            let ia = (b0 + a) * g + b1;
+                            for bb in 0..m {
+                                let wab = wa * w[m + bb];
+                                let idx = ia + bb;
+                                for (sl, av) in acc.iter_mut().enumerate() {
+                                    *av += wab * out[sl * gg + idx];
+                                }
+                            }
+                        }
+                    }
+                    3 => {
+                        let (b0, b1, b2) = (b[0] as usize, b[1] as usize, b[2] as usize);
+                        for a in 0..m {
+                            let wa = w[a];
+                            let ia = (b0 + a) * g + b1;
+                            for bb in 0..m {
+                                let wab = wa * w[m + bb];
+                                let iab = (ia + bb) * g + b2;
+                                for cc in 0..m {
+                                    let wabc = wab * w[2 * m + cc];
+                                    let idx = iab + cc;
+                                    for (sl, av) in acc.iter_mut().enumerate() {
+                                        *av += wabc * out[sl * gg + idx];
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    _ => unreachable!(),
+                }
+                let xr = x.row(row);
+                let fm = acc[fmass_slot];
+                for k in 0..d {
+                    frow[k] = xr[k] * fm - acc[mom0_slot + k];
+                }
+                // remove the exact self-term: K(x_n, x_n) = 1 for both
+                // kernels (the self force x_n·K(0) − K(0)·x_n cancels
+                // inside the moment difference above)
+                acc[0] - 1.0
+            });
+        let mut z = 0.0;
+        for &f in &field {
+            z += f;
+        }
+        GridBuild::Ready(GridEval { field, force, z })
+    }
+}
+
+impl GradientEngine for GridInterpEngine {
+    fn name(&self) -> &'static str {
+        "grid-interp"
+    }
+
+    fn eval(&self, ctx: &EngineContext<'_>, x: &Mat) -> (f64, Mat) {
+        if !EngineSpec::grid_applicable(ctx.method, ctx.wm, x.cols, self.bins) {
+            return ExactEngine.eval(ctx, x);
+        }
+        let kern = Self::kern(ctx.method);
+        let built = self.cache.get_or_build(self.key(kern, x), || self.build(kern, x));
+        let GridBuild::Ready(ge) = &*built else {
+            return ExactEngine.eval(ctx, x);
+        };
+        let (n, d) = (x.rows, x.cols);
+        let lam = ctx.lambda;
+        match ctx.method {
+            Method::Spectral => unreachable!("grid_applicable excludes Spectral"),
+            Method::Ee => {
+                let c = Self::uniform_wm(ctx);
+                let mut grad = Mat::zeros(n, d);
+                let es: Vec<f64> =
+                    par_rows_with(n, d, &mut grad.data, || (), |row, gn, _| {
+                        let mut e = attract_row_stream(ctx.method, ctx.wp, x, row, Some(gn));
+                        e += lam * c * ge.field[row];
+                        let frow = &ge.force[row * d..(row + 1) * d];
+                        for j in 0..d {
+                            gn[j] -= 4.0 * lam * c * frow[j];
+                        }
+                        e
+                    });
+                (es.iter().sum(), grad)
+            }
+            Method::Ssne | Method::Tsne => {
+                let (scale, e_rep) = partition_terms(lam, ge.z);
+                let mut grad = Mat::zeros(n, d);
+                let es: Vec<f64> =
+                    par_rows_with(n, d, &mut grad.data, || (), |row, gn, _| {
+                        let e_attr = attract_row_stream(ctx.method, ctx.wp, x, row, Some(gn));
+                        let frow = &ge.force[row * d..(row + 1) * d];
+                        for j in 0..d {
+                            gn[j] -= scale * frow[j];
+                        }
+                        e_attr
+                    });
+                (es.iter().sum::<f64>() + e_rep, grad)
+            }
+        }
+    }
+
+    fn energy(&self, ctx: &EngineContext<'_>, x: &Mat) -> f64 {
+        if !EngineSpec::grid_applicable(ctx.method, ctx.wm, x.cols, self.bins) {
+            return ExactEngine.energy(ctx, x);
+        }
+        let kern = Self::kern(ctx.method);
+        let built = self.cache.get_or_build(self.key(kern, x), || self.build(kern, x));
+        let GridBuild::Ready(ge) = &*built else {
+            return ExactEngine.energy(ctx, x);
+        };
+        let n = x.rows;
+        // same per-row expressions and the same serial row-order fold
+        // as eval(), so energy(x) == eval(x).0 bitwise at any X
+        match ctx.method {
+            Method::Spectral => unreachable!("grid_applicable excludes Spectral"),
+            Method::Ee => {
+                let c = Self::uniform_wm(ctx);
+                let lam = ctx.lambda;
+                let es = par_map(n, |row| {
+                    let mut e = attract_row_stream(ctx.method, ctx.wp, x, row, None);
+                    e += lam * c * ge.field[row];
+                    e
+                });
+                es.iter().sum()
+            }
+            Method::Ssne | Method::Tsne => {
+                let es = par_map(n, |row| attract_row_stream(ctx.method, ctx.wp, x, row, None));
+                es.iter().sum::<f64>() + partition_terms(ctx.lambda, ge.z).1
+            }
+        }
+    }
+}
+
+/// Lagrange basis weights of degree `p` at local coordinate `s`
+/// (node positions 0..=p): out[a] = Π_{b≠a} (s − b)/(a − b).
+fn lagrange_row(s: f64, p: usize, out: &mut [f64]) {
+    for a in 0..=p {
+        let mut num = 1.0f64;
+        let mut den = 1.0f64;
+        for b in 0..=p {
+            if b != a {
+                num *= s - b as f64;
+                den *= a as f64 - b as f64;
+            }
+        }
+        out[a] = num / den;
+    }
+}
+
+/// Separable Gaussian G2G: convolve each of the `nf` grids with
+/// e^{−r²} as d successive 1-D passes along the (contiguous) last
+/// axis, rotating axes between passes so pass k handles original axis
+/// d−1−k; after d passes the layout is restored. Each output element
+/// is an independent ordered dot product, so parallelizing over lines
+/// is bitwise deterministic for any thread count.
+fn gaussian_convolve(fields: &mut [f64], nf: usize, g: usize, d: usize, h: &[f64]) {
+    let gg = fields.len() / nf;
+    let lines = gg / g;
+    let mut tmp = vec![0.0f64; gg];
+    for pass in 0..d {
+        let hk = h[d - 1 - pass];
+        // exp(−r²) is exactly 0.0 in f64 once r² ≥ 746; capping the
+        // reach drops only terms that contribute an exact 0
+        let reach = ((746.0f64.sqrt() / hk).ceil() as usize).min(g - 1);
+        let k1: Vec<f64> = (0..g)
+            .map(|dlt| {
+                let r = dlt as f64 * hk;
+                (-(r * r)).exp()
+            })
+            .collect();
+        for f in 0..nf {
+            let chunk = &mut fields[f * gg..(f + 1) * gg];
+            let src_all: &[f64] = chunk;
+            par_rows_with(lines, g, &mut tmp, || (), |line, outb, _| {
+                let src = &src_all[line * g..(line + 1) * g];
+                for (i, ov) in outb.iter_mut().enumerate() {
+                    let j0 = i.saturating_sub(reach);
+                    let j1 = (i + reach).min(g - 1);
+                    let mut acc = 0.0;
+                    for j in j0..=j1 {
+                        acc += k1[i.abs_diff(j)] * src[j];
+                    }
+                    *ov = acc;
+                }
+            });
+            // rotate the last axis to the front: transpose (lines, g)
+            for r in 0..lines {
+                for c in 0..g {
+                    chunk[c * lines + r] = tmp[r * g + c];
+                }
+            }
+        }
+    }
+}
+
+/// Student G2G: 1/(1+r²) does not factorize, so convolve through the
+/// convolution theorem on a lattice zero-padded to a power of two
+/// ≥ 2g−1 per axis. Returns [mass∗K, mass∗K², mom_1∗K², .., mom_d∗K²]
+/// (Z needs K, forces need K²). Fully serial — the FFTs cost
+/// O(P^d log P), far below the O(N) passes at the sizes the node cap
+/// admits — hence trivially deterministic.
+fn student_convolve(charges: &[f64], nf: usize, g: usize, d: usize, h: &[f64]) -> Vec<f64> {
+    let gg = charges.len() / nf;
+    let pad = (2 * g - 1).next_power_of_two();
+    let pg = pad.pow(d as u32);
+    let mut dims = vec![pad; d];
+
+    // kernel tensors K and K² at wrapped signed node offsets
+    let mut k1re = vec![0.0f64; pg];
+    let mut k2re = vec![0.0f64; pg];
+    let lim = g as isize - 1;
+    match d {
+        1 => {
+            for di in -lim..=lim {
+                let wi = di.rem_euclid(pad as isize) as usize;
+                let r2 = (di as f64 * h[0]).powi(2);
+                let k = 1.0 / (1.0 + r2);
+                k1re[wi] = k;
+                k2re[wi] = k * k;
+            }
+        }
+        2 => {
+            for di in -lim..=lim {
+                let wi = di.rem_euclid(pad as isize) as usize;
+                let ri = (di as f64 * h[0]).powi(2);
+                for dj in -lim..=lim {
+                    let wj = dj.rem_euclid(pad as isize) as usize;
+                    let k = 1.0 / (1.0 + ri + (dj as f64 * h[1]).powi(2));
+                    let idx = wi * pad + wj;
+                    k1re[idx] = k;
+                    k2re[idx] = k * k;
+                }
+            }
+        }
+        3 => {
+            for di in -lim..=lim {
+                let wi = di.rem_euclid(pad as isize) as usize;
+                let ri = (di as f64 * h[0]).powi(2);
+                for dj in -lim..=lim {
+                    let wj = dj.rem_euclid(pad as isize) as usize;
+                    let rij = ri + (dj as f64 * h[1]).powi(2);
+                    for dk in -lim..=lim {
+                        let wk = dk.rem_euclid(pad as isize) as usize;
+                        let k = 1.0 / (1.0 + rij + (dk as f64 * h[2]).powi(2));
+                        let idx = (wi * pad + wj) * pad + wk;
+                        k1re[idx] = k;
+                        k2re[idx] = k * k;
+                    }
+                }
+            }
+        }
+        _ => unreachable!("grid_applicable caps d at 3"),
+    }
+    let mut k1im = vec![0.0f64; pg];
+    let mut k2im = vec![0.0f64; pg];
+    fftnd(&mut k1re, &mut k1im, &mut dims, false);
+    fftnd(&mut k2re, &mut k2im, &mut dims, false);
+
+    let mut out = vec![0.0f64; (nf + 1) * gg];
+    let mut conv_one = |src: &[f64], kre: &[f64], kim: &[f64], dst: &mut [f64]| {
+        let mut re = vec![0.0f64; pg];
+        let mut im = vec![0.0f64; pg];
+        embed_padded(src, &mut re, g, pad, d);
+        fftnd(&mut re, &mut im, &mut dims, false);
+        pointwise_mul(&mut re, &mut im, kre, kim);
+        fftnd(&mut re, &mut im, &mut dims, true);
+        extract_padded(&re, dst, g, pad, d);
+    };
+    let (head, tail) = out.split_at_mut(gg);
+    conv_one(&charges[0..gg], &k1re, &k1im, head);
+    for f in 0..nf {
+        conv_one(
+            &charges[f * gg..(f + 1) * gg],
+            &k2re,
+            &k2im,
+            &mut tail[f * gg..(f + 1) * gg],
+        );
+    }
+    out
+}
+
+/// Copy a g^d grid into the low corner of a pad^d zeroed lattice.
+fn embed_padded(src: &[f64], dst: &mut [f64], g: usize, pad: usize, d: usize) {
+    match d {
+        1 => dst[..g].copy_from_slice(src),
+        2 => {
+            for i in 0..g {
+                dst[i * pad..i * pad + g].copy_from_slice(&src[i * g..(i + 1) * g]);
+            }
+        }
+        3 => {
+            for i in 0..g {
+                for j in 0..g {
+                    let po = (i * pad + j) * pad;
+                    let so = (i * g + j) * g;
+                    dst[po..po + g].copy_from_slice(&src[so..so + g]);
+                }
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// Inverse of [`embed_padded`]: read the low corner back out.
+fn extract_padded(src: &[f64], dst: &mut [f64], g: usize, pad: usize, d: usize) {
+    match d {
+        1 => dst.copy_from_slice(&src[..g]),
+        2 => {
+            for i in 0..g {
+                dst[i * g..(i + 1) * g].copy_from_slice(&src[i * pad..i * pad + g]);
+            }
+        }
+        3 => {
+            for i in 0..g {
+                for j in 0..g {
+                    let po = (i * pad + j) * pad;
+                    let so = (i * g + j) * g;
+                    dst[so..so + g].copy_from_slice(&src[po..po + g]);
+                }
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::Attractive;
+
+    /// Deterministic point cloud spread over roughly [-3, 3]^d.
+    fn cloud(n: usize, d: usize, seed: u64) -> Mat {
+        let mut s = seed;
+        Mat::from_fn(n, d, |_, _| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (((s >> 33) as f64 / (1u64 << 31) as f64) - 1.0) * 3.0
+        })
+    }
+
+    /// Symmetric dense kNN-ish attraction: neighbors within a window.
+    fn dense_wp(n: usize) -> Attractive {
+        Attractive::Dense(Mat::from_fn(n, n, |i, j| {
+            if i != j && i.abs_diff(j) <= 3 {
+                0.5
+            } else {
+                0.0
+            }
+        }))
+    }
+
+    fn ctx<'a>(
+        method: Method,
+        wp: &'a Attractive,
+        wm: &'a Repulsive,
+        lambda: f64,
+        dim: usize,
+    ) -> EngineContext<'a> {
+        EngineContext { method, wp, wm, lambda, dim }
+    }
+
+    #[test]
+    fn lagrange_weights_reproduce_polynomials() {
+        // degree-p interpolation is exact on monomials up to degree p:
+        // Σ L_a(s)·a^q == s^q for q ≤ p, at any s in the window
+        for p in [1usize, 2, 3, 5] {
+            let mut w = vec![0.0; p + 1];
+            for &s in &[0.0, 0.37, 1.0, 1.62, p as f64 - 0.25, p as f64] {
+                lagrange_row(s, p, &mut w);
+                for q in 0..=p {
+                    let interp: f64 =
+                        w.iter().enumerate().map(|(a, &wa)| wa * (a as f64).powi(q as i32)).sum();
+                    assert!(
+                        (interp - s.powi(q as i32)).abs() < 1e-9,
+                        "p={p} s={s} q={q}: {interp}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matches_exact_on_small_problems_every_method() {
+        let wm = Repulsive::Uniform(1.0);
+        for d in [1usize, 2, 3] {
+            let n = 80;
+            let x = cloud(n, d, 17 + d as u64);
+            let wp = dense_wp(n);
+            // g^3 nodes get expensive in debug builds; 32/axis still
+            // leaves h ≈ 0.2 ≪ the unit kernel width
+            let bins = if d == 3 { 32 } else { 64 };
+            for method in [Method::Ee, Method::Ssne, Method::Tsne] {
+                let lambda = if method == Method::Ee { 50.0 } else { 1.0 };
+                let c = ctx(method, &wp, &wm, lambda, d);
+                let (e_ref, g_ref) = ExactEngine.eval(&c, &x);
+                let engine = GridInterpEngine::new(bins, 3);
+                let (e, g) = engine.eval(&c, &x);
+                let eerr = ((e - e_ref) / e_ref.abs().max(1e-300)).abs();
+                let gerr = g.rel_fro_err(&g_ref);
+                assert!(eerr < 1e-2, "{} d={d}: energy err {eerr}", method.name());
+                assert!(gerr < 1e-2, "{} d={d}: grad err {gerr}", method.name());
+                // energy() must agree with eval().0 bitwise (shared
+                // build + identical fold order)
+                assert_eq!(engine.energy(&c, &x).to_bits(), e.to_bits(), "{}", method.name());
+            }
+        }
+    }
+
+    #[test]
+    fn error_shrinks_with_bins_and_order() {
+        let n = 120;
+        let d = 2;
+        let x = cloud(n, d, 5);
+        let wp = dense_wp(n);
+        let wm = Repulsive::Uniform(1.0);
+        let c = ctx(Method::Tsne, &wp, &wm, 1.0, d);
+        let (_, g_ref) = ExactEngine.eval(&c, &x);
+        let err = |bins: usize, order: usize| {
+            GridInterpEngine::new(bins, order).eval(&c, &x).1.rel_fro_err(&g_ref)
+        };
+        let coarse = err(16, 1);
+        let fine = err(128, 3);
+        assert!(
+            fine < coarse && fine < 1e-3,
+            "refinement must help: coarse {coarse}, fine {fine}"
+        );
+    }
+
+    #[test]
+    fn cache_shares_one_build_between_eval_and_energy() {
+        let n = 60;
+        let x = cloud(n, 2, 9);
+        let wp = dense_wp(n);
+        let wm = Repulsive::Uniform(1.0);
+        let c = ctx(Method::Ssne, &wp, &wm, 1.0, 2);
+        let engine = GridInterpEngine::new(32, 3);
+        // line-search pattern: probe energies at trial points, then
+        // eval at the accepted one — the accepted X is built once
+        let e0 = engine.energy(&c, &x);
+        assert_eq!(engine.cache_builds(), 1);
+        let (e1, _) = engine.eval(&c, &x);
+        assert_eq!(engine.cache_builds(), 1, "eval after energy at the same X must hit");
+        assert_eq!(e0.to_bits(), e1.to_bits());
+        // a one-ulp nudge anywhere misses (exact-bits key: never stale)
+        let mut x2 = x.clone();
+        x2.data[0] += 1e-13;
+        engine.energy(&c, &x2);
+        assert_eq!(engine.cache_builds(), 2);
+        // t-SNE uses the Student build: a different kernel at the same
+        // X is a different key, not a stale hit
+        let ct = ctx(Method::Tsne, &wp, &wm, 1.0, 2);
+        engine.energy(&ct, &x);
+        assert_eq!(engine.cache_builds(), 3);
+        // s-SNE and EE share the Gaussian build verbatim
+        let ce = ctx(Method::Ee, &wp, &wm, 50.0, 2);
+        engine.eval(&ce, &x);
+        assert_eq!(engine.cache_builds(), 3, "EE reuses the s-SNE Gaussian artifact");
+    }
+
+    #[test]
+    fn degenerate_bbox_falls_back_to_exact_bitwise() {
+        let wp = dense_wp(12);
+        let wm = Repulsive::Uniform(1.0);
+        // all-identical points: zero extent on every axis
+        let same = Mat::from_fn(12, 2, |_, _| 1.5);
+        // distinct points on a horizontal line: zero extent on axis 1
+        let line = Mat::from_fn(12, 2, |i, j| if j == 0 { i as f64 } else { 2.0 });
+        // a single non-finite coordinate
+        let mut nan = cloud(12, 2, 3);
+        nan.data[5] = f64::NAN;
+        for (label, x) in [("identical", &same), ("zero-extent axis", &line), ("nan", &nan)] {
+            for method in [Method::Ee, Method::Ssne, Method::Tsne] {
+                let c = ctx(method, &wp, &wm, 1.0, 2);
+                let engine = GridInterpEngine::new(64, 3);
+                let (e, g) = engine.eval(&c, x);
+                let (e_ref, g_ref) = ExactEngine.eval(&c, x);
+                assert_eq!(
+                    e.to_bits(),
+                    e_ref.to_bits(),
+                    "{label}/{}: degenerate eval must delegate to exact",
+                    method.name()
+                );
+                assert_eq!(g.max_abs_diff(&g_ref), 0.0, "{label}/{}", method.name());
+                assert_eq!(
+                    engine.energy(&c, x).to_bits(),
+                    ExactEngine.energy(&c, x).to_bits(),
+                    "{label}/{}",
+                    method.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn separable_and_fft_paths_agree_on_a_shared_kernel_shape() {
+        // cross-check the two G2G implementations against a brute-force
+        // O(G²) node-to-node sum, Gaussian via the separable path and
+        // Student via the FFT path, on one small 2-D charge set
+        let g = 8usize;
+        let gg = g * g;
+        let h = [0.4f64, 0.7];
+        let mut charges = vec![0.0f64; gg];
+        let mut s = 99u64;
+        for c in charges.iter_mut() {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            *c = ((s >> 33) as f64 / (1u64 << 31) as f64) - 1.0;
+        }
+        let brute = |kernel: &dyn Fn(f64) -> f64| -> Vec<f64> {
+            let mut out = vec![0.0f64; gg];
+            for i0 in 0..g {
+                for i1 in 0..g {
+                    let mut acc = 0.0;
+                    for j0 in 0..g {
+                        for j1 in 0..g {
+                            let r2 = ((i0 as f64 - j0 as f64) * h[0]).powi(2)
+                                + ((i1 as f64 - j1 as f64) * h[1]).powi(2);
+                            acc += kernel(r2) * charges[j0 * g + j1];
+                        }
+                    }
+                    out[i0 * g + i1] = acc;
+                }
+            }
+            out
+        };
+        let mut gauss = charges.clone();
+        gaussian_convolve(&mut gauss, 1, g, 2, &h);
+        let gauss_ref = brute(&|r2| (-r2).exp());
+        for k in 0..gg {
+            assert!((gauss[k] - gauss_ref[k]).abs() < 1e-12, "gauss node {k}");
+        }
+        let student = student_convolve(&charges, 1, g, 2, &h);
+        let student_ref = brute(&|r2| 1.0 / (1.0 + r2));
+        let student2_ref = brute(&|r2| (1.0 / (1.0 + r2)).powi(2));
+        for k in 0..gg {
+            assert!((student[k] - student_ref[k]).abs() < 1e-10, "student K node {k}");
+            assert!((student[gg + k] - student2_ref[k]).abs() < 1e-10, "student K² node {k}");
+        }
+    }
+}

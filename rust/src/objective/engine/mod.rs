@@ -3,7 +3,7 @@
 //!
 //! The objective layer (weights, method, λ — [`crate::objective`]) is
 //! separated from the *evaluation strategy*: a [`GradientEngine`] maps
-//! `(weights, method, λ, X)` to `(E, ∇E)`. Three engines ship today:
+//! `(weights, method, λ, X)` to `(E, ∇E)`. Four engines ship today:
 //!
 //! * [`exact::ExactEngine`] — the fused O(N²d) row sweeps (one squared
 //!   distance per pair serves both energy terms), the reference
@@ -19,18 +19,29 @@
 //!   sampled negatives per row with a counter-keyed RNG
 //!   (thread-count-deterministic, checkpoint-reproducible). Opt-in
 //!   (`--engine neg:k`); Auto keeps selecting Barnes–Hut.
+//! * [`gridinterp::GridInterpEngine`] — O(nnz(W+) + N + G) per
+//!   evaluation: exact attraction, repulsion interpolated from kernel
+//!   sums on a regular grid of G = bins^d nodes (FIt-SNE/FUnc-SNE
+//!   lineage) with *deterministic* h^(order+1) error, bitwise
+//!   reproducible for any `NLE_THREADS`, and a per-X eval cache so a
+//!   line search's energy(x) and the following eval(x) share one grid
+//!   build. Opt-in (`--engine grid:g[,p]`).
 //!
-//! Future engines (interpolation grids, GPU backends) plug into the
+//! Future engines (GPU backends, minibatch attraction) plug into the
 //! same seam. Selection is explicit
 //! ([`NativeObjective::with_engine`](crate::objective::native::NativeObjective::with_engine))
 //! or automatic by problem size ([`EngineSpec::Auto`]).
 
 pub mod barneshut;
+pub mod evalcache;
 pub mod exact;
+pub mod gridinterp;
 pub mod negsample;
 
 pub use barneshut::BarnesHutEngine;
+pub use evalcache::EvalCache;
 pub use exact::ExactEngine;
+pub use gridinterp::GridInterpEngine;
 pub use negsample::NegativeSamplingEngine;
 
 use super::{Attractive, Method, Repulsive};
@@ -85,6 +96,25 @@ pub const DEFAULT_NEG_K: usize = 64;
 /// Default sampler seed for `--engine neg:k` without an explicit seed.
 pub const DEFAULT_NEG_SEED: u64 = 0;
 
+/// Default grid resolution per axis for `--engine grid` (the FIt-SNE
+/// operating point for 2-D embeddings: fine enough that the cell width
+/// stays well under the unit kernel length on converged layouts).
+pub const DEFAULT_GRID_BINS: usize = 128;
+
+/// Default Lagrange interpolation degree for the grid engine (cubic —
+/// h⁴ error, the FIt-SNE choice).
+pub const DEFAULT_GRID_ORDER: usize = 3;
+
+/// Highest accepted interpolation degree: equispaced Lagrange bases
+/// oscillate (Runge) beyond this, so larger p buys error, not accuracy.
+pub const MAX_GRID_ORDER: usize = 9;
+
+/// Node-count cap bins^d above which the grid engine resolves to
+/// exact: bounds both the node arrays and the Student path's
+/// zero-padded FFT lattice (2^d × nodes, complex). 2^21 admits
+/// bins = 128 at d = 3 and effectively any bins at d ≤ 2.
+pub const MAX_GRID_NODES: usize = 1 << 21;
+
 /// Engine selection, resolvable from config/CLI strings.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub enum EngineSpec {
@@ -101,11 +131,18 @@ pub enum EngineSpec {
     /// row and a fixed sampler seed. Opt-in only — Auto never selects
     /// it, since its gradients are estimates.
     NegSample { k: usize, seed: u64 },
+    /// Grid-interpolated repulsion (FIt-SNE/FUnc-SNE lineage): kernel
+    /// sums at `bins` nodes per axis, per-point values by
+    /// `order`-degree Lagrange interpolation — O(N + G) with
+    /// deterministic error. Opt-in (`--engine grid:g[,p]`); Auto keeps
+    /// selecting Barnes–Hut.
+    GridInterp { bins: usize, order: usize },
 }
 
 impl EngineSpec {
     /// Parse `"auto" | "exact" | "bh" | "barnes-hut" | "bh:<theta>" |
-    /// "neg" | "neg:<k>" | "neg:<k>,<seed>"`.
+    /// "neg" | "neg:<k>" | "neg:<k>,<seed>" | "grid" | "grid:<g>" |
+    /// "grid:<g>,<p>"`.
     pub fn parse(s: &str) -> Option<EngineSpec> {
         match s {
             "auto" => Some(EngineSpec::Auto),
@@ -115,6 +152,9 @@ impl EngineSpec {
             }
             "neg" | "negsample" | "neg-sample" => {
                 Some(EngineSpec::NegSample { k: DEFAULT_NEG_K, seed: DEFAULT_NEG_SEED })
+            }
+            "grid" | "gridinterp" | "grid-interp" => {
+                Some(EngineSpec::GridInterp { bins: DEFAULT_GRID_BINS, order: DEFAULT_GRID_ORDER })
             }
             _ => {
                 if let Some(rest) = s.strip_prefix("neg:") {
@@ -128,6 +168,24 @@ impl EngineSpec {
                         None => DEFAULT_NEG_SEED,
                     };
                     return Some(EngineSpec::NegSample { k, seed });
+                }
+                if let Some(rest) = s.strip_prefix("grid:") {
+                    let (gs, ps) = match rest.split_once(',') {
+                        Some((a, b)) => (a, Some(b)),
+                        None => (rest, None),
+                    };
+                    let bins = gs.parse::<usize>().ok().filter(|&g| g >= 2)?;
+                    let order = match ps {
+                        Some(b) => {
+                            b.parse::<usize>().ok().filter(|&p| (1..=MAX_GRID_ORDER).contains(&p))?
+                        }
+                        None => DEFAULT_GRID_ORDER,
+                    };
+                    // the interpolation window needs order+1 distinct nodes
+                    if bins < order + 1 {
+                        return None;
+                    }
+                    return Some(EngineSpec::GridInterp { bins, order });
                 }
                 s.strip_prefix("bh:")
                     .and_then(|t| t.parse::<f64>().ok())
@@ -143,6 +201,7 @@ impl EngineSpec {
             EngineSpec::Exact => "exact",
             EngineSpec::BarnesHut { .. } => "bh",
             EngineSpec::NegSample { .. } => "neg",
+            EngineSpec::GridInterp { .. } => "grid",
         }
     }
 
@@ -172,6 +231,22 @@ impl EngineSpec {
         }
     }
 
+    /// Can the grid engine serve this configuration? Like the tree it
+    /// needs a low-dimensional embedding (the node count is bins^d,
+    /// capped at [`MAX_GRID_NODES`] to bound the Student path's padded
+    /// FFT lattice); like negative sampling it needs an aggregatable
+    /// repulsion — Spectral has none to interpolate, and EE's W⁻ must
+    /// be uniform. Inapplicable configs resolve to exact at build time.
+    pub fn grid_applicable(method: Method, wm: &Repulsive, dim: usize, bins: usize) -> bool {
+        (1..=3).contains(&dim)
+            && bins.saturating_pow(dim as u32) <= MAX_GRID_NODES
+            && match method {
+                Method::Spectral => false,
+                Method::Ee => matches!(wm, Repulsive::Uniform(_)),
+                Method::Ssne | Method::Tsne => true,
+            }
+    }
+
     /// Resolve into a concrete engine for the given weights.
     pub fn build(
         self,
@@ -193,6 +268,12 @@ impl EngineSpec {
                 Box::new(NegativeSamplingEngine::new(k, seed))
             }
             EngineSpec::NegSample { .. } => Box::new(ExactEngine),
+            EngineSpec::GridInterp { bins, order }
+                if Self::grid_applicable(method, wm, dim, bins) =>
+            {
+                Box::new(GridInterpEngine::new(bins, order))
+            }
+            EngineSpec::GridInterp { .. } => Box::new(ExactEngine),
             EngineSpec::Auto => {
                 // BH pays off when the attraction is sparse (dense W⁺
                 // keeps the evaluation O(N²) regardless) and the
@@ -300,6 +381,24 @@ mod tests {
         assert_eq!(EngineSpec::parse("neg:0"), None, "k = 0 cannot estimate anything");
         assert_eq!(EngineSpec::parse("neg:x"), None);
         assert_eq!(EngineSpec::parse("neg:8,"), None);
+        assert_eq!(
+            EngineSpec::parse("grid"),
+            Some(EngineSpec::GridInterp { bins: DEFAULT_GRID_BINS, order: DEFAULT_GRID_ORDER })
+        );
+        assert_eq!(
+            EngineSpec::parse("grid:64"),
+            Some(EngineSpec::GridInterp { bins: 64, order: DEFAULT_GRID_ORDER })
+        );
+        assert_eq!(
+            EngineSpec::parse("grid:256,5"),
+            Some(EngineSpec::GridInterp { bins: 256, order: 5 })
+        );
+        assert_eq!(EngineSpec::parse("grid:1"), None, "two nodes minimum");
+        assert_eq!(EngineSpec::parse("grid:64,0"), None, "constant interpolation is useless");
+        assert_eq!(EngineSpec::parse("grid:64,12"), None, "Runge territory");
+        assert_eq!(EngineSpec::parse("grid:3,3"), None, "window needs order+1 nodes");
+        assert_eq!(EngineSpec::parse("grid:x"), None);
+        assert_eq!(EngineSpec::parse("grid:64,"), None);
     }
 
     #[test]
@@ -339,5 +438,24 @@ mod tests {
         assert_eq!(e.name(), "exact");
         assert!(!EngineSpec::neg_applicable(Method::Ee, &Repulsive::Dense(Mat::zeros(4, 4))));
         assert!(EngineSpec::neg_applicable(Method::Ssne, &Repulsive::Dense(Mat::zeros(4, 4))));
+        // grid is opt-in like neg: an explicit request works at any N
+        let e = EngineSpec::GridInterp { bins: 32, order: 3 }.build(Method::Tsne, &small, &wm, 2);
+        assert_eq!(e.name(), "grid-interp");
+        // but Spectral (no repulsion), dense W⁻ under EE, d > 3, and
+        // node counts past the cap all resolve to exact at build time
+        let e =
+            EngineSpec::GridInterp { bins: 32, order: 3 }.build(Method::Spectral, &small, &wm, 2);
+        assert_eq!(e.name(), "exact");
+        assert!(!EngineSpec::grid_applicable(
+            Method::Ee,
+            &Repulsive::Dense(Mat::zeros(4, 4)),
+            2,
+            32
+        ));
+        assert!(!EngineSpec::grid_applicable(Method::Tsne, &wm, 5, 32));
+        assert!(EngineSpec::grid_applicable(Method::Tsne, &wm, 3, 128));
+        assert!(!EngineSpec::grid_applicable(Method::Tsne, &wm, 3, 256), "256³ > node cap");
+        let e = EngineSpec::GridInterp { bins: 256, order: 3 }.build(Method::Tsne, &small, &wm, 3);
+        assert_eq!(e.name(), "exact");
     }
 }

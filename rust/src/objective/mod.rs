@@ -4,7 +4,9 @@
 //! Two interchangeable backends implement [`Objective`]:
 //! * [`native`] — pure rust, O(Nd) memory, rayon-parallel; arbitrary N.
 //!   Evaluation is delegated to a pluggable [`engine`]: the exact
-//!   O(N²d) sweeps or the O(N log N + nnz) Barnes–Hut engine.
+//!   O(N²d) sweeps, the O(N log N + nnz) Barnes–Hut engine, the
+//!   stochastic negative-sampling engine, or the deterministic
+//!   grid-interpolation engine.
 //! * [`xla`] — the three-layer hot path: AOT-compiled jax/Pallas
 //!   artifacts executed through PJRT (see `crate::runtime`).
 //! Cross-backend parity is enforced in rust/tests/integration_runtime.rs;

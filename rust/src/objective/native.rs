@@ -5,9 +5,10 @@
 //! energy/gradient evaluation to a pluggable
 //! [`GradientEngine`](crate::objective::engine::GradientEngine) —
 //! the exact O(N²d) row sweeps ([`engine::exact`]), the
-//! O(N log N + nnz) Barnes–Hut engine ([`engine::barneshut`]), or the
+//! O(N log N + nnz) Barnes–Hut engine ([`engine::barneshut`]), the
 //! stochastic O(nnz + Nk) negative-sampling engine
-//! ([`engine::negsample`]). The
+//! ([`engine::negsample`]), or the deterministic O(nnz + N + G)
+//! grid-interpolation engine ([`engine::gridinterp`]). The
 //! default ([`EngineSpec::Auto`]) picks Barnes–Hut for large
 //! kNN-sparse problems in d ≤ 3 and the exact engine everywhere else,
 //! so small-N behavior is bit-identical to the pre-refactor code.
