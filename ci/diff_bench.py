@@ -1,17 +1,42 @@
 #!/usr/bin/env python3
-"""Report-only diff of fresh BENCH_*.json results against the committed
-baselines under results/baselines/.
+"""Diff fresh BENCH_*.json results against the committed baselines
+under results/baselines/.
 
-Prints every numeric field that moved, as a relative delta. Never fails
-the build: CI runners are noisy shared machines, so perf deltas are for
-humans to read in the job log and judge on trend, not a gate. Refresh
-the committed numbers with `ci/perf_smoke.sh --baseline` (see
-results/baselines/README.md).
+Default mode is report-only: prints every numeric field that moved, as
+a relative delta, and never fails the build — CI runners are noisy
+shared machines, so perf deltas are for humans to read in the job log
+and judge on trend.
+
+With --max-regress <pct> the diff becomes a gate: any *direction-aware*
+metric that regresses by more than <pct> percent fails the run (exit
+1). Direction is inferred from the field name — wall-clock-ish fields
+(`*_s`, `*_ms`, `*time*`, `*latency*`, `p50`/`p99`) must not grow,
+throughput-ish fields (`*rps*`, `*per_sec*`, `*recall*`, `*speedup*`)
+must not shrink; everything else stays report-only (iteration counts
+and energies move for legitimate reasons). An empty results/baselines/
+is a silent pass either way, so the gate is safe to wire in before any
+baseline is committed. Refresh the committed numbers with
+`ci/perf_smoke.sh --baseline` (see results/baselines/README.md).
 """
 
 import json
 import pathlib
 import sys
+
+LOWER_IS_BETTER = ("_s", "_ms", "_secs", "_seconds")
+LOWER_SUBSTRINGS = ("time", "latency", "p50", "p99")
+HIGHER_SUBSTRINGS = ("rps", "per_sec", "recall", "speedup")
+
+
+def direction(path):
+    """-1 if the metric should not grow, +1 if it should not shrink,
+    0 if it carries no perf direction (report-only)."""
+    leaf = path.rsplit(".", 1)[-1].split("[")[0]
+    if leaf.endswith(LOWER_IS_BETTER) or any(s in leaf for s in LOWER_SUBSTRINGS):
+        return -1
+    if any(s in leaf for s in HIGHER_SUBSTRINGS):
+        return +1
+    return 0
 
 
 def numbers(prefix, obj, out):
@@ -27,6 +52,21 @@ def numbers(prefix, obj, out):
 
 
 def main():
+    max_regress = None
+    argv = sys.argv[1:]
+    if argv and argv[0] == "--max-regress":
+        if len(argv) < 2:
+            print("diff_bench: --max-regress needs a percentage", file=sys.stderr)
+            return 2
+        try:
+            max_regress = float(argv[1])
+        except ValueError:
+            print(f"diff_bench: bad --max-regress value {argv[1]!r}", file=sys.stderr)
+            return 2
+        if max_regress <= 0:
+            print("diff_bench: --max-regress must be positive", file=sys.stderr)
+            return 2
+
     root = pathlib.Path(__file__).resolve().parent.parent
     fresh_dir = root / "results"
     base_dir = fresh_dir / "baselines"
@@ -36,6 +76,7 @@ def main():
         print("            (capture some with: ci/perf_smoke.sh --baseline)")
         return 0
 
+    breaches = []
     for base in baselines:
         fresh = fresh_dir / base.name
         print(f"== {base.name} (fresh vs committed baseline) ==")
@@ -53,7 +94,13 @@ def main():
             elif new[key] != old[key]:
                 if old[key] != 0:
                     rel = 100.0 * (new[key] - old[key]) / abs(old[key])
-                    print(f"  {key}: {old[key]:g} -> {new[key]:g} ({rel:+.1f}%)")
+                    sign = direction(key)
+                    gated = max_regress is not None and sign != 0
+                    worse = sign * rel < -max_regress if gated else False
+                    tag = " REGRESSION" if worse else ""
+                    print(f"  {key}: {old[key]:g} -> {new[key]:g} ({rel:+.1f}%){tag}")
+                    if worse:
+                        breaches.append(f"{base.name}:{key} ({rel:+.1f}%)")
                 else:
                     print(f"  {key}: {old[key]:g} -> {new[key]:g}")
                 moved += 1
@@ -63,7 +110,15 @@ def main():
         if moved == 0:
             print("  identical")
 
-    print("diff_bench: report only — baselines never gate the build")
+    if max_regress is None:
+        print("diff_bench: report only — baselines never gate the build")
+        return 0
+    if breaches:
+        print(f"diff_bench: {len(breaches)} metric(s) regressed past {max_regress:g}%:")
+        for b in breaches:
+            print(f"  {b}")
+        return 1
+    print(f"diff_bench: gate passed — no directional metric regressed past {max_regress:g}%")
     return 0
 
 

@@ -2,9 +2,11 @@
 # Perf smoke: the per-commit performance trajectory, runnable locally
 # and by the CI perf-smoke job (which uploads results/ as artifacts).
 #
-# Runs the scal / ann / init / serve harnesses plus the
+# Runs the scal / ann / init / multigrid / serve harnesses plus the
 # checkpoint -> kill -> resume equivalence assertion, writing CSVs and
-# machine-readable BENCH_*.json under results/.
+# machine-readable BENCH_*.json under results/. With PERF_GATE=<pct>
+# set, finishes by running ci/diff_bench.py --max-regress <pct>
+# against the committed baselines (report-only otherwise).
 #
 # Usage: ci/perf_smoke.sh [--full] [--baseline] [--skip-build]
 #   --full       acceptance-scale runs (the EXPERIMENTS.md baseline
@@ -39,12 +41,14 @@ if [ "$FULL" = 1 ]; then
   SCAL_SIZES=4096,16384,65536 SCAL_REPS=3 SD_ITERS=5
   ANN_SIZES=2000,5000,10000,20000
   INIT_N=16384 INIT_ITERS=200
+  MG_N=65536 MG_ITERS=100
   SERVE_N=4096 SERVE_BATCHES=1,16,256,1024 SERVE_ITERS=30 SERVE_REPS=3
   DL_N=4096 DL_ITERS=30 DL_CLIENTS=8 DL_REQUESTS=40
 else
   SCAL_SIZES=1024,2048 SCAL_REPS=1 SD_ITERS=2
   ANN_SIZES=1024,2048
   INIT_N=2048 INIT_ITERS=60
+  MG_N=2048 MG_ITERS=60
   SERVE_N=2048 SERVE_BATCHES=1,64,512 SERVE_ITERS=10 SERVE_REPS=2
   DL_N=1024 DL_ITERS=10 DL_CLIENTS=6 DL_REQUESTS=25
 fi
@@ -64,6 +68,13 @@ echo "== ann =="
 echo "== init =="
 "$NLE" init --n "$INIT_N" --inits random,spectral:rsvd,spectral:lanczos \
   --max-iters "$INIT_ITERS"
+
+# coarse-to-fine over the HNSW hierarchy vs flat training on the same
+# problem; --require-bar makes the run itself assert the staged path
+# reaches the flat run's quality bar (or matches its kNN recall)
+# -> results/multigrid.csv + BENCH_multigrid.json
+echo "== multigrid =="
+"$NLE" multigrid --n "$MG_N" --max-iters "$MG_ITERS" --require-bar
 
 echo "== serve =="
 "$NLE" serve --n "$SERVE_N" --batches "$SERVE_BATCHES" \
@@ -109,6 +120,16 @@ if [ "$BASELINE" = 1 ]; then
   mkdir -p results/baselines
   cp results/BENCH_*.json results/baselines/
   echo "baselines refreshed under results/baselines/ — review and commit"
+fi
+
+# perf trajectory vs the committed baselines: report-only by default,
+# a hard gate when PERF_GATE=<max regression pct> is set (silent pass
+# while results/baselines/ is empty either way)
+echo "== diff vs baselines =="
+if [ -n "${PERF_GATE:-}" ]; then
+  python3 ci/diff_bench.py --max-regress "$PERF_GATE"
+else
+  python3 ci/diff_bench.py
 fi
 
 echo "perf smoke OK"

@@ -4,6 +4,7 @@
 
 pub mod entropic;
 pub mod knn;
+pub mod restrict;
 pub mod sparsify;
 
 pub use entropic::{
@@ -11,4 +12,5 @@ pub use entropic::{
     sne_affinities_sparse, sne_affinities_sparse_with,
 };
 pub use knn::{knn, knn_with, KnnGraph};
+pub use restrict::restrict_knn_graph;
 pub use sparsify::{sparsify_from_graph, sparsify_weights};

@@ -1,0 +1,156 @@
+//! Restriction of a kNN graph to a landmark subset — the affinity side
+//! of coarse-to-fine multigrid training ([`crate::opt::multigrid`]).
+//!
+//! The coarse stage trains only the HNSW upper-layer landmarks, so the
+//! shared full-N kNN graph must be cut down to them. Surviving in-subset
+//! edges are kept and remapped; but with a landmark fraction of ~1/m and
+//! row degree k, the expected surviving degree is only ~k/m, so rows
+//! that end up too sparse are rebuilt by an exact nearest-landmark scan
+//! over the subset coordinates. Entropy recalibration then happens on
+//! the restricted graph exactly as at full N
+//! ([`crate::affinity::sne_affinities_from_graph`] — the per-row
+//! perplexity clamp in `calibrate` handles short rows).
+
+use super::knn::KnnGraph;
+use crate::linalg::dense::Mat;
+use crate::linalg::vecops::sqdist;
+use crate::par::par_map;
+
+/// Restrict `g` to the nodes in `subset` (ascending, unique, original
+/// ids), remapping neighbor ids to subset positions `0..L`.
+///
+/// Rows whose surviving in-subset degree falls below `min_degree` are
+/// rebuilt exactly: an O(L·D) scan over `sub_y` (the subset rows of the
+/// original data, in subset order) replaces the row with its
+/// `min(g.k, L-1)` nearest landmarks. The result's `k` is the maximum
+/// row degree, as [`sne_affinities_from_graph`] expects.
+///
+/// # Panics
+/// If `subset` is empty, not strictly ascending, out of bounds, or
+/// `sub_y` has a row count other than `subset.len()`.
+pub fn restrict_knn_graph(
+    g: &KnnGraph,
+    subset: &[u32],
+    sub_y: &Mat,
+    min_degree: usize,
+) -> KnnGraph {
+    let n = g.neighbors.len();
+    let l = subset.len();
+    assert!(l > 1, "landmark subset needs at least 2 points");
+    assert!(
+        subset.windows(2).all(|w| w[0] < w[1]),
+        "landmark subset must be strictly ascending"
+    );
+    assert!((subset[l - 1] as usize) < n, "landmark id out of bounds");
+    assert_eq!(sub_y.rows, l, "sub_y rows must match the subset");
+
+    // old id -> subset position, usize::MAX for non-landmarks
+    let mut pos = vec![usize::MAX; n];
+    for (li, &i) in subset.iter().enumerate() {
+        pos[i as usize] = li;
+    }
+
+    let row_cap = g.k.min(l - 1);
+    let min_degree = min_degree.min(row_cap);
+    let neighbors = par_map(l, |li| {
+        let old = subset[li] as usize;
+        let mut row: Vec<(usize, f64)> = g.neighbors[old]
+            .iter()
+            .filter_map(|&(j, d2)| {
+                let lj = pos[j];
+                (lj != usize::MAX).then_some((lj, d2))
+            })
+            .collect();
+        if row.len() < min_degree {
+            // too few landmarks survived the cut: rebuild this row by
+            // brute force over the landmark coordinates
+            row = (0..l)
+                .filter(|&lj| lj != li)
+                .map(|lj| (lj, sqdist(sub_y.row(li), sub_y.row(lj))))
+                .collect();
+            row.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+            row.truncate(row_cap);
+        }
+        row
+    });
+    let k = neighbors.iter().map(Vec::len).max().unwrap_or(0);
+    KnnGraph { k, neighbors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::affinity::knn;
+
+    fn line(n: usize) -> Mat {
+        Mat::from_fn(n, 2, |i, j| if j == 0 { i as f64 } else { 0.0 })
+    }
+
+    fn select_rows(y: &Mat, ids: &[u32]) -> Mat {
+        Mat::from_fn(ids.len(), y.cols, |i, j| y.at(ids[i] as usize, j))
+    }
+
+    #[test]
+    fn identity_subset_is_a_remapless_copy() {
+        let y = line(12);
+        let g = knn(&y, 3);
+        let all: Vec<u32> = (0..12).collect();
+        let r = restrict_knn_graph(&g, &all, &y, 2);
+        assert_eq!(r.k, 3);
+        for i in 0..12 {
+            assert_eq!(r.neighbors[i], g.neighbors[i]);
+        }
+    }
+
+    #[test]
+    fn surviving_edges_are_remapped_with_original_distances() {
+        let y = line(20);
+        let g = knn(&y, 4);
+        // every other point: neighbors at original distance 2 survive
+        let subset: Vec<u32> = (0..20).step_by(2).map(|i| i as u32).collect();
+        let sub_y = select_rows(&y, &subset);
+        let r = restrict_knn_graph(&g, &subset, &sub_y, 1);
+        assert_eq!(r.neighbors.len(), 10);
+        for (li, row) in r.neighbors.iter().enumerate() {
+            assert!(!row.is_empty());
+            for &(lj, d2) in row {
+                assert!(lj < 10 && lj != li);
+                // remapped edge must carry the true original-space d²
+                let want = sqdist(sub_y.row(li), sub_y.row(lj));
+                assert!((d2 - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_rows_fall_back_to_exact_landmark_scan() {
+        let y = line(30);
+        let g = knn(&y, 2);
+        // every 5th point: nothing within graph distance 2 survives, so
+        // every row must be rebuilt to the exact nearest landmarks
+        let subset: Vec<u32> = (0..30).step_by(5).map(|i| i as u32).collect();
+        let sub_y = select_rows(&y, &subset);
+        let r = restrict_knn_graph(&g, &subset, &sub_y, 2);
+        for (li, row) in r.neighbors.iter().enumerate() {
+            assert_eq!(row.len(), 2, "row {li} should be rebuilt to k=2");
+            // on a line the nearest landmarks are the adjacent ones
+            let nearest = row[0].0;
+            assert!(nearest == li.wrapping_sub(1) || nearest == li + 1);
+        }
+        // restricted graph must feed the entropic calibration unchanged
+        let p = crate::affinity::sne_affinities_from_graph(&r, 2.0);
+        assert_eq!(p.rows, 6);
+        let dense = p.to_dense();
+        let total: f64 = (0..dense.rows).map(|i| dense.row(i).iter().sum::<f64>()).sum();
+        assert!((total - 1.0).abs() < 1e-9, "affinities sum to {total}");
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn rejects_unsorted_subset() {
+        let y = line(10);
+        let g = knn(&y, 2);
+        let sub_y = select_rows(&y, &[3, 1]);
+        restrict_knn_graph(&g, &[3, 1], &sub_y, 1);
+    }
+}

@@ -12,6 +12,7 @@ pub mod fig2;
 pub mod fig3;
 pub mod fig4;
 pub mod init;
+pub mod multigrid;
 pub mod rates;
 pub mod scalability;
 pub mod serve;

@@ -1,0 +1,344 @@
+//! Coarse-to-fine benchmark harness (the `multigrid` CLI command):
+//! does staged HNSW-landmark training actually reach quality faster
+//! than flat training on the same problem?
+//!
+//! The harness runs the same swiss-roll job twice — flat, then with the
+//! coarse-to-fine schedule — and scores both against one bar fixed by
+//! the flat run: with `E₀` the flat run's starting energy and `E*` its
+//! final energy, the bar is `E_thresh = E* + frac·(E₀ − E*)`. For the
+//! flat run "seconds to quality" is read off its own trace; for the
+//! staged run it is the whole coarse stage plus the transformer
+//! placement plus the refinement trace up to the bar — the coarse work
+//! is *charged*, not hidden. kNN recall of both final embeddings is
+//! recorded as the secondary quality check.
+//!
+//! Output: `results/multigrid.csv` (one row per run) plus
+//! `results/BENCH_multigrid.json`, the machine-readable summary CI
+//! uploads and `ci/diff_bench.py` gates on. The headline acceptance
+//! number lives here: at N = 65536 the staged run's refinement must
+//! open at or under the bar (or match flat's kNN recall within 0.05)
+//! in strictly fewer gradient-eval seconds. `--require-bar` turns the
+//! quality half of that into a hard process failure for CI.
+
+use std::io::Write;
+use std::time::Instant;
+
+use super::common::results_dir;
+use crate::coordinator::EmbeddingJob;
+use crate::index::IndexSpec;
+use crate::objective::Method;
+
+pub struct MultigridBenchConfig {
+    /// Problem size (swiss-roll points).
+    pub n: usize,
+    /// Landmark fraction floor handed to the coarse-to-fine schedule.
+    pub frac: f64,
+    pub method: Method,
+    pub lambda: f64,
+    pub perplexity: f64,
+    /// Neighbors per point for the sparse attractive graph.
+    pub knn: usize,
+    /// Direction strategy for both runs.
+    pub strategy: String,
+    /// Iteration cap per run (flat run, and the refinement stage).
+    pub max_iters: usize,
+    /// Iteration cap for the coarse stage (None = `max_iters`).
+    pub coarse_iters: Option<usize>,
+    /// Quality bar as a fraction of the flat run's energy drop:
+    /// `E_thresh = E* + frac·(E₀ − E*)`.
+    pub quality_frac: f64,
+    /// HNSW knobs — the index is forced (never `Auto`) so the landmark
+    /// hierarchy exists at every benchmark size.
+    pub index: IndexSpec,
+    /// Neighbors for the final-embedding recall check.
+    pub recall_k: usize,
+    /// Dataset seed (init seeds are fixed so the runs differ only in
+    /// the schedule).
+    pub seed: u64,
+    /// Fail the process unless the staged run reaches the flat run's
+    /// quality bar (or matches its recall within 0.05) — the CI gate.
+    pub require_bar: bool,
+    pub csv_name: String,
+    /// Machine-readable summary (None to skip).
+    pub json_name: Option<String>,
+}
+
+impl Default for MultigridBenchConfig {
+    fn default() -> Self {
+        MultigridBenchConfig {
+            n: 16384,
+            frac: 0.05,
+            method: Method::Ee,
+            lambda: 100.0,
+            perplexity: 20.0,
+            knn: 20,
+            strategy: "sd".to_string(),
+            max_iters: 200,
+            coarse_iters: None,
+            quality_frac: 0.1,
+            index: IndexSpec::hnsw_default(),
+            recall_k: 10,
+            seed: 42,
+            require_bar: false,
+            csv_name: "multigrid.csv".to_string(),
+            json_name: Some("BENCH_multigrid.json".to_string()),
+        }
+    }
+}
+
+/// One measured run (flat or staged).
+struct MgRow {
+    name: String,
+    opt_s: f64,
+    e0: f64,
+    e_final: f64,
+    iters: usize,
+    /// Gradient-eval seconds to the shared quality bar (`None` =
+    /// never reached it).
+    to_quality_s: Option<f64>,
+    recall: f64,
+}
+
+fn fmt_opt(v: Option<f64>) -> String {
+    v.map(|s| format!("{s:.6}")).unwrap_or_else(|| "null".to_string())
+}
+
+pub fn run(cfg: &MultigridBenchConfig) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        cfg.frac > 0.0 && cfg.frac < 1.0,
+        "landmark fraction must be in (0, 1)"
+    );
+    anyhow::ensure!(
+        cfg.quality_frac > 0.0 && cfg.quality_frac < 1.0,
+        "quality_frac must be in (0, 1)"
+    );
+    anyhow::ensure!(
+        !matches!(cfg.index, IndexSpec::Exact),
+        "the coarse stage needs an HNSW hierarchy — pick an Hnsw index spec"
+    );
+    let threads = crate::par::num_threads();
+    let dir = results_dir();
+
+    let data = crate::data::synth::swiss_roll(cfg.n, 3, 0.05, cfg.seed);
+    let n = data.y.rows;
+    let k = cfg.knn.min(n.saturating_sub(1)).max(1);
+    let make_job = |name: &str| {
+        let mut job = EmbeddingJob::from_data(
+            format!("mg-{name}"),
+            &data.y,
+            cfg.method,
+            cfg.lambda,
+            cfg.perplexity.min(k as f64),
+            k,
+            cfg.index,
+        );
+        job.strategy = cfg.strategy.clone();
+        job.opts.max_iters = cfg.max_iters;
+        job
+    };
+    println!(
+        "multigrid bench: N = {n}, knn = {k}, frac = {}, {} threads",
+        cfg.frac, threads
+    );
+
+    // -- flat baseline: fixes the quality bar ------------------------
+    let flat_job = make_job("flat");
+    let t0 = Instant::now();
+    let flat = flat_job.run()?;
+    let flat_s = t0.elapsed().as_secs_f64();
+    let e0 = flat.trace.first().map(|t| t.e).unwrap_or(flat.e);
+    let e_best = flat.e;
+    let e_thresh = e_best + cfg.quality_frac * (e0 - e_best);
+    let flat_recall = crate::metrics::knn_recall(&data.y, &flat.x, cfg.recall_k);
+    let flat_to_q = flat
+        .trace
+        .iter()
+        .find(|t| t.e <= e_thresh)
+        .map(|t| t.time_s);
+    println!(
+        "  flat:      E0 = {e0:.6e}  E = {e_best:.6e}  iters = {}  {flat_s:.2}s  \
+         recall@{} = {flat_recall:.3}",
+        flat.iters, cfg.recall_k
+    );
+
+    // -- staged run: same problem, coarse-to-fine schedule -----------
+    let mut mg_job = make_job("staged");
+    mg_job.multigrid = Some(cfg.frac);
+    mg_job.multigrid_coarse_iters = cfg.coarse_iters;
+    let t0 = Instant::now();
+    let mg = mg_job.run()?;
+    let mg_s = t0.elapsed().as_secs_f64();
+    let report = mg
+        .multigrid
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("staged run returned no multigrid report"))?;
+    let mg_recall = crate::metrics::knn_recall(&data.y, &mg.x, cfg.recall_k);
+    // charge the full coarse stage and the placement before the
+    // refinement trace is allowed to claim the bar
+    let overhead_s: f64 =
+        report.stages[..report.stages.len() - 1].iter().map(|s| s.time_s).sum::<f64>()
+            + report.placement_s;
+    let refine_e0 = mg.trace.first().map(|t| t.e).unwrap_or(mg.e);
+    let mg_to_q = mg
+        .trace
+        .iter()
+        .find(|t| t.e <= e_thresh)
+        .map(|t| overhead_s + t.time_s);
+    println!(
+        "  multigrid: layer {} -> {} landmarks, coarse+placement {overhead_s:.2}s, \
+         refine E0 = {refine_e0:.6e}",
+        report.level, report.coarse_n
+    );
+    println!(
+        "  multigrid: E = {:.6e}  iters = {}  {mg_s:.2}s  recall@{} = {mg_recall:.3}",
+        mg.e, mg.iters, cfg.recall_k
+    );
+
+    println!(
+        "  quality bar E <= {e_thresh:.6e} ({}% of the flat drop above E* = {e_best:.6e})",
+        100.0 * cfg.quality_frac
+    );
+    let rows = [
+        MgRow {
+            name: "flat".to_string(),
+            opt_s: flat_s,
+            e0,
+            e_final: flat.e,
+            iters: flat.iters,
+            to_quality_s: flat_to_q,
+            recall: flat_recall,
+        },
+        MgRow {
+            name: "multigrid".to_string(),
+            opt_s: mg_s,
+            e0: refine_e0,
+            e_final: mg.e,
+            iters: mg.iters,
+            to_quality_s: mg_to_q,
+            recall: mg_recall,
+        },
+    ];
+    for r in &rows {
+        match r.to_quality_s {
+            Some(s) => println!("  {:<10} reached the bar in {s:.2} grad-eval seconds", r.name),
+            None => println!("  {:<10} never reached the bar", r.name),
+        }
+    }
+    if let (Some(f), Some(m)) = (flat_to_q, mg_to_q) {
+        println!("  speedup to quality: {:.2}x", f / m.max(1e-12));
+    }
+
+    let path = dir.join(&cfg.csv_name);
+    let mut file = std::fs::File::create(&path)?;
+    writeln!(
+        file,
+        "run,n,coarse_n,level,knn,strategy,threads,opt_s,e0,e_final,iters,to_quality_s,recall"
+    )?;
+    for r in &rows {
+        writeln!(
+            file,
+            "{},{n},{},{},{k},{},{threads},{:.6e},{:.6e},{:.6e},{},{},{:.6}",
+            r.name,
+            report.coarse_n,
+            report.level,
+            cfg.strategy,
+            r.opt_s,
+            r.e0,
+            r.e_final,
+            r.iters,
+            fmt_opt(r.to_quality_s),
+            r.recall
+        )?;
+    }
+    println!("multigrid bench: wrote {}", path.display());
+
+    if let Some(json_name) = &cfg.json_name {
+        let jpath = dir.join(json_name);
+        let jrows: Vec<String> = rows
+            .iter()
+            .map(|r| {
+                format!(
+                    "    {{\"run\": \"{}\", \"opt_s\": {:.6}, \"e0\": {:.8e}, \
+                     \"e_final\": {:.8e}, \"iters\": {}, \"to_quality_s\": {}, \
+                     \"recall\": {:.6}}}",
+                    r.name,
+                    r.opt_s,
+                    r.e0,
+                    r.e_final,
+                    r.iters,
+                    fmt_opt(r.to_quality_s),
+                    r.recall
+                )
+            })
+            .collect();
+        let json = format!(
+            "{{\n  \"bench\": \"multigrid\",\n  \"n\": {n},\n  \"frac\": {},\n  \
+             \"knn\": {k},\n  \"strategy\": \"{}\",\n  \"threads\": {threads},\n  \
+             \"max_iters\": {},\n  \"quality_frac\": {},\n  \
+             \"coarse_n\": {},\n  \"level\": {},\n  \
+             \"coarse_overhead_s\": {overhead_s:.6},\n  \
+             \"refine_first_iter_e\": {refine_e0:.8e},\n  \
+             \"e_thresh\": {e_thresh:.8e},\n  \"results\": [\n{}\n  ]\n}}\n",
+            cfg.frac,
+            cfg.strategy,
+            cfg.max_iters,
+            cfg.quality_frac,
+            report.coarse_n,
+            report.level,
+            jrows.join(",\n")
+        );
+        std::fs::write(&jpath, json)?;
+        println!("multigrid bench: wrote {}", jpath.display());
+    }
+
+    if cfg.require_bar {
+        let bar_ok = mg_to_q.is_some();
+        let recall_ok = (flat_recall - mg_recall).abs() <= 0.05;
+        anyhow::ensure!(
+            bar_ok || recall_ok,
+            "staged run missed the quality bar (refine E0 = {refine_e0:.6e}, final \
+             {:.6e} vs bar {e_thresh:.6e}) and its recall {mg_recall:.3} is not within \
+             0.05 of flat's {flat_recall:.3}",
+            mg.e
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny smoke run: completes, writes both outputs, rows sane.
+    #[test]
+    fn smoke_small() {
+        let cfg = MultigridBenchConfig {
+            n: 500,
+            frac: 0.08,
+            knn: 10,
+            perplexity: 8.0,
+            max_iters: 25,
+            index: IndexSpec::Hnsw { m: 6, ef_construction: 60, ef_search: 40 },
+            require_bar: false,
+            csv_name: "multigrid_smoke.csv".to_string(),
+            json_name: Some("BENCH_multigrid_smoke.json".to_string()),
+            ..Default::default()
+        };
+        run(&cfg).unwrap();
+        let text =
+            std::fs::read_to_string(results_dir().join("multigrid_smoke.csv")).unwrap();
+        assert_eq!(text.lines().count(), 3, "header + flat + multigrid");
+        for row in text.lines().skip(1) {
+            let cols: Vec<&str> = row.split(',').collect();
+            assert_eq!(cols.len(), 13);
+            let e_final: f64 = cols[9].parse().unwrap();
+            let recall: f64 = cols[12].parse().unwrap();
+            assert!(e_final.is_finite() && (0.0..=1.0).contains(&recall));
+        }
+        let json =
+            std::fs::read_to_string(results_dir().join("BENCH_multigrid_smoke.json")).unwrap();
+        assert!(json.contains("\"bench\": \"multigrid\""));
+        assert!(json.contains("\"refine_first_iter_e\""));
+        assert!(json.contains("\"run\": \"multigrid\""));
+    }
+}

@@ -11,11 +11,24 @@ use crate::objective::engine::EngineSpec;
 use crate::objective::native::NativeObjective;
 use crate::objective::xla::XlaObjective;
 use crate::objective::{Attractive, Method, Objective};
+use crate::opt::multigrid::{
+    multigrid_resumable, MultigridProgress, MultigridStage, STAGE_COARSE,
+};
 use crate::opt::{
     CheckpointMeta, CheckpointPayload, IterStats, Minimizer, OptOptions, StepOutcome,
     StopReason, TrainCheckpoint,
 };
 use crate::runtime::ArtifactRegistry;
+
+/// Landmark floor below which the HNSW upper layers are too thin to be
+/// worth a coarse stage — [`EmbeddingJob::run_multigrid`] errors and
+/// the caller should train flat.
+pub const MULTIGRID_MIN_LANDMARKS: usize = 32;
+
+/// Minimum surviving row degree in the landmark-restricted kNN graph;
+/// sparser rows are rebuilt by an exact nearest-landmark scan
+/// ([`crate::affinity::restrict_knn_graph`]).
+pub const MULTIGRID_MIN_DEGREE: usize = 4;
 
 /// Which objective backend evaluates E and its gradient.
 #[derive(Clone)]
@@ -72,6 +85,15 @@ pub struct EmbeddingJob {
     /// coordinate scale of the starting embedding (gaussian std for
     /// random init; per-column max-abs for spectral)
     pub init_scale: f64,
+    /// coarse-to-fine schedule: `Some(frac)` trains the HNSW-landmark
+    /// subset (the coarsest upper layer holding at least `frac · N`
+    /// nodes) to convergence first, places the rest with the
+    /// out-of-sample transformer, then refines at full N
+    /// ([`EmbeddingJob::run_multigrid`]); `None` trains flat
+    pub multigrid: Option<f64>,
+    /// iteration cap for the multigrid coarse stage (None = `opts.max_iters`);
+    /// the coarse stage otherwise stops on the shared tolerances
+    pub multigrid_coarse_iters: Option<usize>,
     pub opts: OptOptions,
     pub backend: Backend,
 }
@@ -119,6 +141,8 @@ impl EmbeddingJob {
             init: crate::init::InitSpec::Auto,
             init_seed: 0,
             init_scale: 1e-4,
+            multigrid: None,
+            multigrid_coarse_iters: None,
             opts: OptOptions { time_budget: budget, ..Default::default() },
             backend: Backend::Native,
         }
@@ -182,6 +206,8 @@ impl EmbeddingJob {
             init: crate::init::InitSpec::Auto,
             init_seed: 0,
             init_scale: 1e-4,
+            multigrid: None,
+            multigrid_coarse_iters: None,
             opts: OptOptions::default(),
             backend: Backend::Native,
         }
@@ -325,6 +351,9 @@ impl EmbeddingJob {
     /// one (the objective rebuild is deterministic; the checkpoint
     /// refuses jobs whose weights/strategy/λ differ).
     pub fn run_resumable(&self, ctl: RunControl<'_>) -> anyhow::Result<JobResult> {
+        if let Some(frac) = self.multigrid {
+            return self.run_multigrid(frac, ctl);
+        }
         let RunControl { resume, checkpoint_every, checkpoint_path, mut on_iter } = ctl;
         let obj = self.build_objective()?;
         let mut strategy =
@@ -344,12 +373,20 @@ impl EmbeddingJob {
                 if let Some((_, epoch)) = ck.meta.sampler {
                     obj.set_sampler_epoch(epoch);
                 }
-                let CheckpointPayload::Minimize { state, strategy_state } = ck.payload else {
-                    anyhow::bail!(
+                let (state, strategy_state) = match ck.payload {
+                    CheckpointPayload::Minimize { state, strategy_state } => {
+                        (state, strategy_state)
+                    }
+                    CheckpointPayload::Homotopy(_) => anyhow::bail!(
                         "checkpoint for job {:?} holds a homotopy run; resume it through \
                          opt::homotopy::homotopy_resumable",
                         self.name
-                    )
+                    ),
+                    CheckpointPayload::Multigrid(_) => anyhow::bail!(
+                        "checkpoint for job {:?} holds a coarse-to-fine multigrid run; \
+                         resume it with the job's multigrid schedule enabled (--multigrid)",
+                        self.name
+                    ),
                 };
                 let strat = strategy.as_mut();
                 Minimizer::resume(obj.as_ref(), strat, state, &strategy_state, &self.opts)?
@@ -420,6 +457,241 @@ impl EmbeddingJob {
             // already paid for
             graph: self.graph.clone(),
             hnsw: self.hnsw.clone(),
+            multigrid: None,
+        })
+    }
+
+    /// The coarse-to-fine path of [`EmbeddingJob::run_resumable`]
+    /// (dispatched when [`EmbeddingJob::multigrid`] is set): extract
+    /// the landmark layer from the trained HNSW hierarchy, restrict the
+    /// shared kNN graph to it and recalibrate row entropies there,
+    /// train the landmark embedding to convergence, place the remaining
+    /// points with the out-of-sample [`crate::model::Transformer`], and
+    /// refine at full N — both stages resumable through the same
+    /// checkpoint file as a flat run (NLEC multigrid payload).
+    ///
+    /// Requires a [`EmbeddingJob::from_data`] job whose index kept an
+    /// HNSW adjacency (`IndexSpec::Hnsw`, or `Auto` at N ≥ 4096) and
+    /// the native backend. A kill during placement resumes from the
+    /// last coarse-stage checkpoint; placement is recomputed.
+    fn run_multigrid(&self, frac: f64, ctl: RunControl<'_>) -> anyhow::Result<JobResult> {
+        let RunControl { resume, checkpoint_every, checkpoint_path, mut on_iter } = ctl;
+        anyhow::ensure!(
+            matches!(self.backend, Backend::Native),
+            "coarse-to-fine multigrid supports the native backend only \
+             (XLA artifacts have fixed shapes)"
+        );
+        anyhow::ensure!(
+            frac > 0.0 && frac < 1.0,
+            "multigrid landmark fraction must be in (0, 1), got {frac}"
+        );
+        let data = self.data.clone().ok_or_else(|| {
+            anyhow::anyhow!(
+                "job {:?} has no training data — coarse-to-fine needs EmbeddingJob::from_data",
+                self.name
+            )
+        })?;
+        let graph = self.graph.clone().ok_or_else(|| {
+            anyhow::anyhow!("job {:?} has no kNN graph to restrict to the landmarks", self.name)
+        })?;
+        let hnsw = self.hnsw.clone().ok_or_else(|| {
+            anyhow::anyhow!(
+                "coarse-to-fine needs the HNSW hierarchy — build the job with \
+                 IndexSpec::Hnsw (--index hnsw), or let Auto resolve it at N >= 4096"
+            )
+        })?;
+        let n = data.rows;
+        let (level, landmarks) = hnsw.landmark_layer(frac, MULTIGRID_MIN_LANDMARKS);
+        anyhow::ensure!(
+            level >= 1 && landmarks.len() < n,
+            "HNSW hierarchy of {n} points has no upper layer with >= {} nodes — \
+             train flat instead of --multigrid at this size",
+            MULTIGRID_MIN_LANDMARKS
+        );
+        let l = landmarks.len();
+
+        // -- coarse problem: landmark data, restricted + recalibrated
+        //    affinities, its own strategy instance -------------------
+        let sub_y = Arc::new(Mat::from_fn(l, data.cols, |i, j| {
+            data.at(landmarks[i] as usize, j)
+        }));
+        let coarse_graph = Arc::new(crate::affinity::restrict_knn_graph(
+            &graph,
+            &landmarks,
+            &sub_y,
+            MULTIGRID_MIN_DEGREE,
+        ));
+        let coarse_perp =
+            self.perplexity.unwrap_or(graph.k as f64).min(coarse_graph.k as f64).max(1.0);
+        let coarse_p = crate::affinity::sne_affinities_from_graph(&coarse_graph, coarse_perp);
+        let coarse_x0 = match &self.init_x {
+            Some(x) => {
+                anyhow::ensure!(
+                    x.rows == n && x.cols == self.dim,
+                    "init_x is {}x{} but the job is {n}x{}",
+                    x.rows,
+                    x.cols,
+                    self.dim
+                );
+                Mat::from_fn(l, self.dim, |i, j| x.at(landmarks[i] as usize, j))
+            }
+            None => match self.init.resolve(l) {
+                crate::init::InitSpec::Random => {
+                    crate::init::random_init(l, self.dim, self.init_scale, self.init_seed)
+                }
+                spec => spec.build(&coarse_p, self.dim, self.init_scale, self.init_seed),
+            },
+        };
+        let coarse_obj = NativeObjective::with_engine(
+            self.method,
+            Attractive::Sparse(coarse_p),
+            self.lambda,
+            self.dim,
+            self.engine,
+        );
+        let mut coarse_strategy = crate::opt::strategy_by_name_with(
+            &self.strategy,
+            self.kappa,
+            Some(coarse_graph.clone()),
+        )
+        .ok_or_else(|| anyhow::anyhow!("unknown strategy {:?}", self.strategy))?;
+        let mut coarse_opts = self.opts.clone();
+        if let Some(iters) = self.multigrid_coarse_iters {
+            coarse_opts.max_iters = iters;
+        }
+
+        // -- fine problem: the job's own objective/strategy -----------
+        let fine_obj = self.build_objective()?;
+        let mut fine_strategy =
+            crate::opt::strategy_by_name_with(&self.strategy, self.kappa, self.graph.clone())
+                .ok_or_else(|| anyhow::anyhow!("unknown strategy {:?}", self.strategy))?;
+
+        // -- resume / checkpoint plumbing ----------------------------
+        let every = checkpoint_every.unwrap_or(0);
+        if every > 0 {
+            anyhow::ensure!(
+                checkpoint_path.is_some(),
+                "checkpoint_every is set but checkpoint_path is not"
+            );
+        }
+        let need_meta = resume.is_some() || every > 0;
+        let meta = need_meta.then(|| self.checkpoint_meta());
+        let resume_state = match resume {
+            Some(ck) => {
+                ck.meta.ensure_matches(meta.as_ref().unwrap())?;
+                let CheckpointPayload::Multigrid(st) = ck.payload else {
+                    anyhow::bail!(
+                        "checkpoint for job {:?} holds a flat or homotopy run; resume it \
+                         without --multigrid (or through the homotopy driver)",
+                        self.name
+                    )
+                };
+                // restore the sampler epoch into the stage that owns the
+                // snapshot, *before* any evaluation (the completed
+                // coarse stage's epoch no longer matters)
+                if let Some((_, epoch)) = ck.meta.sampler {
+                    if st.stage == STAGE_COARSE {
+                        coarse_obj.set_sampler_epoch(epoch);
+                    } else {
+                        fine_obj.set_sampler_epoch(epoch);
+                    }
+                }
+                Some(st)
+            }
+            None => None,
+        };
+
+        // -- prolongation: transformer placement of the non-landmarks -
+        let rest: Vec<usize> =
+            (0..n).filter(|&i| landmarks.binary_search(&(i as u32)).is_err()).collect();
+        let rest_y = Mat::from_fn(rest.len(), data.cols, |i, j| data.at(rest[i], j));
+        let coarse_model_k = coarse_graph.k.min(l - 1).max(1);
+        let dim = self.dim;
+        let mut prolong = |cx: &Mat| -> anyhow::Result<Mat> {
+            let model = EmbeddingModel::new(
+                self.method,
+                self.lambda,
+                coarse_perp,
+                coarse_model_k,
+                sub_y.clone(),
+                cx.clone(),
+                None,
+            )?;
+            let placed = model.transformer().transform(&rest_y);
+            let mut x0 = Mat::zeros(n, dim);
+            for (li, &i) in landmarks.iter().enumerate() {
+                for j in 0..dim {
+                    *x0.at_mut(i as usize, j) = cx.at(li, j);
+                }
+            }
+            for (ri, &i) in rest.iter().enumerate() {
+                for j in 0..dim {
+                    *x0.at_mut(i, j) = placed.at(ri, j);
+                }
+            }
+            Ok(x0)
+        };
+
+        // the driver's observer cannot propagate errors; surface the
+        // first failed checkpoint write after the run
+        let mut ck_err: Option<anyhow::Error> = None;
+        let mut observer = |p: &MultigridProgress<'_, '_>| {
+            if let Some(cb) = on_iter.as_deref_mut() {
+                cb(p.stats);
+            }
+            if every > 0 && p.stats.iter % every == 0 && ck_err.is_none() {
+                let mut ck_meta = meta.clone().unwrap();
+                let live = if p.stage == STAGE_COARSE {
+                    coarse_obj.sampler_state()
+                } else {
+                    fine_obj.sampler_state()
+                };
+                if let Some(state) = live {
+                    ck_meta.sampler = Some(state);
+                }
+                let ck = TrainCheckpoint {
+                    meta: ck_meta,
+                    payload: CheckpointPayload::Multigrid(p.state()),
+                };
+                if let Err(e) = ck.save(checkpoint_path.as_ref().unwrap()) {
+                    ck_err = Some(e);
+                }
+            }
+        };
+
+        let res = multigrid_resumable(
+            &coarse_obj,
+            coarse_strategy.as_mut(),
+            &coarse_x0,
+            &coarse_opts,
+            fine_obj.as_ref(),
+            fine_strategy.as_mut(),
+            &self.opts,
+            &mut prolong,
+            self.opts.time_budget,
+            resume_state,
+            Some(&mut observer),
+        )?;
+        if let Some(e) = ck_err {
+            return Err(e.context("multigrid checkpoint write failed"));
+        }
+        Ok(JobResult {
+            name: self.name.clone(),
+            strategy: self.strategy.clone(),
+            e: res.e,
+            iters: res.total_iters(),
+            time_s: res.total_time(),
+            stop: res.stop,
+            trace: res.trace,
+            x: res.x,
+            graph: self.graph.clone(),
+            hnsw: self.hnsw.clone(),
+            multigrid: Some(MultigridReport {
+                level,
+                coarse_n: l,
+                placement_s: res.placement_s,
+                stages: res.stages,
+            }),
         })
     }
 
@@ -471,6 +743,22 @@ pub struct JobResult {
     /// HNSW adjacency from the affinity stage, when that index backend
     /// ran — the piece a model artifact persists without a rebuild
     pub hnsw: Option<Arc<HnswGraph>>,
+    /// stage breakdown of a coarse-to-fine run (None for flat training)
+    pub multigrid: Option<MultigridReport>,
+}
+
+/// How a coarse-to-fine run spent its work: which HNSW layer supplied
+/// the landmarks, and the per-stage iteration/time records the bench
+/// harness turns into seconds-to-quality numbers.
+pub struct MultigridReport {
+    /// HNSW layer the landmarks came from (>= 1)
+    pub level: usize,
+    /// landmark count (the coarse problem size)
+    pub coarse_n: usize,
+    /// seconds spent in transformer placement between the stages
+    pub placement_s: f64,
+    /// `[coarse, refine]` stage records
+    pub stages: Vec<MultigridStage>,
 }
 
 #[cfg(test)]
@@ -744,6 +1032,60 @@ mod tests {
         // an explicit warm-start embedding supersedes the init spec
         job.init_x = Some(Arc::new(Mat::zeros(80, 2)));
         assert_eq!(job.init_name(), "warm-start");
+    }
+
+    #[test]
+    fn multigrid_trains_coarse_then_fine() {
+        let data = crate::data::synth::swiss_roll(400, 3, 0.05, 17);
+        let spec = IndexSpec::Hnsw { m: 6, ef_construction: 60, ef_search: 40 };
+        let mut job = EmbeddingJob::from_data("mg", &data.y, Method::Ee, 10.0, 8.0, 10, spec);
+        job.opts.max_iters = 12;
+        job.multigrid = Some(0.05);
+        let res = job.run().unwrap();
+        assert_eq!(res.x.rows, 400);
+        assert!(res.e.is_finite());
+        assert!(res.x.data.iter().all(|v| v.is_finite()));
+        let report = res.multigrid.expect("coarse-to-fine run must report its stages");
+        assert!(report.level >= 1);
+        assert!(report.coarse_n >= 32 && report.coarse_n < 400, "coarse_n {}", report.coarse_n);
+        assert_eq!(report.stages.len(), 2);
+        assert_eq!(report.stages[0].n, report.coarse_n);
+        assert_eq!(report.stages[1].n, 400);
+        assert!(report.stages.iter().all(|s| s.e.is_finite()));
+        assert_eq!(res.iters, report.stages[0].iters + report.stages[1].iters);
+        // the servable-artifact path dispatches through the same driver
+        let (res2, model) = job.run_model().unwrap();
+        assert_eq!(model.n(), 400);
+        assert!(res2.multigrid.is_some());
+    }
+
+    #[test]
+    fn multigrid_requires_an_hnsw_hierarchy() {
+        let data = crate::data::synth::swiss_roll(120, 3, 0.05, 6);
+        let mut job =
+            EmbeddingJob::from_data("mgx", &data.y, Method::Ee, 10.0, 6.0, 8, IndexSpec::Exact);
+        job.opts.max_iters = 4;
+        job.multigrid = Some(0.05);
+        let err = job.run().unwrap_err();
+        assert!(format!("{err}").contains("HNSW"), "{err}");
+    }
+
+    #[test]
+    fn multigrid_coarse_start_beats_a_cold_start() {
+        // the refinement stage must begin near the coarse optimum, not
+        // at random noise — the whole point of the schedule
+        let data = crate::data::synth::swiss_roll(500, 3, 0.05, 23);
+        let spec = IndexSpec::Hnsw { m: 6, ef_construction: 60, ef_search: 40 };
+        let mut job = EmbeddingJob::from_data("mgq", &data.y, Method::Ee, 10.0, 8.0, 10, spec);
+        job.opts.max_iters = 30;
+        let cold_e0 = job.run().unwrap().trace[0].e;
+        job.multigrid = Some(0.05);
+        let res = job.run().unwrap();
+        let warm_e0 = res.trace[0].e;
+        assert!(
+            warm_e0 < cold_e0,
+            "refinement should start below a cold start: {warm_e0} vs {cold_e0}"
+        );
     }
 
     #[test]

@@ -10,5 +10,5 @@
 pub mod job;
 pub mod runner;
 
-pub use job::{Backend, EmbeddingJob, JobResult, RunControl};
+pub use job::{Backend, EmbeddingJob, JobResult, MultigridReport, RunControl};
 pub use runner::{run_batch, run_batch_sync, JobEvent, ProgressThrottle, PROGRESS_MIN_INTERVAL};

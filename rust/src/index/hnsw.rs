@@ -181,6 +181,45 @@ impl HnswGraph {
         }
         Ok(())
     }
+
+    /// Highest layer node `i` participates in. Level assignment is the
+    /// geometric draw made at insertion time, so `P(level >= L) ≈ m^-L`:
+    /// the upper layers are a free ~1/m^L subsample of the data.
+    pub fn node_level(&self, i: usize) -> usize {
+        self.neighbors[i].len() - 1
+    }
+
+    /// Ids of every node participating in layer `level` (equivalently:
+    /// with `node_level >= level`), ascending. `level = 0` is all nodes.
+    pub fn layer_members(&self, level: usize) -> Vec<u32> {
+        (0..self.neighbors.len())
+            .filter(|&i| self.neighbors[i].len() > level)
+            .map(|i| i as u32)
+            .collect()
+    }
+
+    /// Landmark selection for coarse-to-fine training: walk down from
+    /// the top of the hierarchy and return the *coarsest* (highest)
+    /// layer that still holds at least `max(min_count, frac * n)` nodes,
+    /// together with its members (ascending ids). `frac` is therefore a
+    /// floor on the landmark fraction, not a target — with the default
+    /// m = 16 the layer populations are ≈ n/16, n/256, … and the first
+    /// one clearing the floor wins.
+    ///
+    /// Returns level 0 (all nodes) when no upper layer is populous
+    /// enough, e.g. tiny N; callers treat that as "no usable hierarchy"
+    /// and fall back to flat training.
+    pub fn landmark_layer(&self, frac: f64, min_count: usize) -> (usize, Vec<u32>) {
+        let n = self.neighbors.len();
+        let floor = min_count.max((frac * n as f64).ceil() as usize);
+        for level in (1..=self.max_level).rev() {
+            let members = self.layer_members(level);
+            if members.len() >= floor && members.len() < n {
+                return (level, members);
+            }
+        }
+        (0, (0..n as u32).collect())
+    }
 }
 
 /// Pure greedy walk at one layer: follow the best edge until no
@@ -593,6 +632,37 @@ mod tests {
             assert_eq!(&view.query_point(i, 7), want);
         }
         assert_eq!(view.query(y.row(13), 5), arbitrary);
+    }
+
+    #[test]
+    fn landmark_layer_picks_a_real_subsample() {
+        let y = gaussian(1200, 3, 11);
+        let g = HnswIndex::build(&y, 6, 60, 40).into_graph();
+        // every node's recorded level matches its layer participation
+        for i in 0..g.len() {
+            assert_eq!(g.node_level(i), g.neighbors[i].len() - 1);
+        }
+        // members are ascending, correct, and nest: layer L+1 ⊂ layer L
+        let l1 = g.layer_members(1);
+        assert!(l1.windows(2).all(|w| w[0] < w[1]));
+        assert!(l1.iter().all(|&i| g.node_level(i as usize) >= 1));
+        if g.max_level >= 2 {
+            let l2 = g.layer_members(2);
+            assert!(l2.iter().all(|&i| l1.binary_search(&i).is_ok()));
+        }
+        assert_eq!(g.layer_members(0).len(), g.len());
+        // the geometric draw puts roughly 1/m of the nodes at level >= 1
+        let frac = l1.len() as f64 / g.len() as f64;
+        assert!(frac > 0.02 && frac < 0.6, "level-1 fraction {frac}");
+        // a small floor selects a genuine upper layer…
+        let (level, marks) = g.landmark_layer(0.01, 16);
+        assert!(level >= 1);
+        assert!(marks.len() >= 16 && marks.len() < g.len());
+        assert_eq!(marks, g.layer_members(level));
+        // …an impossible floor falls back to level 0 / everyone
+        let (level, marks) = g.landmark_layer(0.9, 16);
+        assert_eq!(level, 0);
+        assert_eq!(marks.len(), g.len());
     }
 
     #[test]

@@ -86,7 +86,9 @@ pub mod spatial;
 
 /// Convenient re-exports for examples and binaries.
 pub mod prelude {
-    pub use crate::coordinator::{EmbeddingJob, JobResult, ProgressThrottle, RunControl};
+    pub use crate::coordinator::{
+        EmbeddingJob, JobResult, MultigridReport, ProgressThrottle, RunControl,
+    };
     pub use crate::index::{ExactIndex, HnswGraph, HnswIndex, HnswRef, IndexSpec, NeighborIndex};
     pub use crate::init::{InitSpec, SpectralSolver};
     pub use crate::linalg::dense::Mat;
@@ -98,6 +100,7 @@ pub mod prelude {
     pub use crate::objective::native::NativeObjective;
     pub use crate::objective::xla::XlaObjective;
     pub use crate::objective::{Attractive, Method, Objective, Repulsive};
+    pub use crate::opt::multigrid::{MultigridResult, MultigridStage, MultigridState};
     pub use crate::opt::sd::SpectralDirection;
     pub use crate::opt::{
         minimize, try_minimize, CheckpointMeta, CheckpointPayload, DirectionStrategy,

@@ -2,7 +2,7 @@
 //!
 //! Subcommands map 1:1 to the paper's experiments (fig1..fig4, rates)
 //! plus a general-purpose `embed` runner, the `daemon` serving front,
-//! and `info` for the artifact registry. See DESIGN.md section 10 for
+//! and `info` for the artifact registry. See DESIGN.md section 11 for
 //! the experiment index.
 //!
 //! (Arg parsing is hand-rolled `--key value` matching; the offline build
@@ -56,6 +56,17 @@ COMMANDS
           [--method ee] [--lambda 100] [--perplexity 20]
           [--strategy sd] [--max-iters 200] [--quality-frac 0.05]
           [--seed 42] [--json BENCH_init.json]
+  multigrid  coarse-to-fine benchmark: staged HNSW-landmark training
+          vs flat training on the same problem — seconds-to-quality
+          against the flat run's energy bar ->
+          results/multigrid.csv + results/BENCH_multigrid.json
+          [--n 16384] [--frac 0.05] [--knn 20] [--method ee]
+          [--lambda 100] [--perplexity 20] [--strategy sd]
+          [--max-iters 200] [--coarse-iters 0 (0 = max-iters)]
+          [--quality-frac 0.1] [--seed 42]
+          [--require-bar (exit nonzero unless the staged run reaches
+                    the flat run's quality bar)]
+          [--json BENCH_multigrid.json]
   serve   out-of-sample serving throughput on a frozen model:
           points/sec across batch sizes -> results/serve.csv +
           results/BENCH_serve.json (thread count is fixed per process;
@@ -115,6 +126,9 @@ COMMANDS
           [--init auto|random|spectral[:lanczos|rsvd[:<q>,<p>]]]
           [--knn 0 (0 = dense W+)]
           [--index auto|exact|hnsw|hnsw:<m>[,<efc>[,<efs>]]]
+          [--multigrid [frac] (coarse-to-fine over the HNSW
+                    hierarchy; bare flag = 0.05)]
+          [--multigrid-coarse-iters 0 (0 = --max-iters)]
           [--checkpoint-every 0 (iterations; 0 = never)]
           [--checkpoint-path results/embed.nlec]
           [--resume <path.nlec>] [--progress]
@@ -131,6 +145,15 @@ spectral (randomized-SVD Laplacian eigenmaps over the attractive
 graph) above — the warm start that cuts optimizer iterations at
 scale. 'spectral:rsvd:<q>,<p>' sets the power passes and the
 oversampling; 'spectral:lanczos' uses the exact Krylov solver.
+
+Multigrid (--multigrid): coarse-to-fine training over the HNSW
+hierarchy — the index's upper layers supply a free landmark
+subsample; the landmarks train to convergence first, the rest of the
+points are placed by the out-of-sample transformer, then full-N
+refinement runs. Needs --knn affinities and an HNSW index (--index
+hnsw, or auto at N >= 4096). Checkpoints taken in either stage
+resume into that stage: pass --resume together with the same
+--multigrid fraction.
 
 Checkpoint/resume: --checkpoint-every K overwrites --checkpoint-path
 with an NLEC record every K iterations; a killed run restarts with
@@ -363,23 +386,22 @@ fn main() -> anyhow::Result<()> {
             let index = IndexSpec::parse(&args.get_str("index", "auto"))
                 .ok_or_else(|| anyhow::anyhow!("bad index (auto|exact|hnsw|hnsw:<m>[,..])"))?;
             anyhow::ensure!(n_actual >= 2, "dataset has only {n_actual} points");
+            // --multigrid [frac]: coarse-to-fine over the HNSW
+            // hierarchy; a bare flag (stored as "true") uses the
+            // default landmark fraction
+            let multigrid: Option<f64> = match args.0.get("multigrid") {
+                None => None,
+                Some(v) if v == "true" => Some(0.05),
+                Some(v) => Some(v.parse::<f64>().map_err(|_| {
+                    anyhow::anyhow!(
+                        "bad --multigrid value {v:?} (want a landmark fraction in (0,1))"
+                    )
+                })?),
+            };
             // --knn k > 0 switches to kNN-sparse affinities, the
             // representation the Barnes-Hut engine streams in O(nnz);
             // --index picks the neighbor search that builds them
             let knn: usize = args.get("knn", 0);
-            let wp = if knn > 0 {
-                let k = knn.min(n_actual - 1);
-                Attractive::Sparse(nle::affinity::sne_affinities_sparse_with(
-                    &ds.y,
-                    perplexity.min(k as f64),
-                    k,
-                    index,
-                ))
-            } else {
-                Attractive::Dense(
-                    nle::affinity::sne_affinities(&ds.y, perplexity.min(n_actual as f64 / 3.0)),
-                )
-            };
             // one canonical checkpoint protocol: embed is an
             // EmbeddingJob driven through run_resumable, so the CLI and
             // batch callers share the same meta construction, lazy
@@ -390,16 +412,50 @@ fn main() -> anyhow::Result<()> {
             let init = InitSpec::parse(&args.get_str("init", "auto")).ok_or_else(|| {
                 anyhow::anyhow!("bad init (auto|random|spectral[:lanczos|rsvd[:<q>,<p>]])")
             })?;
-            let mut job = nle::coordinator::EmbeddingJob::native(
-                format!("embed-{data}"),
-                method,
-                lambda,
-                std::sync::Arc::new(wp),
-                &strategy,
-                None,
-            );
+            let mut job = if multigrid.is_some() {
+                // coarse-to-fine needs the training data, the kNN graph
+                // and the HNSW hierarchy, so the job owns the affinity
+                // stage; kNN-sparse affinities are mandatory here
+                let k = if knn > 0 { knn } else { 20 }.min(n_actual - 1).max(1);
+                nle::coordinator::EmbeddingJob::from_data(
+                    format!("embed-{data}"),
+                    &ds.y,
+                    method,
+                    lambda,
+                    perplexity.min(k as f64),
+                    k,
+                    index,
+                )
+            } else {
+                let wp = if knn > 0 {
+                    let k = knn.min(n_actual - 1);
+                    Attractive::Sparse(nle::affinity::sne_affinities_sparse_with(
+                        &ds.y,
+                        perplexity.min(k as f64),
+                        k,
+                        index,
+                    ))
+                } else {
+                    Attractive::Dense(nle::affinity::sne_affinities(
+                        &ds.y,
+                        perplexity.min(n_actual as f64 / 3.0),
+                    ))
+                };
+                nle::coordinator::EmbeddingJob::native(
+                    format!("embed-{data}"),
+                    method,
+                    lambda,
+                    std::sync::Arc::new(wp),
+                    &strategy,
+                    None,
+                )
+            };
+            job.strategy = strategy.clone();
             job.engine = engine;
             job.init = init;
+            job.multigrid = multigrid;
+            let mg_coarse: usize = args.get("multigrid_coarse_iters", 0);
+            job.multigrid_coarse_iters = (mg_coarse > 0).then_some(mg_coarse);
             job.backend = match backend.as_str() {
                 "native" => nle::coordinator::Backend::Native,
                 "xla" => nle::coordinator::Backend::Xla(std::sync::Arc::new(
@@ -414,11 +470,21 @@ fn main() -> anyhow::Result<()> {
             let resume = match args.0.get("resume") {
                 Some(path) => {
                     let ck = TrainCheckpoint::load(path)?;
-                    if let CheckpointPayload::Minimize { state, .. } = &ck.payload {
-                        println!(
+                    match &ck.payload {
+                        CheckpointPayload::Minimize { state, .. } => println!(
                             "resuming {} from {path} at iteration {} (E = {:.6e})",
                             ck.meta.name, state.k, state.e
-                        );
+                        ),
+                        CheckpointPayload::Multigrid(m) => println!(
+                            "resuming {} from {path} in the {} stage at iteration {} \
+                             ({} landmarks, E = {:.6e})",
+                            ck.meta.name,
+                            if m.stage == 0 { "coarse" } else { "refine" },
+                            m.inner.k,
+                            m.coarse_n,
+                            m.inner.e
+                        ),
+                        _ => {}
                     }
                     Some(ck) // run_resumable validates meta + payload kind
                 }
@@ -449,6 +515,18 @@ fn main() -> anyhow::Result<()> {
                 t0.elapsed().as_secs_f64(),
                 res.stop
             );
+            if let Some(mg) = &res.multigrid {
+                println!(
+                    "  multigrid: HNSW layer {} -> {} landmarks, placement {:.2}s",
+                    mg.level, mg.coarse_n, mg.placement_s
+                );
+                for (i, s) in mg.stages.iter().enumerate() {
+                    println!(
+                        "  stage {i} ({:>7} pts): {:>5} iters, {:>8.2}s, E = {:.6e}, stop = {:?}",
+                        s.n, s.iters, s.time_s, s.e, s.stop
+                    );
+                }
+            }
             let out = args.get_str("out", "results/embedding.csv");
             let path = std::path::PathBuf::from(out);
             if let Some(parent) = path.parent() {
@@ -486,6 +564,29 @@ fn main() -> anyhow::Result<()> {
                 json_name: Some(args.get_str("json", "BENCH_init.json")),
                 ..Default::default()
             })
+        }
+        "multigrid" => {
+            let method = Method::parse(&args.get_str("method", "ee"))
+                .ok_or_else(|| anyhow::anyhow!("bad method"))?;
+            let coarse_iters: usize = args.get("coarse_iters", 0);
+            nle::bench_harness::multigrid::run(
+                &nle::bench_harness::multigrid::MultigridBenchConfig {
+                    n: args.get("n", 16384),
+                    frac: args.get("frac", 0.05),
+                    method,
+                    lambda: args.get("lambda", 100.0),
+                    perplexity: args.get("perplexity", 20.0),
+                    knn: args.get("knn", 20),
+                    strategy: args.get_str("strategy", "sd"),
+                    max_iters: args.get("max_iters", 200),
+                    coarse_iters: (coarse_iters > 0).then_some(coarse_iters),
+                    quality_frac: args.get("quality_frac", 0.1),
+                    seed: args.get("seed", 42),
+                    require_bar: args.0.contains_key("require_bar"),
+                    json_name: Some(args.get_str("json", "BENCH_multigrid.json")),
+                    ..Default::default()
+                },
+            )
         }
         "serve" => {
             let batches: Vec<usize> =

@@ -40,6 +40,7 @@ use crate::index::HnswGraph;
 use crate::linalg::dense::Mat;
 use crate::objective::{Attractive, Method};
 use crate::opt::homotopy::{HomotopyStage, HomotopyState};
+use crate::opt::multigrid::{MultigridStage, MultigridState};
 use crate::opt::{
     CheckpointMeta, CheckpointPayload, IterStats, MinimizerState, StopReason, TrainCheckpoint,
 };
@@ -49,8 +50,10 @@ const CKPT_MAGIC: &[u8; 4] = b"NLEC";
 
 /// On-disk version of the `NLEC` checkpoint record (independent of the
 /// model's [`FORMAT_VERSION`]). v2 added the optional sampler
-/// `(seed, epoch)` record for stochastic (negative-sampling) engines.
-pub const CHECKPOINT_VERSION: u32 = 2;
+/// `(seed, epoch)` record for stochastic (negative-sampling) engines;
+/// v3 added the multigrid payload kind (coarse-to-fine stage tag, so
+/// resume lands in the right stage at the right problem size).
+pub const CHECKPOINT_VERSION: u32 = 3;
 
 /// FNV-1a 64-bit: tiny, dependency-free corruption detection (not a
 /// cryptographic signature — artifacts are trusted local files).
@@ -237,6 +240,15 @@ impl Writer {
         self.put_u8(stop_tag(&s.stop));
     }
 
+    fn put_multigrid_stage(&mut self, s: &MultigridStage) {
+        self.put_u64(s.n as u64);
+        self.put_u64(s.iters as u64);
+        self.put_f64(s.time_s);
+        self.put_f64(s.e);
+        self.put_u64(s.nfev as u64);
+        self.put_u8(stop_tag(&s.stop));
+    }
+
     fn put_hnsw(&mut self, g: &HnswGraph) {
         self.put_u64(g.m as u64);
         self.put_u64(g.m0 as u64);
@@ -394,6 +406,17 @@ impl<'a> Reader<'a> {
         })
     }
 
+    fn get_multigrid_stage(&mut self) -> anyhow::Result<MultigridStage> {
+        Ok(MultigridStage {
+            n: self.get_len()?,
+            iters: self.get_len()?,
+            time_s: self.get_f64()?,
+            e: self.get_f64()?,
+            nfev: self.get_len()?,
+            stop: stop_from_tag(self.get_u8()?)?,
+        })
+    }
+
     fn get_hnsw(&mut self) -> anyhow::Result<HnswGraph> {
         let m = self.get_len()?;
         let m0 = self.get_len()?;
@@ -518,7 +541,7 @@ pub fn decode(bytes: &[u8]) -> anyhow::Result<EmbeddingModel> {
     .with_init(init))
 }
 
-/// Serialize a training checkpoint to the v2 `NLEC` container.
+/// Serialize a training checkpoint to the v3 `NLEC` container.
 pub fn encode_checkpoint(ck: &TrainCheckpoint) -> Vec<u8> {
     let mut w = Writer::new();
     w.put_str(&ck.meta.name);
@@ -562,11 +585,23 @@ pub fn encode_checkpoint(ck: &TrainCheckpoint) -> Vec<u8> {
             w.put_minimizer_state(&h.inner);
             w.put_bytes(&h.strategy_state);
         }
+        CheckpointPayload::Multigrid(m) => {
+            w.put_u8(2);
+            w.put_u64(m.stage as u64);
+            w.put_u64(m.coarse_n as u64);
+            w.put_u64(m.stages.len() as u64);
+            for s in &m.stages {
+                w.put_multigrid_stage(s);
+            }
+            w.put_f64(m.elapsed_s);
+            w.put_minimizer_state(&m.inner);
+            w.put_bytes(&m.strategy_state);
+        }
     }
     frame(CKPT_MAGIC, CHECKPOINT_VERSION, w.buf)
 }
 
-/// Parse and validate a v2 `NLEC` container. Structural checks run
+/// Parse and validate a v3 `NLEC` container. Structural checks run
 /// here (shapes, trace alignment, finite scalars); resume paths
 /// additionally match [`CheckpointMeta`] against the job and validate
 /// the state against the actual problem size.
@@ -642,15 +677,57 @@ pub fn decode_checkpoint(bytes: &[u8]) -> anyhow::Result<TrainCheckpoint> {
                 elapsed_s,
             })
         }
+        2 => {
+            let stage = p.get_len()?;
+            let coarse_n = p.get_len()?;
+            let count = p.get_len()?;
+            // a stage record is 2 f64 + 3 u64 + 1 u8 = 41 bytes
+            p.check_count(count, 41, "multigrid stage table")?;
+            let mut stages = Vec::with_capacity(count);
+            for _ in 0..count {
+                stages.push(p.get_multigrid_stage()?);
+            }
+            let elapsed_s = p.get_f64()?;
+            let inner = p.get_minimizer_state()?;
+            let strategy_state = p.get_bytes()?;
+            anyhow::ensure!(
+                stage <= 1 && stages.len() == stage,
+                "multigrid checkpoint at stage {stage} carries {} completed records",
+                stages.len()
+            );
+            anyhow::ensure!(
+                elapsed_s.is_finite() && elapsed_s >= 0.0,
+                "multigrid checkpoint elapsed time {elapsed_s} out of range"
+            );
+            CheckpointPayload::Multigrid(MultigridState {
+                stage,
+                coarse_n,
+                stages,
+                inner,
+                strategy_state,
+                elapsed_s,
+            })
+        }
         other => anyhow::bail!("unknown checkpoint payload kind {other}"),
     };
     anyhow::ensure!(p.pos == p.buf.len(), "payload has trailing bytes");
-    // the snapshot must describe the problem the meta claims
-    let inner = match &payload {
-        CheckpointPayload::Minimize { state, .. } => state,
-        CheckpointPayload::Homotopy(h) => &h.inner,
-    };
-    inner.validate(meta.n, meta.dim)?;
+    // the snapshot must describe the problem the meta claims; a
+    // multigrid coarse stage runs at landmark size, not meta.n, so its
+    // inner is validated against the stage's own problem size
+    match &payload {
+        CheckpointPayload::Minimize { state, .. } => state.validate(meta.n, meta.dim)?,
+        CheckpointPayload::Homotopy(h) => h.inner.validate(meta.n, meta.dim)?,
+        CheckpointPayload::Multigrid(m) => {
+            anyhow::ensure!(
+                m.coarse_n >= 2 && m.coarse_n <= meta.n,
+                "multigrid checkpoint claims {} landmarks of {} points",
+                m.coarse_n,
+                meta.n
+            );
+            let stage_n = if m.stage == 0 { m.coarse_n } else { meta.n };
+            m.inner.validate(stage_n, meta.dim)?;
+        }
+    }
     Ok(TrainCheckpoint { meta, payload })
 }
 
@@ -852,6 +929,94 @@ mod tests {
                 _ => panic!("payload kind changed in roundtrip"),
             }
         }
+    }
+
+    fn multigrid_ckpt(stage: usize) -> TrainCheckpoint {
+        // inner state is 12x2; at stage 0 that is the landmark problem
+        // (meta.n larger), at stage 1 it is the full problem
+        let meta = CheckpointMeta {
+            name: "mg-run".into(),
+            strategy: "sd".into(),
+            kappa: None,
+            method: Method::Ee,
+            lambda: 1.5,
+            dim: 2,
+            n: if stage == 0 { 30 } else { 12 },
+            engine: "Auto".into(),
+            backend: "native".into(),
+            weights_fp: 0x1234_5678_9abc_def0,
+            sampler: None,
+        };
+        let stages = if stage == 0 {
+            vec![]
+        } else {
+            vec![MultigridStage {
+                n: 5,
+                iters: 6,
+                time_s: 0.3,
+                e: 4.0,
+                nfev: 9,
+                stop: StopReason::RelTol,
+            }]
+        };
+        TrainCheckpoint {
+            meta,
+            payload: CheckpointPayload::Multigrid(MultigridState {
+                stage,
+                coarse_n: if stage == 0 { 12 } else { 5 },
+                stages,
+                inner: ckpt_state(3),
+                strategy_state: vec![7, 7],
+                elapsed_s: 0.5,
+            }),
+        }
+    }
+
+    #[test]
+    fn multigrid_checkpoint_roundtrip_bitwise_in_either_stage() {
+        for stage in [0usize, 1] {
+            let ck = multigrid_ckpt(stage);
+            let bytes = encode_checkpoint(&ck);
+            let back = decode_checkpoint(&bytes).unwrap();
+            assert_eq!(back.meta.n, ck.meta.n);
+            let CheckpointPayload::Multigrid(m) = &back.payload else {
+                panic!("payload kind changed in roundtrip");
+            };
+            let CheckpointPayload::Multigrid(orig) = &ck.payload else { unreachable!() };
+            assert_eq!(m.stage, stage);
+            assert_eq!(m.coarse_n, orig.coarse_n);
+            assert_eq!(m.stages.len(), orig.stages.len());
+            if stage == 1 {
+                assert_eq!(m.stages[0].n, 5);
+                assert_eq!(m.stages[0].stop, StopReason::RelTol);
+            }
+            assert_eq!(m.strategy_state, orig.strategy_state);
+            assert_eq!(m.inner.x, orig.inner.x);
+            assert_eq!(m.inner.g, orig.inner.g);
+            assert_eq!(m.elapsed_s.to_bits(), orig.elapsed_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn multigrid_checkpoint_rejects_inconsistent_stage_shapes() {
+        // a coarse-stage inner whose rows disagree with coarse_n
+        let mut ck = multigrid_ckpt(0);
+        let CheckpointPayload::Multigrid(m) = &mut ck.payload else { unreachable!() };
+        m.coarse_n = 11;
+        assert!(decode_checkpoint(&encode_checkpoint(&ck)).is_err());
+        // a refine-stage inner must match meta.n
+        let mut ck = multigrid_ckpt(1);
+        ck.meta.n = 13;
+        assert!(decode_checkpoint(&encode_checkpoint(&ck)).is_err());
+        // stage tag beyond refine
+        let mut ck = multigrid_ckpt(1);
+        let CheckpointPayload::Multigrid(m) = &mut ck.payload else { unreachable!() };
+        m.stage = 2;
+        assert!(decode_checkpoint(&encode_checkpoint(&ck)).is_err());
+        // more landmarks than points
+        let mut ck = multigrid_ckpt(0);
+        ck.meta.n = 10;
+        assert!(decode_checkpoint(&encode_checkpoint(&ck)).is_err());
     }
 
     #[test]

@@ -30,6 +30,7 @@ pub mod gd;
 pub mod homotopy;
 pub mod lbfgs;
 pub mod linesearch;
+pub mod multigrid;
 pub mod sd;
 pub mod sdm;
 
@@ -909,6 +910,10 @@ pub enum CheckpointPayload {
     Minimize { state: MinimizerState, strategy_state: Vec<u8> },
     /// A λ-homotopy run ([`homotopy::homotopy_resumable`]).
     Homotopy(homotopy::HomotopyState),
+    /// A coarse-to-fine multigrid run
+    /// ([`multigrid::multigrid_resumable`]) — the stage tag inside
+    /// makes resume land in the right stage at the right problem size.
+    Multigrid(multigrid::MultigridState),
 }
 
 /// A complete training checkpoint: run identity + optimizer snapshot.

@@ -1,0 +1,536 @@
+//! Coarse-to-fine multigrid training over the HNSW hierarchy.
+//!
+//! At large N the spectral direction makes iterations cheap, so the
+//! remaining cost is the *number of full-N gradient evaluations*. The
+//! HNSW index built for the affinity preprocessing already contains a
+//! free ~1/m landmark subsample (its upper layers, see
+//! [`crate::index::hnsw::HnswGraph::landmark_layer`]): converge an
+//! embedding of the landmarks first — every gradient there costs a
+//! fraction of a full-N one — lift it to all points with the
+//! out-of-sample transformer, and spend only a refinement budget at
+//! full N.
+//!
+//! Like the homotopy driver this module contains no iteration loop of
+//! its own: each stage is a [`Minimizer`] driven to completion, and the
+//! whole two-stage path is checkpointable — [`MultigridState`] pins the
+//! stage index plus the in-flight stepper snapshot, and
+//! [`multigrid_resumable`] continues bitwise-identically from it. The
+//! stages solve *different problems* (L landmarks vs N points), so each
+//! stage owns its objective and strategy; the prolongation between them
+//! is a caller-supplied closure (the coordinator places non-landmarks
+//! with [`crate::model::Transformer`]).
+//!
+//! A kill during the placement step resumes from the last coarse-stage
+//! checkpoint: placement is recomputed, never persisted.
+
+use std::time::Duration;
+
+use super::{DirectionStrategy, IterStats, Minimizer, MinimizerState, OptOptions, StopReason};
+use crate::linalg::dense::Mat;
+use crate::objective::Objective;
+
+/// Stage index of the landmark (coarse) solve.
+pub const STAGE_COARSE: usize = 0;
+/// Stage index of the full-N refinement.
+pub const STAGE_REFINE: usize = 1;
+
+/// Per-stage record: how much work the stage did at which problem size.
+#[derive(Clone, Debug)]
+pub struct MultigridStage {
+    /// problem size of this stage (landmark count, then full N)
+    pub n: usize,
+    pub iters: usize,
+    pub time_s: f64,
+    pub e: f64,
+    pub nfev: usize,
+    pub stop: StopReason,
+}
+
+pub struct MultigridResult {
+    /// full-N embedding after refinement
+    pub x: Mat,
+    /// final full-N energy
+    pub e: f64,
+    pub stop: StopReason,
+    /// stage records: `[coarse, refine]` (coarse comes from the
+    /// checkpoint when the run resumed inside the refinement stage)
+    pub stages: Vec<MultigridStage>,
+    /// refinement-stage trace (stage-local iteration clock)
+    pub trace: Vec<IterStats>,
+    /// seconds spent lifting the coarse solution to full N in *this*
+    /// process (0 when resumed inside the refinement stage)
+    pub placement_s: f64,
+}
+
+impl MultigridResult {
+    pub fn total_iters(&self) -> usize {
+        self.stages.iter().map(|s| s.iters).sum()
+    }
+    /// Gradient-eval seconds across both stages plus placement — the
+    /// quantity the bench harness compares against flat training.
+    pub fn total_time(&self) -> f64 {
+        self.stages.iter().map(|s| s.time_s).sum::<f64>() + self.placement_s
+    }
+}
+
+/// Serializable snapshot of an in-flight coarse-to-fine path: which
+/// stage is running, the completed stage records, and that stage's
+/// stepper state. The resuming caller must reconstruct the same stage
+/// problems (same landmark set, same affinities, same strategy
+/// construction) — deterministic objectives then make the continuation
+/// bitwise identical to the uninterrupted path.
+#[derive(Clone, Debug)]
+pub struct MultigridState {
+    /// stage in flight: [`STAGE_COARSE`] or [`STAGE_REFINE`]
+    pub stage: usize,
+    /// landmark count of the coarse problem — resume refuses a job
+    /// whose extracted landmark set has a different size
+    pub coarse_n: usize,
+    /// records of the stages already completed
+    pub stages: Vec<MultigridStage>,
+    /// the in-flight stage's optimizer snapshot
+    pub inner: MinimizerState,
+    /// the strategy's evolving state (L-BFGS memory etc.)
+    pub strategy_state: Vec<u8>,
+    /// wall clock spent on the whole path so far
+    pub elapsed_s: f64,
+}
+
+/// What the per-iteration observer of [`multigrid_resumable`] sees:
+/// enough to stream progress and to snapshot a resumable
+/// [`MultigridState`] on demand.
+pub struct MultigridProgress<'a, 'b> {
+    pub stage: usize,
+    /// problem size of the running stage
+    pub stage_n: usize,
+    /// landmark count (constant across the path)
+    pub coarse_n: usize,
+    /// accepted iterations accumulated across both stages
+    pub global_iter: usize,
+    pub stats: &'a IterStats,
+    /// wall clock for the whole path, checkpointed sessions included
+    pub elapsed_s: f64,
+    minim: &'a Minimizer<'b>,
+    stages_done: &'a [MultigridStage],
+}
+
+impl MultigridProgress<'_, '_> {
+    /// Snapshot a checkpointable state of the whole path.
+    pub fn state(&self) -> MultigridState {
+        MultigridState {
+            stage: self.stage,
+            coarse_n: self.coarse_n,
+            stages: self.stages_done.to_vec(),
+            inner: self.minim.state(),
+            strategy_state: self.minim.strategy_state(),
+            elapsed_s: self.elapsed_s,
+        }
+    }
+}
+
+/// The resumable coarse-to-fine driver.
+///
+/// Fresh runs minimize `coarse_obj` from `coarse_x0`, lift the result
+/// through `prolong` (coarse X → full-N x0; the coordinator's
+/// transformer placement), then minimize `fine_obj` from the lifted
+/// iterate. `resume` continues either stage from a [`MultigridState`];
+/// `on_iter` fires after every accepted iteration of either stage.
+/// `total_budget` caps wall clock across both stages and process
+/// boundaries, with the same already-spent accounting as the homotopy
+/// driver.
+#[allow(clippy::too_many_arguments)]
+pub fn multigrid_resumable(
+    coarse_obj: &dyn Objective,
+    coarse_strategy: &mut dyn DirectionStrategy,
+    coarse_x0: &Mat,
+    coarse_opts: &OptOptions,
+    fine_obj: &dyn Objective,
+    fine_strategy: &mut dyn DirectionStrategy,
+    fine_opts: &OptOptions,
+    prolong: &mut dyn FnMut(&Mat) -> anyhow::Result<Mat>,
+    total_budget: Option<Duration>,
+    resume: Option<MultigridState>,
+    mut on_iter: Option<&mut dyn FnMut(&MultigridProgress<'_, '_>)>,
+) -> anyhow::Result<MultigridResult> {
+    let coarse_n = coarse_obj.n();
+    anyhow::ensure!(
+        coarse_n >= 2 && coarse_n <= fine_obj.n(),
+        "coarse problem ({coarse_n} points) must be a nontrivial subset of the fine one ({})",
+        fine_obj.n()
+    );
+    anyhow::ensure!(
+        coarse_obj.dim() == fine_obj.dim(),
+        "stage dimensions disagree: coarse {} vs fine {}",
+        coarse_obj.dim(),
+        fine_obj.dim()
+    );
+    let start = std::time::Instant::now();
+    // pending = the in-flight stage's snapshot, consumed by that
+    // stage's Minimizer::adopt below
+    let (mut stages, start_stage, mut pending, base_elapsed) = match resume {
+        Some(st) => {
+            anyhow::ensure!(
+                st.stage <= STAGE_REFINE && st.stages.len() == st.stage,
+                "checkpoint stage {} inconsistent with {} completed records",
+                st.stage,
+                st.stages.len()
+            );
+            anyhow::ensure!(
+                st.coarse_n == coarse_n,
+                "checkpoint was taken with {} landmarks but this job extracts {coarse_n} — \
+                 same data, index and --multigrid fraction?",
+                st.coarse_n
+            );
+            anyhow::ensure!(
+                st.elapsed_s.is_finite() && st.elapsed_s >= 0.0,
+                "multigrid state elapsed time {} out of range",
+                st.elapsed_s
+            );
+            let (obj, strategy): (&dyn Objective, &mut dyn DirectionStrategy) =
+                if st.stage == STAGE_COARSE {
+                    (coarse_obj, &mut *coarse_strategy)
+                } else {
+                    (fine_obj, &mut *fine_strategy)
+                };
+            st.inner.validate(obj.n(), obj.dim())?;
+            strategy.prepare(obj, &st.inner.x)?;
+            strategy.restore_state(&st.strategy_state)?;
+            (st.stages, st.stage, Some(st.inner), st.elapsed_s)
+        }
+        None => (Vec::with_capacity(2), STAGE_COARSE, None, 0.0),
+    };
+    let mut global_iter_base: usize = stages.iter().map(|s: &MultigridStage| s.iters).sum();
+    let mut placement_s = 0.0;
+
+    // total-budget clamp, in the resumed stage's own time coordinate
+    // (Minimizer::adopt restores stage-elapsed, so a resumed stage may
+    // run to already-spent plus what is left of the path — otherwise
+    // the spent seconds would be double-counted and the stage cut short
+    // relative to the uninterrupted run)
+    let clamp = |opts: &mut OptOptions, pending: &Option<MinimizerState>, spent_now: Duration| {
+        if let Some(budget) = total_budget {
+            let left = budget.saturating_sub(Duration::from_secs_f64(base_elapsed) + spent_now);
+            let stage_spent = pending.as_ref().map(|s| s.elapsed_s).unwrap_or(0.0);
+            let stage_left = left + Duration::from_secs_f64(stage_spent);
+            opts.time_budget = Some(match opts.time_budget {
+                Some(t) => t.min(stage_left),
+                None => stage_left,
+            });
+        }
+    };
+
+    // -- stage 0: converge the landmark embedding --------------------
+    let coarse_x = if start_stage == STAGE_COARSE {
+        let mut opts = coarse_opts.clone();
+        clamp(&mut opts, &pending, start.elapsed());
+        let mut mm = match pending.take() {
+            Some(state) => Minimizer::adopt(&mut *coarse_strategy, state, &opts),
+            None => Minimizer::new(coarse_obj, &mut *coarse_strategy, coarse_x0, &opts)?,
+        };
+        match on_iter.as_deref_mut() {
+            Some(cb) => {
+                let stages_done = &stages;
+                mm.run_with(coarse_obj, &mut |m, st| {
+                    cb(&MultigridProgress {
+                        stage: STAGE_COARSE,
+                        stage_n: coarse_n,
+                        coarse_n,
+                        global_iter: global_iter_base + st.iter,
+                        stats: st,
+                        elapsed_s: base_elapsed + start.elapsed().as_secs_f64(),
+                        minim: m,
+                        stages_done,
+                    });
+                });
+            }
+            None => {
+                mm.run(coarse_obj);
+            }
+        }
+        let res = mm.into_result();
+        global_iter_base += res.iters();
+        stages.push(MultigridStage {
+            n: coarse_n,
+            iters: res.iters(),
+            time_s: res.trace.last().map(|t| t.time_s).unwrap_or(0.0),
+            e: res.e,
+            nfev: res.trace.last().map(|t| t.nfev).unwrap_or(0),
+            stop: res.stop,
+        });
+        Some(res.x)
+    } else {
+        None
+    };
+
+    // -- prolongation: lift landmarks to a full-N initial iterate ----
+    let fine_x0 = match &coarse_x {
+        Some(cx) => {
+            let t0 = std::time::Instant::now();
+            let lifted = prolong(cx)?;
+            placement_s = t0.elapsed().as_secs_f64();
+            anyhow::ensure!(
+                lifted.rows == fine_obj.n() && lifted.cols == fine_obj.dim(),
+                "prolongation produced a {}x{} iterate for a {}x{} problem",
+                lifted.rows,
+                lifted.cols,
+                fine_obj.n(),
+                fine_obj.dim()
+            );
+            Some(lifted)
+        }
+        None => None,
+    };
+
+    // -- stage 1: full-N refinement ----------------------------------
+    let mut opts = fine_opts.clone();
+    clamp(&mut opts, &pending, start.elapsed());
+    let mut mm = match pending.take() {
+        Some(state) => Minimizer::adopt(&mut *fine_strategy, state, &opts),
+        None => {
+            let x0 = fine_x0.as_ref().expect("fresh refine stage must follow prolongation");
+            Minimizer::new(fine_obj, &mut *fine_strategy, x0, &opts)?
+        }
+    };
+    match on_iter.as_deref_mut() {
+        Some(cb) => {
+            let stages_done = &stages;
+            mm.run_with(fine_obj, &mut |m, st| {
+                cb(&MultigridProgress {
+                    stage: STAGE_REFINE,
+                    stage_n: fine_obj.n(),
+                    coarse_n,
+                    global_iter: global_iter_base + st.iter,
+                    stats: st,
+                    elapsed_s: base_elapsed + start.elapsed().as_secs_f64(),
+                    minim: m,
+                    stages_done,
+                });
+            });
+        }
+        None => {
+            mm.run(fine_obj);
+        }
+    }
+    let res = mm.into_result();
+    stages.push(MultigridStage {
+        n: fine_obj.n(),
+        iters: res.iters(),
+        time_s: res.trace.last().map(|t| t.time_s).unwrap_or(0.0),
+        e: res.e,
+        nfev: res.trace.last().map(|t| t.nfev).unwrap_or(0),
+        stop: res.stop,
+    });
+    Ok(MultigridResult {
+        x: res.x,
+        e: res.e,
+        stop: res.stop,
+        stages,
+        trace: res.trace,
+        placement_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::objective::native::NativeObjective;
+    use crate::objective::{Attractive, Method};
+
+    fn problem_pair(
+        n: usize,
+        l: usize,
+        seed: u64,
+    ) -> (NativeObjective, NativeObjective, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let y = Mat::from_fn(n, 4, |_, _| rng.normal());
+        let sub = Mat::from_fn(l, 4, |i, j| y.at(i, j));
+        let p_fine = crate::affinity::sne_affinities(&y, 5.0);
+        let p_coarse = crate::affinity::sne_affinities(&sub, 3.0);
+        let fine =
+            NativeObjective::with_affinities(Method::Ee, Attractive::Dense(p_fine), 1.0, 2);
+        let coarse =
+            NativeObjective::with_affinities(Method::Ee, Attractive::Dense(p_coarse), 1.0, 2);
+        let x0 = Mat::from_fn(l, 2, |_, _| 1e-3 * rng.normal());
+        (coarse, fine, x0, y)
+    }
+
+    /// Nearest-landmark copy: good enough to exercise the driver
+    /// (the coordinator uses the real transformer).
+    fn toy_prolong(cx: &Mat, n: usize) -> Mat {
+        Mat::from_fn(n, cx.cols, |i, j| {
+            let li = i % cx.rows;
+            cx.at(li, j) + 1e-4 * ((i / cx.rows) as f64)
+        })
+    }
+
+    #[test]
+    fn runs_both_stages_and_reports_them() {
+        let (coarse, fine, x0, _y) = problem_pair(24, 8, 3);
+        let mut s0 = crate::opt::sd::SpectralDirection::new(None);
+        let mut s1 = crate::opt::sd::SpectralDirection::new(None);
+        let opts = OptOptions { max_iters: 30, rel_tol: 1e-9, ..Default::default() };
+        let mut seen: Vec<(usize, usize)> = Vec::new();
+        let mut cb = |p: &MultigridProgress<'_, '_>| {
+            seen.push((p.stage, p.global_iter));
+            let st = p.state();
+            assert_eq!(st.stage, p.stage);
+            assert_eq!(st.coarse_n, 8);
+            assert_eq!(st.stages.len(), p.stage);
+        };
+        let res = multigrid_resumable(
+            &coarse,
+            &mut s0,
+            &x0,
+            &opts,
+            &fine,
+            &mut s1,
+            &opts,
+            &mut |cx| Ok(toy_prolong(cx, 24)),
+            None,
+            None,
+            Some(&mut cb),
+        )
+        .unwrap();
+        assert_eq!(res.stages.len(), 2);
+        assert_eq!(res.stages[0].n, 8);
+        assert_eq!(res.stages[1].n, 24);
+        assert_eq!(res.x.rows, 24);
+        assert!(res.e.is_finite());
+        assert_eq!(seen.len(), res.total_iters());
+        assert!(seen.windows(2).all(|w| w[1].1 == w[0].1 + 1), "global iters not contiguous");
+        assert!(seen.windows(2).all(|w| w[1].0 >= w[0].0), "stages regressed");
+    }
+
+    #[test]
+    fn resume_mid_refine_is_bitwise_identical() {
+        let (coarse, fine, x0, _y) = problem_pair(20, 6, 7);
+        let opts = OptOptions {
+            max_iters: 25,
+            rel_tol: 1e-14,
+            grad_tol: 1e-13,
+            ..Default::default()
+        };
+        // uninterrupted run, snapshotting a state a few iterations into
+        // the refinement stage
+        let mut snap: Option<MultigridState> = None;
+        let mut s0 = crate::opt::sd::SpectralDirection::new(None);
+        let mut s1 = crate::opt::sd::SpectralDirection::new(None);
+        let mut cb = |p: &MultigridProgress<'_, '_>| {
+            if p.stage == STAGE_REFINE && p.stats.iter == 3 {
+                snap = Some(p.state());
+            }
+        };
+        let full = multigrid_resumable(
+            &coarse,
+            &mut s0,
+            &x0,
+            &opts,
+            &fine,
+            &mut s1,
+            &opts,
+            &mut |cx| Ok(toy_prolong(cx, 20)),
+            None,
+            None,
+            Some(&mut cb),
+        )
+        .unwrap();
+        let snap = snap.expect("refine stage should pass iteration 3");
+        assert_eq!(snap.stage, STAGE_REFINE);
+        assert_eq!(snap.stages.len(), 1);
+
+        // resumed run with fresh strategies must land on the same bits
+        let mut r0 = crate::opt::sd::SpectralDirection::new(None);
+        let mut r1 = crate::opt::sd::SpectralDirection::new(None);
+        let resumed = multigrid_resumable(
+            &coarse,
+            &mut r0,
+            &x0,
+            &opts,
+            &fine,
+            &mut r1,
+            &opts,
+            &mut |_| panic!("resume inside refine must not re-place points"),
+            None,
+            Some(snap),
+            None,
+        )
+        .unwrap();
+        assert_eq!(resumed.e.to_bits(), full.e.to_bits());
+        assert_eq!(resumed.x.rows, full.x.rows);
+        for (a, b) in resumed.x.data.iter().zip(full.x.data.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // the resumed result still carries both stage records
+        assert_eq!(resumed.stages.len(), 2);
+        assert_eq!(resumed.stages[0].n, 6);
+    }
+
+    #[test]
+    fn rejects_inconsistent_states() {
+        let (coarse, fine, x0, _y) = problem_pair(20, 6, 8);
+        let opts = OptOptions { max_iters: 5, ..Default::default() };
+        let mut s0 = crate::opt::sd::SpectralDirection::new(None);
+        let mut s1 = crate::opt::sd::SpectralDirection::new(None);
+        // capture any refine-stage state
+        let mut snap: Option<MultigridState> = None;
+        let mut cb = |p: &MultigridProgress<'_, '_>| {
+            if p.stage == STAGE_REFINE && snap.is_none() {
+                snap = Some(p.state());
+            }
+        };
+        multigrid_resumable(
+            &coarse,
+            &mut s0,
+            &x0,
+            &opts,
+            &fine,
+            &mut s1,
+            &opts,
+            &mut |cx| Ok(toy_prolong(cx, 20)),
+            None,
+            None,
+            Some(&mut cb),
+        )
+        .unwrap();
+        let good = snap.unwrap();
+        // wrong landmark count
+        let mut bad = good.clone();
+        bad.coarse_n = 7;
+        let mut r0 = crate::opt::sd::SpectralDirection::new(None);
+        let mut r1 = crate::opt::sd::SpectralDirection::new(None);
+        assert!(multigrid_resumable(
+            &coarse,
+            &mut r0,
+            &x0,
+            &opts,
+            &fine,
+            &mut r1,
+            &opts,
+            &mut |cx| Ok(toy_prolong(cx, 20)),
+            None,
+            Some(bad),
+            None,
+        )
+        .is_err());
+        // stage / record mismatch
+        let mut bad = good.clone();
+        bad.stages.clear();
+        let mut r0 = crate::opt::sd::SpectralDirection::new(None);
+        let mut r1 = crate::opt::sd::SpectralDirection::new(None);
+        assert!(multigrid_resumable(
+            &coarse,
+            &mut r0,
+            &x0,
+            &opts,
+            &fine,
+            &mut r1,
+            &opts,
+            &mut |cx| Ok(toy_prolong(cx, 20)),
+            None,
+            Some(bad),
+            None,
+        )
+        .is_err());
+    }
+}

@@ -24,7 +24,7 @@
 //! / during / after a hot-swap → `results/BENCH_serve_daemon.json`)
 //! lives in [`crate::bench_harness::serve`]; the CI daemon-smoke job
 //! runs it against a real two-process deployment on every PR. See
-//! DESIGN.md section 8.
+//! DESIGN.md section 9.
 
 pub mod daemon;
 pub mod protocol;

@@ -1,7 +1,7 @@
 //! Hot-swap-under-load stress: reader threads hammer the serving
 //! daemon while a writer swaps the model repeatedly.
 //!
-//! The contract being stressed (see DESIGN.md section 8): every
+//! The contract being stressed (see DESIGN.md section 9): every
 //! response is attributable to *exactly one* model version — its
 //! coordinates must equal, bitwise, what a direct `Transformer` over
 //! that version produces for that query (so a batch can never mix two

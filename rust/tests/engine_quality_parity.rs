@@ -14,6 +14,9 @@
 //! * the `z == 0` partition-sum guard: degenerate geometry (points so
 //!   far apart every pairwise kernel underflows to zero) keeps E and
 //!   ∇E finite on every engine instead of producing 4λ/0 = ∞ · 0 = NaN;
+//! * the coarse-to-fine multigrid schedule: its final embedding's kNN
+//!   recall matches flat training on the same problem within the same
+//!   0.05 bound;
 //! * the grid-interpolation engine: embedding quality matches
 //!   Barnes–Hut within the same 0.05 recall bound, its gradients track
 //!   the exact engine within 1% on a realistic cloud, its evaluations
@@ -207,6 +210,42 @@ fn neg_embedding_quality_matches_barnes_hut() {
     assert!(
         (r_bh - r_neg).abs() <= 0.05,
         "neighborhood agreement diverged: bh {r_bh} vs neg {r_neg}"
+    );
+}
+
+/// Train the same swiss roll flat and through the coarse-to-fine
+/// multigrid schedule; the k-ary neighborhood preservation of the two
+/// final embeddings must agree within 0.05 (the acceptance bound: the
+/// landmark detour must not cost embedding quality).
+#[test]
+fn multigrid_embedding_quality_matches_flat() {
+    let n = 600;
+    let data = nle::data::synth::swiss_roll(n, 3, 0.05, 42);
+    let mk_job = || {
+        let mut job = EmbeddingJob::from_data(
+            "mg-parity",
+            &data.y,
+            Method::Ee,
+            100.0,
+            8.0,
+            10,
+            IndexSpec::Hnsw { m: 6, ef_construction: 60, ef_search: 40 },
+        );
+        job.strategy = "sd".to_string();
+        job.opts.max_iters = 60;
+        job
+    };
+    let flat = mk_job().run().unwrap();
+    let mut staged_job = mk_job();
+    staged_job.multigrid = Some(0.05);
+    let staged = staged_job.run().unwrap();
+    assert!(flat.e.is_finite() && staged.e.is_finite());
+    let r_flat = nle::metrics::knn_recall(&data.y, &flat.x, 10);
+    let r_mg = nle::metrics::knn_recall(&data.y, &staged.x, 10);
+    assert!(r_flat > 0.3, "flat baseline degenerated: recall {r_flat}");
+    assert!(
+        (r_flat - r_mg).abs() <= 0.05,
+        "neighborhood agreement diverged: flat {r_flat} vs multigrid {r_mg}"
     );
 }
 

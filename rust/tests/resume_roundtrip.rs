@@ -4,8 +4,9 @@
 //! per-iteration trace (times excluded — wall clocks are not
 //! reproducible) versus the run that was never interrupted. Checked
 //! for every strategy in `ALL_STRATEGIES`, for the λ-homotopy driver,
-//! and through the full encode→decode cycle of the NLEC record so the
-//! codec itself is inside the loop being verified.
+//! for the coarse-to-fine multigrid driver (across its stage
+//! boundary), and through the full encode→decode cycle of the NLEC
+//! record so the codec itself is inside the loop being verified.
 
 use nle::opt::homotopy::{homotopy_resumable, log_lambda_schedule, HomotopyState};
 use nle::opt::{self, ALL_STRATEGIES};
@@ -206,6 +207,68 @@ fn homotopy_resumes_bitwise_identically() {
             assert_eq!(a.stop, b.stop, "{name}");
         }
     }
+}
+
+/// A coarse-to-fine multigrid job interrupted *after* the stage
+/// boundary and resumed from its NLEC record must land on the same
+/// bits as the run that was never interrupted. The coarse iteration
+/// budget is pinned (`multigrid_coarse_iters`) so the truncated and
+/// full runs solve an identical landmark stage; with the checkpoint
+/// cadence at 5 and a 12-iteration truncated refinement, the last
+/// record lands at refinement iteration 10 — inside stage 1, past the
+/// prolongation (which is recomputed, never persisted).
+#[test]
+fn multigrid_job_resumes_bitwise_across_the_stage_boundary() {
+    let data = nle::data::synth::swiss_roll(400, 3, 0.05, 11);
+    let mut job = EmbeddingJob::from_data(
+        "mg-resume",
+        &data.y,
+        Method::Ee,
+        50.0,
+        8.0,
+        10,
+        IndexSpec::Hnsw { m: 6, ef_construction: 60, ef_search: 40 },
+    );
+    job.strategy = "sd".to_string();
+    job.multigrid = Some(0.05);
+    job.multigrid_coarse_iters = Some(8);
+    job.opts.max_iters = 30;
+    job.opts.rel_tol = 1e-14;
+    job.opts.grad_tol = 1e-12;
+
+    let path = std::env::temp_dir().join("nle_mg_resume.nlec");
+    let mut partial = job.clone();
+    partial.opts.max_iters = 12;
+    partial
+        .run_resumable(RunControl {
+            checkpoint_every: Some(5),
+            checkpoint_path: Some(path.clone()),
+            ..Default::default()
+        })
+        .unwrap();
+    let ck = TrainCheckpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let CheckpointPayload::Multigrid(st) = &ck.payload else {
+        panic!("multigrid job must write a multigrid payload")
+    };
+    assert_eq!(st.stage, 1, "checkpoint should land in the refinement stage");
+    assert_eq!(st.stages.len(), 1, "the completed coarse record rides along");
+    let coarse_iters = st.stages[0].iters;
+
+    let resumed =
+        job.run_resumable(RunControl { resume: Some(ck), ..Default::default() }).unwrap();
+    let full = job.run().unwrap();
+    assert_eq!(resumed.iters, full.iters);
+    assert_eq!(resumed.stop, full.stop);
+    assert_eq!(resumed.e.to_bits(), full.e.to_bits());
+    assert_bitwise_equal(&resumed.x, &full.x, "multigrid");
+    assert_traces_identical(&resumed.trace, &full.trace, "multigrid");
+    // both paths report the identical pinned coarse stage
+    let rm = resumed.multigrid.expect("staged run must carry a report");
+    let fm = full.multigrid.expect("staged run must carry a report");
+    assert_eq!(rm.coarse_n, fm.coarse_n);
+    assert_eq!(rm.stages[0].iters, coarse_iters);
+    assert_eq!(rm.stages[0].e.to_bits(), fm.stages[0].e.to_bits());
 }
 
 #[test]
